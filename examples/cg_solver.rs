@@ -1,0 +1,94 @@
+//! Conjugate-gradient solve of a sparse SPD system — the "mathematical
+//! solutions for sparse linear equations" workload from the paper's
+//! introduction. The FEM-stencil matrix (barrier2-3 profile) is the
+//! paper's CSR-friendly case, so this example also demonstrates honest
+//! engine selection: HBP does not always win (see Fig. 8 discussion).
+//!
+//! ```text
+//! cargo run --release --offline --example cg_solver
+//! ```
+
+use hbp_spmv::exec::{CsrParallel, HbpEngine, SpmvEngine};
+use hbp_spmv::formats::{Coo, Csr};
+use hbp_spmv::gen::{matrix_by_id, Scale};
+use hbp_spmv::partition::PartitionConfig;
+use hbp_spmv::preprocess::{build_hbp_parallel, HashReorder};
+use hbp_spmv::util::cli::Args;
+use hbp_spmv::util::timer::fmt_duration;
+
+/// Make an SPD system from a generator matrix: A = M^T M + I (classic
+/// normal-equations trick; keeps the sparsity structure family).
+fn spd_from(m: &Csr) -> Csr {
+    // B = M^T M is expensive for big matrices; use A = (M + M^T)/2 + c*I
+    // with c chosen to dominate the row sums => diagonally dominant SPD.
+    let t = m.transpose();
+    let mut coo = Coo::new(m.rows, m.cols);
+    for r in 0..m.rows {
+        let (cols, vals) = m.row(r);
+        for (c, v) in cols.iter().zip(vals) {
+            coo.push(r, *c as usize, 0.5 * v);
+        }
+        let (tcols, tvals) = t.row(r);
+        for (c, v) in tcols.iter().zip(tvals) {
+            coo.push(r, *c as usize, 0.5 * v);
+        }
+    }
+    coo.normalize();
+    // diagonal dominance
+    let sym = coo.to_csr();
+    let mut coo2 = sym.to_coo();
+    for r in 0..sym.rows {
+        let (_, vals) = sym.row(r);
+        let rowsum: f64 = vals.iter().map(|v| v.abs()).sum();
+        coo2.push(r, r, rowsum + 1.0);
+    }
+    coo2.to_csr()
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(1, &[]);
+    let scale = Scale::parse(args.str_or("scale", "ci")).expect("bad --scale");
+    let threads = std::thread::available_parallelism()?.get();
+
+    let (meta, gen_m) = matrix_by_id("m3", scale).unwrap(); // barrier2-3 profile
+    let a = spd_from(&gen_m);
+    println!(
+        "CG on SPD system from {} profile: {}x{}, {} nnz\n",
+        meta.name,
+        a.rows,
+        a.cols,
+        a.nnz()
+    );
+
+    // right-hand side with known solution x* = 1
+    let ones = vec![1.0; a.cols];
+    let mut b = vec![0.0; a.rows];
+    a.spmv(&ones, &mut b);
+
+    let cfg = PartitionConfig::default();
+    let hbp = build_hbp_parallel(&a, cfg, &HashReorder::default(), threads);
+    let engines: Vec<Box<dyn SpmvEngine>> = vec![
+        Box::new(HbpEngine::new(hbp, threads, 0.25)),
+        Box::new(CsrParallel::new(a.clone(), threads)),
+    ];
+
+    for e in &engines {
+        let mut x = vec![0.0; a.rows];
+        let stats = hbp_spmv::solvers::cg(e.as_ref(), &b, &mut x, 1e-10, 500);
+        let err = x
+            .iter()
+            .map(|v| (v - 1.0).abs())
+            .fold(0.0f64, f64::max);
+        println!(
+            "{:4}: {} iters, residual {:.2e}, max|x-1| {:.2e}, spmv time {}",
+            e.name(),
+            stats.iterations,
+            stats.residual,
+            err,
+            fmt_duration(stats.spmv_secs)
+        );
+        assert!(err < 1e-6, "CG did not converge to the known solution");
+    }
+    println!("\nboth engines converge to x* = 1 ✓");
+    Ok(())
+}

@@ -1,0 +1,143 @@
+//! End-to-end driver (the EXPERIMENTS.md §E2E run): proves all three
+//! layers compose on a real workload.
+//!
+//! 1. Generate Table-I matrices, preprocess into HBP (L3 preprocessing).
+//! 2. Open the AOT artifact store and run the **PJRT path**: the L1
+//!    Pallas kernel (lowered by `make artifacts`) executes every block,
+//!    rust scatters + combines — verified against the pure-rust engine.
+//! 3. Start the serving coordinator (router + batcher + TCP), fire a
+//!    batched closed-loop workload from concurrent clients, and report
+//!    latency percentiles + throughput.
+//!
+//! ```text
+//! make artifacts && cargo run --release --offline --example e2e_serve
+//! ```
+
+use hbp_spmv::coordinator::server::{serve_background, Client};
+use hbp_spmv::coordinator::{BatcherConfig, Coordinator, Router};
+use hbp_spmv::gen::{matrix_by_id, Scale};
+use hbp_spmv::partition::PartitionConfig;
+use hbp_spmv::preprocess::{build_hbp_parallel, HashReorder};
+use hbp_spmv::runtime::{artifacts_dir, ArtifactStore, PjrtSpmv};
+use hbp_spmv::util::cli::Args;
+use hbp_spmv::util::stats::percentile;
+use hbp_spmv::util::timer::fmt_duration;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(1, &[]);
+    let scale = Scale::parse(args.str_or("scale", "ci")).expect("bad --scale");
+    let threads = std::thread::available_parallelism()?.get();
+    let clients = args.usize_or("clients", 8);
+    let requests_per_client = args.usize_or("requests", 25);
+
+    println!("=== e2e: three-layer HBP SpMV serving ===\n");
+
+    // ---- phase 1: PJRT path (L1 kernel through the runtime) ----
+    let (meta, m) = matrix_by_id("m1", scale).unwrap();
+    println!(
+        "[1] matrix {} ({}): {}x{}, {} nnz",
+        meta.id, meta.name, m.rows, m.cols, m.nnz()
+    );
+    let cfg = PartitionConfig::default();
+    let hbp = build_hbp_parallel(&m, cfg, &HashReorder::default(), threads);
+    println!("    preprocessed into {} blocks", hbp.blocks.len());
+
+    let store = ArtifactStore::open(artifacts_dir())?;
+    println!(
+        "    artifact store: platform={}, {} executables, L buckets {:?}",
+        store.platform(),
+        store.execs.len(),
+        store.spmv_l_buckets()
+    );
+    let pjrt = PjrtSpmv::prepare(&store, &hbp)?;
+    let x = hbp_spmv::gen::random::vector(m.cols, 11);
+    let mut y_pjrt = vec![0.0; m.rows];
+    let t = hbp_spmv::util::Timer::start();
+    pjrt.spmv(&x, &mut y_pjrt)?;
+    let pjrt_secs = t.elapsed_secs();
+    println!(
+        "    PJRT SpMV over {} blocks ({} over-bucket fallbacks): {}",
+        pjrt.num_blocks(),
+        pjrt.fallback_blocks,
+        fmt_duration(pjrt_secs)
+    );
+
+    let mut y_ref = vec![0.0; m.rows];
+    m.spmv(&x, &mut y_ref);
+    // f32 kernel vs f64 reference: tolerance scaled accordingly
+    let max_rel = y_pjrt
+        .iter()
+        .zip(&y_ref)
+        .map(|(a, b)| (a - b).abs() / b.abs().max(1.0))
+        .fold(0.0f64, f64::max);
+    println!("    max rel error vs f64 CSR: {max_rel:.2e}");
+    anyhow::ensure!(max_rel < 1e-3, "PJRT path diverged");
+    println!("    L1 (pallas kernel) -> L3 (rust combine) verified ✓\n");
+
+    // ---- phase 2: serving coordinator under load ----
+    let mut router = Router::new(cfg, threads);
+    for id in ["m1", "m3", "m9"] {
+        let (meta, m) = matrix_by_id(id, scale).unwrap();
+        router.register(meta.id, m)?;
+        let p = router.get(meta.id)?;
+        println!(
+            "[2] registered {} ({}): preprocess {}",
+            meta.id,
+            meta.name,
+            fmt_duration(p.preprocess_secs)
+        );
+    }
+    let dims: Vec<(String, usize)> = router
+        .names()
+        .iter()
+        .map(|n| (n.to_string(), router.get(n).unwrap().cols))
+        .collect();
+    let coordinator = Arc::new(Coordinator::new(router, BatcherConfig::default()));
+    let addr = serve_background(coordinator.clone())?;
+    println!("    serving on {addr}\n");
+
+    // closed-loop clients over TCP
+    let t = hbp_spmv::util::Timer::start();
+    let latencies: Vec<f64> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let dims = dims.clone();
+                s.spawn(move || {
+                    let mut client = Client::connect(addr).expect("connect");
+                    let mut lats = Vec::with_capacity(requests_per_client);
+                    for i in 0..requests_per_client {
+                        let (name, cols) = &dims[(c + i) % dims.len()];
+                        let x = hbp_spmv::gen::random::vector(*cols, (c * 1000 + i) as u64);
+                        let t = hbp_spmv::util::Timer::start();
+                        let y = client.spmv(name, &x).expect("spmv");
+                        lats.push(t.elapsed_secs());
+                        assert!(!y.is_empty());
+                    }
+                    lats
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+    let wall = t.elapsed_secs();
+
+    let total = latencies.len();
+    println!("[3] {total} requests from {clients} clients in {}", fmt_duration(wall));
+    println!("    throughput: {:.1} req/s", total as f64 / wall);
+    println!(
+        "    latency p50 {}  p95 {}  p99 {}",
+        fmt_duration(percentile(&latencies, 50.0)),
+        fmt_duration(percentile(&latencies, 95.0)),
+        fmt_duration(percentile(&latencies, 99.0)),
+    );
+    let snap = coordinator.metrics.snapshot();
+    println!(
+        "    server-side: {} ok, {} errors, {:.3} GFLOPS sustained",
+        snap.requests, snap.errors, snap.gflops
+    );
+    anyhow::ensure!(snap.errors == 0, "server reported errors");
+    anyhow::ensure!(snap.requests as usize == total);
+    println!("\nall layers compose: artifacts -> PJRT -> engines -> batcher -> TCP ✓");
+    Ok(())
+}

@@ -1,0 +1,147 @@
+"""AOT lowering: JAX (L2+L1) -> HLO text -> ``artifacts/``.
+
+Run once by ``make artifacts``; the rust runtime
+(``rust/src/runtime/``) loads the HLO text via
+``HloModuleProto::from_text_file`` and compiles it on the PJRT CPU
+client. Python never runs on the request path.
+
+Interchange is HLO **text**, not a serialized ``HloModuleProto``: jax >=
+0.5 emits protos with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids (see /opt/xla-example/README.md).
+
+Emitted executables (shape buckets; see ``manifest.json``):
+
+- ``spmv_g{G}_l{L}_w{W}_s{S}`` — the L1 block kernel, one per L bucket
+  and batch size (batch NB folds into G: G' = NB*G, S' = NB*S).
+- ``combine_k{K}_r{R}`` — the combine reduction.
+- ``row_block_nb{NB}_...`` — the in-graph L2 composition for the e2e
+  example.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from compile import model  # noqa: E402
+from compile.kernels import hbp_spmv  # noqa: E402
+
+# Default partition config mirrors rust PartitionConfig::default():
+# rows_per_block=512, cols_per_block=4096, warp=32 -> G=16, S=4096.
+GROUPS = 16
+WARP = 32
+SEG = 4096
+L_BUCKETS = (4, 8, 16, 32, 64, 128, 256)
+BATCHES = (1, 8)
+COMBINE_K = 8
+ROW_BLOCK_NB = 4
+ROW_BLOCK_L = 32
+
+
+def to_hlo_text(fn, *specs) -> str:
+    """Lower a jittable fn at the given ShapeDtypeStructs to HLO text."""
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spmv_entry(groups: int, lmax: int, warp: int, seg: int) -> dict:
+    spec = hbp_spmv.KernelSpec(groups, lmax, warp, seg)
+    text = to_hlo_text(
+        hbp_spmv.block_spmv,
+        jax.ShapeDtypeStruct((groups, lmax, warp), jnp.int32),
+        jax.ShapeDtypeStruct((groups, lmax, warp), jnp.float32),
+        jax.ShapeDtypeStruct((seg,), jnp.float32),
+    )
+    return {
+        "name": spec.name(),
+        "kind": "spmv",
+        "groups": groups,
+        "lmax": lmax,
+        "warp": warp,
+        "seg": seg,
+        "vmem_bytes_per_step": spec.vmem_bytes_per_step(),
+        "text": text,
+    }
+
+
+def combine_entry(k: int, rows: int) -> dict:
+    text = to_hlo_text(
+        lambda p: hbp_spmv.combine(p, tile=min(512, rows)),
+        jax.ShapeDtypeStruct((k, rows), jnp.float32),
+    )
+    return {"name": f"combine_k{k}_r{rows}", "kind": "combine", "k": k, "rows": rows, "text": text}
+
+
+def row_block_entry(nb: int, groups: int, lmax: int, warp: int, seg: int) -> dict:
+    text = to_hlo_text(
+        model.row_block_spmv,
+        jax.ShapeDtypeStruct((nb, groups, lmax, warp), jnp.int32),
+        jax.ShapeDtypeStruct((nb, groups, lmax, warp), jnp.float32),
+        jax.ShapeDtypeStruct((nb, seg), jnp.float32),
+        jax.ShapeDtypeStruct((nb, groups * warp), jnp.int32),
+    )
+    return {
+        "name": f"row_block_nb{nb}_g{groups}_l{lmax}_w{warp}_s{seg}",
+        "kind": "row_block",
+        "nb": nb,
+        "groups": groups,
+        "lmax": lmax,
+        "warp": warp,
+        "seg": seg,
+        "text": text,
+    }
+
+
+def build(out_dir: str, l_buckets=L_BUCKETS, batches=BATCHES) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    for lmax in l_buckets:
+        for nb in batches:
+            # batch folds into the grid: G' = NB*G, S' = NB*S
+            entries.append(spmv_entry(GROUPS * nb, lmax, WARP, SEG * nb))
+    entries.append(combine_entry(COMBINE_K, 512))
+    entries.append(row_block_entry(ROW_BLOCK_NB, GROUPS, ROW_BLOCK_L, WARP, SEG))
+
+    manifest = {"groups": GROUPS, "warp": WARP, "seg": SEG, "executables": []}
+    for e in entries:
+        text = e.pop("text")
+        fname = e["name"] + ".hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        e["file"] = fname
+        e["sha256"] = hashlib.sha256(text.encode()).hexdigest()[:16]
+        manifest["executables"].append(e)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--quick", action="store_true", help="small bucket set for tests")
+    args = ap.parse_args()
+    l_buckets = (4, 16) if args.quick else L_BUCKETS
+    batches = (1,) if args.quick else BATCHES
+    manifest = build(args.out, l_buckets, batches)
+    n = len(manifest["executables"])
+    print(f"wrote {n} HLO executables + manifest.json to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

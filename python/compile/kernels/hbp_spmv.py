@@ -1,0 +1,133 @@
+"""L1 Pallas kernel: group-ELL block SpMV.
+
+The TPU re-expression of the paper's HBP warp kernel (DESIGN.md
+"Hardware adaptation"): a CUDA warp walking ``add_sign`` chains becomes a
+dense ``(L, W)`` tile per group — row ``k`` of the tile holds the ``k``-th
+nonzero of every lane's row (HBP's round-major order), zero-padded to the
+group's bucketed max length ``L``. The nonlinear hash keeps the lanes of a
+group near-equal in length, which directly bounds the tile padding and
+hence VMEM traffic and FLOPs.
+
+BlockSpec schedule (the HBM<->VMEM plan that CUDA expressed with
+threadblocks + shared memory):
+
+- grid over groups ``g``;
+- ``cols``/``vals``: one ``(1, L, W)`` tile per step — streamed;
+- ``x``: the block's full column segment ``(S,)`` pinned in VMEM for every
+  step — the shared-memory vector segment of the paper (S = 4096 doubles
+  there; f32 here);
+- out: one ``(1, W)`` tile per step (per-slot sums; the rust combine step
+  applies ``output_hash`` and reduces over column blocks).
+
+VMEM per step = L*W*(4+4) + S*4 + W*4 bytes; at the default
+(L=256, W=32, S=4096) that is ~80 KiB — far under the ~16 MiB/core VMEM
+budget, leaving room for multi-way double buffering of the streamed tiles.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; correctness is validated on CPU and the real-TPU roofline is
+estimated analytically in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["block_spmv", "combine", "KernelSpec"]
+
+
+class KernelSpec:
+    """Shape bucket of one AOT-compiled executable."""
+
+    def __init__(self, groups: int, lmax: int, warp: int, seg: int):
+        self.groups = groups  # G: warp-groups in the (batched) block
+        self.lmax = lmax      # L: padded lane length bucket
+        self.warp = warp      # W: lanes per group (omega)
+        self.seg = seg        # S: x-segment length (cols_per_block)
+
+    def name(self) -> str:
+        return f"spmv_g{self.groups}_l{self.lmax}_w{self.warp}_s{self.seg}"
+
+    def vmem_bytes_per_step(self) -> int:
+        """VMEM footprint of one grid step (cols+vals tiles, x segment,
+        out tile) — the L1 profiling quantity in EXPERIMENTS.md §Perf."""
+        return self.lmax * self.warp * (4 + 4) + self.seg * 4 + self.warp * 4
+
+    def flops_per_step(self) -> int:
+        return 2 * self.lmax * self.warp
+
+
+def _kernel(cols_ref, vals_ref, x_ref, o_ref):
+    """One group: gather the x segment at each lane's columns and reduce
+    down the L axis. All operands are VMEM-resident tiles."""
+    cols = cols_ref[0]            # [L, W] i32, block-local columns
+    vals = vals_ref[0]            # [L, W] f32, 0 in padding slots
+    x = x_ref[...]                # [S]    f32, the block's vector segment
+    # padding slots have vals == 0, so their gathered garbage is nulled
+    o_ref[0, :] = jnp.sum(vals * x[cols], axis=0)
+
+
+def block_spmv(cols: jax.Array, vals: jax.Array, x: jax.Array) -> jax.Array:
+    """Group-ELL block SpMV.
+
+    Args:
+      cols: ``i32[G, L, W]`` block-local column indices (0 where padded).
+      vals: ``f32[G, L, W]`` values (0 where padded).
+      x:    ``f32[S]`` the block's vector segment.
+
+    Returns:
+      ``f32[G, W]`` per-slot sums (execution order; the caller scatters
+      through ``output_hash``).
+    """
+    g, lmax, warp = cols.shape
+    seg = x.shape[0]
+    return pl.pallas_call(
+        _kernel,
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((1, lmax, warp), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, lmax, warp), lambda i: (i, 0, 0)),
+            pl.BlockSpec((seg,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, warp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, warp), jnp.float32),
+        interpret=True,
+    )(cols, vals, x)
+
+
+def _combine_kernel(parts_ref, o_ref):
+    """Reduce partial vectors over the block axis for one row tile."""
+    o_ref[...] = jnp.sum(parts_ref[...], axis=0)
+
+
+def combine(parts: jax.Array, tile: int = 512) -> jax.Array:
+    """Combine phase: sum ``f32[K, R]`` partial vectors into ``f32[R]``.
+
+    Grid over row tiles of ``tile`` elements; each step reduces a
+    ``(K, tile)`` VMEM block. R must be a multiple of ``tile`` (the rust
+    exporter pads row blocks).
+    """
+    k, r = parts.shape
+    assert r % tile == 0, f"R={r} not a multiple of tile={tile}"
+    return pl.pallas_call(
+        _combine_kernel,
+        grid=(r // tile,),
+        in_specs=[pl.BlockSpec((k, tile), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((r,), jnp.float32),
+        interpret=True,
+    )(parts)
+
+
+@functools.lru_cache(maxsize=None)
+def jitted_block_spmv(groups: int, lmax: int, warp: int, seg: int):
+    """A jitted block_spmv for a fixed shape bucket (test convenience)."""
+    spec = (
+        jax.ShapeDtypeStruct((groups, lmax, warp), jnp.int32),
+        jax.ShapeDtypeStruct((groups, lmax, warp), jnp.float32),
+        jax.ShapeDtypeStruct((seg,), jnp.float32),
+    )
+    return jax.jit(block_spmv).lower(*spec).compile()

@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for the L1 kernels.
+
+The correctness contract: every Pallas kernel must match its oracle to
+float32 tolerance on arbitrary shapes/values (pytest + hypothesis sweeps
+in ``python/tests/test_kernel.py``). The oracles are deliberately written
+in the most obvious form — no tiling, no grids.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["block_spmv_ref", "combine_ref", "dense_spmv_ref"]
+
+
+def block_spmv_ref(cols: jax.Array, vals: jax.Array, x: jax.Array) -> jax.Array:
+    """Oracle for ``hbp_spmv.block_spmv``: ``out[g, w] = sum_k
+    vals[g, k, w] * x[cols[g, k, w]]``."""
+    return jnp.sum(vals * x[cols], axis=1)
+
+
+def combine_ref(parts: jax.Array) -> jax.Array:
+    """Oracle for ``hbp_spmv.combine``: sum partials over the block axis."""
+    return jnp.sum(parts, axis=0)
+
+
+def dense_spmv_ref(a: jax.Array, x: jax.Array) -> jax.Array:
+    """Dense ground truth for model-level tests."""
+    return a @ x

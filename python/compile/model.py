@@ -1,0 +1,82 @@
+"""L2 JAX model: the blocked-SpMV compute graph.
+
+Composes the L1 Pallas kernels into the paper's two-step SpMV (Fig. 1):
+block SpMV over every (row-block, col-block) tile, slot->row scatter via
+``output_hash``, then the combine reduction across column blocks. Lowered
+once by ``aot.py``; Python never runs on the request path.
+
+Two entry points:
+
+- :func:`block_spmv` — the per-block kernel (re-exported from L1). The
+  rust runtime dispatches *this* per block/batch; combine happens in rust
+  where the block list is dynamic.
+- :func:`row_block_spmv` — a fixed-shape composition (NB column blocks of
+  one row block: kernels + scatter + combine *in-graph*). This is the
+  whole-graph artifact proving L1/L2 compose, used by the e2e example.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import hbp_spmv
+from compile.kernels.hbp_spmv import block_spmv
+
+__all__ = ["block_spmv", "row_block_spmv", "batched_block_spmv"]
+
+
+def batched_block_spmv(cols: jax.Array, vals: jax.Array, xsegs: jax.Array) -> jax.Array:
+    """SpMV over a batch of NB same-bucket blocks in one kernel launch.
+
+    The batch is folded into the grid axis: ``[NB, G, L, W] -> [NB*G, L,
+    W]`` and the per-block x segments are concatenated; column indices
+    must already be offset by ``b * S`` (the rust exporter does this).
+
+    Args:
+      cols:  ``i32[NB, G, L, W]`` with the ``b*S`` offset pre-applied.
+      vals:  ``f32[NB, G, L, W]``.
+      xsegs: ``f32[NB, S]``.
+
+    Returns:
+      ``f32[NB, G, W]`` per-slot sums.
+    """
+    nb, g, lmax, warp = cols.shape
+    out = block_spmv(
+        cols.reshape(nb * g, lmax, warp),
+        vals.reshape(nb * g, lmax, warp),
+        xsegs.reshape(-1),
+    )
+    return out.reshape(nb, g, warp)
+
+
+def row_block_spmv(
+    cols: jax.Array,
+    vals: jax.Array,
+    xsegs: jax.Array,
+    inv_perm: jax.Array,
+) -> jax.Array:
+    """One row block, NB column blocks, fully in-graph.
+
+    Per column block: block kernel -> scatter slot sums to pre-hash rows
+    (``inv_perm`` = ``output_hash``) -> stack partials -> combine kernel.
+
+    Args:
+      cols:     ``i32[NB, G, L, W]`` block-local columns.
+      vals:     ``f32[NB, G, L, W]``.
+      xsegs:    ``f32[NB, S]`` one segment per column block.
+      inv_perm: ``i32[NB, G*W]`` slot -> original local row.
+
+    Returns:
+      ``f32[G*W]`` the row block's output rows.
+    """
+    nb, g, lmax, warp = cols.shape
+    rows = g * warp
+
+    def one(b):
+        slot_sums = block_spmv(cols[b], vals[b], xsegs[b]).reshape(rows)
+        # scatter: partial[orig_row] = slot_sums[slot]
+        return jnp.zeros(rows, jnp.float32).at[inv_perm[b]].set(slot_sums)
+
+    parts = jnp.stack([one(b) for b in range(nb)])  # [NB, rows]
+    return hbp_spmv.combine(parts, tile=min(512, rows))

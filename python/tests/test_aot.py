@@ -1,0 +1,56 @@
+"""AOT pipeline tests: HLO text emission + manifest integrity."""
+
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from compile import aot  # noqa: E402
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    manifest = aot.build(str(out), l_buckets=(4, 16), batches=(1,))
+    return out, manifest
+
+
+class TestAotBuild:
+    def test_manifest_lists_all_files(self, built):
+        out, manifest = built
+        assert manifest["groups"] == aot.GROUPS
+        assert manifest["warp"] == aot.WARP
+        assert manifest["seg"] == aot.SEG
+        for e in manifest["executables"]:
+            path = out / e["file"]
+            assert path.exists(), e["file"]
+            assert path.stat().st_size > 100
+
+    def test_hlo_is_text_not_proto(self, built):
+        out, manifest = built
+        for e in manifest["executables"]:
+            head = (out / e["file"]).read_text()[:200]
+            assert "HloModule" in head, f"{e['file']} is not HLO text"
+
+    def test_expected_bucket_set(self, built):
+        _, manifest = built
+        names = {e["name"] for e in manifest["executables"]}
+        assert "spmv_g16_l4_w32_s4096" in names
+        assert "spmv_g16_l16_w32_s4096" in names
+        assert any(n.startswith("combine_") for n in names)
+        assert any(n.startswith("row_block_") for n in names)
+
+    def test_manifest_json_roundtrip(self, built):
+        out, manifest = built
+        on_disk = json.loads((out / "manifest.json").read_text())
+        assert on_disk == manifest
+
+    def test_spmv_entries_record_vmem(self, built):
+        _, manifest = built
+        for e in manifest["executables"]:
+            if e["kind"] == "spmv":
+                assert e["vmem_bytes_per_step"] > 0
+                assert e["vmem_bytes_per_step"] < 16 * 2**20

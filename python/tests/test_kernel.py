@@ -1,0 +1,136 @@
+"""L1 kernel correctness: Pallas (interpret) vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and values; assert_allclose at f32 tolerance.
+This is the core correctness signal for the compute layer.
+"""
+
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from compile.kernels import hbp_spmv, ref  # noqa: E402
+
+RNG = np.random.default_rng(0)
+
+
+def make_block(g, lmax, w, s, density=0.7, seed=0):
+    rng = np.random.default_rng(seed)
+    cols = rng.integers(0, s, size=(g, lmax, w)).astype(np.int32)
+    vals = rng.standard_normal((g, lmax, w)).astype(np.float32)
+    # zero-pad a fraction of slots like a real group-ELL export
+    mask = rng.random((g, lmax, w)) < density
+    vals = np.where(mask, vals, 0.0).astype(np.float32)
+    x = rng.standard_normal(s).astype(np.float32)
+    return jnp.asarray(cols), jnp.asarray(vals), jnp.asarray(x)
+
+
+class TestBlockSpmv:
+    def test_basic_shape(self):
+        cols, vals, x = make_block(2, 4, 8, 16)
+        out = hbp_spmv.block_spmv(cols, vals, x)
+        assert out.shape == (2, 8)
+        np.testing.assert_allclose(
+            out, ref.block_spmv_ref(cols, vals, x), rtol=1e-5, atol=1e-5
+        )
+
+    def test_default_bucket_shape(self):
+        # the shape the AOT path ships: G=16, W=32, S=4096
+        cols, vals, x = make_block(16, 32, 32, 4096, seed=3)
+        out = hbp_spmv.block_spmv(cols, vals, x)
+        np.testing.assert_allclose(
+            out, ref.block_spmv_ref(cols, vals, x), rtol=1e-4, atol=1e-4
+        )
+
+    def test_all_padding_is_zero(self):
+        cols, vals, x = make_block(2, 8, 4, 32, density=0.0, seed=1)
+        out = hbp_spmv.block_spmv(cols, vals, x)
+        np.testing.assert_array_equal(np.asarray(out), np.zeros((2, 4), np.float32))
+
+    def test_single_group_single_lane(self):
+        cols = jnp.zeros((1, 4, 1), jnp.int32)
+        vals = jnp.ones((1, 4, 1), jnp.float32)
+        x = jnp.array([2.5], jnp.float32)
+        out = hbp_spmv.block_spmv(cols, vals, x)
+        np.testing.assert_allclose(out, [[10.0]], rtol=1e-6)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        g=st.integers(1, 6),
+        lmax=st.integers(1, 24),
+        w=st.integers(1, 16),
+        s=st.sampled_from([8, 64, 333, 1024]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_hypothesis(self, g, lmax, w, s, seed):
+        cols, vals, x = make_block(g, lmax, w, s, seed=seed)
+        out = hbp_spmv.block_spmv(cols, vals, x)
+        np.testing.assert_allclose(
+            out, ref.block_spmv_ref(cols, vals, x), rtol=1e-4, atol=1e-4
+        )
+
+    @settings(max_examples=10, deadline=None)
+    @given(scale=st.sampled_from([1e-6, 1.0, 1e6]), seed=st.integers(0, 1000))
+    def test_value_scales(self, scale, seed):
+        cols, vals, x = make_block(2, 8, 8, 64, seed=seed)
+        vals = vals * scale
+        out = hbp_spmv.block_spmv(cols, vals, x)
+        np.testing.assert_allclose(
+            out, ref.block_spmv_ref(cols, vals, x), rtol=1e-4, atol=1e-4 * scale
+        )
+
+    def test_duplicate_columns_accumulate(self):
+        # two entries of the same lane hitting the same column
+        cols = jnp.array([[[3], [3], [0], [0]]], jnp.int32)  # [1,4,1]
+        vals = jnp.array([[[1.0], [2.0], [0.0], [0.0]]], jnp.float32)
+        x = jnp.array([9.0, 0.0, 0.0, 4.0], jnp.float32)
+        out = hbp_spmv.block_spmv(cols, vals, x)
+        np.testing.assert_allclose(out, [[12.0]], rtol=1e-6)
+
+
+class TestCombine:
+    def test_matches_ref(self):
+        parts = jnp.asarray(RNG.standard_normal((8, 512)).astype(np.float32))
+        out = hbp_spmv.combine(parts)
+        np.testing.assert_allclose(out, ref.combine_ref(parts), rtol=1e-5, atol=1e-6)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        k=st.integers(1, 12),
+        tiles=st.integers(1, 4),
+        tile=st.sampled_from([8, 64, 512]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, k, tiles, tile, seed):
+        rng = np.random.default_rng(seed)
+        parts = jnp.asarray(rng.standard_normal((k, tiles * tile)).astype(np.float32))
+        out = hbp_spmv.combine(parts, tile=tile)
+        np.testing.assert_allclose(out, ref.combine_ref(parts), rtol=1e-4, atol=1e-5)
+
+    def test_rejects_misaligned(self):
+        parts = jnp.zeros((2, 100), jnp.float32)
+        with pytest.raises(AssertionError):
+            hbp_spmv.combine(parts, tile=512)
+
+
+class TestKernelSpec:
+    def test_vmem_accounting(self):
+        spec = hbp_spmv.KernelSpec(16, 256, 32, 4096)
+        # 256*32*8 + 4096*4 + 32*4 = 65536 + 16384 + 128
+        assert spec.vmem_bytes_per_step() == 82048
+        assert spec.vmem_bytes_per_step() < 16 * 2**20, "must fit VMEM"
+        assert spec.flops_per_step() == 2 * 256 * 32
+
+    def test_name_stable(self):
+        assert hbp_spmv.KernelSpec(16, 64, 32, 4096).name() == "spmv_g16_l64_w32_s4096"
+
+    def test_jitted_cache(self):
+        a = hbp_spmv.jitted_block_spmv(1, 4, 4, 8)
+        b = hbp_spmv.jitted_block_spmv(1, 4, 4, 8)
+        assert a is b

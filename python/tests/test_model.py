@@ -1,0 +1,84 @@
+"""L2 model tests: the in-graph composition (kernels + scatter + combine)
+against a dense reference built from the same block tensors."""
+
+import os
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from compile import model  # noqa: E402
+
+
+def make_row_block(nb, g, lmax, w, s, seed):
+    """Random group-ELL tensors for one row block + the dense equivalent."""
+    rng = np.random.default_rng(seed)
+    rows = g * w
+    cols = rng.integers(0, s, size=(nb, g, lmax, w)).astype(np.int32)
+    vals = rng.standard_normal((nb, g, lmax, w)).astype(np.float32)
+    mask = rng.random((nb, g, lmax, w)) < 0.5
+    vals = np.where(mask, vals, 0.0).astype(np.float32)
+    xsegs = rng.standard_normal((nb, s)).astype(np.float32)
+    # a random slot->row permutation per column block
+    inv_perm = np.stack([rng.permutation(rows) for _ in range(nb)]).astype(np.int32)
+
+    # dense reference: accumulate every (slot, k) entry into its row
+    y = np.zeros(rows, np.float64)
+    for b in range(nb):
+        for gi in range(g):
+            for wi in range(w):
+                slot = gi * w + wi
+                row = inv_perm[b, slot]
+                acc = 0.0
+                for k in range(lmax):
+                    acc += float(vals[b, gi, k, wi]) * float(xsegs[b, cols[b, gi, k, wi]])
+                y[row] += acc
+    return (
+        jnp.asarray(cols),
+        jnp.asarray(vals),
+        jnp.asarray(xsegs),
+        jnp.asarray(inv_perm),
+        y,
+    )
+
+
+class TestRowBlockSpmv:
+    def test_small_composition(self):
+        cols, vals, xsegs, inv_perm, y = make_row_block(2, 2, 4, 4, 16, seed=0)
+        out = model.row_block_spmv(cols, vals, xsegs, inv_perm)
+        np.testing.assert_allclose(out, y, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        nb=st.integers(1, 4),
+        g=st.integers(1, 3),
+        lmax=st.integers(1, 8),
+        w=st.sampled_from([2, 4, 8]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis(self, nb, g, lmax, w, seed):
+        cols, vals, xsegs, inv_perm, y = make_row_block(nb, g, lmax, w, 32, seed)
+        out = model.row_block_spmv(cols, vals, xsegs, inv_perm)
+        np.testing.assert_allclose(out, y, rtol=1e-3, atol=1e-3)
+
+
+class TestBatchedBlockSpmv:
+    def test_batch_equals_loop(self):
+        rng = np.random.default_rng(7)
+        nb, g, lmax, w, s = 3, 2, 8, 4, 16
+        cols = rng.integers(0, s, size=(nb, g, lmax, w)).astype(np.int32)
+        vals = rng.standard_normal((nb, g, lmax, w)).astype(np.float32)
+        xsegs = rng.standard_normal((nb, s)).astype(np.float32)
+        # offset columns by b*s as the rust exporter would
+        offset_cols = cols + (np.arange(nb)[:, None, None, None] * s).astype(np.int32)
+        out = model.batched_block_spmv(
+            jnp.asarray(offset_cols), jnp.asarray(vals), jnp.asarray(xsegs)
+        )
+        for b in range(nb):
+            single = model.block_spmv(
+                jnp.asarray(cols[b]), jnp.asarray(vals[b]), jnp.asarray(xsegs[b])
+            )
+            np.testing.assert_allclose(out[b], single, rtol=1e-5, atol=1e-6)

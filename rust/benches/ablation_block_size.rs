@@ -1,0 +1,55 @@
+//! Ablation: 2D-partition block sizes.
+//!
+//! The paper fixes N=512 rows (reorder scope) and M=4096 columns (the
+//! per-warp shared-memory vector segment). This sweep shows the
+//! trade-off both ways: small N starves the hash of grouping choices,
+//! huge N slows preprocessing; small M fragments blocks (more combine
+//! work), huge M destroys the locality the simulator charges for.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use hbp_spmv::partition::PartitionConfig;
+use hbp_spmv::preprocess::{build_hbp_parallel, HashReorder};
+use hbp_spmv::sim::{simulate_hbp, DeviceConfig};
+use hbp_spmv::util::bench::{banner, Bench, Table};
+
+fn main() {
+    let b = Bench::from_env();
+    let threads = common::threads();
+    let dev = DeviceConfig::orin();
+    let (meta, m) = common::load("m1");
+    banner(
+        "Ablation: block size",
+        &format!("matrix {} ({}) on the Orin model; paper default N=512, M=4096", meta.id, meta.name),
+    );
+
+    let mut t = Table::new(&[
+        "rows/blk (N)", "cols/blk (M)", "blocks", "preprocess", "sim GFLOPS", "combine share",
+    ]);
+    for rows_per_block in [128usize, 512, 2048] {
+        for cols_per_block in [1024usize, 4096, 16384] {
+            let cfg = PartitionConfig { rows_per_block, cols_per_block, warp: 32 };
+            let hash = HashReorder::default();
+            let prep = b
+                .run("prep", || build_hbp_parallel(&m, cfg, &hash, threads))
+                .median();
+            let hbp = build_hbp_parallel(&m, cfg, &hash, threads);
+            let r = simulate_hbp(&hbp, &dev, 0.25);
+            let default_marker = if rows_per_block == 512 && cols_per_block == 4096 {
+                " <- paper"
+            } else {
+                ""
+            };
+            t.row(&[
+                format!("{rows_per_block}{default_marker}"),
+                cols_per_block.to_string(),
+                hbp.blocks.len().to_string(),
+                format!("{:.2} ms", prep * 1e3),
+                format!("{:.2}", r.gflops()),
+                format!("{:.1}%", 100.0 * r.combine_secs / r.total_secs()),
+            ]);
+        }
+    }
+    t.print();
+}

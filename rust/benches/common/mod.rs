@@ -1,0 +1,41 @@
+//! Shared bench helpers (included per-bench via `#[path]`).
+
+use hbp_spmv::gen::{matrix_by_id, Scale, SuiteMatrix};
+use hbp_spmv::formats::Csr;
+
+/// Bench scale: `HBP_BENCH_SCALE=ci|small|full`. Default **small**
+/// (paper dims / 8): the device cost model needs enough warps to
+/// saturate the SM slots or the CSR-vs-HBP memory contrasts vanish
+/// (DESIGN.md §5). `ci` is for smoke runs, `full` for paper dims.
+pub fn bench_scale() -> Scale {
+    std::env::var("HBP_BENCH_SCALE")
+        .ok()
+        .and_then(|s| Scale::parse(&s))
+        .unwrap_or(Scale::Small)
+}
+
+pub fn scale_name(s: Scale) -> &'static str {
+    match s {
+        Scale::Ci => "ci",
+        Scale::Small => "small",
+        Scale::Full => "full",
+    }
+}
+
+/// Load a suite matrix at the bench scale.
+pub fn load(id: &str) -> (&'static SuiteMatrix, Csr) {
+    matrix_by_id(id, bench_scale()).unwrap_or_else(|| panic!("unknown suite id {id}"))
+}
+
+/// The matrix ids used by most figures (all of Table I).
+pub const ALL_IDS: [&str; 14] = [
+    "m1", "m2", "m3", "m4", "m5", "m6", "m7", "m8", "m9", "m10", "m11", "m12", "m13", "m14",
+];
+
+/// The RTX-4090 subset (paper: m4-m7 exceed the 4090's memory).
+pub const RTX4090_IDS: [&str; 10] =
+    ["m1", "m2", "m3", "m8", "m9", "m10", "m11", "m12", "m13", "m14"];
+
+pub fn threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}

@@ -1,0 +1,21 @@
+//! Fig. 10: SpMV GFLOPS on Nvidia RTX 4090.
+//!
+//! Paper result: HBP vs CSR max 3.01x / avg 1.61x; HBP vs 2D max 9.71x /
+//! avg 5.49x. m4–m7 are excluded — HBP's intermediate storage exceeds the
+//! 4090's 24GB at full scale (the paper's own limitation, preserved).
+
+#[path = "common/mod.rs"]
+mod common;
+#[path = "fig8_spmv_orin.rs"]
+mod fig8;
+
+use hbp_spmv::sim::DeviceConfig;
+
+fn main() {
+    fig8::run_device(
+        DeviceConfig::rtx4090(),
+        &common::RTX4090_IDS,
+        "Fig 10",
+        "3.01x max / 1.61x avg vs CSR; m4-m7 OOM-excluded",
+    );
+}

@@ -1,0 +1,89 @@
+//! Fig. 7: preprocessing cost — the nonlinear hash (HBP) vs the sorting
+//! baseline (sort2D) and the Regu2D dynamic-programming baseline (DP2D).
+//!
+//! Paper result: HBP is 3.53x faster than sort2D on average (max 7.23x)
+//! and 3.67x faster than DP2D (max 7.67x).
+//!
+//! What is timed: the **row-reordering step** over every non-empty block
+//! — the paper's object of comparison (Algorithm 2's nnz counting and
+//! the format conversion are identical across methods and run before /
+//! after it unchanged). A full-build column is reported for context.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use hbp_spmv::partition::{block_views, BlockGrid, PartitionConfig};
+use hbp_spmv::preprocess::{
+    build_hbp_parallel, DpReorder, HashReorder, Reorder, SortReorder,
+};
+use hbp_spmv::util::bench::{banner, Bench, Table};
+use hbp_spmv::util::stats::geomean;
+
+fn main() {
+    let b = Bench::from_env();
+    let threads = common::threads();
+    let cfg = PartitionConfig::default();
+    banner(
+        "Fig 7",
+        &format!(
+            "Reordering time ratio vs HBP over all blocks (scale={}, serial per-block as on-device); \
+             paper avg: sort2D 3.53x, DP2D 3.67x",
+            common::scale_name(common::bench_scale()),
+        ),
+    );
+    let mut t = Table::new(&[
+        "id", "hbp", "sort2d", "dp2d", "sort2d/hbp", "dp2d/hbp", "full build(hbp)",
+    ]);
+    let mut sort_ratios = vec![];
+    let mut dp_ratios = vec![];
+    for id in common::ALL_IDS {
+        let (meta, m) = common::load(id);
+        let grid = BlockGrid::new(m.rows, m.cols, cfg);
+        // Algorithm 2's data preparation (shared by all strategies):
+        let lens: Vec<Vec<usize>> = block_views(&m, &grid)
+            .iter()
+            .map(|v| v.row_nnz())
+            .collect();
+
+        let time_reorder = |s: &dyn Reorder| {
+            b.run(s.name(), || {
+                let mut acc = 0usize;
+                for l in &lens {
+                    acc += s.order(l, cfg.warp).len();
+                }
+                acc
+            })
+            .median()
+        };
+        let hash = HashReorder::default();
+        let h = time_reorder(&hash);
+        let s = time_reorder(&SortReorder);
+        let d = time_reorder(&DpReorder::default());
+        let full = b
+            .run("full", || build_hbp_parallel(&m, cfg, &hash, threads))
+            .median();
+
+        sort_ratios.push(s / h);
+        dp_ratios.push(d / h);
+        t.row(&[
+            meta.id.into(),
+            format!("{:.3} ms", h * 1e3),
+            format!("{:.3} ms", s * 1e3),
+            format!("{:.3} ms", d * 1e3),
+            format!("{:.2}x", s / h),
+            format!("{:.2}x", d / h),
+            format!("{:.2} ms", full * 1e3),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nmean speedup (geomean): sort2d/hbp {:.2}x (paper 3.53x avg; max here {:.2}x vs paper 7.23x)",
+        geomean(&sort_ratios),
+        sort_ratios.iter().cloned().fold(0.0, f64::max)
+    );
+    println!(
+        "mean speedup (geomean): dp2d/hbp   {:.2}x (paper 3.67x avg; max here {:.2}x vs paper 7.67x)",
+        geomean(&dp_ratios),
+        dp_ratios.iter().cloned().fold(0.0, f64::max)
+    );
+}

@@ -1,0 +1,77 @@
+//! Fig. 8: SpMV GFLOPS on Nvidia Jetson AGX Orin — CSR vs plain 2D vs
+//! HBP across the Table I suite.
+//!
+//! Paper result (Orin): HBP vs CSR max 3.32x / avg 1.64x; HBP vs 2D max
+//! 6.17x / avg 2.68x; CSR wins on m3 (banded). Device numbers come from
+//! the warp-level cost model (DESIGN.md §2); the measured-CPU columns
+//! show the same schedule effects on the host as a sanity check.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use hbp_spmv::exec::{CsrParallel, HbpEngine, SpmvEngine};
+use hbp_spmv::partition::PartitionConfig;
+use hbp_spmv::preprocess::{build_hbp_parallel, build_hbp_with, HashReorder, IdentityReorder};
+use hbp_spmv::sim::{simulate_csr, simulate_hbp, simulate_spmv2d, DeviceConfig};
+use hbp_spmv::util::bench::{banner, Bench, Table};
+use hbp_spmv::util::stats::geomean;
+
+fn main() {
+    run_device(DeviceConfig::orin(), &common::ALL_IDS, "Fig 8", "3.32x max / 1.64x avg vs CSR");
+}
+
+pub fn run_device(dev: DeviceConfig, ids: &[&str], figure: &str, paper_claim: &str) {
+    let b = Bench::from_env();
+    let threads = common::threads();
+    let cfg = PartitionConfig::default();
+    banner(
+        figure,
+        &format!(
+            "SpMV GFLOPS on {} (cost model, scale={}); paper: {paper_claim}",
+            dev.name,
+            common::scale_name(common::bench_scale())
+        ),
+    );
+    let mut t = Table::new(&[
+        "id", "csr", "2d", "hbp", "hbp/csr", "hbp/2d", "cpu hbp/csr",
+    ]);
+    let mut vs_csr = vec![];
+    let mut vs_2d = vec![];
+    for &id in ids {
+        let (meta, m) = common::load(id);
+        let hbp = build_hbp_parallel(&m, cfg, &HashReorder::default(), threads);
+        let shell = build_hbp_with(&m, cfg, &IdentityReorder);
+
+        let r_csr = simulate_csr(&m, &dev);
+        let r_2d = simulate_spmv2d(&shell, &dev);
+        let r_hbp = simulate_hbp(&hbp, &dev, 0.25);
+
+        // measured on the host CPU (schedule effects only)
+        let hbp_eng = HbpEngine::new(hbp, threads, 0.25);
+        let csr_eng = CsrParallel::new(m.clone(), threads);
+        let x = hbp_spmv::gen::random::vector(m.cols, 7);
+        let mut y = vec![0.0; m.rows];
+        let m_hbp = b.run("hbp-cpu", || hbp_eng.spmv(&x, &mut y)).median();
+        let m_csr = b.run("csr-cpu", || csr_eng.spmv(&x, &mut y)).median();
+
+        vs_csr.push(r_hbp.gflops() / r_csr.gflops());
+        vs_2d.push(r_hbp.gflops() / r_2d.gflops());
+        t.row(&[
+            meta.id.into(),
+            format!("{:.2}", r_csr.gflops()),
+            format!("{:.2}", r_2d.gflops()),
+            format!("{:.2}", r_hbp.gflops()),
+            format!("{:.2}x", r_hbp.gflops() / r_csr.gflops()),
+            format!("{:.2}x", r_hbp.gflops() / r_2d.gflops()),
+            format!("{:.2}x", m_csr / m_hbp),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nhbp vs csr: geomean {:.2}x, max {:.2}x   |   hbp vs 2d: geomean {:.2}x, max {:.2}x",
+        geomean(&vs_csr),
+        vs_csr.iter().cloned().fold(0.0, f64::max),
+        geomean(&vs_2d),
+        vs_2d.iter().cloned().fold(0.0, f64::max),
+    );
+}

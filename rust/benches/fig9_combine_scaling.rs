@@ -1,0 +1,78 @@
+//! Fig. 9: SpMV-part vs combine-part time as the matrix grows (Orin).
+//!
+//! Paper result: the combine part's time grows *faster* than the SpMV
+//! part's as kron matrices scale up, eventually dominating — the 2D
+//! method's structural limit (Discussion section). Regenerated over a
+//! kron scale sweep with both the device model and measured CPU phases.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use hbp_spmv::exec::{HbpEngine, SpmvEngine};
+use hbp_spmv::gen::rmat::{rmat, RmatConfig};
+use hbp_spmv::partition::PartitionConfig;
+use hbp_spmv::preprocess::build_hbp_parallel;
+use hbp_spmv::preprocess::HashReorder;
+use hbp_spmv::sim::{simulate_hbp, DeviceConfig};
+use hbp_spmv::util::bench::{banner, Bench, Table};
+
+fn main() {
+    let b = Bench::from_env();
+    let threads = common::threads();
+    let cfg = PartitionConfig::default();
+    let dev = DeviceConfig::orin();
+    let scales: &[u32] = match common::bench_scale() {
+        hbp_spmv::gen::Scale::Ci => &[10, 11, 12, 13],
+        hbp_spmv::gen::Scale::Small => &[11, 12, 13, 14, 15],
+        hbp_spmv::gen::Scale::Full => &[12, 13, 14, 15, 16, 17, 18],
+    };
+    banner(
+        "Fig 9",
+        "SpMV vs combine time growth with kron matrix scale (HBP engine, Orin model + measured CPU)",
+    );
+    let mut t = Table::new(&[
+        "logn", "nnz", "sim spmv", "sim combine", "combine share", "cpu spmv", "cpu combine",
+    ]);
+    let mut prev_share = 0.0;
+    let mut shares = vec![];
+    for &logn in scales {
+        let m = rmat(&RmatConfig::graph500(logn, 16, 42));
+        let hbp = build_hbp_parallel(&m, cfg, &HashReorder::default(), threads);
+        let r = simulate_hbp(&hbp, &dev, 0.25);
+        let share = r.combine_secs / r.total_secs();
+
+        let eng = HbpEngine::new(hbp, threads, 0.25);
+        let x = hbp_spmv::gen::random::vector(m.cols, 3);
+        let mut y = vec![0.0; m.rows];
+        // median of phase timings
+        let mut spmv_t = vec![];
+        let mut comb_t = vec![];
+        for _ in 0..b.iters.max(3) {
+            let p = eng.spmv_phases(&x, &mut y);
+            spmv_t.push(p.spmv);
+            comb_t.push(p.combine);
+        }
+        spmv_t.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        comb_t.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+        t.row(&[
+            logn.to_string(),
+            m.nnz().to_string(),
+            format!("{:.3} ms", r.spmv_secs * 1e3),
+            format!("{:.3} ms", r.combine_secs * 1e3),
+            format!("{:.1}%", share * 100.0),
+            format!("{:.3} ms", spmv_t[spmv_t.len() / 2] * 1e3),
+            format!("{:.3} ms", comb_t[comb_t.len() / 2] * 1e3),
+        ]);
+        shares.push(share);
+        prev_share = share;
+    }
+    let _ = prev_share;
+    t.print();
+    let growing = shares.windows(2).filter(|w| w[1] >= w[0]).count();
+    println!(
+        "\ncombine share grows with scale in {}/{} steps (paper: combine growth rate exceeds SpMV's)",
+        growing,
+        shares.len() - 1
+    );
+}

@@ -1,0 +1,44 @@
+//! Table I: the test-matrix suite — prints generated dims/nnz next to
+//! the paper's, so EXPERIMENTS.md can record the substitution fidelity.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use hbp_spmv::util::bench::{banner, Table};
+use hbp_spmv::util::Stats;
+
+fn main() {
+    let scale = common::bench_scale();
+    banner(
+        "Table I",
+        &format!(
+            "Test sparse matrices (synthetic substitutes, scale={}): generated vs paper",
+            common::scale_name(scale)
+        ),
+    );
+    let mut t = Table::new(&[
+        "id", "name", "rows(gen)", "nnz(gen)", "rows(paper)", "nnz(paper)", "mean/row(gen)",
+        "mean/row(paper)", "max/row", "sym",
+    ]);
+    for id in common::ALL_IDS {
+        let (meta, m) = common::load(id);
+        let lens = m.row_lengths();
+        let s = Stats::of_usize(&lens);
+        let paper_mean = meta.paper_nnz as f64 / meta.paper_rows as f64;
+        t.row(&[
+            meta.id.into(),
+            meta.name.into(),
+            m.rows.to_string(),
+            m.nnz().to_string(),
+            meta.paper_rows.to_string(),
+            meta.paper_nnz.to_string(),
+            format!("{:.1}", s.mean),
+            format!("{paper_mean:.1}"),
+            format!("{}", s.max as usize),
+            if meta.symmetric { "yes".into() } else { "no".into() },
+        ]);
+    }
+    t.print();
+    println!("\nnote: the row-length *distribution* (mean, skew) is the scale-invariant");
+    println!("target; absolute dims shrink by the scale divisor (DESIGN.md §2).");
+}

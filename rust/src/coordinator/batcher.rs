@@ -1,0 +1,205 @@
+//! Dynamic request batching.
+//!
+//! Requests queue on a channel; a dispatcher thread drains up to
+//! `max_batch` of them (waiting at most `max_wait` for stragglers),
+//! groups them by matrix, and executes each group — the standard
+//! serving-system batching discipline (vLLM-style), applied to SpMV.
+//! Batching matters here because requests against the same matrix share
+//! the preprocessed HBP structure and its cache residency.
+
+use super::router::{EngineKind, Router};
+use crate::coordinator::metrics::ServiceMetrics;
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Batcher tuning.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 32, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// One queued request.
+pub struct Request {
+    pub matrix: String,
+    pub engine: EngineKind,
+    pub x: Vec<f64>,
+    pub reply: mpsc::Sender<Result<Vec<f64>>>,
+}
+
+/// Handle for submitting requests.
+#[derive(Clone)]
+pub struct BatcherHandle {
+    tx: mpsc::Sender<Request>,
+}
+
+impl BatcherHandle {
+    /// Submit and wait for the result (client-side synchronous API).
+    pub fn spmv(&self, matrix: &str, engine: EngineKind, x: Vec<f64>) -> Result<Vec<f64>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request { matrix: matrix.to_string(), engine, x, reply })
+            .map_err(|_| anyhow::anyhow!("batcher shut down"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("batcher dropped request"))?
+    }
+}
+
+/// The dispatcher. Owns the router; runs until all handles drop.
+pub struct Batcher {
+    handle: BatcherHandle,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Batcher {
+    pub fn start(router: Arc<Router>, metrics: Arc<ServiceMetrics>, cfg: BatcherConfig) -> Batcher {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let thread = std::thread::spawn(move || dispatcher(router, metrics, cfg, rx));
+        Batcher { handle: BatcherHandle { tx }, thread: Some(thread) }
+    }
+
+    pub fn handle(&self) -> BatcherHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        // Replace our own sender with a dummy so the dispatcher's receiver
+        // disconnects once all external handles are gone, then join.
+        // NOTE: if external handles still exist the join waits for them —
+        // drop handles before the Batcher.
+        self.handle = BatcherHandle { tx: mpsc::channel().0 };
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn dispatcher(
+    router: Arc<Router>,
+    metrics: Arc<ServiceMetrics>,
+    cfg: BatcherConfig,
+    rx: mpsc::Receiver<Request>,
+) {
+    loop {
+        // block for the first request
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return, // all senders gone
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + cfg.max_wait;
+        while batch.len() < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => batch.push(r),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        // group by (matrix, engine) preserving order
+        let mut groups: BTreeMap<(String, String), Vec<Request>> = BTreeMap::new();
+        for r in batch {
+            groups
+                .entry((r.matrix.clone(), format!("{:?}", r.engine)))
+                .or_default()
+                .push(r);
+        }
+        for ((_, _), reqs) in groups {
+            if reqs.len() > 1 {
+                // same-matrix batch: run as SpMM (element reuse across the
+                // batch); falls back to per-request on validation errors
+                let matrix = reqs[0].matrix.clone();
+                let engine = reqs[0].engine;
+                let dims_ok = router
+                    .get(&matrix)
+                    .map(|m| reqs.iter().all(|r| r.x.len() == m.cols))
+                    .unwrap_or(false);
+                if dims_ok {
+                    let t = crate::util::Timer::start();
+                    let xs: Vec<Vec<f64>> = reqs.iter().map(|r| r.x.clone()).collect();
+                    match router.spmm(&matrix, engine, xs) {
+                        Ok(ys) => {
+                            let secs = t.elapsed_secs() / reqs.len() as f64;
+                            let nnz = router.get(&matrix).map(|m| m.nnz).unwrap_or(0);
+                            for (req, y) in reqs.into_iter().zip(ys) {
+                                metrics.record_request(secs, nnz);
+                                let _ = req.reply.send(Ok(y));
+                            }
+                            continue;
+                        }
+                        Err(_) => { /* fall through to per-request path */ }
+                    }
+                }
+            }
+            for req in reqs {
+                let t = crate::util::Timer::start();
+                let result = router.spmv(&req.matrix, req.engine, &req.x);
+                match &result {
+                    Ok(_) => {
+                        let nnz = router.get(&req.matrix).map(|m| m.nnz).unwrap_or(0);
+                        metrics.record_request(t.elapsed_secs(), nnz);
+                    }
+                    Err(_) => metrics.record_error(),
+                }
+                let _ = req.reply.send(result);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::random;
+    use crate::partition::PartitionConfig;
+
+    fn setup() -> (Arc<Router>, Arc<ServiceMetrics>) {
+        let mut router = Router::new(PartitionConfig::test_small(), 2);
+        router.register("m", random::power_law_rows(60, 50, 2.0, 15, 3)).unwrap();
+        (Arc::new(router), Arc::new(ServiceMetrics::new()))
+    }
+
+    #[test]
+    fn batched_requests_all_answered() {
+        let (router, metrics) = setup();
+        let m = router.get("m").unwrap();
+        let (rows, cols) = (m.rows, m.cols);
+        let batcher = Batcher::start(router.clone(), metrics.clone(), BatcherConfig::default());
+        let h = batcher.handle();
+        let results: Vec<Vec<f64>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..16)
+                .map(|i| {
+                    let h = h.clone();
+                    s.spawn(move || h.spmv("m", EngineKind::Hbp, random::vector(cols, i)).unwrap())
+                })
+                .collect();
+            handles.into_iter().map(|t| t.join().unwrap()).collect()
+        });
+        assert_eq!(results.len(), 16);
+        assert!(results.iter().all(|y| y.len() == rows));
+        assert_eq!(metrics.snapshot().requests, 16);
+    }
+
+    #[test]
+    fn errors_propagate_to_caller() {
+        let (router, metrics) = setup();
+        let batcher = Batcher::start(router, metrics.clone(), BatcherConfig::default());
+        let err = batcher.handle().spmv("nope", EngineKind::Csr, vec![0.0; 50]);
+        assert!(err.is_err());
+        assert_eq!(metrics.snapshot().errors, 1);
+    }
+}

@@ -1,0 +1,131 @@
+//! Service metrics: request counts, latency histogram, throughput.
+
+use crate::util::stats::{Histogram, Welford};
+use std::sync::Mutex;
+use std::time::Instant;
+
+struct Inner {
+    requests: u64,
+    errors: u64,
+    latency: Histogram,
+    latency_stats: Welford,
+    nnz_processed: f64,
+    started: Instant,
+}
+
+/// Thread-safe service metrics.
+pub struct ServiceMetrics {
+    inner: Mutex<Inner>,
+}
+
+impl Default for ServiceMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServiceMetrics {
+    pub fn new() -> Self {
+        ServiceMetrics {
+            inner: Mutex::new(Inner {
+                requests: 0,
+                errors: 0,
+                // 1µs .. ~1s exponential buckets
+                latency: Histogram::exponential(1e-6, 21),
+                latency_stats: Welford::new(),
+                nnz_processed: 0.0,
+                started: Instant::now(),
+            }),
+        }
+    }
+
+    pub fn record_request(&self, latency_secs: f64, nnz: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.requests += 1;
+        m.latency.record(latency_secs);
+        m.latency_stats.push(latency_secs);
+        m.nnz_processed += nnz as f64;
+    }
+
+    pub fn record_error(&self) {
+        self.inner.lock().unwrap().errors += 1;
+    }
+
+    /// Snapshot for the `stats` endpoint.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let m = self.inner.lock().unwrap();
+        let elapsed = m.started.elapsed().as_secs_f64();
+        MetricsSnapshot {
+            requests: m.requests,
+            errors: m.errors,
+            mean_latency_secs: m.latency_stats.mean(),
+            p50_latency_secs: m.latency.quantile(0.5),
+            p99_latency_secs: m.latency.quantile(0.99),
+            requests_per_sec: m.requests as f64 / elapsed.max(1e-9),
+            gflops: 2.0 * m.nnz_processed / elapsed.max(1e-9) / 1e9,
+        }
+    }
+}
+
+/// A point-in-time metrics snapshot.
+#[derive(Clone, Copy, Debug)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub errors: u64,
+    pub mean_latency_secs: f64,
+    pub p50_latency_secs: f64,
+    pub p99_latency_secs: f64,
+    pub requests_per_sec: f64,
+    pub gflops: f64,
+}
+
+impl MetricsSnapshot {
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{obj, Json};
+        obj(&[
+            ("requests", Json::Num(self.requests as f64)),
+            ("errors", Json::Num(self.errors as f64)),
+            ("mean_latency_secs", Json::Num(self.mean_latency_secs)),
+            ("p50_latency_secs", Json::Num(self.p50_latency_secs)),
+            ("p99_latency_secs", Json::Num(self.p99_latency_secs)),
+            ("requests_per_sec", Json::Num(self.requests_per_sec)),
+            ("gflops", Json::Num(self.gflops)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = ServiceMetrics::new();
+        for i in 1..=100 {
+            m.record_request(i as f64 * 1e-5, 1000);
+        }
+        m.record_error();
+        let s = m.snapshot();
+        assert_eq!(s.requests, 100);
+        assert_eq!(s.errors, 1);
+        assert!(s.mean_latency_secs > 0.0);
+        assert!(s.p99_latency_secs >= s.p50_latency_secs);
+        assert!(s.gflops > 0.0);
+    }
+
+    #[test]
+    fn concurrent_recording() {
+        let m = std::sync::Arc::new(ServiceMetrics::new());
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let m = m.clone();
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        m.record_request(1e-6, 10);
+                    }
+                });
+            }
+        });
+        assert_eq!(m.snapshot().requests, 8000);
+    }
+}

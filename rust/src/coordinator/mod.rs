@@ -1,0 +1,18 @@
+//! L3 serving coordinator.
+//!
+//! A small but real SpMV service in the vLLM-router mold: a matrix
+//! registry with preprocessed engines ([`router`]), a dynamic batcher
+//! that groups queued requests by matrix ([`batcher`]), latency metrics
+//! ([`metrics`]), and a line-delimited-JSON TCP front plus an in-process
+//! API ([`server`]). The request path is pure rust — the PJRT runtime
+//! executes the AOT-compiled kernels, Python is long gone.
+
+pub mod metrics;
+pub mod router;
+pub mod batcher;
+pub mod server;
+
+pub use batcher::{Batcher, BatcherConfig};
+pub use metrics::ServiceMetrics;
+pub use router::{EngineKind, Router};
+pub use server::{serve, Coordinator};

@@ -1,0 +1,178 @@
+//! Matrix registry + engine routing.
+//!
+//! A registered matrix is preprocessed once (the HBP build *is* the
+//! paper's cheap preprocessing step) and then serves SpMV requests
+//! through whichever engine the request names — the pure-rust HBP
+//! engine (default), the CSR/2D baselines, or the PJRT/AOT path.
+
+use crate::exec::{CsrParallel, HbpEngine, SpmvEngine, Spmv2dEngine};
+use crate::formats::Csr;
+use crate::partition::PartitionConfig;
+use crate::preprocess::build_hbp_parallel;
+use crate::preprocess::HashReorder;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Which engine executes a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    Hbp,
+    Csr,
+    Plain2d,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Result<EngineKind> {
+        match s {
+            "hbp" => Ok(EngineKind::Hbp),
+            "csr" => Ok(EngineKind::Csr),
+            "2d" => Ok(EngineKind::Plain2d),
+            other => bail!("unknown engine {other:?} (expected hbp|csr|2d)"),
+        }
+    }
+}
+
+/// A registered, preprocessed matrix.
+pub struct PreparedMatrix {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub nnz: usize,
+    pub preprocess_secs: f64,
+    hbp: HbpEngine,
+    csr: CsrParallel,
+    plain2d: Spmv2dEngine,
+}
+
+impl PreparedMatrix {
+    pub fn engine(&self, kind: EngineKind) -> &dyn SpmvEngine {
+        match kind {
+            EngineKind::Hbp => &self.hbp,
+            EngineKind::Csr => &self.csr,
+            EngineKind::Plain2d => &self.plain2d,
+        }
+    }
+
+    pub fn hbp(&self) -> &HbpEngine {
+        &self.hbp
+    }
+}
+
+/// The matrix registry.
+pub struct Router {
+    pub threads: usize,
+    pub cfg: PartitionConfig,
+    matrices: BTreeMap<String, PreparedMatrix>,
+}
+
+impl Router {
+    pub fn new(cfg: PartitionConfig, threads: usize) -> Router {
+        Router { threads: threads.max(1), cfg, matrices: BTreeMap::new() }
+    }
+
+    /// Register a matrix: builds HBP (parallel, hash reorder) and the
+    /// baseline engines.
+    pub fn register(&mut self, name: &str, m: Csr) -> Result<&PreparedMatrix> {
+        let (hbp, preprocess_secs) = crate::util::timer::time(|| {
+            build_hbp_parallel(&m, self.cfg, &HashReorder::default(), self.threads)
+        });
+        let prepared = PreparedMatrix {
+            name: name.to_string(),
+            rows: m.rows,
+            cols: m.cols,
+            nnz: m.nnz(),
+            preprocess_secs,
+            hbp: HbpEngine::new(hbp, self.threads, 0.25),
+            csr: CsrParallel::new(m.clone(), self.threads),
+            plain2d: Spmv2dEngine::new(m, self.cfg, self.threads),
+        };
+        self.matrices.insert(name.to_string(), prepared);
+        Ok(&self.matrices[name])
+    }
+
+    pub fn get(&self, name: &str) -> Result<&PreparedMatrix> {
+        self.matrices
+            .get(name)
+            .with_context(|| format!("matrix {name:?} not registered"))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.matrices.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Route one SpMV request.
+    pub fn spmv(&self, matrix: &str, kind: EngineKind, x: &[f64]) -> Result<Vec<f64>> {
+        let m = self.get(matrix)?;
+        anyhow::ensure!(
+            x.len() == m.cols,
+            "vector length {} != matrix cols {}",
+            x.len(),
+            m.cols
+        );
+        let mut y = vec![0.0; m.rows];
+        m.engine(kind).spmv(x, &mut y);
+        Ok(y)
+    }
+
+    /// Route a batch against one (matrix, engine): the engines' SpMM
+    /// path reuses each matrix element across the whole batch.
+    pub fn spmm(&self, matrix: &str, kind: EngineKind, xs: Vec<Vec<f64>>) -> Result<Vec<Vec<f64>>> {
+        let m = self.get(matrix)?;
+        for (i, x) in xs.iter().enumerate() {
+            anyhow::ensure!(
+                x.len() == m.cols,
+                "batch vector {i} length {} != matrix cols {}",
+                x.len(),
+                m.cols
+            );
+        }
+        let mut ys: Vec<Vec<f64>> = xs.iter().map(|_| vec![0.0; m.rows]).collect();
+        m.engine(kind).spmm(&xs, &mut ys);
+        Ok(ys)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::dense::allclose;
+    use crate::gen::random;
+
+    fn router_with(name: &str, m: Csr) -> Router {
+        let mut r = Router::new(PartitionConfig::test_small(), 2);
+        r.register(name, m).unwrap();
+        r
+    }
+
+    #[test]
+    fn register_and_route_all_engines() {
+        let m = random::power_law_rows(100, 80, 2.0, 20, 3);
+        let r = router_with("t", m.clone());
+        let x = random::vector(80, 1);
+        let mut expect = vec![0.0; 100];
+        m.spmv(&x, &mut expect);
+        for kind in [EngineKind::Hbp, EngineKind::Csr, EngineKind::Plain2d] {
+            let y = r.spmv("t", kind, &x).unwrap();
+            assert!(allclose(&y, &expect, 1e-10, 1e-12), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn errors_are_clear() {
+        let m = random::uniform(10, 10, 0.5, 1);
+        let r = router_with("t", m);
+        assert!(r.spmv("missing", EngineKind::Hbp, &vec![0.0; 10]).is_err());
+        assert!(r.spmv("t", EngineKind::Hbp, &vec![0.0; 5]).is_err());
+        assert!(EngineKind::parse("warp").is_err());
+        assert_eq!(EngineKind::parse("2d").unwrap(), EngineKind::Plain2d);
+    }
+
+    #[test]
+    fn registry_lists_names() {
+        let mut r = Router::new(PartitionConfig::test_small(), 1);
+        r.register("a", random::uniform(5, 5, 0.5, 1)).unwrap();
+        r.register("b", random::uniform(5, 5, 0.5, 2)).unwrap();
+        assert_eq!(r.names(), vec!["a", "b"]);
+        assert!(r.get("a").unwrap().preprocess_secs >= 0.0);
+    }
+}

@@ -1,0 +1,248 @@
+//! The serving front: in-process [`Coordinator`] API + line-delimited
+//! JSON over TCP.
+//!
+//! Protocol (one JSON object per line):
+//!
+//! ```text
+//! -> {"op":"spmv", "matrix":"m1", "x":[...], "engine":"hbp"}
+//! <- {"ok":true, "y":[...]}
+//! -> {"op":"list"}
+//! <- {"ok":true, "matrices":[{"name":"m1","rows":...,"cols":...,"nnz":...}]}
+//! -> {"op":"stats"}
+//! <- {"ok":true, "stats":{...}}
+//! ```
+
+use super::batcher::{Batcher, BatcherConfig, BatcherHandle};
+use super::metrics::ServiceMetrics;
+use super::router::{EngineKind, Router};
+use crate::util::json::{obj, Json};
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+/// The in-process coordinator: router + batcher + metrics.
+pub struct Coordinator {
+    pub router: Arc<Router>,
+    pub metrics: Arc<ServiceMetrics>,
+    // field order matters: `handle` must drop BEFORE `batcher` (fields
+    // drop in declaration order) or Batcher::drop joins a dispatcher
+    // that still sees a live sender and never exits.
+    handle: BatcherHandle,
+    batcher: Batcher,
+}
+
+impl Coordinator {
+    pub fn new(router: Router, cfg: BatcherConfig) -> Coordinator {
+        let router = Arc::new(router);
+        let metrics = Arc::new(ServiceMetrics::new());
+        let batcher = Batcher::start(router.clone(), metrics.clone(), cfg);
+        let handle = batcher.handle();
+        Coordinator { router, metrics, handle, batcher }
+    }
+
+    /// Synchronous SpMV through the batching pipeline.
+    pub fn spmv(&self, matrix: &str, engine: EngineKind, x: Vec<f64>) -> Result<Vec<f64>> {
+        self.handle.spmv(matrix, engine, x)
+    }
+
+    pub fn handle(&self) -> BatcherHandle {
+        self.batcher.handle()
+    }
+
+    /// Process one protocol request (shared by TCP and tests).
+    pub fn handle_json(&self, line: &str) -> Json {
+        match self.try_handle(line) {
+            Ok(v) => v,
+            Err(e) => obj(&[
+                ("ok", Json::Bool(false)),
+                ("error", Json::Str(format!("{e:#}"))),
+            ]),
+        }
+    }
+
+    fn try_handle(&self, line: &str) -> Result<Json> {
+        let req = Json::parse(line).context("parsing request JSON")?;
+        match req.req_str("op")? {
+            "spmv" => {
+                let matrix = req.req_str("matrix")?;
+                let engine = EngineKind::parse(
+                    req.get("engine").and_then(Json::as_str).unwrap_or("hbp"),
+                )?;
+                let x: Vec<f64> = req
+                    .get("x")
+                    .and_then(Json::as_arr)
+                    .context("missing array field \"x\"")?
+                    .iter()
+                    .map(|v| v.as_f64().context("non-numeric x entry"))
+                    .collect::<Result<_>>()?;
+                let y = self.spmv(matrix, engine, x)?;
+                Ok(obj(&[
+                    ("ok", Json::Bool(true)),
+                    ("y", crate::util::json::num_arr(&y)),
+                ]))
+            }
+            "list" => {
+                let matrices: Vec<Json> = self
+                    .router
+                    .names()
+                    .into_iter()
+                    .map(|n| {
+                        let m = self.router.get(n).unwrap();
+                        obj(&[
+                            ("name", Json::Str(n.to_string())),
+                            ("rows", Json::Num(m.rows as f64)),
+                            ("cols", Json::Num(m.cols as f64)),
+                            ("nnz", Json::Num(m.nnz as f64)),
+                            ("preprocess_secs", Json::Num(m.preprocess_secs)),
+                        ])
+                    })
+                    .collect();
+                Ok(obj(&[("ok", Json::Bool(true)), ("matrices", Json::Arr(matrices))]))
+            }
+            "stats" => Ok(obj(&[
+                ("ok", Json::Bool(true)),
+                ("stats", self.metrics.snapshot().to_json()),
+            ])),
+            other => anyhow::bail!("unknown op {other:?}"),
+        }
+    }
+}
+
+/// Serve the coordinator over TCP until the process exits. Binds to
+/// `addr` (e.g. `"127.0.0.1:7700"`); one thread per connection.
+pub fn serve(coordinator: Arc<Coordinator>, addr: &str) -> Result<()> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    eprintln!("hbp-spmv serving on {}", listener.local_addr()?);
+    for stream in listener.incoming() {
+        let stream = stream?;
+        let c = coordinator.clone();
+        std::thread::spawn(move || {
+            let _ = handle_conn(c, stream);
+        });
+    }
+    Ok(())
+}
+
+/// Serve on an ephemeral port, returning the bound address (tests/e2e).
+pub fn serve_background(coordinator: Arc<Coordinator>) -> Result<std::net::SocketAddr> {
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            match stream {
+                Ok(s) => {
+                    let c = coordinator.clone();
+                    std::thread::spawn(move || {
+                        let _ = handle_conn(c, s);
+                    });
+                }
+                Err(_) => break,
+            }
+        }
+    });
+    Ok(addr)
+}
+
+fn handle_conn(c: Arc<Coordinator>, stream: TcpStream) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client closed
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = c.handle_json(line.trim());
+        writer.write_all(resp.to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+}
+
+/// A tiny blocking client for the protocol (examples + tests).
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: impl std::net::ToSocketAddrs) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
+    }
+
+    pub fn call(&mut self, req: &Json) -> Result<Json> {
+        self.writer.write_all(req.to_string().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Json::parse(line.trim())
+    }
+
+    pub fn spmv(&mut self, matrix: &str, x: &[f64]) -> Result<Vec<f64>> {
+        let req = obj(&[
+            ("op", Json::Str("spmv".into())),
+            ("matrix", Json::Str(matrix.into())),
+            ("x", crate::util::json::num_arr(x)),
+        ]);
+        let resp = self.call(&req)?;
+        anyhow::ensure!(
+            resp.get("ok") == Some(&Json::Bool(true)),
+            "server error: {}",
+            resp.to_string()
+        );
+        resp.get("y")
+            .and_then(Json::as_arr)
+            .context("missing y")?
+            .iter()
+            .map(|v| v.as_f64().context("bad y entry"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::random;
+    use crate::partition::PartitionConfig;
+
+    fn coordinator() -> Coordinator {
+        let mut router = Router::new(PartitionConfig::test_small(), 2);
+        router.register("t", random::power_law_rows(40, 30, 2.0, 10, 3)).unwrap();
+        Coordinator::new(router, BatcherConfig::default())
+    }
+
+    #[test]
+    fn json_api_spmv_and_list() {
+        let c = coordinator();
+        let list = c.handle_json(r#"{"op":"list"}"#);
+        assert_eq!(list.get("ok"), Some(&Json::Bool(true)));
+
+        let x: Vec<f64> = (0..30).map(|i| i as f64 / 30.0).collect();
+        let req = obj(&[
+            ("op", Json::Str("spmv".into())),
+            ("matrix", Json::Str("t".into())),
+            ("x", crate::util::json::num_arr(&x)),
+        ]);
+        let resp = c.handle_json(&req.to_string());
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(resp.get("y").unwrap().as_arr().unwrap().len(), 40);
+
+        let stats = c.handle_json(r#"{"op":"stats"}"#);
+        assert!(stats.get("stats").unwrap().req_usize("requests").unwrap() >= 1);
+    }
+
+    #[test]
+    fn json_api_errors() {
+        let c = coordinator();
+        let bad = c.handle_json("not json");
+        assert_eq!(bad.get("ok"), Some(&Json::Bool(false)));
+        let unknown = c.handle_json(r#"{"op":"nope"}"#);
+        assert_eq!(unknown.get("ok"), Some(&Json::Bool(false)));
+        let missing = c.handle_json(r#"{"op":"spmv","matrix":"zzz","x":[1]}"#);
+        assert_eq!(missing.get("ok"), Some(&Json::Bool(false)));
+    }
+}

@@ -1,0 +1,225 @@
+//! CSR SpMV engines — the paper's Algorithm 1 baseline.
+
+use super::engine::{PhaseTimes, SpmvEngine};
+use crate::formats::Csr;
+use crate::util::sync::SharedMut;
+use crate::util::Timer;
+
+/// Serial CSR SpMV.
+pub struct CsrSerial {
+    pub m: Csr,
+}
+
+impl CsrSerial {
+    pub fn new(m: Csr) -> Self {
+        CsrSerial { m }
+    }
+}
+
+impl SpmvEngine for CsrSerial {
+    fn name(&self) -> &str {
+        "csr-serial"
+    }
+    fn rows(&self) -> usize {
+        self.m.rows
+    }
+    fn cols(&self) -> usize {
+        self.m.cols
+    }
+    fn nnz(&self) -> usize {
+        self.m.nnz()
+    }
+
+    fn spmv_phases(&self, x: &[f64], y: &mut [f64]) -> PhaseTimes {
+        let t = Timer::start();
+        self.m.spmv(x, y);
+        PhaseTimes { spmv: t.elapsed_secs(), combine: 0.0 }
+    }
+}
+
+/// Row-parallel CSR SpMV: rows are chunked contiguously across worker
+/// threads with nnz-balanced boundaries (the standard CUDA `csr_vector`
+/// / OpenMP guided analog — a fair, competent baseline, not a strawman).
+pub struct CsrParallel {
+    pub m: Csr,
+    pub threads: usize,
+    /// Row chunk boundaries, `threads+1` entries.
+    bounds: Vec<usize>,
+    /// Persistent workers (§Perf: no per-call spawns).
+    pool: crate::util::pool::WorkerPool,
+}
+
+impl CsrParallel {
+    pub fn new(m: Csr, threads: usize) -> Self {
+        let threads = threads.max(1);
+        // nnz-balanced contiguous row partition
+        let total = m.nnz().max(1);
+        let per = total.div_ceil(threads);
+        let mut bounds = vec![0usize];
+        let mut acc = 0usize;
+        for r in 0..m.rows {
+            acc += m.row_nnz(r);
+            if acc >= per * bounds.len() && bounds.len() < threads {
+                bounds.push(r + 1);
+            }
+        }
+        while bounds.len() < threads {
+            bounds.push(m.rows);
+        }
+        bounds.push(m.rows);
+        CsrParallel { m, threads, bounds, pool: crate::util::pool::WorkerPool::new(threads) }
+    }
+}
+
+impl SpmvEngine for CsrParallel {
+    fn name(&self) -> &str {
+        "csr"
+    }
+    fn rows(&self) -> usize {
+        self.m.rows
+    }
+    fn cols(&self) -> usize {
+        self.m.cols
+    }
+    fn nnz(&self) -> usize {
+        self.m.nnz()
+    }
+
+    fn spmv_phases(&self, x: &[f64], y: &mut [f64]) -> PhaseTimes {
+        assert_eq!(x.len(), self.m.cols);
+        assert_eq!(y.len(), self.m.rows);
+        let t = Timer::start();
+        let shared = SharedMut::new(y);
+        let m = &self.m;
+        self.pool.run_generation(|w, _| {
+            let (lo, hi) = (self.bounds[w], self.bounds[w + 1]);
+            if lo >= hi {
+                return;
+            }
+            // SAFETY: row chunks [lo, hi) are disjoint per worker.
+            let out = unsafe { shared.slice_mut(lo, hi - lo) };
+            for (yi, r) in out.iter_mut().zip(lo..hi) {
+                let (cols, vals) = m.row(r);
+                let mut sum = 0.0;
+                for (c, v) in cols.iter().zip(vals) {
+                    sum += v * x[*c as usize];
+                }
+                *yi = sum;
+            }
+        });
+        PhaseTimes { spmv: t.elapsed_secs(), combine: 0.0 }
+    }
+
+    /// SpMM with a vector-inner loop: every matrix element is read once
+    /// and applied to the whole batch (k-way reuse of the expensive
+    /// stream) — the win the coordinator's same-matrix batching buys.
+    fn spmm(&self, xs: &[Vec<f64>], ys: &mut [Vec<f64>]) {
+        assert_eq!(xs.len(), ys.len());
+        if xs.is_empty() {
+            return;
+        }
+        let k = xs.len();
+        for (i, x) in xs.iter().enumerate() {
+            assert_eq!(x.len(), self.m.cols, "xs[{i}] length");
+            assert_eq!(ys[i].len(), self.m.rows, "ys[{i}] length");
+        }
+        // collect raw output pointers; each worker writes disjoint rows
+        let y_ptrs: Vec<crate::util::sync::SharedMut<f64>> = ys
+            .iter_mut()
+            .map(|y| crate::util::sync::SharedMut::new(&mut y[..]))
+            .collect();
+        let m = &self.m;
+        self.pool.run_generation(|w, _| {
+            let (lo, hi) = (self.bounds[w], self.bounds[w + 1]);
+            for r in lo..hi {
+                let (cols, vals) = m.row(r);
+                // accumulate all k outputs while streaming the row once
+                for ki in 0..k {
+                    let x = &xs[ki];
+                    let mut sum = 0.0;
+                    for (c, v) in cols.iter().zip(vals) {
+                        sum += v * x[*c as usize];
+                    }
+                    // SAFETY: rows [lo, hi) are disjoint per worker.
+                    unsafe { y_ptrs[ki].write(r, sum) };
+                }
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::dense::allclose;
+    use crate::gen::random;
+
+    #[test]
+    fn parallel_matches_serial() {
+        let m = random::power_law_rows(500, 400, 2.0, 80, 5);
+        let x = random::vector(400, 1);
+        let serial = CsrSerial::new(m.clone());
+        let mut ys = vec![0.0; 500];
+        serial.spmv(&x, &mut ys);
+        for threads in [1, 2, 3, 8] {
+            let par = CsrParallel::new(m.clone(), threads);
+            let mut yp = vec![0.0; 500];
+            par.spmv(&x, &mut yp);
+            assert!(allclose(&ys, &yp, 1e-12, 1e-12), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn bounds_cover_all_rows() {
+        let m = random::uniform(100, 50, 0.1, 7);
+        let p = CsrParallel::new(m, 7);
+        assert_eq!(p.bounds.len(), 8);
+        assert_eq!(p.bounds[0], 0);
+        assert_eq!(*p.bounds.last().unwrap(), 100);
+        for w in p.bounds.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+
+    #[test]
+    fn spmm_matches_repeated_spmv() {
+        let m = random::power_law_rows(200, 150, 2.0, 30, 7);
+        let eng = CsrParallel::new(m.clone(), 4);
+        let xs: Vec<Vec<f64>> = (0..5).map(|i| random::vector(150, i)).collect();
+        let mut ys: Vec<Vec<f64>> = (0..5).map(|_| vec![0.0; 200]).collect();
+        eng.spmm(&xs, &mut ys);
+        for (x, y) in xs.iter().zip(&ys) {
+            let mut expect = vec![0.0; 200];
+            eng.spmv(x, &mut expect);
+            assert!(allclose(y, &expect, 1e-12, 1e-12));
+        }
+    }
+
+    #[test]
+    fn spmm_empty_batch() {
+        let m = random::uniform(10, 10, 0.3, 1);
+        let eng = CsrParallel::new(m, 2);
+        eng.spmm(&[], &mut []);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let m = Csr::empty(10, 10);
+        let p = CsrParallel::new(m, 4);
+        let mut y = vec![9.0; 10];
+        p.spmv(&vec![1.0; 10], &mut y);
+        assert_eq!(y, vec![0.0; 10]);
+    }
+
+    #[test]
+    fn more_threads_than_rows() {
+        let m = random::uniform(3, 3, 0.9, 2);
+        let p = CsrParallel::new(m.clone(), 16);
+        let x = random::vector(3, 3);
+        let mut y = vec![0.0; 3];
+        p.spmv(&x, &mut y);
+        let mut expect = vec![0.0; 3];
+        m.spmv(&x, &mut expect);
+        assert!(allclose(&y, &expect, 1e-12, 1e-12));
+    }
+}

@@ -1,0 +1,63 @@
+//! The engine abstraction shared by benches, examples and the
+//! coordinator's router.
+
+/// Timing breakdown of a two-phase (SpMV + combine) execution — the
+/// quantities plotted in Fig. 9.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseTimes {
+    /// Seconds in the block-SpMV phase.
+    pub spmv: f64,
+    /// Seconds in the combine phase (0 for single-phase engines).
+    pub combine: f64,
+}
+
+impl PhaseTimes {
+    pub fn total(&self) -> f64 {
+        self.spmv + self.combine
+    }
+}
+
+/// A sparse matrix-vector multiplication engine.
+pub trait SpmvEngine: Sync {
+    /// Engine name for bench tables ("csr", "2d", "hbp", ...).
+    fn name(&self) -> &str;
+
+    fn rows(&self) -> usize;
+    fn cols(&self) -> usize;
+    fn nnz(&self) -> usize;
+
+    /// Compute `y = A x`. `y.len() == rows`, `x.len() == cols`.
+    fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        self.spmv_phases(x, y);
+    }
+
+    /// As [`SpmvEngine::spmv`] but returning the phase timing breakdown.
+    fn spmv_phases(&self, x: &[f64], y: &mut [f64]) -> PhaseTimes;
+
+    /// Multi-vector SpMV (SpMM): `ys[k] = A xs[k]`. The default loops
+    /// [`SpmvEngine::spmv`]; engines may override with a vector-inner
+    /// loop that reuses each matrix element across the batch — this is
+    /// what makes the coordinator's same-matrix batching pay off.
+    fn spmm(&self, xs: &[Vec<f64>], ys: &mut [Vec<f64>]) {
+        assert_eq!(xs.len(), ys.len());
+        for (x, y) in xs.iter().zip(ys.iter_mut()) {
+            self.spmv(x, y);
+        }
+    }
+
+    /// GFLOPS for a measured execution time (the paper's `2*nnz/t`).
+    fn gflops(&self, secs: f64) -> f64 {
+        crate::util::timer::spmv_gflops(self.nnz(), secs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_times_total() {
+        let p = PhaseTimes { spmv: 1.5, combine: 0.5 };
+        assert!((p.total() - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,301 @@
+//! The HBP SpMV engine — paper Algorithm 3 + the §III-C mixed schedule.
+//!
+//! Per block (executed by one worker = one warp): for every group, each
+//! active lane starts at `begin_ptr[group] + active_rank` and walks its
+//! `add_sign` chain, accumulating `data[j] * x_seg[col[j]]` (columns are
+//! stored block-local, so `x_seg` is the block's vector segment — the
+//! shared-memory tile of the GPU original). Results land in the block's
+//! partial vector at the *pre-hash* row (`output_hash[slot]`); the
+//! combine phase then reduces partials across column blocks.
+
+use super::combine::{combine_on_pool, combine_sparse_on_pool, CombineIndex};
+use super::engine::{PhaseTimes, SpmvEngine};
+use super::scheduler::{mixed_schedule, MixedSchedule, WorkerStats};
+use crate::preprocess::{Hbp, HbpBlock};
+use crate::util::pool::WorkerPool;
+use crate::util::sync::SharedMut;
+use crate::util::Timer;
+
+/// HBP execution engine.
+pub struct HbpEngine {
+    pub hbp: Hbp,
+    pub threads: usize,
+    /// Fraction of blocks in the competitive tail (paper default: the
+    /// tail that equalizes *observed* runtime; 0.25 works well, ablated
+    /// in `ablation_competitive`).
+    pub competitive_frac: f64,
+    schedule: MixedSchedule,
+    total_slots: usize,
+    /// Reused partial-vector buffer (§Perf: on kron matrices the slot
+    /// space is several times the matrix rows — the paper's own storage
+    /// blow-up — and re-allocating it per call dominated SpMV time).
+    /// Zero-init is unnecessary: every slot of every block is written by
+    /// Algorithm 3 (zero rows store an explicit 0).
+    partials: std::sync::Mutex<Vec<f64>>,
+    /// Persistent workers (§Perf: per-call thread spawns dominated both
+    /// phases at small scales; see `util::pool`).
+    pool: WorkerPool,
+    /// Sparsity-aware combine (the paper's Discussion/future-work
+    /// optimization): `None` disables it (dense streaming combine).
+    combine_index: Option<CombineIndex>,
+}
+
+impl HbpEngine {
+    pub fn new(hbp: Hbp, threads: usize, competitive_frac: f64) -> Self {
+        assert!(hbp.grid.cfg.warp <= 64, "engine lane scratch supports warp <= 64");
+        let threads = threads.max(1);
+        let schedule = mixed_schedule(hbp.blocks.len(), threads, competitive_frac);
+        let total_slots = hbp.blocks.iter().map(|b| b.nrows).sum();
+        let combine_index = CombineIndex::build(&hbp);
+        // the index only pays off when some blocks take the sparse path
+        let combine_index =
+            (combine_index.sparse_fraction() > 0.0).then_some(combine_index);
+        HbpEngine {
+            hbp,
+            threads,
+            competitive_frac,
+            schedule,
+            total_slots,
+            partials: std::sync::Mutex::new(Vec::new()),
+            pool: WorkerPool::new(threads),
+            combine_index,
+        }
+    }
+
+    /// Disable the sparsity-aware combine (ablation / A-B comparison).
+    pub fn with_dense_combine(mut self) -> Self {
+        self.combine_index = None;
+        self
+    }
+
+    /// Compute one block's partial vector into `out[0..nrows]`
+    /// (Algorithm 3, all groups of the block).
+    ///
+    /// §Perf: instead of each lane chasing its `add_sign` chain (strided
+    /// reads), the group's elements are consumed **linearly in storage
+    /// order** — HBP's round-major layout means round `k` holds the
+    /// `k`-th element of every live lane consecutively, so one forward
+    /// walk with a live-lane list computes all lanes at streaming
+    /// bandwidth (the CPU analog of the layout's GPU coalescing).
+    /// `add_sign == -1` is used only as the lane-retire marker.
+    #[inline]
+    pub(crate) fn block_spmv(hbp: &Hbp, b: &HbpBlock, x: &[f64], out: &mut [f64]) {
+        let warp = hbp.grid.cfg.warp;
+        let (cs, _) = hbp.grid.col_range(b.bj as usize);
+        let x_seg = &x[cs..];
+        // lane accumulators + live list, reused across groups
+        let mut acc = [0.0f64; 64];
+        let mut live: [u16; 64] = [0; 64];
+        debug_assert!(warp <= 64, "warp larger than lane scratch");
+        for g in 0..b.ngroups {
+            let slot_lo = g * warp;
+            let slot_hi = ((g + 1) * warp).min(b.nrows);
+            let mut j = hbp.begin_ptr[b.group_start + g];
+
+            // collect active lanes in slot order; zero rows emit 0 now
+            let mut n_live = 0usize;
+            for s in slot_lo..slot_hi {
+                let orig = hbp.output_hash[b.slot_start + s] as usize;
+                if hbp.zero_row[b.slot_start + s] == -1 {
+                    out[orig] = 0.0; // Algorithm 3 line 5
+                } else {
+                    live[n_live] = s as u16;
+                    acc[n_live] = 0.0;
+                    n_live += 1;
+                }
+            }
+
+            // round-by-round linear walk; retire lanes whose element is
+            // marked -1 (compacting the live list in place)
+            while n_live > 0 {
+                let mut w = 0usize;
+                for r in 0..n_live {
+                    let sum = acc[r]
+                        + hbp.data[j] * x_seg[hbp.col[j] as usize];
+                    let last = hbp.add_sign[j] == -1;
+                    j += 1;
+                    if last {
+                        let s = live[r] as usize;
+                        out[hbp.output_hash[b.slot_start + s] as usize] = sum;
+                    } else {
+                        acc[w] = sum;
+                        live[w] = live[r];
+                        w += 1;
+                    }
+                }
+                n_live = w;
+            }
+        }
+    }
+
+    /// Public wrapper over [`Self::block_spmv`] for external harnesses
+    /// (the atomic-write ablation bench reimplements the write phase).
+    pub fn block_spmv_public(hbp: &Hbp, b: &HbpBlock, x: &[f64], out: &mut [f64]) {
+        Self::block_spmv(hbp, b, x, out)
+    }
+
+    /// Run the SpMV phase only, returning per-worker stats (used by the
+    /// competitive-fraction ablation and the Fig. 9 breakdown).
+    pub fn spmv_partials(&self, x: &[f64], partials: &mut [f64]) -> Vec<WorkerStats> {
+        assert_eq!(partials.len(), self.total_slots);
+        let hbp = &self.hbp;
+        let shared = SharedMut::new(partials);
+        self.pool.run_mixed(&self.schedule, |bidx| {
+            let b = &hbp.blocks[bidx];
+            // SAFETY: each block owns the disjoint slot range
+            // [slot_start, slot_start + nrows); the scheduler guarantees
+            // exactly-once execution per block.
+            let out = unsafe { shared.slice_mut(b.slot_start, b.nrows) };
+            Self::block_spmv(hbp, b, x, out);
+        })
+    }
+
+    pub fn total_slots(&self) -> usize {
+        self.total_slots
+    }
+}
+
+impl SpmvEngine for HbpEngine {
+    fn name(&self) -> &str {
+        "hbp"
+    }
+    fn rows(&self) -> usize {
+        self.hbp.rows
+    }
+    fn cols(&self) -> usize {
+        self.hbp.cols
+    }
+    fn nnz(&self) -> usize {
+        self.hbp.nnz()
+    }
+
+    fn spmv_phases(&self, x: &[f64], y: &mut [f64]) -> PhaseTimes {
+        assert_eq!(x.len(), self.hbp.cols);
+        assert_eq!(y.len(), self.hbp.rows);
+        let mut partials = self.partials.lock().unwrap();
+        partials.resize(self.total_slots, 0.0);
+        let t = Timer::start();
+        self.spmv_partials(x, &mut partials);
+        let spmv_secs = t.elapsed_secs();
+        let t = Timer::start();
+        match &self.combine_index {
+            Some(idx) => combine_sparse_on_pool(&self.hbp, idx, &partials, y, &self.pool),
+            None => combine_on_pool(&self.hbp, &partials, y, &self.pool),
+        }
+        PhaseTimes { spmv: spmv_secs, combine: t.elapsed_secs() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::dense::allclose;
+    use crate::gen::random;
+    use crate::partition::PartitionConfig;
+    use crate::preprocess::{build_hbp, build_hbp_with, DpReorder, IdentityReorder, SortReorder};
+
+    fn check_engine(m: &crate::formats::Csr, threads: usize, frac: f64) {
+        let x = random::vector(m.cols, 42);
+        let mut expect = vec![0.0; m.rows];
+        m.spmv(&x, &mut expect);
+        let hbp = build_hbp(m, PartitionConfig::test_small());
+        let eng = HbpEngine::new(hbp, threads, frac);
+        let mut y = vec![0.0; m.rows];
+        eng.spmv(&x, &mut y);
+        assert!(
+            allclose(&y, &expect, 1e-10, 1e-12),
+            "threads={threads} frac={frac}"
+        );
+    }
+
+    #[test]
+    fn matches_csr_on_random_matrices() {
+        for seed in 0..4 {
+            let m = random::power_law_rows(150, 180, 2.0, 40, seed);
+            check_engine(&m, 1, 0.0);
+            check_engine(&m, 4, 0.25);
+            check_engine(&m, 8, 1.0);
+        }
+    }
+
+    #[test]
+    fn matches_csr_on_suite_ci() {
+        for id in ["m1", "m3", "m4", "m8"] {
+            let (_, m) = crate::gen::matrix_by_id(id, crate::gen::Scale::Ci).unwrap();
+            let x = random::vector(m.cols, 7);
+            let mut expect = vec![0.0; m.rows];
+            m.spmv(&x, &mut expect);
+            let hbp = build_hbp(&m, PartitionConfig::default());
+            let eng = HbpEngine::new(hbp, 4, 0.25);
+            let mut y = vec![0.0; m.rows];
+            eng.spmv(&x, &mut y);
+            assert!(allclose(&y, &expect, 1e-9, 1e-11), "{id}");
+        }
+    }
+
+    #[test]
+    fn all_reorder_strategies_agree() {
+        let m = random::power_law_rows(120, 100, 2.2, 30, 17);
+        let x = random::vector(100, 5);
+        let mut expect = vec![0.0; 120];
+        m.spmv(&x, &mut expect);
+        for r in [
+            &IdentityReorder as &dyn crate::preprocess::Reorder,
+            &SortReorder,
+            &DpReorder::default(),
+        ] {
+            let hbp = build_hbp_with(&m, PartitionConfig::test_small(), r);
+            let eng = HbpEngine::new(hbp, 3, 0.5);
+            let mut y = vec![0.0; 120];
+            eng.spmv(&x, &mut y);
+            assert!(allclose(&y, &expect, 1e-10, 1e-12), "{}", r.name());
+        }
+    }
+
+    #[test]
+    fn sparse_and_dense_combine_agree_end_to_end() {
+        // zero-row-heavy matrix: the sparse combine path activates
+        let mut lens = vec![0usize; 300];
+        for i in (0..300).step_by(5) {
+            lens[i] = 8;
+        }
+        let m = random::with_row_lengths(&lens, 200, 23);
+        let x = random::vector(200, 4);
+        let cfg = PartitionConfig::test_small();
+        let sparse_eng = HbpEngine::new(build_hbp(&m, cfg), 3, 0.25);
+        let dense_eng = HbpEngine::new(build_hbp(&m, cfg), 3, 0.25).with_dense_combine();
+        let mut ys = vec![0.0; 300];
+        let mut yd = vec![0.0; 300];
+        sparse_eng.spmv(&x, &mut ys);
+        dense_eng.spmv(&x, &mut yd);
+        assert_eq!(ys, yd, "sparse combine diverged from dense");
+        let mut expect = vec![0.0; 300];
+        m.spmv(&x, &mut expect);
+        assert!(allclose(&ys, &expect, 1e-10, 1e-12));
+    }
+
+    #[test]
+    fn zero_rows_produce_zero_output() {
+        let m = random::with_row_lengths(&[3, 0, 0, 5, 0, 2], 16, 9);
+        let x = random::vector(16, 2);
+        let hbp = build_hbp(&m, PartitionConfig::test_small());
+        let eng = HbpEngine::new(hbp, 2, 0.5);
+        let mut y = vec![7.0; 6];
+        eng.spmv(&x, &mut y);
+        assert_eq!(y[1], 0.0);
+        assert_eq!(y[2], 0.0);
+        assert_eq!(y[4], 0.0);
+    }
+
+    #[test]
+    fn phase_times_populated() {
+        let m = random::uniform(200, 200, 0.05, 3);
+        let hbp = build_hbp(&m, PartitionConfig::test_small());
+        let eng = HbpEngine::new(hbp, 2, 0.25);
+        let x = random::vector(200, 1);
+        let mut y = vec![0.0; 200];
+        let p = eng.spmv_phases(&x, &mut y);
+        assert!(p.spmv > 0.0);
+        assert!(p.combine > 0.0);
+    }
+}

@@ -1,0 +1,32 @@
+//! SpMV execution engines.
+//!
+//! The CPU substitution for the paper's CUDA kernels (DESIGN.md §2): one
+//! worker thread plays the role of one warp. The *schedule* and *memory
+//! layout* — what the paper's contribution actually is — are preserved
+//! exactly; only the SIMT lanes are collapsed into the worker's scalar
+//! loop (their effect is modeled by [`crate::sim`]).
+//!
+//! Engines:
+//! - [`csr`] — Algorithm 1, serial and row-parallel (the paper's CSR
+//!   baseline).
+//! - [`spmv2d`] — plain 2D-partitioning without reordering (the paper's
+//!   "2D" baseline): block SpMV + combine, static block assignment.
+//! - [`hbp`] — Algorithm 3 over the HBP layout with the mixed
+//!   fixed/competitive schedule of §III-C.
+//! - [`combine`] — the second phase shared by the 2D engines.
+//! - [`scheduler`] — the fixed/competitive split + ticket lock.
+
+pub mod engine;
+pub mod csr;
+pub mod spmv2d;
+pub mod hbp;
+pub mod combine;
+pub mod scheduler;
+pub mod nnz_split;
+
+pub use engine::{PhaseTimes, SpmvEngine};
+pub use csr::{CsrParallel, CsrSerial};
+pub use hbp::HbpEngine;
+pub use nnz_split::NnzSplitEngine;
+pub use scheduler::{mixed_schedule, run_mixed, MixedSchedule, WorkerStats};
+pub use spmv2d::Spmv2dEngine;

@@ -1,0 +1,206 @@
+//! Nonzero-split SpMV — the related-work load-balancing baseline.
+//!
+//! The paper's §II discusses CSR5 (Liu & Vinter) and the merge-based
+//! method (Merrill & Garland, ref [20]): assign each worker an *equal
+//! number of nonzeros* regardless of row boundaries, so pathological
+//! rows can no longer unbalance the schedule. This engine implements
+//! that idea on the CPU substrate: per call, worker `w` owns the nonzero
+//! range `[w*nnz/W, (w+1)*nnz/W)`; rows fully inside a range are written
+//! directly (disjoint), rows cut by a boundary contribute partial sums
+//! that a tiny serial fix-up pass merges (≤ 2 per worker).
+//!
+//! It completes the baseline set: CSR (row-balanced), plain 2D
+//! (block-static), HBP (hash-grouped + competitive), nnz-split
+//! (perfectly nnz-balanced, but with none of HBP's locality control).
+
+use super::engine::{PhaseTimes, SpmvEngine};
+use crate::formats::Csr;
+use crate::util::pool::WorkerPool;
+use crate::util::sync::SharedMut;
+use crate::util::Timer;
+use std::sync::Mutex;
+
+/// Per-worker boundary contribution: `(row, partial_sum)`.
+type Boundary = (usize, f64);
+
+/// Nonzero-split SpMV engine.
+pub struct NnzSplitEngine {
+    pub m: Csr,
+    pub threads: usize,
+    /// Per-worker nonzero range starts (`threads+1` entries).
+    splits: Vec<usize>,
+    /// First row of each worker's range (precomputed binary search).
+    first_row: Vec<usize>,
+    pool: WorkerPool,
+    /// Reused per-worker boundary buffers.
+    boundaries: Mutex<Vec<(Option<Boundary>, Option<Boundary>)>>,
+}
+
+impl NnzSplitEngine {
+    pub fn new(m: Csr, threads: usize) -> Self {
+        let threads = threads.max(1);
+        let nnz = m.nnz();
+        let splits: Vec<usize> = (0..=threads).map(|w| w * nnz / threads).collect();
+        // first row whose range contains splits[w]
+        let first_row = splits
+            .iter()
+            .map(|&k| match m.ptr.binary_search(&k) {
+                Ok(mut r) => {
+                    // land on the first row starting at k (ties: empty rows)
+                    while r > 0 && m.ptr[r - 1] == k {
+                        r -= 1;
+                    }
+                    r.min(m.rows)
+                }
+                Err(r) => r - 1, // k falls inside row r-1
+            })
+            .collect();
+        NnzSplitEngine {
+            m,
+            threads,
+            splits,
+            first_row,
+            pool: WorkerPool::new(threads),
+            boundaries: Mutex::new(vec![(None, None); threads]),
+        }
+    }
+}
+
+impl SpmvEngine for NnzSplitEngine {
+    fn name(&self) -> &str {
+        "nnz-split"
+    }
+    fn rows(&self) -> usize {
+        self.m.rows
+    }
+    fn cols(&self) -> usize {
+        self.m.cols
+    }
+    fn nnz(&self) -> usize {
+        self.m.nnz()
+    }
+
+    fn spmv_phases(&self, x: &[f64], y: &mut [f64]) -> PhaseTimes {
+        assert_eq!(x.len(), self.m.cols);
+        assert_eq!(y.len(), self.m.rows);
+        let t = Timer::start();
+        y.fill(0.0);
+        let mut boundaries = self.boundaries.lock().unwrap();
+        boundaries.iter_mut().for_each(|b| *b = (None, None));
+        {
+            let shared_y = SharedMut::new(y);
+            let shared_b = SharedMut::new(&mut boundaries[..]);
+            let m = &self.m;
+            self.pool.run_generation(|w, _| {
+                let (lo, hi) = (self.splits[w], self.splits[w + 1]);
+                if lo >= hi {
+                    return;
+                }
+                let mut first: Option<Boundary> = None;
+                let mut last: Option<Boundary> = None;
+                let mut r = self.first_row[w];
+                let mut k = lo;
+                while k < hi {
+                    // advance past empty rows
+                    while m.ptr[r + 1] <= k {
+                        r += 1;
+                    }
+                    let row_end = m.ptr[r + 1].min(hi);
+                    let mut sum = 0.0;
+                    for j in k..row_end {
+                        sum += m.data[j] * x[m.col[j] as usize];
+                    }
+                    let starts_before = m.ptr[r] < lo;
+                    let ends_after = m.ptr[r + 1] > hi;
+                    if starts_before {
+                        first = Some((r, sum));
+                    } else if ends_after {
+                        last = Some((r, sum));
+                    } else {
+                        // row fully owned: direct disjoint write
+                        // SAFETY: only this worker owns rows entirely
+                        // inside its nnz range.
+                        unsafe { shared_y.write(r, sum) };
+                    }
+                    k = row_end;
+                    r += 1;
+                }
+                // SAFETY: slot w is only touched by worker w.
+                unsafe { shared_b.write(w, (first, last)) };
+            });
+        }
+        // serial fix-up: merge boundary partials (<= 2 per worker)
+        for &(first, last) in boundaries.iter() {
+            for b in [first, last].into_iter().flatten() {
+                y[b.0] += b.1;
+            }
+        }
+        PhaseTimes { spmv: t.elapsed_secs(), combine: 0.0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::dense::allclose;
+    use crate::gen::random;
+
+    fn check(m: &Csr, threads: usize, seed: u64) {
+        let x = random::vector(m.cols, seed);
+        let mut expect = vec![0.0; m.rows];
+        m.spmv(&x, &mut expect);
+        let eng = NnzSplitEngine::new(m.clone(), threads);
+        let mut y = vec![0.0; m.rows];
+        eng.spmv(&x, &mut y);
+        assert!(
+            allclose(&y, &expect, 1e-10, 1e-12),
+            "nnz-split diverged (threads={threads})"
+        );
+    }
+
+    #[test]
+    fn matches_csr_on_random() {
+        for seed in 0..4 {
+            let m = random::power_law_rows(300, 250, 2.0, 60, seed);
+            check(&m, 1, seed);
+            check(&m, 4, seed);
+            check(&m, 13, seed);
+        }
+    }
+
+    #[test]
+    fn handles_monster_row() {
+        // one row holds ~all nonzeros: the case row-balanced CSR cannot
+        // split but nnz-split divides evenly across workers
+        let mut lens = vec![1usize; 64];
+        lens[20] = 5000;
+        let m = random::with_row_lengths(&lens, 600, 3);
+        check(&m, 8, 7);
+    }
+
+    #[test]
+    fn handles_empty_rows_at_boundaries() {
+        let lens = vec![0, 0, 10, 0, 0, 7, 0, 3, 0, 0, 0, 25, 0, 1, 0, 0];
+        let m = random::with_row_lengths(&lens, 40, 9);
+        for threads in [1, 3, 5, 16] {
+            check(&m, threads, 11);
+        }
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let m = Csr::empty(10, 10);
+        let eng = NnzSplitEngine::new(m, 4);
+        let mut y = vec![9.0; 10];
+        eng.spmv(&vec![1.0; 10], &mut y);
+        assert_eq!(y, vec![0.0; 10]);
+    }
+
+    #[test]
+    fn suite_matrices() {
+        for id in ["m1", "m4"] {
+            let (_, m) = crate::gen::matrix_by_id(id, crate::gen::Scale::Ci).unwrap();
+            check(&m, 8, 1);
+        }
+    }
+}

@@ -1,0 +1,183 @@
+//! Mixed fixed/competitive block scheduling (paper §III-C).
+//!
+//! "Those who are capable work harder": the block list is split into a
+//! **fixed** prefix — statically chunked so each worker gets an equal
+//! number of blocks, contiguous in column-major order (blocks of the same
+//! block-column share a vector segment, the shared-memory reuse argument)
+//! — and a **competitive** tail. A worker that finishes its fixed quota
+//! takes a *ticket* (atomic fetch-add — the paper's ticket lock) and
+//! executes the corresponding competitive block, repeating until the tail
+//! is exhausted. Scheduling is therefore driven by *actual execution
+//! time*, not by nnz estimates.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// A mixed fixed/competitive schedule over `total` items.
+#[derive(Clone, Debug)]
+pub struct MixedSchedule {
+    /// Per-worker fixed item ranges `[start, end)` over `0..fixed_end`.
+    pub fixed: Vec<(usize, usize)>,
+    /// Start of the competitive tail.
+    pub fixed_end: usize,
+    pub total: usize,
+}
+
+/// Per-worker execution statistics (tests + the competitive ablation).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WorkerStats {
+    pub fixed_done: usize,
+    pub competitive_done: usize,
+    /// Seconds this worker spent busy.
+    pub busy_secs: f64,
+}
+
+/// Build the schedule: `competitive_frac` of the items (rounded) form the
+/// tail; the prefix is chunked evenly (±1) across `workers` preserving
+/// order.
+pub fn mixed_schedule(total: usize, workers: usize, competitive_frac: f64) -> MixedSchedule {
+    let workers = workers.max(1);
+    let frac = competitive_frac.clamp(0.0, 1.0);
+    let comp = ((total as f64) * frac).round() as usize;
+    let fixed_end = total - comp.min(total);
+    // equal chunks (first `rem` workers get one extra)
+    let base = fixed_end / workers;
+    let rem = fixed_end % workers;
+    let mut fixed = Vec::with_capacity(workers);
+    let mut cursor = 0;
+    for w in 0..workers {
+        let len = base + usize::from(w < rem);
+        fixed.push((cursor, cursor + len));
+        cursor += len;
+    }
+    debug_assert_eq!(cursor, fixed_end);
+    MixedSchedule { fixed, fixed_end, total }
+}
+
+/// Execute `work(item)` for every item under the mixed schedule, with one
+/// thread per worker. Returns per-worker stats.
+///
+/// Exactly-once guarantee: fixed ranges partition `0..fixed_end`;
+/// competitive items are claimed by `fetch_add` on the shared ticket, so
+/// each ticket value is observed by exactly one worker.
+pub fn run_mixed<F>(sched: &MixedSchedule, work: F) -> Vec<WorkerStats>
+where
+    F: Fn(usize) + Sync,
+{
+    let ticket = AtomicUsize::new(sched.fixed_end);
+    let work = &work;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = sched
+            .fixed
+            .iter()
+            .map(|&(lo, hi)| {
+                let ticket = &ticket;
+                s.spawn(move || {
+                    let t = crate::util::Timer::start();
+                    let mut stats = WorkerStats::default();
+                    for i in lo..hi {
+                        work(i);
+                        stats.fixed_done += 1;
+                    }
+                    loop {
+                        let i = ticket.fetch_add(1, Ordering::Relaxed);
+                        if i >= sched.total {
+                            break;
+                        }
+                        work(i);
+                        stats.competitive_done += 1;
+                    }
+                    stats.busy_secs = t.elapsed_secs();
+                    stats
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU32, Ordering};
+
+    #[test]
+    fn schedule_partitions_exactly() {
+        let s = mixed_schedule(100, 7, 0.25);
+        assert_eq!(s.fixed_end, 75);
+        let mut covered = vec![false; 75];
+        for &(lo, hi) in &s.fixed {
+            for c in covered.iter_mut().take(hi).skip(lo) {
+                assert!(!*c);
+                *c = true;
+            }
+        }
+        assert!(covered.iter().all(|&c| c));
+        // equal +-1 chunks
+        let sizes: Vec<usize> = s.fixed.iter().map(|&(l, h)| h - l).collect();
+        let min = sizes.iter().min().unwrap();
+        let max = sizes.iter().max().unwrap();
+        assert!(max - min <= 1);
+    }
+
+    #[test]
+    fn every_item_executed_exactly_once() {
+        let total = 1000;
+        let counts: Vec<AtomicU32> = (0..total).map(|_| AtomicU32::new(0)).collect();
+        let s = mixed_schedule(total, 8, 0.3);
+        let stats = run_mixed(&s, |i| {
+            counts[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, c) in counts.iter().enumerate() {
+            assert_eq!(c.load(Ordering::Relaxed), 1, "item {i}");
+        }
+        let done: usize = stats.iter().map(|w| w.fixed_done + w.competitive_done).sum();
+        assert_eq!(done, total);
+    }
+
+    #[test]
+    fn competitive_absorbs_imbalance() {
+        // one worker gets slow fixed items; others should steal the tail
+        let total = 64;
+        let s = mixed_schedule(total, 4, 0.5);
+        let stats = run_mixed(&s, |i| {
+            if i < 8 {
+                std::thread::sleep(std::time::Duration::from_millis(3));
+            }
+        });
+        // the slow worker (fixed items 0..8) should take fewer competitive
+        // items than the sum of the others
+        let slow = stats[0].competitive_done;
+        let fast: usize = stats[1..].iter().map(|w| w.competitive_done).sum();
+        assert!(
+            fast > slow,
+            "fast workers should claim more of the tail: fast={fast} slow={slow}"
+        );
+    }
+
+    #[test]
+    fn degenerate_schedules() {
+        // all-competitive
+        let s = mixed_schedule(10, 3, 1.0);
+        assert_eq!(s.fixed_end, 0);
+        let stats = run_mixed(&s, |_| {});
+        let done: usize = stats.iter().map(|w| w.competitive_done).sum();
+        assert_eq!(done, 10);
+        // all-fixed
+        let s = mixed_schedule(10, 3, 0.0);
+        assert_eq!(s.fixed_end, 10);
+        // empty
+        let s = mixed_schedule(0, 3, 0.5);
+        let stats = run_mixed(&s, |_| panic!("no items"));
+        assert_eq!(stats.len(), 3);
+    }
+
+    #[test]
+    fn more_workers_than_items() {
+        let s = mixed_schedule(2, 16, 0.5);
+        let counts: Vec<AtomicU32> = (0..2).map(|_| AtomicU32::new(0)).collect();
+        run_mixed(&s, |i| {
+            counts[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(counts.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+    }
+}

@@ -1,0 +1,146 @@
+//! Plain 2D-partitioning SpMV — the paper's "2D" baseline.
+//!
+//! Identical block decomposition and combine phase as HBP, but: no row
+//! reordering (rows execute in natural order, so warp groups mix long and
+//! short rows), row-major element order within a block (no coalescing
+//! layout), and purely static block assignment (no competitive tail).
+//! The deltas HBP adds are thus isolated one by one for the benches.
+
+use super::engine::{PhaseTimes, SpmvEngine};
+use crate::formats::Csr;
+use crate::partition::{block_views, BlockGrid, BlockView, PartitionConfig};
+use crate::preprocess::{build_hbp_with, Hbp, IdentityReorder};
+use crate::util::sync::SharedMut;
+use crate::util::Timer;
+
+/// Plain 2D-partitioning engine.
+///
+/// Keeps the parent CSR plus per-block row ranges; each block is executed
+/// row-major by one worker with static round-robin assignment.
+pub struct Spmv2dEngine {
+    pub m: Csr,
+    pub grid: BlockGrid,
+    views: Vec<BlockView>,
+    /// An identity-ordered HBP shell reused for the combine phase's
+    /// row-block bookkeeping (no reordering applied).
+    shell: Hbp,
+    pub threads: usize,
+    total_slots: usize,
+    /// Persistent workers (§Perf: no per-call spawns).
+    pool: crate::util::pool::WorkerPool,
+    /// Reused partials buffer (§Perf: see `HbpEngine::partials`).
+    partials: std::sync::Mutex<Vec<f64>>,
+}
+
+impl Spmv2dEngine {
+    pub fn new(m: Csr, cfg: PartitionConfig, threads: usize) -> Self {
+        let grid = BlockGrid::new(m.rows, m.cols, cfg);
+        let views = block_views(&m, &grid);
+        let shell = build_hbp_with(&m, cfg, &IdentityReorder);
+        let total_slots = shell.blocks.iter().map(|b| b.nrows).sum();
+        let threads = threads.max(1);
+        Spmv2dEngine {
+            m,
+            grid,
+            views,
+            shell,
+            threads,
+            total_slots,
+            pool: crate::util::pool::WorkerPool::new(threads),
+            partials: std::sync::Mutex::new(Vec::new()),
+        }
+    }
+}
+
+impl SpmvEngine for Spmv2dEngine {
+    fn name(&self) -> &str {
+        "2d"
+    }
+    fn rows(&self) -> usize {
+        self.m.rows
+    }
+    fn cols(&self) -> usize {
+        self.m.cols
+    }
+    fn nnz(&self) -> usize {
+        self.m.nnz()
+    }
+
+    fn spmv_phases(&self, x: &[f64], y: &mut [f64]) -> PhaseTimes {
+        assert_eq!(x.len(), self.m.cols);
+        assert_eq!(y.len(), self.m.rows);
+        let mut partials = self.partials.lock().unwrap();
+        partials.resize(self.total_slots, 0.0);
+
+        let t = Timer::start();
+        {
+            let shared = SharedMut::new(&mut partials[..]);
+            let views = &self.views;
+            let m = &self.m;
+            let shell = &self.shell;
+            self.pool.run_generation(|w, _| {
+                // static round-robin over blocks (no stealing)
+                for (v, b) in views.iter().zip(&shell.blocks).skip(w).step_by(self.threads) {
+                    // SAFETY: disjoint per-block slot ranges.
+                    let out = unsafe { shared.slice_mut(b.slot_start, b.nrows) };
+                    for (local, &(lo, hi)) in v.row_ranges.iter().enumerate() {
+                        let mut sum = 0.0;
+                        for k in lo..hi {
+                            sum += m.data[k] * x[m.col[k] as usize];
+                        }
+                        out[local] = sum;
+                    }
+                }
+            });
+        }
+        let spmv_secs = t.elapsed_secs();
+
+        let t = Timer::start();
+        super::combine::combine_on_pool(&self.shell, &partials, y, &self.pool);
+        PhaseTimes { spmv: spmv_secs, combine: t.elapsed_secs() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::dense::allclose;
+    use crate::gen::random;
+
+    #[test]
+    fn matches_csr() {
+        for seed in 0..3 {
+            let m = random::power_law_rows(130, 170, 2.0, 40, seed);
+            let x = random::vector(170, seed + 10);
+            let mut expect = vec![0.0; 130];
+            m.spmv(&x, &mut expect);
+            for threads in [1, 4] {
+                let eng = Spmv2dEngine::new(m.clone(), PartitionConfig::test_small(), threads);
+                let mut y = vec![0.0; 130];
+                eng.spmv(&x, &mut y);
+                assert!(allclose(&y, &expect, 1e-10, 1e-12), "seed={seed} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn views_align_with_shell_blocks() {
+        let m = random::uniform(100, 100, 0.05, 5);
+        let eng = Spmv2dEngine::new(m, PartitionConfig::test_small(), 2);
+        assert_eq!(eng.views.len(), eng.shell.blocks.len());
+        for (v, b) in eng.views.iter().zip(&eng.shell.blocks) {
+            assert_eq!(v.bi as u32, b.bi);
+            assert_eq!(v.bj as u32, b.bj);
+            assert_eq!(v.nnz, b.nnz);
+        }
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let m = Csr::empty(8, 8);
+        let eng = Spmv2dEngine::new(m, PartitionConfig::test_small(), 4);
+        let mut y = vec![1.0; 8];
+        eng.spmv(&vec![1.0; 8], &mut y);
+        assert_eq!(y, vec![0.0; 8]);
+    }
+}

@@ -1,0 +1,179 @@
+//! Coordinate (COO) format: the interchange representation every
+//! generator and parser produces first.
+
+use super::{Csr, MatrixInfo};
+
+/// Coordinate-format sparse matrix (struct-of-arrays).
+///
+/// Entries may be unsorted and may contain duplicates until
+/// [`Coo::normalize`] is called; conversion to CSR normalizes implicitly.
+#[derive(Clone, Debug, Default)]
+pub struct Coo {
+    pub rows: usize,
+    pub cols: usize,
+    pub row: Vec<u32>,
+    pub col: Vec<u32>,
+    pub data: Vec<f64>,
+}
+
+impl Coo {
+    /// Empty matrix of the given shape.
+    pub fn new(rows: usize, cols: usize) -> Self {
+        Coo { rows, cols, row: vec![], col: vec![], data: vec![] }
+    }
+
+    /// Construct from parallel arrays. Panics on length mismatch or
+    /// out-of-range indices (debug).
+    pub fn from_triplets(
+        rows: usize,
+        cols: usize,
+        row: Vec<u32>,
+        col: Vec<u32>,
+        data: Vec<f64>,
+    ) -> Self {
+        assert_eq!(row.len(), col.len());
+        assert_eq!(row.len(), data.len());
+        debug_assert!(row.iter().all(|&r| (r as usize) < rows));
+        debug_assert!(col.iter().all(|&c| (c as usize) < cols));
+        Coo { rows, cols, row, col, data }
+    }
+
+    pub fn push(&mut self, r: usize, c: usize, v: f64) {
+        debug_assert!(r < self.rows && c < self.cols, "({r},{c}) out of {}x{}", self.rows, self.cols);
+        self.row.push(r as u32);
+        self.col.push(c as u32);
+        self.data.push(v);
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn info(&self) -> MatrixInfo {
+        MatrixInfo { rows: self.rows, cols: self.cols, nnz: self.nnz() }
+    }
+
+    /// Sort entries row-major and sum duplicates. Zero-valued entries are
+    /// kept (UF matrices contain explicit zeros; the paper counts them as
+    /// stored nonzeros).
+    pub fn normalize(&mut self) {
+        let n = self.nnz();
+        let mut idx: Vec<usize> = (0..n).collect();
+        // tie-break on the original index: duplicate entries sum in
+        // insertion order, so mirrored entries (symmetrize) sum in the
+        // same order on both sides of the diagonal -> bitwise symmetry
+        idx.sort_unstable_by_key(|&i| (self.row[i], self.col[i], i));
+        let mut row = Vec::with_capacity(n);
+        let mut col = Vec::with_capacity(n);
+        let mut data = Vec::with_capacity(n);
+        for i in idx {
+            if let (Some(&lr), Some(&lc)) = (row.last(), col.last()) {
+                if lr == self.row[i] && lc == self.col[i] {
+                    *data.last_mut().unwrap() += self.data[i];
+                    continue;
+                }
+            }
+            row.push(self.row[i]);
+            col.push(self.col[i]);
+            data.push(self.data[i]);
+        }
+        self.row = row;
+        self.col = col;
+        self.data = data;
+    }
+
+    /// Mirror entries across the diagonal (for `%%MatrixMarket ...
+    /// symmetric` files and the paper's symmetric kron_g500 matrices).
+    /// Diagonal entries are not duplicated. Normalizes first so each cell
+    /// ends up with at most two addends — commutativity of IEEE addition
+    /// then guarantees *bitwise* symmetry of the result.
+    pub fn symmetrize(&mut self) {
+        self.normalize();
+        let n = self.nnz();
+        for i in 0..n {
+            if self.row[i] != self.col[i] {
+                self.row.push(self.col[i]);
+                self.col.push(self.row[i]);
+                self.data.push(self.data[i]);
+            }
+        }
+    }
+
+    /// Convert to CSR (normalizes first).
+    pub fn to_csr(&self) -> Csr {
+        let mut c = self.clone();
+        c.normalize();
+        let mut ptr = vec![0usize; c.rows + 1];
+        for &r in &c.row {
+            ptr[r as usize + 1] += 1;
+        }
+        for i in 0..c.rows {
+            ptr[i + 1] += ptr[i];
+        }
+        Csr { rows: c.rows, cols: c.cols, ptr, col: c.col, data: c.data }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_info() {
+        let mut m = Coo::new(3, 4);
+        m.push(0, 0, 1.0);
+        m.push(2, 3, 2.0);
+        let info = m.info();
+        assert_eq!(info, MatrixInfo { rows: 3, cols: 4, nnz: 2 });
+        assert!((info.density() - 2.0 / 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn normalize_sorts_and_sums_duplicates() {
+        let mut m = Coo::new(2, 2);
+        m.push(1, 1, 1.0);
+        m.push(0, 1, 2.0);
+        m.push(1, 1, 3.0);
+        m.normalize();
+        assert_eq!(m.nnz(), 2);
+        assert_eq!(m.row, vec![0, 1]);
+        assert_eq!(m.col, vec![1, 1]);
+        assert_eq!(m.data, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn symmetrize_mirrors_off_diagonal() {
+        let mut m = Coo::new(3, 3);
+        m.push(0, 1, 5.0);
+        m.push(1, 1, 7.0);
+        m.symmetrize();
+        m.normalize();
+        assert_eq!(m.nnz(), 3);
+        let csr = m.to_csr();
+        assert_eq!(csr.get(1, 0), 5.0);
+        assert_eq!(csr.get(0, 1), 5.0);
+        assert_eq!(csr.get(1, 1), 7.0);
+    }
+
+    #[test]
+    fn to_csr_roundtrip_values() {
+        let mut m = Coo::new(3, 3);
+        m.push(2, 0, 9.0);
+        m.push(0, 2, 3.0);
+        m.push(1, 1, 4.0);
+        let csr = m.to_csr();
+        assert_eq!(csr.nnz(), 3);
+        assert_eq!(csr.get(2, 0), 9.0);
+        assert_eq!(csr.get(0, 2), 3.0);
+        assert_eq!(csr.get(1, 1), 4.0);
+        assert_eq!(csr.get(0, 0), 0.0);
+    }
+
+    #[test]
+    fn empty_matrix_converts() {
+        let m = Coo::new(4, 4);
+        let csr = m.to_csr();
+        assert_eq!(csr.nnz(), 0);
+        assert_eq!(csr.ptr, vec![0; 5]);
+    }
+}

@@ -1,0 +1,225 @@
+//! Compressed Sparse Row (CSR): the paper's primary baseline format
+//! (Algorithm 1) and the canonical input to HBP preprocessing.
+
+use super::{Coo, Dense, MatrixInfo};
+
+/// CSR sparse matrix.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    /// `ptr[i]..ptr[i+1]` is the index range of row `i`; `len == rows+1`.
+    pub ptr: Vec<usize>,
+    pub col: Vec<u32>,
+    pub data: Vec<f64>,
+}
+
+impl Csr {
+    /// Empty matrix of the given shape.
+    pub fn empty(rows: usize, cols: usize) -> Self {
+        Csr { rows, cols, ptr: vec![0; rows + 1], col: vec![], data: vec![] }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn info(&self) -> MatrixInfo {
+        MatrixInfo { rows: self.rows, cols: self.cols, nnz: self.nnz() }
+    }
+
+    /// Number of nonzeros in row `i`.
+    #[inline]
+    pub fn row_nnz(&self, i: usize) -> usize {
+        self.ptr[i + 1] - self.ptr[i]
+    }
+
+    /// (columns, values) of row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
+        let r = self.ptr[i]..self.ptr[i + 1];
+        (&self.col[r.clone()], &self.data[r])
+    }
+
+    /// Value at `(r, c)` or 0.0 — O(log nnz_row); test/debug helper.
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        let (cols, vals) = self.row(r);
+        match cols.binary_search(&(c as u32)) {
+            Ok(k) => vals[k],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Validate structural invariants (monotone ptr, sorted in-range
+    /// columns). Used by property tests and after deserialization.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.ptr.len() == self.rows + 1, "ptr length");
+        anyhow::ensure!(*self.ptr.last().unwrap() == self.nnz(), "ptr end != nnz");
+        anyhow::ensure!(self.col.len() == self.data.len(), "col/data length");
+        for i in 0..self.rows {
+            anyhow::ensure!(self.ptr[i] <= self.ptr[i + 1], "ptr not monotone at {i}");
+            anyhow::ensure!(self.ptr[i + 1] <= self.nnz(), "ptr[{}] out of bounds", i + 1);
+            let (cols, _) = self.row(i);
+            for w in cols.windows(2) {
+                anyhow::ensure!(w[0] < w[1], "row {i} columns not strictly sorted");
+            }
+            if let Some(&c) = cols.last() {
+                anyhow::ensure!((c as usize) < self.cols, "row {i} column {c} out of range");
+            }
+        }
+        Ok(())
+    }
+
+    /// Serial CSR SpMV (the paper's Algorithm 1). The parallel versions
+    /// live in [`crate::exec::csr`].
+    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for i in 0..self.rows {
+            let (cols, vals) = self.row(i);
+            let mut sum = 0.0;
+            for (c, v) in cols.iter().zip(vals) {
+                sum += v * x[*c as usize];
+            }
+            y[i] = sum;
+        }
+    }
+
+    /// Per-row nonzero counts (input to the nonlinear hash).
+    pub fn row_lengths(&self) -> Vec<usize> {
+        (0..self.rows).map(|i| self.row_nnz(i)).collect()
+    }
+
+    /// Transpose (CSR -> CSR of the transpose) — used by symmetric checks.
+    pub fn transpose(&self) -> Csr {
+        let mut ptr = vec![0usize; self.cols + 1];
+        for &c in &self.col {
+            ptr[c as usize + 1] += 1;
+        }
+        for i in 0..self.cols {
+            ptr[i + 1] += ptr[i];
+        }
+        let mut col = vec![0u32; self.nnz()];
+        let mut data = vec![0f64; self.nnz()];
+        let mut cursor = ptr.clone();
+        for r in 0..self.rows {
+            let (cols, vals) = self.row(r);
+            for (c, v) in cols.iter().zip(vals) {
+                let k = cursor[*c as usize];
+                col[k] = r as u32;
+                data[k] = *v;
+                cursor[*c as usize] += 1;
+            }
+        }
+        Csr { rows: self.cols, cols: self.rows, ptr, col, data }
+    }
+
+    pub fn to_coo(&self) -> Coo {
+        let mut coo = Coo::new(self.rows, self.cols);
+        for r in 0..self.rows {
+            let (cols, vals) = self.row(r);
+            for (c, v) in cols.iter().zip(vals) {
+                coo.push(r, *c as usize, *v);
+            }
+        }
+        coo
+    }
+
+    pub fn to_dense(&self) -> Dense {
+        let mut d = Dense::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            let (cols, vals) = self.row(r);
+            for (c, v) in cols.iter().zip(vals) {
+                d.set(r, *c as usize, *v);
+            }
+        }
+        d
+    }
+
+    /// Approximate in-memory footprint in bytes (storage-cost tables).
+    pub fn storage_bytes(&self) -> usize {
+        self.ptr.len() * std::mem::size_of::<usize>()
+            + self.col.len() * 4
+            + self.data.len() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Csr {
+        // [1 0 2]
+        // [0 0 0]
+        // [3 4 0]
+        let mut coo = Coo::new(3, 3);
+        coo.push(0, 0, 1.0);
+        coo.push(0, 2, 2.0);
+        coo.push(2, 0, 3.0);
+        coo.push(2, 1, 4.0);
+        coo.to_csr()
+    }
+
+    #[test]
+    fn row_access() {
+        let m = sample();
+        assert_eq!(m.row_nnz(0), 2);
+        assert_eq!(m.row_nnz(1), 0);
+        let (cols, vals) = m.row(2);
+        assert_eq!(cols, &[0, 1]);
+        assert_eq!(vals, &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn spmv_matches_manual() {
+        let m = sample();
+        let x = [1.0, 2.0, 3.0];
+        let mut y = [0.0; 3];
+        m.spmv(&x, &mut y);
+        assert_eq!(y, [7.0, 0.0, 11.0]);
+    }
+
+    #[test]
+    fn validate_ok_and_detects_bad() {
+        let m = sample();
+        m.validate().unwrap();
+        let mut bad = m.clone();
+        bad.col[0] = 99;
+        assert!(bad.validate().is_err());
+        let mut bad2 = m.clone();
+        bad2.ptr[1] = 5;
+        assert!(bad2.validate().is_err());
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let m = sample();
+        let tt = m.transpose().transpose();
+        assert_eq!(m, tt);
+    }
+
+    #[test]
+    fn transpose_values() {
+        let m = sample();
+        let t = m.transpose();
+        assert_eq!(t.get(0, 0), 1.0);
+        assert_eq!(t.get(2, 0), 2.0);
+        assert_eq!(t.get(1, 2), 4.0);
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let m = sample();
+        let d = m.to_dense();
+        assert_eq!(d.get(2, 1), 4.0);
+        assert_eq!(d.get(1, 1), 0.0);
+        let back = m.to_coo().to_csr();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn row_lengths_match() {
+        let m = sample();
+        assert_eq!(m.row_lengths(), vec![2, 0, 2]);
+    }
+}

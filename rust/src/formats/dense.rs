@@ -1,0 +1,90 @@
+//! Dense row-major matrix — the correctness oracle for every SpMV engine.
+
+/// Dense row-major f64 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Dense {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Dense {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Dense { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Dense matrix-vector product: the ground truth all sparse engines
+    /// are checked against.
+    pub fn spmv(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0; self.rows];
+        for r in 0..self.rows {
+            let row = &self.data[r * self.cols..(r + 1) * self.cols];
+            y[r] = row.iter().zip(x).map(|(a, b)| a * b).sum();
+        }
+        y
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.data.iter().filter(|&&v| v != 0.0).count()
+    }
+}
+
+/// Max |a-b| over two vectors — used in engine equivalence checks.
+pub fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+}
+
+/// Relative closeness check with tolerance scaled to magnitude; SpMV sums
+/// differ by association order across engines, so exact equality is wrong.
+pub fn allclose(a: &[f64], b: &[f64], rtol: f64, atol: f64) -> bool {
+    a.len() == b.len()
+        && a.iter()
+            .zip(b)
+            .all(|(x, y)| (x - y).abs() <= atol + rtol * y.abs().max(x.abs()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spmv_identity() {
+        let mut m = Dense::zeros(3, 3);
+        for i in 0..3 {
+            m.set(i, i, 1.0);
+        }
+        let y = m.spmv(&[1.0, 2.0, 3.0]);
+        assert_eq!(y, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn nnz_counts_nonzero() {
+        let mut m = Dense::zeros(2, 2);
+        m.set(0, 1, 5.0);
+        assert_eq!(m.nnz(), 1);
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        assert!(allclose(&[1.0, 2.0], &[1.0 + 1e-12, 2.0], 1e-9, 1e-9));
+        assert!(!allclose(&[1.0], &[1.1], 1e-9, 1e-9));
+        assert!(!allclose(&[1.0], &[1.0, 2.0], 1e-9, 1e-9));
+    }
+
+    #[test]
+    fn max_abs_diff_works() {
+        assert_eq!(max_abs_diff(&[1.0, 5.0], &[1.5, 4.0]), 1.0);
+    }
+}

@@ -1,0 +1,142 @@
+//! Diagonal (DIA) format — the paper's introduction cites it as the
+//! format that wins on banded/diagonal matrices (our barrier2-3 / ohne2
+//! FEM generators produce exactly that structure). Kept as a baseline and
+//! to sanity-check the banded generators.
+
+use super::{Csr, MatrixInfo};
+
+/// DIA sparse matrix: a set of stored diagonals.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Dia {
+    pub rows: usize,
+    pub cols: usize,
+    /// Offsets of stored diagonals (0 = main, +k upper, -k lower), sorted.
+    pub offsets: Vec<i64>,
+    /// `offsets.len() x rows` values, diagonal-major; entry `(d, r)` is
+    /// `A[r, r + offsets[d]]` (0 where out of range).
+    pub data: Vec<f64>,
+    pub nnz: usize,
+}
+
+impl Dia {
+    /// Build from CSR. Returns `None` when the matrix needs more than
+    /// `max_diags` distinct diagonals (DIA would blow up storage).
+    pub fn from_csr(m: &Csr, max_diags: usize) -> Option<Self> {
+        let mut present = std::collections::BTreeSet::new();
+        for r in 0..m.rows {
+            let (cols, _) = m.row(r);
+            for &c in cols {
+                present.insert(c as i64 - r as i64);
+                if present.len() > max_diags {
+                    return None;
+                }
+            }
+        }
+        let offsets: Vec<i64> = present.into_iter().collect();
+        let index_of: std::collections::HashMap<i64, usize> =
+            offsets.iter().enumerate().map(|(i, &o)| (o, i)).collect();
+        let mut data = vec![0.0; offsets.len() * m.rows];
+        for r in 0..m.rows {
+            let (cols, vals) = m.row(r);
+            for (c, v) in cols.iter().zip(vals) {
+                let d = index_of[&(*c as i64 - r as i64)];
+                data[d * m.rows + r] = *v;
+            }
+        }
+        Some(Dia { rows: m.rows, cols: m.cols, offsets, data, nnz: m.nnz() })
+    }
+
+    pub fn info(&self) -> MatrixInfo {
+        MatrixInfo { rows: self.rows, cols: self.cols, nnz: self.nnz }
+    }
+
+    pub fn num_diags(&self) -> usize {
+        self.offsets.len()
+    }
+
+    /// Serial DIA SpMV.
+    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        y.fill(0.0);
+        for (d, &off) in self.offsets.iter().enumerate() {
+            let band = &self.data[d * self.rows..(d + 1) * self.rows];
+            for r in 0..self.rows {
+                let c = r as i64 + off;
+                if c >= 0 && (c as usize) < self.cols {
+                    y[r] += band[r] * x[c as usize];
+                }
+            }
+        }
+    }
+
+    pub fn storage_bytes(&self) -> usize {
+        self.offsets.len() * 8 + self.data.len() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Coo;
+
+    fn tridiag(n: usize) -> Csr {
+        let mut coo = Coo::new(n, n);
+        for i in 0..n {
+            coo.push(i, i, 2.0);
+            if i > 0 {
+                coo.push(i, i - 1, -1.0);
+            }
+            if i + 1 < n {
+                coo.push(i, i + 1, -1.0);
+            }
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn tridiagonal_has_three_diags() {
+        let d = Dia::from_csr(&tridiag(5), 10).unwrap();
+        assert_eq!(d.offsets, vec![-1, 0, 1]);
+        assert_eq!(d.num_diags(), 3);
+    }
+
+    #[test]
+    fn spmv_matches_csr() {
+        let m = tridiag(7);
+        let d = Dia::from_csr(&m, 10).unwrap();
+        let x: Vec<f64> = (0..7).map(|i| i as f64 + 1.0).collect();
+        let mut yc = vec![0.0; 7];
+        let mut yd = vec![0.0; 7];
+        m.spmv(&x, &mut yc);
+        d.spmv(&x, &mut yd);
+        assert_eq!(yc, yd);
+    }
+
+    #[test]
+    fn refuses_too_many_diagonals() {
+        // anti-diagonal-ish scatter needs n distinct diagonals
+        let mut coo = Coo::new(6, 6);
+        for i in 0..6 {
+            coo.push(i, 5 - i, 1.0);
+        }
+        let m = coo.to_csr();
+        assert!(Dia::from_csr(&m, 3).is_none());
+        assert!(Dia::from_csr(&m, 6).is_some());
+    }
+
+    #[test]
+    fn rectangular_matrix() {
+        let mut coo = Coo::new(3, 5);
+        coo.push(0, 2, 1.0);
+        coo.push(2, 4, 2.0);
+        let m = coo.to_csr();
+        let d = Dia::from_csr(&m, 4).unwrap();
+        let x = [1.0, 1.0, 3.0, 1.0, 5.0];
+        let mut yc = vec![0.0; 3];
+        let mut yd = vec![0.0; 3];
+        m.spmv(&x, &mut yc);
+        d.spmv(&x, &mut yd);
+        assert_eq!(yc, yd);
+    }
+}

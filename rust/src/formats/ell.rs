@@ -1,0 +1,127 @@
+//! ELLPACK (ELL) format: fixed row width with zero padding. Discussed in
+//! the paper's introduction as the classic format that wins when row
+//! lengths are uniform — and whose padding blow-up on skewed matrices is
+//! exactly what HBP's hash grouping avoids. We keep it both as a baseline
+//! and to *measure* that padding blow-up (storage ablation).
+
+use super::{Csr, MatrixInfo};
+
+/// ELL sparse matrix: `rows x width` slots, column-index `u32::MAX`
+/// marking padding.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Ell {
+    pub rows: usize,
+    pub cols: usize,
+    pub width: usize,
+    /// Row-major `rows * width` column indices (`PAD` = padding slot).
+    pub col: Vec<u32>,
+    pub data: Vec<f64>,
+    pub nnz: usize,
+}
+
+impl Ell {
+    pub const PAD: u32 = u32::MAX;
+
+    /// Build from CSR; width = max row length.
+    pub fn from_csr(m: &Csr) -> Self {
+        let width = (0..m.rows).map(|i| m.row_nnz(i)).max().unwrap_or(0);
+        let mut col = vec![Self::PAD; m.rows * width];
+        let mut data = vec![0.0; m.rows * width];
+        for r in 0..m.rows {
+            let (cols, vals) = m.row(r);
+            for (k, (c, v)) in cols.iter().zip(vals).enumerate() {
+                col[r * width + k] = *c;
+                data[r * width + k] = *v;
+            }
+        }
+        Ell { rows: m.rows, cols: m.cols, width, col, data, nnz: m.nnz() }
+    }
+
+    pub fn info(&self) -> MatrixInfo {
+        MatrixInfo { rows: self.rows, cols: self.cols, nnz: self.nnz }
+    }
+
+    /// Fraction of slots that are padding — the storage-efficiency metric
+    /// HBP's grouping is designed to keep low per group.
+    pub fn padding_ratio(&self) -> f64 {
+        let slots = self.rows * self.width;
+        if slots == 0 {
+            0.0
+        } else {
+            1.0 - self.nnz as f64 / slots as f64
+        }
+    }
+
+    /// Serial ELL SpMV.
+    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for r in 0..self.rows {
+            let mut sum = 0.0;
+            for k in 0..self.width {
+                let c = self.col[r * self.width + k];
+                if c != Self::PAD {
+                    sum += self.data[r * self.width + k] * x[c as usize];
+                }
+            }
+            y[r] = sum;
+        }
+    }
+
+    pub fn storage_bytes(&self) -> usize {
+        self.col.len() * 4 + self.data.len() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Coo;
+
+    fn sample() -> Csr {
+        let mut coo = Coo::new(3, 4);
+        coo.push(0, 0, 1.0);
+        coo.push(0, 3, 2.0);
+        coo.push(1, 1, 3.0);
+        coo.push(2, 0, 4.0);
+        coo.push(2, 2, 5.0);
+        coo.push(2, 3, 6.0);
+        coo.to_csr()
+    }
+
+    #[test]
+    fn width_is_max_row_len() {
+        let e = Ell::from_csr(&sample());
+        assert_eq!(e.width, 3);
+        assert_eq!(e.nnz, 6);
+    }
+
+    #[test]
+    fn padding_ratio_counts_empty_slots() {
+        let e = Ell::from_csr(&sample());
+        // 3 rows * width 3 = 9 slots, 6 filled
+        assert!((e.padding_ratio() - 3.0 / 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spmv_matches_csr() {
+        let m = sample();
+        let e = Ell::from_csr(&m);
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let mut yc = [0.0; 3];
+        let mut ye = [0.0; 3];
+        m.spmv(&x, &mut yc);
+        e.spmv(&x, &mut ye);
+        assert_eq!(yc, ye);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let m = Csr::empty(2, 2);
+        let e = Ell::from_csr(&m);
+        assert_eq!(e.width, 0);
+        let mut y = [9.0, 9.0];
+        e.spmv(&[0.0, 0.0], &mut y);
+        assert_eq!(y, [0.0, 0.0]);
+    }
+}

@@ -1,0 +1,42 @@
+//! Sparse-matrix storage formats.
+//!
+//! The paper's baseline universe: COO (interchange), CSR (the main SpMV
+//! baseline, Algorithm 1), ELL and DIA (classic formats discussed in the
+//! introduction), plus a dense matrix used as the test oracle. The paper's
+//! own HBP format lives in [`crate::preprocess`] because its construction
+//! *is* the preprocessing step being benchmarked.
+//!
+//! Conventions: `u32` column/row indices, `f64` values (the paper stores
+//! doubles — its shared-memory sizing argument in §III-A assumes 8-byte
+//! elements).
+
+pub mod coo;
+pub mod csr;
+pub mod ell;
+pub mod dia;
+pub mod dense;
+
+pub use coo::Coo;
+pub use csr::Csr;
+pub use dense::Dense;
+pub use dia::Dia;
+pub use ell::Ell;
+
+/// Shape + nnz summary shared by all formats.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MatrixInfo {
+    pub rows: usize,
+    pub cols: usize,
+    pub nnz: usize,
+}
+
+impl MatrixInfo {
+    /// Density in `[0,1]`.
+    pub fn density(&self) -> f64 {
+        if self.rows == 0 || self.cols == 0 {
+            0.0
+        } else {
+            self.nnz as f64 / (self.rows as f64 * self.cols as f64)
+        }
+    }
+}

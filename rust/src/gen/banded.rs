@@ -1,0 +1,137 @@
+//! Banded FEM-stencil generator — substitute for the paper's `barrier2-3`
+//! and `ohne2` matrices (semiconductor device simulation).
+//!
+//! These are 3D device-simulation discretizations: nearly uniform row
+//! lengths (a multi-point stencil), all entries within a band around the
+//! diagonal. They are the paper's *adversarial* case: CSR is already
+//! bandwidth-friendly here and m3 (barrier2-3) is the one matrix where
+//! HBP loses to CSR on both devices — our reproduction must preserve that
+//! crossover.
+
+use crate::formats::{Coo, Csr};
+use crate::util::Rng;
+
+/// Banded stencil parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct BandedConfig {
+    pub n: usize,
+    /// Points per stencil row (mean nnz/row), e.g. ~19 for barrier2-3.
+    pub stencil: usize,
+    /// Half bandwidth: offsets drawn from `[-bw, bw]` around the diagonal.
+    pub half_bandwidth: usize,
+    /// Fraction of rows with a slightly reduced stencil (boundary nodes).
+    pub boundary_frac: f64,
+    pub seed: u64,
+}
+
+impl BandedConfig {
+    pub fn barrier_like(n: usize, seed: u64) -> Self {
+        // barrier2-3: 113K rows, 2.1M nnz -> ~18.6 nnz/row
+        BandedConfig { n, stencil: 19, half_bandwidth: (n / 40).max(32), boundary_frac: 0.12, seed }
+    }
+
+    pub fn ohne_like(n: usize, seed: u64) -> Self {
+        // ohne2: 181K rows, 6.9M nnz -> ~38 nnz/row
+        BandedConfig { n, stencil: 38, half_bandwidth: (n / 30).max(48), boundary_frac: 0.10, seed }
+    }
+}
+
+/// Generate a banded stencil matrix in CSR form.
+///
+/// Each row gets the diagonal plus `stencil-1` entries at a mix of fixed
+/// stencil offsets (shared across rows — giving DIA-like diagonals) and
+/// a few row-random offsets within the band (FEM meshes are not perfectly
+/// regular).
+pub fn banded(cfg: &BandedConfig) -> Csr {
+    let n = cfg.n;
+    let mut rng = Rng::new(cfg.seed);
+    let mut coo = Coo::new(n, n);
+
+    // fixed stencil offsets shared by all rows (~90% of the stencil) —
+    // real FEM discretizations repeat the same stencil on nearly every
+    // row, which is what gives CSR its coalesced x-access on barrier2-3
+    // (the paper's one CSR-wins case; Fig. 8 m3)
+    let fixed_count = (cfg.stencil * 9 / 10).max(1);
+    let mut fixed: Vec<i64> = vec![0];
+    while fixed.len() < fixed_count {
+        let o = rng.range(1, cfg.half_bandwidth + 1) as i64;
+        let o = if rng.chance(0.5) { o } else { -o };
+        if !fixed.contains(&o) {
+            fixed.push(o);
+        }
+    }
+
+    for r in 0..n {
+        let boundary = rng.chance(cfg.boundary_frac);
+        let target = if boundary {
+            (cfg.stencil * 2 / 3).max(1)
+        } else {
+            cfg.stencil
+        };
+        let mut placed = std::collections::HashSet::new();
+        for &o in fixed.iter().take(target) {
+            let c = r as i64 + o;
+            if c >= 0 && (c as usize) < n && placed.insert(c) {
+                let v = if o == 0 { 4.0 + rng.f64() } else { rng.range_f64(-1.0, 0.0) };
+                coo.push(r, c as usize, v);
+            }
+        }
+        // random in-band remainder
+        let mut guard = 0;
+        while placed.len() < target && guard < 8 * target {
+            guard += 1;
+            let o = rng.range(1, cfg.half_bandwidth + 1) as i64;
+            let o = if rng.chance(0.5) { o } else { -o };
+            let c = r as i64 + o;
+            if c >= 0 && (c as usize) < n && placed.insert(c) {
+                coo.push(r, c as usize, rng.range_f64(-1.0, 0.0));
+            }
+        }
+    }
+    coo.to_csr()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::Stats;
+
+    #[test]
+    fn rows_are_uniform_length() {
+        let m = banded(&BandedConfig::barrier_like(4000, 3));
+        m.validate().unwrap();
+        let s = Stats::of_usize(&m.row_lengths());
+        // uniform stencil: stddev small relative to mean (the opposite of
+        // the circuit profile)
+        assert!(s.std < 0.35 * s.mean, "banded profile too skewed: {s:?}");
+        assert!(s.mean > 10.0);
+    }
+
+    #[test]
+    fn entries_stay_in_band() {
+        let cfg = BandedConfig::barrier_like(2000, 9);
+        let m = banded(&cfg);
+        for r in 0..m.rows {
+            let (cols, _) = m.row(r);
+            for &c in cols {
+                let d = (c as i64 - r as i64).unsigned_abs() as usize;
+                assert!(d <= cfg.half_bandwidth, "row {r} col {c} outside band");
+            }
+        }
+    }
+
+    #[test]
+    fn ohne_denser_than_barrier() {
+        let b = banded(&BandedConfig::barrier_like(3000, 1));
+        let o = banded(&BandedConfig::ohne_like(3000, 1));
+        assert!(o.nnz() > b.nnz() * 3 / 2);
+    }
+
+    #[test]
+    fn diagonal_dominant_structure() {
+        let m = banded(&BandedConfig::barrier_like(500, 21));
+        for r in (0..500).step_by(37) {
+            assert!(m.get(r, r) >= 4.0, "diagonal at {r} = {}", m.get(r, r));
+        }
+    }
+}

@@ -1,0 +1,107 @@
+//! Dense-tail optimization-matrix generator — substitute for the paper's
+//! `mip1` (mixed-integer programming, 66K x 66K, 10.3M nnz, symmetric).
+//!
+//! mip1's signature: a moderately sparse main body plus a *dense trailing
+//! block* of coupling constraints — average row length ~156 with a heavy
+//! tail, and scattered column access in the dense block. The paper calls
+//! out m8 (with m4) as a matrix where scattered vector access makes CSR
+//! slow and 2D-partitioning (and HBP) win.
+
+use crate::formats::{Coo, Csr};
+use crate::util::Rng;
+
+/// Dense-tail matrix parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct BlockDenseConfig {
+    pub n: usize,
+    /// Mean nnz per sparse-body row.
+    pub body_mean: f64,
+    pub body_max: usize,
+    /// Fraction of rows in the dense trailing block.
+    pub dense_frac: f64,
+    /// Density of the dense block (fraction of n columns hit).
+    pub dense_density: f64,
+    pub seed: u64,
+}
+
+impl BlockDenseConfig {
+    pub fn mip_like(n: usize, seed: u64) -> Self {
+        BlockDenseConfig {
+            n,
+            body_mean: 40.0,
+            body_max: 300,
+            dense_frac: 0.02,
+            dense_density: 0.25,
+            seed,
+        }
+    }
+}
+
+/// Generate the dense-tail matrix in CSR form (symmetric like mip1).
+pub fn block_dense(cfg: &BlockDenseConfig) -> Csr {
+    let n = cfg.n;
+    let mut rng = Rng::new(cfg.seed);
+    let mut coo = Coo::new(n, n);
+    let dense_start = n - ((n as f64 * cfg.dense_frac) as usize).max(1);
+
+    for r in 0..dense_start {
+        coo.push(r, r, 2.0 + rng.f64());
+        let k = rng.exponential(cfg.body_mean, 1, cfg.body_max);
+        for c in rng.sample_indices(n, k.min(n)) {
+            if c != r {
+                // only upper triangle; symmetrize() mirrors
+                let (a, b) = if r < c { (r, c) } else { (c, r) };
+                coo.push(a, b, rng.range_f64(-1.0, 1.0));
+            }
+        }
+    }
+    for r in dense_start..n {
+        coo.push(r, r, 2.0 + rng.f64());
+        let fanout = (n as f64 * cfg.dense_density) as usize;
+        for c in rng.sample_indices(n, fanout.min(n)) {
+            if c != r {
+                let (a, b) = if r < c { (r, c) } else { (c, r) };
+                coo.push(a, b, rng.range_f64(-1.0, 1.0));
+            }
+        }
+    }
+
+    let mut coo = coo;
+    coo.normalize(); // dedup overlapping upper-triangle picks first
+    coo.symmetrize();
+    coo.to_csr()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn is_symmetric() {
+        let m = block_dense(&BlockDenseConfig::mip_like(800, 7));
+        m.validate().unwrap();
+        let t = m.transpose();
+        assert_eq!(m, t);
+    }
+
+    #[test]
+    fn has_dense_tail() {
+        let cfg = BlockDenseConfig::mip_like(1000, 5);
+        let m = block_dense(&cfg);
+        let lens = m.row_lengths();
+        let body_mean: f64 =
+            lens[..900].iter().sum::<usize>() as f64 / 900.0;
+        let tail_mean: f64 = lens[980..].iter().sum::<usize>() as f64 / 20.0;
+        assert!(
+            tail_mean > 3.0 * body_mean,
+            "tail {tail_mean} not denser than body {body_mean}"
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = block_dense(&BlockDenseConfig::mip_like(300, 1));
+        let b = block_dense(&BlockDenseConfig::mip_like(300, 1));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,158 @@
+//! Circuit-simulation matrix generator — substitute for the paper's
+//! `ASIC_320k`, `ASIC_680k`, `rajat21/24/29/30` and `nxp1` matrices.
+//!
+//! Post-layout circuit matrices share a signature the UF collection pages
+//! document and the paper's Fig. 6 exploits: almost every row is a short
+//! stencil near the diagonal (device connections), while a handful of
+//! rows/columns are *enormously* dense — power/ground/clock nets touching
+//! a large fraction of all nodes. That mix is what makes per-warp load
+//! wildly unbalanced (ASIC_680k's 79% stddev reduction is the paper's
+//! best case) and what zero-padding formats choke on.
+
+use crate::formats::{Coo, Csr};
+use crate::util::Rng;
+
+/// Circuit matrix parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct CircuitConfig {
+    pub n: usize,
+    /// Mean nonzeros per ordinary row (besides the diagonal).
+    pub mean_row_nnz: f64,
+    /// Max nonzeros per ordinary row.
+    pub max_row_nnz: usize,
+    /// Column distance window for ordinary entries (locality of nets).
+    pub locality: usize,
+    /// Fraction of entries escaping the locality window (long wires).
+    pub long_range_frac: f64,
+    /// Number of dense hub rows (power/ground nets).
+    pub hub_rows: usize,
+    /// Each hub row touches `n / hub_divisor` columns.
+    pub hub_divisor: usize,
+    /// Mirror hubs as dense columns too.
+    pub hub_cols: bool,
+    pub seed: u64,
+}
+
+impl CircuitConfig {
+    /// A reasonable ASIC_680k-like default at dimension `n`.
+    pub fn asic_like(n: usize, seed: u64) -> Self {
+        CircuitConfig {
+            n,
+            mean_row_nnz: 3.5,
+            max_row_nnz: 48,
+            locality: (n / 64).max(8),
+            long_range_frac: 0.05,
+            hub_rows: (n / 40_000).max(2),
+            hub_divisor: 4,
+            hub_cols: true,
+            seed,
+        }
+    }
+
+    /// rajat-like: slightly denser ordinary rows, fewer but wider hubs.
+    pub fn rajat_like(n: usize, seed: u64) -> Self {
+        CircuitConfig {
+            n,
+            mean_row_nnz: 3.0,
+            max_row_nnz: 80,
+            locality: (n / 100).max(8),
+            long_range_frac: 0.08,
+            hub_rows: (n / 80_000).max(1),
+            hub_divisor: 3,
+            hub_cols: false,
+            seed,
+        }
+    }
+}
+
+/// Generate a circuit-style sparse matrix in CSR form.
+pub fn circuit(cfg: &CircuitConfig) -> Csr {
+    let n = cfg.n;
+    let mut rng = Rng::new(cfg.seed);
+    let mut coo = Coo::new(n, n);
+
+    // hub (power/ground) net indices, spread through the matrix
+    let hubs = rng.sample_indices(n, cfg.hub_rows.min(n));
+
+    for r in 0..n {
+        // diagonal always present (circuit matrices are structurally
+        // nonsingular after MNA stamping)
+        coo.push(r, r, 1.0 + rng.f64() * 4.0);
+        let k = rng.exponential(cfg.mean_row_nnz, 0, cfg.max_row_nnz);
+        for _ in 0..k {
+            let c = if rng.chance(cfg.long_range_frac) {
+                rng.below(n)
+            } else {
+                // near-diagonal window, clamped
+                let lo = r.saturating_sub(cfg.locality);
+                let hi = (r + cfg.locality + 1).min(n);
+                rng.range(lo, hi)
+            };
+            coo.push(r, c, rng.range_f64(-1.0, 1.0));
+        }
+    }
+
+    // dense hub rows / columns
+    for &h in &hubs {
+        let fanout = n / cfg.hub_divisor.max(1);
+        for c in rng.sample_indices(n, fanout) {
+            coo.push(h, c, rng.range_f64(-0.1, 0.1));
+            if cfg.hub_cols {
+                coo.push(c, h, rng.range_f64(-0.1, 0.1));
+            }
+        }
+    }
+
+    coo.to_csr()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::Stats;
+
+    #[test]
+    fn has_diagonal_and_hubs() {
+        let cfg = CircuitConfig::asic_like(2000, 5);
+        let m = circuit(&cfg);
+        m.validate().unwrap();
+        for r in (0..m.rows).step_by(97) {
+            assert!(m.get(r, r) != 0.0, "diagonal missing at {r}");
+        }
+        let lens = m.row_lengths();
+        let max = *lens.iter().max().unwrap();
+        assert!(max >= 2000 / 4, "no dense hub row: max={max}");
+    }
+
+    #[test]
+    fn typical_rows_are_short() {
+        let cfg = CircuitConfig::asic_like(4000, 11);
+        let m = circuit(&cfg);
+        let mut lens = m.row_lengths();
+        lens.sort_unstable();
+        let median = lens[lens.len() / 2];
+        assert!(median <= 12, "median row length {median} too large for a circuit profile");
+    }
+
+    #[test]
+    fn row_length_skew_is_extreme() {
+        // the property Fig 6 depends on: stddev >> mean
+        let m = circuit(&CircuitConfig::asic_like(4000, 13));
+        let s = Stats::of_usize(&m.row_lengths());
+        assert!(s.std > s.mean, "circuit profile should be highly skewed: {s:?}");
+    }
+
+    #[test]
+    fn rajat_variant_differs_but_valid() {
+        let m = circuit(&CircuitConfig::rajat_like(3000, 17));
+        m.validate().unwrap();
+        assert!(m.nnz() > 3000);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = circuit(&CircuitConfig::asic_like(500, 3));
+        let b = circuit(&CircuitConfig::asic_like(500, 3));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,28 @@
+//! Synthetic sparse-matrix generators.
+//!
+//! The paper evaluates on 14 matrices from the University of Florida
+//! Sparse Matrix Collection (Table I). The collection is not reachable
+//! from this offline environment, so each matrix is substituted by a
+//! generator that reproduces the *structural statistics HBP is sensitive
+//! to* — row-length distribution (what the nonlinear hash balances),
+//! column locality (what 2D-partitioning exploits) and overall dims/nnz —
+//! per DESIGN.md §2:
+//!
+//! - `kron_g500-logn*`  → [`rmat`]: Graph500 Kronecker/R-MAT power-law graphs
+//! - `ASIC_*`, `rajat*`, `nxp1` → [`circuit`]: circuit simulation matrices
+//!   (near-diagonal short rows + a few ultra-dense power/ground nets)
+//! - `barrier2-3`, `ohne2` → [`banded`]: semiconductor-device FEM stencils
+//! - `mip1` → [`block_dense`]: optimization matrix with a dense tail block
+//! - [`random`]: uniform & power-law matrices for tests and ablations
+//!
+//! [`suite`] is the Table I registry mapping matrix ids (m1..m14) to
+//! generator configs at CI/small/full scales.
+
+pub mod rmat;
+pub mod circuit;
+pub mod banded;
+pub mod block_dense;
+pub mod random;
+pub mod suite;
+
+pub use suite::{SuiteMatrix, Scale, suite, matrix_by_id};

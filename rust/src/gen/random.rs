@@ -1,0 +1,92 @@
+//! Uniform and power-law random matrices — used by tests, property-based
+//! checks and the ablation benches where a controllable row-length
+//! distribution is needed.
+
+use crate::formats::{Coo, Csr};
+use crate::util::Rng;
+
+/// Uniform random sparse matrix: every entry present independently with
+/// probability `density` (expected nnz = rows*cols*density).
+pub fn uniform(rows: usize, cols: usize, density: f64, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed);
+    let mut coo = Coo::new(rows, cols);
+    // For small densities, sample per-row counts binomially-ish rather than
+    // scanning all cells.
+    let mean = cols as f64 * density;
+    for r in 0..rows {
+        let k = rng.exponential(mean, 0, cols);
+        for c in rng.sample_indices(cols, k) {
+            coo.push(r, c, rng.range_f64(-1.0, 1.0));
+        }
+    }
+    coo.to_csr()
+}
+
+/// Power-law row lengths: row i has `~ P(l) ∝ l^-alpha` nonzeros at
+/// uniformly random columns. `alpha` near 2 gives the heavy skew the
+/// nonlinear hash is designed for.
+pub fn power_law_rows(rows: usize, cols: usize, alpha: f64, max_row: usize, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed);
+    let mut coo = Coo::new(rows, cols);
+    for r in 0..rows {
+        let k = rng.power_law(alpha, max_row.min(cols));
+        for c in rng.sample_indices(cols, k) {
+            coo.push(r, c, rng.range_f64(-1.0, 1.0));
+        }
+    }
+    coo.to_csr()
+}
+
+/// Matrix with exactly the given row lengths (columns uniform random) —
+/// lets property tests construct adversarial length distributions.
+pub fn with_row_lengths(lengths: &[usize], cols: usize, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed);
+    let mut coo = Coo::new(lengths.len(), cols);
+    for (r, &k) in lengths.iter().enumerate() {
+        for c in rng.sample_indices(cols, k.min(cols)) {
+            coo.push(r, c, rng.range_f64(-1.0, 1.0));
+        }
+    }
+    coo.to_csr()
+}
+
+/// Random dense vector in `[-1, 1)`.
+pub fn vector(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_density_roughly_right() {
+        let m = uniform(500, 500, 0.02, 3);
+        m.validate().unwrap();
+        let expected = 500.0 * 500.0 * 0.02;
+        let got = m.nnz() as f64;
+        assert!(got > expected * 0.5 && got < expected * 1.8, "nnz={got} expected~{expected}");
+    }
+
+    #[test]
+    fn with_row_lengths_exact() {
+        let lens = vec![0, 3, 7, 1, 0, 20];
+        let m = with_row_lengths(&lens, 64, 9);
+        assert_eq!(m.row_lengths(), lens);
+    }
+
+    #[test]
+    fn power_law_has_tail_and_head() {
+        let m = power_law_rows(2000, 2000, 2.0, 500, 11);
+        let lens = m.row_lengths();
+        assert!(lens.iter().filter(|&&l| l <= 2).count() > 500);
+        assert!(*lens.iter().max().unwrap() > 50);
+    }
+
+    #[test]
+    fn vector_deterministic() {
+        assert_eq!(vector(10, 5), vector(10, 5));
+        assert_ne!(vector(10, 5), vector(10, 6));
+    }
+}

@@ -1,0 +1,121 @@
+//! R-MAT / Kronecker graph generator — substitute for the paper's
+//! `kron_g500-logn{18..21}` matrices.
+//!
+//! Graph500's synthetic kernel *is* an R-MAT recursion with quadrant
+//! probabilities (A,B,C,D) = (0.57, 0.19, 0.19, 0.05); the UF `kron_g500`
+//! matrices are instances of it. Generating our own at the same scale
+//! reproduces the power-law row-length skew and the scattered column
+//! access that make these matrices hard for CSR SpMV (paper §IV-C: m4, m8
+//! are the matrices where HBP wins biggest).
+
+use crate::formats::{Coo, Csr};
+use crate::util::Rng;
+
+/// R-MAT parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct RmatConfig {
+    /// log2 of the vertex count (matrix dimension = 2^scale).
+    pub scale: u32,
+    /// Average (directed) edges per vertex before dedup/symmetrization.
+    pub edge_factor: usize,
+    /// Quadrant probabilities; must sum to ~1.
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+    /// Make the matrix symmetric (the paper's kron matrices are).
+    pub symmetric: bool,
+    pub seed: u64,
+}
+
+impl RmatConfig {
+    /// Graph500 defaults at a given scale.
+    pub fn graph500(scale: u32, edge_factor: usize, seed: u64) -> Self {
+        RmatConfig { scale, edge_factor, a: 0.57, b: 0.19, c: 0.19, symmetric: true, seed }
+    }
+}
+
+/// Generate an R-MAT graph adjacency matrix in CSR form.
+///
+/// Self-loops are kept (they correspond to diagonal entries), duplicate
+/// edges are summed by normalization — matching how kron_g500 instances
+/// are materialized as matrices with nnz counted after dedup.
+pub fn rmat(cfg: &RmatConfig) -> Csr {
+    let n = 1usize << cfg.scale;
+    let edges = n * cfg.edge_factor;
+    let mut rng = Rng::new(cfg.seed);
+    let mut coo = Coo::new(n, n);
+    // Slight per-level probability noise (as in Graph500) prevents the
+    // artificial griddy structure pure R-MAT produces.
+    for _ in 0..edges {
+        let (mut r, mut c) = (0usize, 0usize);
+        for _level in 0..cfg.scale {
+            let u = rng.f64();
+            // perturb quadrant probabilities +-5% per level
+            let noise = 0.95 + 0.1 * rng.f64();
+            let a = cfg.a * noise;
+            let b = cfg.b * noise;
+            let cq = cfg.c * noise;
+            r <<= 1;
+            c <<= 1;
+            if u < a {
+                // top-left
+            } else if u < a + b {
+                c |= 1;
+            } else if u < a + b + cq {
+                r |= 1;
+            } else {
+                r |= 1;
+                c |= 1;
+            }
+        }
+        coo.push(r, c, 1.0 + rng.f64());
+    }
+    if cfg.symmetric {
+        coo.symmetrize();
+    }
+    coo.to_csr()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::Stats;
+
+    #[test]
+    fn shape_and_scale() {
+        let m = rmat(&RmatConfig::graph500(8, 8, 1));
+        assert_eq!(m.rows, 256);
+        assert_eq!(m.cols, 256);
+        // dedup + symmetrize: nnz within sane bounds
+        assert!(m.nnz() > 256 * 4, "nnz={}", m.nnz());
+        assert!(m.nnz() <= 256 * 8 * 2);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn symmetric_when_requested() {
+        let m = rmat(&RmatConfig::graph500(7, 6, 3));
+        let t = m.transpose();
+        assert_eq!(m, t);
+    }
+
+    #[test]
+    fn power_law_degree_skew() {
+        let m = rmat(&RmatConfig::graph500(10, 16, 7));
+        let lens = m.row_lengths();
+        let s = Stats::of_usize(&lens);
+        // R-MAT hallmark: max degree far above mean, many near-empty rows
+        assert!(s.max > 8.0 * s.mean, "max={} mean={}", s.max, s.mean);
+        let empties = lens.iter().filter(|&&l| l <= 1).count();
+        assert!(empties > m.rows / 20, "skew missing: only {empties} near-empty rows");
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = rmat(&RmatConfig::graph500(7, 4, 42));
+        let b = rmat(&RmatConfig::graph500(7, 4, 42));
+        assert_eq!(a, b);
+        let c = rmat(&RmatConfig::graph500(7, 4, 43));
+        assert_ne!(a, c);
+    }
+}

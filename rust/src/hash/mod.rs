@@ -1,0 +1,24 @@
+//! The paper's nonlinear hash (§III-B, Fig. 3).
+//!
+//! Input: the nonzero count of each row inside a 2D-partitioned block.
+//! Output: the row's slot in a per-block hash table whose index order *is*
+//! the execution order. Rows with similar nonzero counts land in nearby
+//! slots, so the warp-sized groups formed by consecutive slots have
+//! near-uniform per-lane work — the lightweight replacement for sorting /
+//! dynamic-programming reordering.
+//!
+//! Three stages (Fig. 3):
+//! 1. **Aggregation** — nonlinear bucketing `min(nnz >> a, 8)`; `a` is
+//!    sampled from the input so that most rows land in buckets 0..=8.
+//! 2. **Dispersion** — spread buckets across the table: `bucket * c`,
+//!    where `c` is the bucket region size derived from the table length.
+//! 3. **Linear mapping** — fine placement inside the region
+//!    (`(b * nnz + d) mod region`) plus linear probing on collision.
+
+pub mod nonlinear;
+pub mod sampling;
+pub mod table;
+
+pub use nonlinear::{HashParams, NonlinearHash};
+pub use sampling::sample_params;
+pub use table::HashTable;

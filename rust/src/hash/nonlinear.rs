@@ -1,0 +1,181 @@
+//! The nonlinear hash function: Aggregation ∘ Dispersion ∘ Linear mapping.
+
+/// Number of aggregation buckets. The paper fixes the aggregation range to
+/// `0..=8` ("we artificially stipulate that the aggregation maps most
+/// numbers of nonzero elements to within the range of 0 to 8"; rows
+/// exceeding 8 are treated as 8).
+pub const NUM_BUCKETS: usize = 9;
+
+/// Parameters of the nonlinear hash.
+///
+/// Per the paper: `a` and `c` are *dynamic* — determined by sampling the
+/// input block; `b` and `d` are *fixed* — derived from the row-partition
+/// size before the program runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HashParams {
+    /// Aggregation shift: rows with `nnz >> a` equal share a bucket.
+    pub a: u32,
+    /// Dispersion stride: bucket `k`'s region starts at `k * c`.
+    pub c: usize,
+    /// Linear-mapping multiplier (fixed, odd — a cheap bijective mixer).
+    pub b: usize,
+    /// Linear-mapping offset (fixed).
+    pub d: usize,
+    /// Table length (= rows in the block's hash table).
+    pub table_len: usize,
+}
+
+impl HashParams {
+    /// Fixed-parameter defaults for a given table length (`b`, `d` follow
+    /// the row-partition size; `a`, `c` here are fallbacks that
+    /// [`crate::hash::sampling::sample_params`] overrides per block).
+    pub fn fixed_for(table_len: usize) -> HashParams {
+        HashParams {
+            a: 0,
+            c: region_size(table_len),
+            // odd full-width multiplier (golden-ratio hash): bijective on
+            // u32 and entropy-rich in the top bits, which the
+            // multiply-shift reduction in `linear` relies on
+            b: 0x9E37_79B1,
+            d: 0x85EB_CA6B,
+            table_len: table_len.max(1),
+        }
+    }
+}
+
+/// Region size per bucket so that `NUM_BUCKETS` regions tile the table.
+pub fn region_size(table_len: usize) -> usize {
+    (table_len / NUM_BUCKETS).max(1)
+}
+
+/// The nonlinear hash function of Fig. 3.
+#[derive(Clone, Copy, Debug)]
+pub struct NonlinearHash {
+    pub params: HashParams,
+}
+
+impl NonlinearHash {
+    pub fn new(params: HashParams) -> Self {
+        NonlinearHash { params }
+    }
+
+    /// **Aggregation**: nonlinear map of the row's nonzero count to a
+    /// bucket in `0..NUM_BUCKETS`. Low-cost bit shift (Fig. 4): with
+    /// `a = 2`, rows with nnz in `4k..4k+3` aggregate together. Extreme
+    /// rows clamp to bucket 8 and are "treated as rows assigned to 8".
+    #[inline]
+    pub fn aggregate(&self, nnz: usize) -> usize {
+        ((nnz >> self.params.a) as usize).min(NUM_BUCKETS - 1)
+    }
+
+    /// **Dispersion**: spread bucket `k` to table region `[k*c, (k+1)*c)`.
+    /// The mapping range never exceeds the current block's table.
+    #[inline]
+    pub fn disperse(&self, bucket: usize) -> usize {
+        (bucket * self.params.c).min(self.params.table_len - 1)
+    }
+
+    /// **Linear mapping**: fine adjustment within the bucket region to
+    /// spread distinct nnz values that aggregated together, lowering
+    /// collision-probe cost. The paper notes the modulo "can also be
+    /// replaced by other methods such as bit-shifting": we use the
+    /// multiply-shift reduction `((b*nnz + d) * region) >> 32` — the
+    /// same uniform fine placement without an integer division on the
+    /// preprocessing hot path (§Perf, Fig. 7).
+    #[inline]
+    pub fn linear(&self, nnz: usize) -> usize {
+        let region = region_size(self.params.table_len);
+        let mixed = self.params.b.wrapping_mul(nnz).wrapping_add(self.params.d) as u32;
+        ((mixed as u64 * region as u64) >> 32) as usize
+    }
+
+    /// Full hash: preferred slot for a row with `nnz` nonzeros.
+    ///
+    /// By construction `disperse(k) + linear(_) <= 9 * region <=
+    /// table_len`, so no final reduction is needed.
+    #[inline]
+    pub fn slot(&self, nnz: usize) -> usize {
+        let s = self.disperse(self.aggregate(nnz)) + self.linear(nnz);
+        debug_assert!(s < self.params.table_len.max(1) || self.params.table_len == 0);
+        s.min(self.params.table_len - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn h(table_len: usize, a: u32) -> NonlinearHash {
+        let mut p = HashParams::fixed_for(table_len);
+        p.a = a;
+        NonlinearHash::new(p)
+    }
+
+    #[test]
+    fn aggregation_groups_similar_lengths() {
+        let h = h(512, 2);
+        // a=2: nnz 4..=7 share bucket 1 (Fig. 4's 4k..4k+3 example)
+        assert_eq!(h.aggregate(4), 1);
+        assert_eq!(h.aggregate(7), 1);
+        assert_ne!(h.aggregate(8), h.aggregate(7));
+    }
+
+    #[test]
+    fn aggregation_clamps_extremes() {
+        let h = h(512, 0);
+        assert_eq!(h.aggregate(100_000), NUM_BUCKETS - 1);
+        assert_eq!(h.aggregate(8), NUM_BUCKETS - 1);
+    }
+
+    #[test]
+    fn dispersion_orders_buckets() {
+        let h = h(512, 0);
+        // smaller buckets land earlier: execution order favors light rows
+        let mut prev = 0;
+        for b in 0..NUM_BUCKETS {
+            let s = h.disperse(b);
+            assert!(s >= prev, "dispersion not monotone at bucket {b}");
+            assert!(s < 512);
+            prev = s;
+        }
+    }
+
+    #[test]
+    fn slot_in_range_always() {
+        for table_len in [1usize, 2, 9, 31, 512, 513] {
+            let hh = h(table_len, 1);
+            for nnz in 0..2000 {
+                let s = hh.slot(nnz);
+                assert!(s < table_len, "slot {s} out of table {table_len}");
+            }
+        }
+    }
+
+    #[test]
+    fn same_nnz_same_slot() {
+        let h = h(512, 3);
+        assert_eq!(h.slot(77), h.slot(77));
+    }
+
+    #[test]
+    fn nearby_lengths_map_to_same_region() {
+        let h = h(512, 3); // buckets of width 8
+        let region = region_size(512);
+        let s16 = h.slot(16) / region;
+        let s17 = h.slot(17) / region;
+        let s23 = h.slot(23) / region;
+        assert_eq!(s16, s17);
+        assert_eq!(s16, s23);
+        // and a much longer row maps to a later region
+        let s200 = h.slot(200) / region;
+        assert!(s200 > s16);
+    }
+
+    #[test]
+    fn linear_mapping_spreads_within_region() {
+        let h = h(512, 3);
+        // distinct nnz in the same bucket should rarely collide before probing
+        let slots: std::collections::HashSet<usize> = (16..24).map(|n| h.slot(n)).collect();
+        assert!(slots.len() >= 6, "linear mapping not spreading: {slots:?}");
+    }
+}

@@ -1,0 +1,118 @@
+//! Runtime sampling of the dynamic hash parameters `a` and `c` (§III-B:
+//! "a and c are dynamically determined based on the input matrix and
+//! sampled during program execution").
+//!
+//! `a` is chosen so that ~90% of sampled rows aggregate inside the
+//! `0..=8` bucket range ("we allowed the existence of a small number of
+//! rows that exceed 8 after mapping"); `c` tiles the buckets across the
+//! block's table. As blocks get denser `a` grows, widening each bucket —
+//! which is exactly when the linear-mapping stage starts doing the fine
+//! placement work.
+
+use super::nonlinear::{HashParams, NUM_BUCKETS};
+
+/// Maximum rows sampled per block: sampling is O(1), not O(rows).
+pub const SAMPLE_CAP: usize = 64;
+
+/// Derive per-block hash parameters from the block's row nonzero counts.
+///
+/// `row_nnz` are the per-row in-block counts; `table_len` the block's
+/// table size (== number of row slots). Deterministic; the `seed`
+/// parameter is kept for API stability (sampling uses a fixed stride,
+/// which is both deterministic and allocation-light — this sits on the
+/// preprocessing hot path measured by Fig. 7).
+pub fn sample_params(row_nnz: &[usize], table_len: usize, seed: u64) -> HashParams {
+    let _ = seed;
+    let mut p = HashParams::fixed_for(table_len);
+    if row_nnz.is_empty() {
+        return p;
+    }
+
+    // strided sample of up to SAMPLE_CAP rows into a stack buffer
+    let mut buf = [0usize; SAMPLE_CAP];
+    let n = row_nnz.len();
+    let count = n.min(SAMPLE_CAP);
+    let stride = n / count;
+    for (i, b) in buf[..count].iter_mut().enumerate() {
+        *b = row_nnz[i * stride];
+    }
+    let sample = &mut buf[..count];
+
+    // p90 of sampled lengths ("avoid the influence of extreme values");
+    // selection, not a full sort — O(SAMPLE_CAP)
+    let k = (count * 9 / 10).min(count - 1);
+    sample.select_nth_unstable(k);
+    let p90 = sample[k];
+
+    // choose a so that p90 >> a <= 8, i.e. buckets cover the common range
+    let mut a = 0u32;
+    while (p90 >> a) >= NUM_BUCKETS {
+        a += 1;
+    }
+    p.a = a;
+    p.c = super::nonlinear::region_size(table_len);
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hash::NonlinearHash;
+
+    #[test]
+    fn sparse_block_gets_small_a() {
+        let lens = vec![1usize; 100];
+        let p = sample_params(&lens, 128, 1);
+        assert_eq!(p.a, 0);
+    }
+
+    #[test]
+    fn dense_block_gets_larger_a() {
+        let lens = vec![100usize; 100];
+        let p = sample_params(&lens, 128, 1);
+        // 100 >> a <= 8 -> a = 4
+        assert_eq!(p.a, 4);
+    }
+
+    #[test]
+    fn p90_ignores_extreme_tail() {
+        // 95 short rows + 5 hubs: `a` should track the short rows
+        let mut lens = vec![3usize; 95];
+        lens.extend([50_000; 5]);
+        let p = sample_params(&lens, 512, 7);
+        assert!(p.a <= 1, "a={} pulled up by outliers", p.a);
+        // hubs clamp into the top bucket
+        let h = NonlinearHash::new(p);
+        assert_eq!(h.aggregate(50_000), NUM_BUCKETS - 1);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let lens: Vec<usize> = (0..1000).map(|i| i % 37).collect();
+        assert_eq!(sample_params(&lens, 512, 5), sample_params(&lens, 512, 5));
+    }
+
+    #[test]
+    fn empty_block_ok() {
+        let p = sample_params(&[], 512, 0);
+        assert_eq!(p.table_len, 512);
+    }
+
+    #[test]
+    fn most_rows_within_buckets() {
+        // the sampling contract: >= ~90% of rows aggregate below the clamp
+        let mut rng = crate::util::Rng::new(3);
+        let lens: Vec<usize> = (0..2000).map(|_| rng.power_law(2.0, 400)).collect();
+        let p = sample_params(&lens, 512, 11);
+        let h = NonlinearHash::new(p);
+        let clamped = lens.iter().filter(|&&l| (l >> p.a) >= NUM_BUCKETS).count();
+        assert!(
+            clamped * 100 / lens.len() <= 15,
+            "{clamped}/{} rows clamp to the top bucket (a={})",
+            lens.len(),
+            p.a
+        );
+        // and the hash still separates the common lengths
+        assert_ne!(h.slot(1), h.slot(lens.iter().copied().max().unwrap()));
+    }
+}

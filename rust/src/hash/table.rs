@@ -1,0 +1,236 @@
+//! Per-block hash table with collision resolution.
+//!
+//! The table has exactly one slot per row of the block, so inserting all
+//! rows yields a **permutation**: slot order = execution order,
+//! `output_hash[slot] = original row`. A colliding row takes the *first
+//! free slot at or after* its hashed slot (wrapping) — the same final
+//! placement as linear probing, which keeps collided rows adjacent to
+//! their bucket region and preserves the aggregation property the warp
+//! grouping depends on.
+//!
+//! The free-slot search uses a union-find "next free pointer" with path
+//! compression, so a block full of identical row lengths inserts in
+//! near-O(R) instead of linear probing's O(R^2) — the "search strategies
+//! after collisions" refinement the paper's Discussion section calls for
+//! (ablation: `benches/ablation_hash_params.rs` reports probe counts).
+
+use super::nonlinear::NonlinearHash;
+
+/// Slot value marking an empty table entry.
+const EMPTY: u32 = u32::MAX;
+
+/// A per-block hash table mapping rows to execution slots.
+#[derive(Clone, Debug)]
+pub struct HashTable {
+    slots: Vec<u32>,
+    /// Union-find parent: free slots are self-parented roots; occupied
+    /// slots point (transitively) to the next free slot at-or-after them.
+    parent: Vec<u32>,
+    len: usize,
+    inserted: usize,
+    /// Total parent-chain hops (collision-cost metric for ablations).
+    pub probe_steps: usize,
+}
+
+impl HashTable {
+    pub fn new(len: usize) -> Self {
+        HashTable {
+            slots: vec![EMPTY; len],
+            parent: (0..len as u32).collect(),
+            len,
+            inserted: 0,
+            probe_steps: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// First free slot reachable from `s` (free slots are self-parented).
+    fn find(&mut self, s: usize) -> usize {
+        let mut root = s;
+        while self.parent[root] as usize != root {
+            root = self.parent[root] as usize;
+            self.probe_steps += 1;
+        }
+        // path compression
+        let mut cur = s;
+        while self.parent[cur] as usize != root {
+            let next = self.parent[cur] as usize;
+            self.parent[cur] = root as u32;
+            cur = next;
+        }
+        root
+    }
+
+    /// Insert `row` (block-local index) with `nnz` nonzeros using hash
+    /// `h`; returns the slot assigned. Panics if the table is full.
+    pub fn insert(&mut self, h: &NonlinearHash, row: u32, nnz: usize) -> usize {
+        assert!(self.inserted < self.len, "hash table full: {} rows inserted", self.len);
+        let f = self.find(h.slot(nnz));
+        debug_assert_eq!(self.slots[f], EMPTY);
+        self.slots[f] = row;
+        self.inserted += 1;
+        if self.inserted < self.len {
+            // point past this slot; wraps to 0 at the end of the table
+            let next = (f + 1) % self.len;
+            let next_root = self.find(next);
+            self.parent[f] = next_root as u32;
+        }
+        f
+    }
+
+    /// Occupied fraction.
+    pub fn occupancy(&self) -> f64 {
+        self.inserted as f64 / self.len.max(1) as f64
+    }
+
+    /// Finish: return `output_hash` — slot-indexed original row ids.
+    /// Every slot must be filled (insert all rows first); verified here.
+    pub fn into_output_hash(self) -> Vec<u32> {
+        debug_assert!(
+            self.slots.iter().all(|&s| s != EMPTY),
+            "hash table finalized with empty slots"
+        );
+        self.slots
+    }
+
+    /// Access the slot array before finalization (tests/metrics).
+    pub fn slots(&self) -> &[u32] {
+        &self.slots
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hash::{sample_params, NonlinearHash};
+    use crate::util::Rng;
+
+    fn hash_for(lens: &[usize], table: usize) -> NonlinearHash {
+        NonlinearHash::new(sample_params(lens, table, 42))
+    }
+
+    #[test]
+    fn all_rows_get_distinct_slots() {
+        let lens: Vec<usize> = (0..128).map(|i| i % 11).collect();
+        let h = hash_for(&lens, 128);
+        let mut t = HashTable::new(128);
+        for (r, &l) in lens.iter().enumerate() {
+            t.insert(&h, r as u32, l);
+        }
+        assert!((t.occupancy() - 1.0).abs() < 1e-12);
+        let out = t.into_output_hash();
+        let mut sorted = out.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..128).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn matches_linear_probing_placement() {
+        // reference: naive linear probing
+        let mut rng = Rng::new(77);
+        let lens: Vec<usize> = (0..256).map(|_| rng.power_law(2.0, 200)).collect();
+        let h = hash_for(&lens, 256);
+        let mut naive = vec![EMPTY; 256];
+        for (r, &l) in lens.iter().enumerate() {
+            let mut s = h.slot(l);
+            while naive[s] != EMPTY {
+                s = (s + 1) % 256;
+            }
+            naive[s] = r as u32;
+        }
+        let mut t = HashTable::new(256);
+        for (r, &l) in lens.iter().enumerate() {
+            t.insert(&h, r as u32, l);
+        }
+        assert_eq!(t.into_output_hash(), naive);
+    }
+
+    #[test]
+    fn similar_rows_cluster() {
+        // two populations: 100 short rows, 28 long rows
+        let mut lens = vec![2usize; 100];
+        lens.extend(vec![300usize; 28]);
+        let h = hash_for(&lens, 128);
+        let mut t = HashTable::new(128);
+        let mut short_slots = vec![];
+        let mut long_slots = vec![];
+        for (r, &l) in lens.iter().enumerate() {
+            let s = t.insert(&h, r as u32, l);
+            if l == 2 {
+                short_slots.push(s);
+            } else {
+                long_slots.push(s);
+            }
+        }
+        let short_mean: f64 = short_slots.iter().sum::<usize>() as f64 / short_slots.len() as f64;
+        let long_mean: f64 = long_slots.iter().sum::<usize>() as f64 / long_slots.len() as f64;
+        assert!(
+            long_mean > short_mean + 10.0,
+            "long rows should land later: short {short_mean:.1} long {long_mean:.1}"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "full")]
+    fn overfull_table_panics() {
+        let h = hash_for(&[1, 1, 1], 2);
+        let mut t = HashTable::new(2);
+        t.insert(&h, 0, 1);
+        t.insert(&h, 1, 1);
+        t.insert(&h, 2, 1);
+    }
+
+    #[test]
+    fn identical_keys_insert_in_near_linear_time() {
+        // the degenerate case that costs O(R^2) under plain linear probing
+        let lens = vec![5usize; 4096];
+        let h = hash_for(&lens, 4096);
+        let mut t = HashTable::new(4096);
+        for (r, &l) in lens.iter().enumerate() {
+            t.insert(&h, r as u32, l);
+        }
+        assert!(
+            t.probe_steps < 4096 * 8,
+            "union-find probing should be near-linear: {} steps",
+            t.probe_steps
+        );
+    }
+
+    #[test]
+    fn probe_steps_bounded_on_random_input() {
+        let mut rng = Rng::new(9);
+        let lens: Vec<usize> = (0..512).map(|_| rng.power_law(2.0, 256)).collect();
+        let h = hash_for(&lens, 512);
+        let mut t = HashTable::new(512);
+        for (r, &l) in lens.iter().enumerate() {
+            t.insert(&h, r as u32, l);
+        }
+        assert!(
+            t.probe_steps < 512 * 8,
+            "excessive probing: {} steps",
+            t.probe_steps
+        );
+    }
+
+    #[test]
+    fn wrapping_across_table_end() {
+        // force hashes near the end so placement must wrap to slot 0
+        let lens = vec![1000usize; 4]; // all clamp to the top bucket
+        let h = hash_for(&lens, 4);
+        let mut t = HashTable::new(4);
+        for (r, &l) in lens.iter().enumerate() {
+            t.insert(&h, r as u32, l);
+        }
+        let out = t.into_output_hash();
+        let mut sorted = out.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2, 3]);
+    }
+}

@@ -1,0 +1,121 @@
+//! Compact binary CSR cache.
+//!
+//! Benches over the full-scale synthetic suite regenerate multi-million-nnz
+//! matrices; caching them as little-endian binary CSR makes re-runs cheap.
+//! Layout (all little-endian):
+//!
+//! ```text
+//! magic  u64  = 0x4850_4253_504d_5631  ("HPBSPMV1")
+//! rows   u64
+//! cols   u64
+//! nnz    u64
+//! ptr    (rows+1) x u64
+//! col    nnz x u32
+//! data   nnz x f64
+//! ```
+
+use crate::formats::Csr;
+use anyhow::{bail, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: u64 = 0x4850_4253_504d_5631;
+
+fn write_u64<W: Write>(w: &mut W, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// Write CSR to the binary cache format.
+pub fn write_bin(path: impl AsRef<Path>, m: &Csr) -> Result<()> {
+    let mut w = BufWriter::new(std::fs::File::create(path.as_ref())?);
+    write_u64(&mut w, MAGIC)?;
+    write_u64(&mut w, m.rows as u64)?;
+    write_u64(&mut w, m.cols as u64)?;
+    write_u64(&mut w, m.nnz() as u64)?;
+    for &p in &m.ptr {
+        write_u64(&mut w, p as u64)?;
+    }
+    for &c in &m.col {
+        w.write_all(&c.to_le_bytes())?;
+    }
+    for &d in &m.data {
+        w.write_all(&d.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Read CSR from the binary cache format (validates invariants).
+pub fn read_bin(path: impl AsRef<Path>) -> Result<Csr> {
+    let mut r = BufReader::new(
+        std::fs::File::open(path.as_ref()).with_context(|| format!("opening {:?}", path.as_ref()))?,
+    );
+    if read_u64(&mut r)? != MAGIC {
+        bail!("bad magic in {:?}", path.as_ref());
+    }
+    let rows = read_u64(&mut r)? as usize;
+    let cols = read_u64(&mut r)? as usize;
+    let nnz = read_u64(&mut r)? as usize;
+
+    let mut ptr = Vec::with_capacity(rows + 1);
+    for _ in 0..=rows {
+        ptr.push(read_u64(&mut r)? as usize);
+    }
+    let mut colbuf = vec![0u8; nnz * 4];
+    r.read_exact(&mut colbuf)?;
+    let col: Vec<u32> = colbuf
+        .chunks_exact(4)
+        .map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect();
+    let mut databuf = vec![0u8; nnz * 8];
+    r.read_exact(&mut databuf)?;
+    let data: Vec<f64> = databuf
+        .chunks_exact(8)
+        .map(|b| f64::from_le_bytes(b.try_into().unwrap()))
+        .collect();
+
+    let m = Csr { rows, cols, ptr, col, data };
+    m.validate().context("binary CSR failed validation")?;
+    Ok(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Coo;
+
+    #[test]
+    fn roundtrip() {
+        let mut coo = Coo::new(5, 7);
+        coo.push(0, 6, 1.0);
+        coo.push(4, 0, -2.5);
+        coo.push(2, 3, 1e-17);
+        let m = coo.to_csr();
+        let dir = std::env::temp_dir().join("hbp_bin_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.bin");
+        write_bin(&path, &m).unwrap();
+        let back = read_bin(&path).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("hbp_bin_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("junk.bin");
+        std::fs::write(&path, b"garbagegarbagegarbage_____________").unwrap();
+        assert!(read_bin(&path).is_err());
+    }
+
+    #[test]
+    fn missing_file_is_error() {
+        assert!(read_bin("/nonexistent/x.bin").is_err());
+    }
+}

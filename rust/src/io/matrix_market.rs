@@ -1,0 +1,221 @@
+//! MatrixMarket (`.mtx`) reader/writer.
+//!
+//! The University of Florida Sparse Matrix Collection (the paper's test
+//! set, Table I) distributes matrices in this format. The offline build
+//! can't download them, so benches default to the synthetic suite in
+//! [`crate::gen::suite`] — but users with local copies of ASIC_680k et al.
+//! can pass them to the CLI and every experiment runs on the real thing.
+//!
+//! Supported: `matrix coordinate real|integer|pattern general|symmetric|
+//! skew-symmetric`, `%` comments, 1-based indices. Dense (`array`) files
+//! and complex fields are rejected with a clear error.
+
+use crate::formats::Coo;
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Field {
+    Real,
+    Integer,
+    Pattern,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Symmetry {
+    General,
+    Symmetric,
+    SkewSymmetric,
+}
+
+/// Read a MatrixMarket file into COO.
+pub fn read_matrix_market(path: impl AsRef<Path>) -> Result<Coo> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {:?}", path.as_ref()))?;
+    parse(BufReader::new(f))
+}
+
+/// Parse MatrixMarket text (for tests and in-memory use).
+pub fn read_matrix_market_str(text: &str) -> Result<Coo> {
+    parse(BufReader::new(text.as_bytes()))
+}
+
+fn parse<R: BufRead>(mut r: R) -> Result<Coo> {
+    let mut header = String::new();
+    r.read_line(&mut header).context("reading header")?;
+    let h: Vec<String> = header.trim().to_ascii_lowercase().split_whitespace().map(String::from).collect();
+    if h.len() < 5 || !h[0].starts_with("%%matrixmarket") {
+        bail!("not a MatrixMarket file: {header:?}");
+    }
+    if h[1] != "matrix" {
+        bail!("unsupported object {:?}", h[1]);
+    }
+    if h[2] != "coordinate" {
+        bail!("only `coordinate` format supported, got {:?}", h[2]);
+    }
+    let field = match h[3].as_str() {
+        "real" => Field::Real,
+        "integer" => Field::Integer,
+        "pattern" => Field::Pattern,
+        other => bail!("unsupported field {other:?} (complex not supported)"),
+    };
+    let symmetry = match h[4].as_str() {
+        "general" => Symmetry::General,
+        "symmetric" => Symmetry::Symmetric,
+        "skew-symmetric" => Symmetry::SkewSymmetric,
+        other => bail!("unsupported symmetry {other:?}"),
+    };
+
+    // size line: first non-comment, non-empty line
+    let mut size_line = String::new();
+    loop {
+        size_line.clear();
+        if r.read_line(&mut size_line)? == 0 {
+            bail!("missing size line");
+        }
+        let t = size_line.trim();
+        if !t.is_empty() && !t.starts_with('%') {
+            break;
+        }
+    }
+    let dims: Vec<usize> = size_line
+        .trim()
+        .split_whitespace()
+        .map(|t| t.parse().with_context(|| format!("bad size token {t:?}")))
+        .collect::<Result<_>>()?;
+    if dims.len() != 3 {
+        bail!("size line must be `rows cols nnz`, got {size_line:?}");
+    }
+    let (rows, cols, nnz) = (dims[0], dims[1], dims[2]);
+
+    let mut coo = Coo::new(rows, cols);
+    let mut seen = 0usize;
+    let mut line = String::new();
+    while seen < nnz {
+        line.clear();
+        if r.read_line(&mut line)? == 0 {
+            bail!("expected {nnz} entries, file ended after {seen}");
+        }
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let i: usize = it.next().context("missing row")?.parse()?;
+        let j: usize = it.next().context("missing col")?.parse()?;
+        let v: f64 = match field {
+            Field::Pattern => 1.0,
+            _ => it.next().context("missing value")?.parse()?,
+        };
+        if i == 0 || j == 0 || i > rows || j > cols {
+            bail!("entry ({i},{j}) out of range for {rows}x{cols} (1-based)");
+        }
+        coo.push(i - 1, j - 1, v);
+        if symmetry != Symmetry::General && i != j {
+            let mirrored = if symmetry == Symmetry::SkewSymmetric { -v } else { v };
+            coo.push(j - 1, i - 1, mirrored);
+        }
+        seen += 1;
+    }
+    Ok(coo)
+}
+
+/// Write COO as `matrix coordinate real general` (1-based).
+pub fn write_matrix_market(path: impl AsRef<Path>, m: &Coo) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path.as_ref())?);
+    writeln!(f, "%%MatrixMarket matrix coordinate real general")?;
+    writeln!(f, "% written by hbp-spmv")?;
+    writeln!(f, "{} {} {}", m.rows, m.cols, m.nnz())?;
+    for k in 0..m.nnz() {
+        writeln!(f, "{} {} {:.17e}", m.row[k] + 1, m.col[k] + 1, m.data[k])?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_general_real() {
+        let text = "%%MatrixMarket matrix coordinate real general\n\
+                    % comment\n\
+                    3 3 2\n\
+                    1 1 1.5\n\
+                    3 2 -2.0\n";
+        let coo = read_matrix_market_str(text).unwrap();
+        assert_eq!(coo.rows, 3);
+        assert_eq!(coo.nnz(), 2);
+        let csr = coo.to_csr();
+        assert_eq!(csr.get(0, 0), 1.5);
+        assert_eq!(csr.get(2, 1), -2.0);
+    }
+
+    #[test]
+    fn parses_symmetric_mirrors() {
+        let text = "%%MatrixMarket matrix coordinate real symmetric\n\
+                    3 3 3\n\
+                    1 1 1.0\n\
+                    2 1 5.0\n\
+                    3 3 2.0\n";
+        let csr = read_matrix_market_str(text).unwrap().to_csr();
+        assert_eq!(csr.nnz(), 4); // diagonal not duplicated
+        assert_eq!(csr.get(0, 1), 5.0);
+        assert_eq!(csr.get(1, 0), 5.0);
+    }
+
+    #[test]
+    fn parses_skew_symmetric() {
+        let text = "%%MatrixMarket matrix coordinate real skew-symmetric\n\
+                    2 2 1\n\
+                    2 1 3.0\n";
+        let csr = read_matrix_market_str(text).unwrap().to_csr();
+        assert_eq!(csr.get(1, 0), 3.0);
+        assert_eq!(csr.get(0, 1), -3.0);
+    }
+
+    #[test]
+    fn parses_pattern_as_ones() {
+        let text = "%%MatrixMarket matrix coordinate pattern general\n\
+                    2 2 2\n\
+                    1 2\n\
+                    2 1\n";
+        let csr = read_matrix_market_str(text).unwrap().to_csr();
+        assert_eq!(csr.get(0, 1), 1.0);
+        assert_eq!(csr.get(1, 0), 1.0);
+    }
+
+    #[test]
+    fn rejects_array_format_and_bad_header() {
+        assert!(read_matrix_market_str("%%MatrixMarket matrix array real general\n2 2\n1\n2\n3\n4\n").is_err());
+        assert!(read_matrix_market_str("not a header\n1 1 0\n").is_err());
+        assert!(read_matrix_market_str("%%MatrixMarket matrix coordinate complex general\n1 1 1\n1 1 1 0\n").is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_range() {
+        let text = "%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 1.0\n";
+        assert!(read_matrix_market_str(text).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let text = "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n";
+        assert!(read_matrix_market_str(text).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let mut m = Coo::new(4, 3);
+        m.push(0, 0, 1.25);
+        m.push(3, 2, -7.5);
+        m.push(1, 1, 0.125);
+        let dir = std::env::temp_dir().join("hbp_mm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.mtx");
+        write_matrix_market(&path, &m).unwrap();
+        let back = read_matrix_market(&path).unwrap();
+        assert_eq!(back.to_csr(), m.to_csr());
+    }
+}

@@ -1,0 +1,8 @@
+//! Matrix I/O: MatrixMarket text files (the UF Sparse Matrix Collection's
+//! distribution format) and a compact binary cache for fast bench reloads.
+
+pub mod matrix_market;
+pub mod binfmt;
+
+pub use matrix_market::{read_matrix_market, read_matrix_market_str, write_matrix_market};
+pub use binfmt::{read_bin, write_bin};

@@ -1,0 +1,43 @@
+//! # hbp-spmv
+//!
+//! Reproduction of *"A Nonlinear Hash-based Optimization Method for SpMV on
+//! GPUs"* (Yan et al., CS.DC 2025) as a three-layer Rust + JAX + Pallas
+//! system.
+//!
+//! The paper introduces the **HBP (Hash-Based Partition)** sparse-matrix
+//! format: a 2D-partitioned layout whose rows are reordered *within* each
+//! block by a cheap **nonlinear hash** of their nonzero counts, so that rows
+//! of similar length are executed by the same warp-sized group (balancing
+//! intra-warp load without zero padding), plus a **mixed fixed/competitive
+//! execution schedule** that balances load *between* blocks using actual
+//! execution time and a ticket lock.
+//!
+//! Layer map:
+//! - **L3 (this crate)** — preprocessing (hash reorder, 2D partition, format
+//!   build), baselines (CSR, plain-2D, sort2D, DP2D), parallel execution
+//!   engines, a warp-level GPU simulator for the paper's device-specific
+//!   figures, the PJRT runtime that loads AOT artifacts, and the serving
+//!   coordinator.
+//! - **L2 (python/compile/model.py)** — the blocked SpMV compute graph in
+//!   JAX, lowered once to HLO text (`make artifacts`).
+//! - **L1 (python/compile/kernels/)** — the group-ELL block-SpMV Pallas
+//!   kernel called from L2.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod util;
+pub mod formats;
+pub mod io;
+pub mod gen;
+pub mod hash;
+pub mod partition;
+pub mod preprocess;
+pub mod exec;
+pub mod sim;
+pub mod runtime;
+pub mod coordinator;
+pub mod solvers;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

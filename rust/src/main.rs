@@ -1,0 +1,287 @@
+//! `hbp` — the command-line entry point.
+//!
+//! Subcommands:
+//! - `gen`        — generate a suite matrix (or all) to MatrixMarket/binary
+//! - `info`       — print matrix structure statistics
+//! - `preprocess` — time the preprocessing strategies on a matrix (Fig. 7 style)
+//! - `spmv`       — run SpMV with a chosen engine, verify vs CSR, report GFLOPS
+//! - `sim`        — run the GPU cost model (Orin / RTX 4090)
+//! - `serve`      — start the TCP serving coordinator
+//!
+//! Matrices are named either by suite id (`m1`..`m14`, Table I) or by a
+//! path to a `.mtx` / `.bin` file.
+
+use anyhow::{bail, Context, Result};
+use hbp_spmv::coordinator::{BatcherConfig, Coordinator, Router};
+use hbp_spmv::exec::{CsrParallel, HbpEngine, SpmvEngine, Spmv2dEngine};
+use hbp_spmv::formats::Csr;
+use hbp_spmv::gen::{matrix_by_id, suite, Scale};
+use hbp_spmv::partition::PartitionConfig;
+use hbp_spmv::preprocess::{
+    build_hbp_parallel, DpReorder, HashReorder, IdentityReorder, Reorder, SortReorder,
+};
+use hbp_spmv::sim::{simulate_csr, simulate_hbp, simulate_spmv2d, DeviceConfig};
+use hbp_spmv::util::cli::Args;
+use hbp_spmv::util::timer::{fmt_duration, time};
+use hbp_spmv::util::Stats;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().collect();
+    let cmd = argv.get(1).map(String::as_str).unwrap_or("help");
+    let args = Args::from_env(2, &["verify", "all", "parallel"]);
+    let result = match cmd {
+        "gen" => cmd_gen(&args),
+        "info" => cmd_info(&args),
+        "preprocess" => cmd_preprocess(&args),
+        "spmv" => cmd_spmv(&args),
+        "sim" => cmd_sim(&args),
+        "serve" => cmd_serve(&args),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            Err(anyhow::anyhow!("unknown subcommand {other:?}"))
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "hbp — Nonlinear hash-based partition SpMV (paper reproduction)
+
+USAGE: hbp <subcommand> [options]
+
+SUBCOMMANDS
+  gen        --matrix m4 --scale ci|small|full [--out file.mtx|file.bin] [--all]
+  info       --matrix <id|path> [--scale ci]
+  preprocess --matrix <id|path> [--scale ci] [--threads N]
+  spmv       --matrix <id|path> [--engine hbp|csr|2d|nnz-split] [--iters 10] [--verify]
+  sim        --matrix <id|path> [--device orin|rtx4090]
+  serve      --addr 127.0.0.1:7700 --matrices m1,m3 [--scale ci]"
+    );
+}
+
+/// Resolve a matrix argument: suite id or file path.
+fn load_matrix(args: &Args) -> Result<(String, Csr)> {
+    let name = args
+        .get("matrix")
+        .context("--matrix <id|path> is required")?
+        .to_string();
+    let scale = Scale::parse(args.str_or("scale", "ci")).context("bad --scale")?;
+    if let Some((meta, m)) = matrix_by_id(&name, scale) {
+        return Ok((format!("{} ({})", meta.id, meta.name), m));
+    }
+    let path = std::path::Path::new(&name);
+    let m = if path.extension().map(|e| e == "bin").unwrap_or(false) {
+        hbp_spmv::io::read_bin(path)?
+    } else {
+        hbp_spmv::io::read_matrix_market(path)?.to_csr()
+    };
+    Ok((name, m))
+}
+
+fn threads(args: &Args) -> usize {
+    args.usize_or(
+        "threads",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+    )
+}
+
+fn cmd_gen(args: &Args) -> Result<()> {
+    let scale = Scale::parse(args.str_or("scale", "ci")).context("bad --scale")?;
+    let ids: Vec<&str> = if args.flag("all") {
+        suite().iter().map(|e| e.id).collect()
+    } else {
+        vec![args.get("matrix").context("--matrix or --all required")?]
+    };
+    for id in ids {
+        let (meta, m) = matrix_by_id(id, scale).with_context(|| format!("unknown id {id}"))?;
+        let out = args
+            .get("out")
+            .map(String::from)
+            .unwrap_or_else(|| format!("{}.bin", meta.id));
+        if out.ends_with(".mtx") {
+            hbp_spmv::io::write_matrix_market(&out, &m.to_coo())?;
+        } else {
+            hbp_spmv::io::write_bin(&out, &m)?;
+        }
+        println!(
+            "{}: {} ({}x{}, {} nnz) -> {out}",
+            meta.id,
+            meta.name,
+            m.rows,
+            m.cols,
+            m.nnz()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let (name, m) = load_matrix(args)?;
+    let lens = m.row_lengths();
+    let s = Stats::of_usize(&lens);
+    let zeros = lens.iter().filter(|&&l| l == 0).count();
+    println!("matrix     {name}");
+    println!("shape      {} x {}", m.rows, m.cols);
+    println!("nnz        {}", m.nnz());
+    println!(
+        "row nnz    mean {:.2}  std {:.2}  max {}",
+        s.mean, s.std, s.max as usize
+    );
+    println!("zero rows  {zeros}");
+    println!("density    {:.3e}", m.info().density());
+    let cfg = PartitionConfig::default();
+    let hbp = hbp_spmv::preprocess::build_hbp(&m, cfg);
+    println!(
+        "2D blocks  {} non-empty (grid {} x {})",
+        hbp.blocks.len(),
+        hbp.grid.row_blocks,
+        hbp.grid.col_blocks
+    );
+    println!("hbp bytes  {}", hbp.storage_bytes());
+    Ok(())
+}
+
+fn cmd_preprocess(args: &Args) -> Result<()> {
+    let (name, m) = load_matrix(args)?;
+    let nthreads = threads(args);
+    let cfg = PartitionConfig::default();
+    println!("preprocessing {name} with {nthreads} threads\n");
+    let strategies: Vec<Box<dyn Reorder + Sync>> = vec![
+        Box::new(HashReorder::default()),
+        Box::new(SortReorder),
+        Box::new(DpReorder::default()),
+        Box::new(IdentityReorder),
+    ];
+    let mut base = None;
+    for s in &strategies {
+        let (hbp, secs) = time(|| build_hbp_parallel(&m, cfg, s.as_ref(), nthreads));
+        let ratio = match base {
+            None => {
+                base = Some(secs);
+                1.0
+            }
+            Some(b) => secs / b,
+        };
+        println!(
+            "{:8} {:>12}   {:.2}x vs hbp   ({} blocks)",
+            s.name(),
+            fmt_duration(secs),
+            ratio,
+            hbp.blocks.len()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_spmv(args: &Args) -> Result<()> {
+    let (name, m) = load_matrix(args)?;
+    let nthreads = threads(args);
+    let engine_name = args.str_or("engine", "hbp");
+    let iters = args.usize_or("iters", 10);
+    let cfg = PartitionConfig::default();
+
+    let engine: Box<dyn SpmvEngine> = match engine_name {
+        "hbp" => {
+            let hbp = build_hbp_parallel(&m, cfg, &HashReorder::default(), nthreads);
+            Box::new(HbpEngine::new(hbp, nthreads, args.f64_or("competitive", 0.25)))
+        }
+        "csr" => Box::new(CsrParallel::new(m.clone(), nthreads)),
+        "2d" => Box::new(Spmv2dEngine::new(m.clone(), cfg, nthreads)),
+        "nnz-split" => Box::new(hbp_spmv::exec::NnzSplitEngine::new(m.clone(), nthreads)),
+        other => bail!("unknown engine {other:?}"),
+    };
+
+    let x = hbp_spmv::gen::random::vector(m.cols, 42);
+    let mut y = vec![0.0; m.rows];
+    engine.spmv(&x, &mut y); // warmup
+    let t = hbp_spmv::util::Timer::start();
+    for _ in 0..iters {
+        engine.spmv(&x, &mut y);
+    }
+    let secs = t.elapsed_secs() / iters as f64;
+    println!(
+        "{name} engine={} threads={nthreads}: {} / iter, {:.3} GFLOPS",
+        engine.name(),
+        fmt_duration(secs),
+        engine.gflops(secs)
+    );
+
+    if args.flag("verify") {
+        let mut expect = vec![0.0; m.rows];
+        m.spmv(&x, &mut expect);
+        let ok = hbp_spmv::formats::dense::allclose(&y, &expect, 1e-9, 1e-11);
+        println!("verify vs serial CSR: {}", if ok { "OK" } else { "MISMATCH" });
+        if !ok {
+            bail!("verification failed");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> Result<()> {
+    let (name, m) = load_matrix(args)?;
+    let dev = match args.str_or("device", "orin") {
+        "orin" => DeviceConfig::orin(),
+        "rtx4090" | "4090" => DeviceConfig::rtx4090(),
+        other => bail!("unknown device {other:?}"),
+    };
+    let cfg = PartitionConfig::default();
+    let hbp = hbp_spmv::preprocess::build_hbp(&m, cfg);
+    let shell = hbp_spmv::preprocess::build_hbp_with(&m, cfg, &IdentityReorder);
+
+    println!("device {} — matrix {name}\n", dev.name);
+    let rows = [
+        ("csr", simulate_csr(&m, &dev)),
+        ("2d", simulate_spmv2d(&shell, &dev)),
+        ("hbp", simulate_hbp(&hbp, &dev, 0.25)),
+    ];
+    println!(
+        "{:6} {:>12} {:>12} {:>10} {:>10} {:>14}",
+        "engine", "spmv", "combine", "GFLOPS", "mem busy", "throughput"
+    );
+    for (n, r) in rows {
+        println!(
+            "{:6} {:>12} {:>12} {:>10.3} {:>9.2}% {:>11.2} GB/s",
+            n,
+            fmt_duration(r.spmv_secs),
+            fmt_duration(r.combine_secs),
+            r.gflops(),
+            100.0 * r.mem_busy(&dev),
+            r.mem_throughput_gbps()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let nthreads = threads(args);
+    let scale = Scale::parse(args.str_or("scale", "ci")).context("bad --scale")?;
+    let addr = args.str_or("addr", "127.0.0.1:7700").to_string();
+    let names = args.str_or("matrices", "m1,m3");
+
+    let mut router = Router::new(PartitionConfig::default(), nthreads);
+    for id in names.split(',') {
+        let (meta, m) =
+            matrix_by_id(id.trim(), scale).with_context(|| format!("unknown matrix {id}"))?;
+        let nnz = m.nnz();
+        router.register(meta.id, m)?;
+        let secs = router.get(meta.id)?.preprocess_secs;
+        println!(
+            "registered {} ({}, {} nnz) — preprocessed in {}",
+            meta.id,
+            meta.name,
+            nnz,
+            fmt_duration(secs)
+        );
+    }
+    let coordinator = std::sync::Arc::new(Coordinator::new(router, BatcherConfig::default()));
+    hbp_spmv::coordinator::serve(coordinator, &addr)
+}

@@ -1,0 +1,171 @@
+//! Per-block views into a parent CSR matrix.
+//!
+//! Algorithm 2's data-preparation step: for every (row-block, col-block)
+//! pair, find each row's sub-range of nonzeros falling inside the block's
+//! column range. Because CSR rows store columns sorted, each row is split
+//! across column blocks by a forward scan (one pass per row over its
+//! nonzeros — the same O(nnz) bound as the paper's per-thread scan).
+
+use super::BlockGrid;
+use crate::formats::Csr;
+
+/// A (row-block, col-block) view: for each local row, the `[start, end)`
+/// range in the parent CSR arrays that falls inside this block.
+#[derive(Clone, Debug)]
+pub struct BlockView {
+    pub bi: usize,
+    pub bj: usize,
+    /// Per local row: range into parent `col`/`data`.
+    pub row_ranges: Vec<(usize, usize)>,
+    pub nnz: usize,
+}
+
+impl BlockView {
+    /// Per-local-row nonzero counts (the nonlinear hash input).
+    pub fn row_nnz(&self) -> Vec<usize> {
+        self.row_ranges.iter().map(|&(s, e)| e - s).collect()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nnz == 0
+    }
+}
+
+/// Split a CSR matrix into non-empty block views, ordered column-major
+/// (all row-blocks of column-block 0 first — the fixed-allocation order).
+///
+/// Single O(nnz + rows * col_blocks) pass.
+pub fn block_views(m: &Csr, grid: &BlockGrid) -> Vec<BlockView> {
+    let rb = grid.row_blocks;
+    let cb = grid.col_blocks;
+    // views[bj][local stuff]: build all in one sweep
+    let mut views: Vec<Vec<BlockView>> = (0..cb)
+        .map(|bj| {
+            (0..rb)
+                .map(|bi| BlockView {
+                    bi,
+                    bj,
+                    row_ranges: vec![(0, 0); grid.rows_in(bi)],
+                    nnz: 0,
+                })
+                .collect()
+        })
+        .collect();
+
+    for r in 0..m.rows {
+        let bi = r / grid.cfg.rows_per_block;
+        let local = r - bi * grid.cfg.rows_per_block;
+        let (rs, re) = (m.ptr[r], m.ptr[r + 1]);
+        let mut k = rs;
+        while k < re {
+            let bj = grid.col_block_of(m.col[k] as usize);
+            // scan to the end of this column block within the row
+            let col_end = grid.col_range(bj).1;
+            let start = k;
+            while k < re && (m.col[k] as usize) < col_end {
+                k += 1;
+            }
+            let v = &mut views[bj][bi];
+            v.row_ranges[local] = (start, k);
+            v.nnz += k - start;
+        }
+    }
+
+    views
+        .into_iter()
+        .flatten()
+        .filter(|v| !v.is_empty())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Coo;
+    use crate::partition::PartitionConfig;
+
+    fn grid(rows: usize, cols: usize) -> BlockGrid {
+        BlockGrid::new(rows, cols, PartitionConfig::test_small())
+    }
+
+    #[test]
+    fn splits_rows_across_column_blocks() {
+        // 16-col blocks of cfg.test_small() are 32 wide; use 64 cols => 2 col blocks
+        let mut coo = Coo::new(4, 64);
+        coo.push(0, 0, 1.0);
+        coo.push(0, 31, 2.0);
+        coo.push(0, 32, 3.0);
+        coo.push(0, 63, 4.0);
+        coo.push(3, 40, 5.0);
+        let m = coo.to_csr();
+        let g = grid(4, 64);
+        let views = block_views(&m, &g);
+        assert_eq!(views.len(), 2);
+        let v0 = views.iter().find(|v| v.bj == 0).unwrap();
+        let v1 = views.iter().find(|v| v.bj == 1).unwrap();
+        assert_eq!(v0.nnz, 2);
+        assert_eq!(v1.nnz, 3);
+        assert_eq!(v0.row_nnz()[0], 2);
+        assert_eq!(v1.row_nnz()[0], 2);
+        assert_eq!(v1.row_nnz()[3], 1);
+    }
+
+    #[test]
+    fn empty_blocks_dropped() {
+        let mut coo = Coo::new(64, 64); // 4 row blocks x 2 col blocks
+        coo.push(0, 0, 1.0); // only block (0,0) nonempty
+        let m = coo.to_csr();
+        let g = grid(64, 64);
+        let views = block_views(&m, &g);
+        assert_eq!(views.len(), 1);
+        assert_eq!((views[0].bi, views[0].bj), (0, 0));
+    }
+
+    #[test]
+    fn column_major_order() {
+        let mut coo = Coo::new(64, 64);
+        coo.push(0, 0, 1.0); // (0,0)
+        coo.push(40, 0, 1.0); // (2,0)
+        coo.push(0, 40, 1.0); // (0,1)
+        let m = coo.to_csr();
+        let views = block_views(&m, &grid(64, 64));
+        let order: Vec<(usize, usize)> = views.iter().map(|v| (v.bj, v.bi)).collect();
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(order, sorted, "views must be column-major sorted");
+    }
+
+    #[test]
+    fn total_nnz_preserved() {
+        let m = crate::gen::random::power_law_rows(100, 200, 2.0, 50, 5);
+        let g = grid(100, 200);
+        let views = block_views(&m, &g);
+        let total: usize = views.iter().map(|v| v.nnz).sum();
+        assert_eq!(total, m.nnz());
+        // each row's per-block counts sum to the row's nnz
+        for v in &views {
+            for (local, &(s, e)) in v.row_ranges.iter().enumerate() {
+                if s == e {
+                    continue; // (0,0) sentinel: row has no entries in block
+                }
+                let r = v.bi * g.cfg.rows_per_block + local;
+                assert!(e >= s && s >= m.ptr[r] && e <= m.ptr[r + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn ranges_cover_correct_columns() {
+        let m = crate::gen::random::uniform(50, 100, 0.1, 9);
+        let g = grid(50, 100);
+        for v in block_views(&m, &g) {
+            let (cs, ce) = g.col_range(v.bj);
+            for &(s, e) in &v.row_ranges {
+                for k in s..e {
+                    let c = m.col[k] as usize;
+                    assert!(c >= cs && c < ce, "col {c} outside block [{cs},{ce})");
+                }
+            }
+        }
+    }
+}

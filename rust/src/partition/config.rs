@@ -1,0 +1,70 @@
+//! Partition configuration.
+
+/// 2D-partitioning parameters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PartitionConfig {
+    /// Rows per block — the paper's row-direction size N = 512 ("to
+    /// balance the preprocessing speed and hash mapping effect").
+    pub rows_per_block: usize,
+    /// Columns per block — the paper's column-direction size M = 4096
+    /// (a double-precision vector segment of 4K fits the per-warp
+    /// shared-memory budget of a 48KB-SM GPU).
+    pub cols_per_block: usize,
+    /// Warp size ω: rows executed in SIMT lockstep by one group.
+    pub warp: usize,
+}
+
+impl Default for PartitionConfig {
+    fn default() -> Self {
+        PartitionConfig { rows_per_block: 512, cols_per_block: 4096, warp: 32 }
+    }
+}
+
+impl PartitionConfig {
+    /// A small config for unit tests (4 groups of 4 lanes per block).
+    pub fn test_small() -> Self {
+        PartitionConfig { rows_per_block: 16, cols_per_block: 32, warp: 4 }
+    }
+
+    /// Groups per full block (= rows_per_block / warp, the paper's 16).
+    pub fn groups_per_block(&self) -> usize {
+        self.rows_per_block.div_ceil(self.warp)
+    }
+
+    /// Validate invariants needed by the grouping logic.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.rows_per_block > 0, "rows_per_block = 0");
+        anyhow::ensure!(self.cols_per_block > 0, "cols_per_block = 0");
+        anyhow::ensure!(self.warp > 0, "warp = 0");
+        anyhow::ensure!(
+            self.rows_per_block % self.warp == 0,
+            "rows_per_block {} must be a multiple of warp {}",
+            self.rows_per_block,
+            self.warp
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_defaults() {
+        let c = PartitionConfig::default();
+        assert_eq!(c.rows_per_block, 512);
+        assert_eq!(c.cols_per_block, 4096);
+        assert_eq!(c.warp, 32);
+        assert_eq!(c.groups_per_block(), 16); // the paper's "16 groups"
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn validation_catches_misalignment() {
+        let c = PartitionConfig { rows_per_block: 30, cols_per_block: 64, warp: 4 };
+        assert!(c.validate().is_err());
+        let z = PartitionConfig { rows_per_block: 0, cols_per_block: 64, warp: 4 };
+        assert!(z.validate().is_err());
+    }
+}

@@ -1,0 +1,102 @@
+//! The block grid: shape bookkeeping for a 2D-partitioned matrix.
+
+use super::PartitionConfig;
+
+/// Grid of 2D-partition blocks over a `rows x cols` matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockGrid {
+    pub rows: usize,
+    pub cols: usize,
+    pub cfg: PartitionConfig,
+    pub row_blocks: usize,
+    pub col_blocks: usize,
+}
+
+impl BlockGrid {
+    pub fn new(rows: usize, cols: usize, cfg: PartitionConfig) -> Self {
+        BlockGrid {
+            rows,
+            cols,
+            cfg,
+            row_blocks: rows.div_ceil(cfg.rows_per_block).max(1),
+            col_blocks: cols.div_ceil(cfg.cols_per_block).max(1),
+        }
+    }
+
+    /// Total block count (including blocks that may turn out empty).
+    pub fn num_blocks(&self) -> usize {
+        self.row_blocks * self.col_blocks
+    }
+
+    /// Row range `[start, end)` of row-block `bi` (edge-clamped).
+    pub fn row_range(&self, bi: usize) -> (usize, usize) {
+        let start = bi * self.cfg.rows_per_block;
+        (start, (start + self.cfg.rows_per_block).min(self.rows))
+    }
+
+    /// Column range `[start, end)` of column-block `bj` (edge-clamped).
+    pub fn col_range(&self, bj: usize) -> (usize, usize) {
+        let start = bj * self.cfg.cols_per_block;
+        (start, (start + self.cfg.cols_per_block).min(self.cols))
+    }
+
+    /// Number of rows in row-block `bi`.
+    pub fn rows_in(&self, bi: usize) -> usize {
+        let (s, e) = self.row_range(bi);
+        e - s
+    }
+
+    /// Which column block a column index falls into.
+    pub fn col_block_of(&self, col: usize) -> usize {
+        col / self.cfg.cols_per_block
+    }
+
+    /// Flat block index, column-major (the fixed-allocation order of
+    /// §III-C: consecutive blocks share a column => vector-segment reuse).
+    pub fn flat_col_major(&self, bi: usize, bj: usize) -> usize {
+        bj * self.row_blocks + bi
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::PartitionConfig;
+
+    #[test]
+    fn edge_clamping() {
+        let g = BlockGrid::new(1000, 5000, PartitionConfig::default());
+        assert_eq!(g.row_blocks, 2);
+        assert_eq!(g.col_blocks, 2);
+        assert_eq!(g.row_range(1), (512, 1000));
+        assert_eq!(g.col_range(1), (4096, 5000));
+        assert_eq!(g.rows_in(1), 488);
+    }
+
+    #[test]
+    fn small_matrix_single_block() {
+        let g = BlockGrid::new(10, 10, PartitionConfig::default());
+        assert_eq!(g.num_blocks(), 1);
+        assert_eq!(g.row_range(0), (0, 10));
+    }
+
+    #[test]
+    fn col_block_lookup() {
+        let g = BlockGrid::new(100, 10_000, PartitionConfig::default());
+        assert_eq!(g.col_block_of(0), 0);
+        assert_eq!(g.col_block_of(4095), 0);
+        assert_eq!(g.col_block_of(4096), 1);
+        assert_eq!(g.col_block_of(9999), 2);
+    }
+
+    #[test]
+    fn col_major_ordering_groups_columns() {
+        let g = BlockGrid::new(2000, 10_000, PartitionConfig::default());
+        // blocks in the same column block are consecutive
+        let a = g.flat_col_major(0, 0);
+        let b = g.flat_col_major(1, 0);
+        let c = g.flat_col_major(0, 1);
+        assert_eq!(b, a + 1);
+        assert!(c > b);
+    }
+}

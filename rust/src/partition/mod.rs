@@ -1,0 +1,15 @@
+//! 2D partitioning of sparse matrices (§III-A).
+//!
+//! Column partitioning bounds the x-vector segment a block touches
+//! (shared-memory / VMEM locality); row partitioning bounds the scope of
+//! hash reordering. The paper's defaults: column block M = 4096 (a 4K
+//! vector segment of doubles fits a warp's shared-memory budget), row
+//! block N = 512, warp ω = 32 → 16 groups per block.
+
+pub mod config;
+pub mod grid;
+pub mod block;
+
+pub use block::{block_views, BlockView};
+pub use config::PartitionConfig;
+pub use grid::BlockGrid;

@@ -1,0 +1,240 @@
+//! Group-ELL export: the TPU/PJRT tensor layout of an HBP block.
+//!
+//! DESIGN.md §3 (Hardware adaptation): a CUDA warp walking `add_sign`
+//! chains becomes, on TPU, a dense `(L, ω)` tile per group — row `k` of
+//! the tile holds the `k`-th nonzero of each lane's row (exactly HBP's
+//! round-major order), padded with zeros up to the group's max length.
+//! The nonlinear hash keeps lanes of a group near-equal length, so the
+//! padding (and hence VMEM traffic + FLOPs) stays small: HBP's Fig. 6
+//! metric directly bounds the tile waste measured here.
+//!
+//! Shapes are bucketed to powers of two so the AOT-compiled PJRT
+//! executables (one per `(G, ω, L)` bucket) can be reused across blocks —
+//! the serving-style fixed-shape discipline of the L3 runtime.
+
+use super::hbp_build::{Hbp, HbpBlock};
+
+/// Padding marker for inactive lanes in `slot_rows`.
+pub const PAD_ROW: u32 = u32::MAX;
+
+/// Dense group-ELL tensors for one HBP block.
+#[derive(Clone, Debug)]
+pub struct GroupEllBlock {
+    pub bi: u32,
+    pub bj: u32,
+    /// Groups in the block (G).
+    pub ngroups: usize,
+    /// Lanes per group (ω).
+    pub warp: usize,
+    /// Padded per-lane length (the shape bucket L; >= true max length).
+    pub lmax: usize,
+    /// `[G, L, ω]` block-local column indices (0 where padded).
+    pub cols: Vec<i32>,
+    /// `[G, L, ω]` values (0.0 where padded) — f32 for the TPU path; the
+    /// precision substitution is recorded in DESIGN.md.
+    pub vals: Vec<f32>,
+    /// `[G * ω]` slot -> original local row; `PAD_ROW` for lanes past the
+    /// block edge. Applied by the *rust* combine step (the kernel output
+    /// stays dense `[G, ω]`).
+    pub slot_rows: Vec<u32>,
+}
+
+impl GroupEllBlock {
+    /// Fraction of `(L, ω)` tile slots that are padding.
+    pub fn padding_ratio(&self) -> f64 {
+        let slots = self.ngroups * self.lmax * self.warp;
+        if slots == 0 {
+            return 0.0;
+        }
+        let nnz = self.vals.iter().filter(|&&v| v != 0.0).count();
+        // counts explicit zero values as padding too — acceptable for the
+        // waste metric (explicit zeros are rare in our generators)
+        1.0 - nnz as f64 / slots as f64
+    }
+
+    #[inline]
+    fn idx(&self, g: usize, k: usize, w: usize) -> usize {
+        (g * self.lmax + k) * self.warp + w
+    }
+}
+
+/// Shape buckets for the padded length L.
+pub const L_BUCKETS: [usize; 11] = [4, 8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096];
+
+/// Smallest bucket >= `l` (saturates at the largest bucket; longer rows
+/// are handled by the pure-rust engine fallback, reported by the runtime).
+pub fn l_bucket(l: usize) -> usize {
+    for &b in &L_BUCKETS {
+        if l <= b {
+            return b;
+        }
+    }
+    *L_BUCKETS.last().unwrap()
+}
+
+/// Export one HBP block to group-ELL tensors.
+///
+/// Walks the block's `add_sign` chains (the authoritative layout) so the
+/// export doubles as a consistency check of the HBP structure.
+pub fn export_block(hbp: &Hbp, b: &HbpBlock) -> GroupEllBlock {
+    let warp = hbp.grid.cfg.warp;
+
+    // true max lane length in this block
+    let mut true_lmax = 0usize;
+    let mut lane_elems: Vec<Vec<(i32, f32)>> = vec![vec![]; b.nrows];
+    for g in 0..b.ngroups {
+        let slot_lo = g * warp;
+        let slot_hi = ((g + 1) * warp).min(b.nrows);
+        let gp = hbp.begin_ptr[b.group_start + g];
+        let mut active_rank = 0usize;
+        for s in slot_lo..slot_hi {
+            if hbp.zero_row[b.slot_start + s] == -1 {
+                continue;
+            }
+            let mut j = gp + active_rank;
+            active_rank += 1;
+            loop {
+                lane_elems[s].push((hbp.col[j] as i32, hbp.data[j] as f32));
+                match hbp.add_sign[j] {
+                    -1 => break,
+                    step => j += step as usize,
+                }
+            }
+            true_lmax = true_lmax.max(lane_elems[s].len());
+        }
+    }
+
+    let lmax = l_bucket(true_lmax.max(1));
+    let g_total = b.ngroups;
+    let mut out = GroupEllBlock {
+        bi: b.bi,
+        bj: b.bj,
+        ngroups: g_total,
+        warp,
+        lmax,
+        cols: vec![0; g_total * lmax * warp],
+        vals: vec![0.0; g_total * lmax * warp],
+        slot_rows: vec![PAD_ROW; g_total * warp],
+    };
+
+    for g in 0..g_total {
+        let slot_lo = g * warp;
+        let slot_hi = ((g + 1) * warp).min(b.nrows);
+        for s in slot_lo..slot_hi {
+            let w = s - slot_lo;
+            out.slot_rows[g * warp + w] = hbp.output_hash[b.slot_start + s];
+            for (k, &(c, v)) in lane_elems[s].iter().enumerate() {
+                let i = out.idx(g, k, w);
+                out.cols[i] = c;
+                out.vals[i] = v;
+            }
+        }
+    }
+    out
+}
+
+/// Export every block of an HBP matrix.
+pub fn export_all(hbp: &Hbp) -> Vec<GroupEllBlock> {
+    hbp.blocks.iter().map(|b| export_block(hbp, b)).collect()
+}
+
+/// Reference SpMV over an exported block (f32, same association order as
+/// the Pallas kernel's reduction): returns dense `[G * ω]` slot sums.
+/// Used to cross-check rust engines against the kernel path.
+pub fn block_spmv_ref(blk: &GroupEllBlock, x_seg: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; blk.ngroups * blk.warp];
+    for g in 0..blk.ngroups {
+        for w in 0..blk.warp {
+            let mut acc = 0.0f32;
+            for k in 0..blk.lmax {
+                let i = blk.idx(g, k, w);
+                acc += blk.vals[i] * x_seg[blk.cols[i] as usize];
+            }
+            out[g * blk.warp + w] = acc;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::dense::allclose;
+    use crate::gen::random;
+    use crate::partition::PartitionConfig;
+    use crate::preprocess::build_hbp;
+
+    #[test]
+    fn bucket_selection() {
+        assert_eq!(l_bucket(1), 4);
+        assert_eq!(l_bucket(4), 4);
+        assert_eq!(l_bucket(5), 8);
+        assert_eq!(l_bucket(4096), 4096);
+        assert_eq!(l_bucket(100_000), 4096); // saturates
+    }
+
+    #[test]
+    fn export_reconstructs_block_spmv() {
+        let m = random::power_law_rows(64, 64, 2.0, 20, 9);
+        let cfg = PartitionConfig::test_small();
+        let hbp = build_hbp(&m, cfg);
+        let x: Vec<f64> = (0..64).map(|i| (i as f64 * 0.37).sin()).collect();
+
+        // full SpMV via exported blocks + slot mapping
+        let mut y = vec![0.0f64; 64];
+        for (blk, hb) in export_all(&hbp).iter().zip(&hbp.blocks) {
+            let (cs, ce) = hbp.grid.col_range(blk.bj as usize);
+            let xseg: Vec<f32> = x[cs..ce].iter().map(|&v| v as f32).collect();
+            let slot_sums = block_spmv_ref(blk, &xseg);
+            let (rs, _) = hbp.grid.row_range(hb.bi as usize);
+            for (slot, &orig) in blk.slot_rows.iter().enumerate() {
+                if orig != PAD_ROW {
+                    y[rs + orig as usize] += slot_sums[slot] as f64;
+                }
+            }
+        }
+
+        let mut expect = vec![0.0f64; 64];
+        m.spmv(&x, &mut expect);
+        assert!(
+            allclose(&y, &expect, 1e-4, 1e-4),
+            "group-ELL path diverged from CSR"
+        );
+    }
+
+    #[test]
+    fn padding_ratio_small_after_hash() {
+        // heavily skewed rows: identity grouping would pad enormously;
+        // hash grouping should keep tile waste modest
+        let m = random::power_law_rows(256, 64, 2.0, 48, 21);
+        let cfg = PartitionConfig { rows_per_block: 64, cols_per_block: 64, warp: 8 };
+        let hash = build_hbp(&m, cfg);
+        let id = crate::preprocess::build_hbp_with(&m, cfg, &crate::preprocess::IdentityReorder);
+        let waste = |hbp: &crate::preprocess::Hbp| -> f64 {
+            let blocks = export_all(hbp);
+            let total: usize = blocks.iter().map(|b| b.ngroups * b.lmax * b.warp).sum();
+            let nnz: usize = hbp.nnz();
+            1.0 - nnz as f64 / total as f64
+        };
+        let w_hash = waste(&hash);
+        let w_id = waste(&id);
+        assert!(
+            w_hash <= w_id,
+            "hash should not pad more than identity: {w_hash:.3} vs {w_id:.3}"
+        );
+    }
+
+    #[test]
+    fn slot_rows_cover_all_rows() {
+        let m = random::uniform(50, 40, 0.2, 33);
+        let hbp = build_hbp(&m, PartitionConfig::test_small());
+        for (blk, hb) in export_all(&hbp).iter().zip(&hbp.blocks) {
+            let mut seen = vec![false; hb.nrows];
+            for &r in blk.slot_rows.iter().filter(|&&r| r != PAD_ROW) {
+                assert!(!seen[r as usize], "row {r} twice");
+                seen[r as usize] = true;
+            }
+            assert!(seen.iter().all(|&s| s), "missing rows in slot_rows");
+        }
+    }
+}

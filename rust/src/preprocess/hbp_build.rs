@@ -1,0 +1,357 @@
+//! The HBP (Hash-Based Partition) format and its construction
+//! (paper §III-A/B, Fig. 2, Algorithm 2 + the format-conversion step).
+//!
+//! Per non-empty 2D block, rows are reordered by a [`Reorder`] strategy
+//! into *slots*; consecutive `warp` slots form a *group* executed in
+//! SIMT lockstep. Within a group, elements are stored **round-major**
+//! ("column-major" in the paper's figure): round `k` holds the `k`-th
+//! nonzero of every still-active row, consecutively in slot order. This
+//! is the coalescing-friendly layout that Table II's memory-throughput
+//! jump comes from.
+//!
+//! Arrays (Fig. 2):
+//! - `col`, `data` — nonzeros in execution order; `col` stores
+//!   **block-local** column indices (the paper's `vect[col[j] % N]`
+//!   pre-applied), so engines index the block's vector segment directly.
+//! - `add_sign[j]` — distance from element `j` to the same row's next
+//!   element, `-1` if `j` is the row's last element.
+//! - `zero_row[slot]` — `-1` if the slot's row has no nonzeros in this
+//!   block, else the number of zero-rows before it *within its group*
+//!   (so `lane - zero_row` = the lane's rank among active rows).
+//! - `output_hash[slot]` — the original local row (where results go).
+//! - `begin_ptr[group]` — offset of the group's first element.
+//! - `begin_nnz[block]` — offset of the block's first element
+//!   (CSR-ptr equivalent at block granularity).
+
+use crate::formats::Csr;
+use crate::partition::{block_views, BlockGrid, BlockView, PartitionConfig};
+use crate::preprocess::reorder::{HashReorder, Reorder};
+
+/// Per-block descriptor.
+#[derive(Clone, Copy, Debug)]
+pub struct HbpBlock {
+    /// Row-block index.
+    pub bi: u32,
+    /// Column-block index.
+    pub bj: u32,
+    /// Start of this block's elements in `col`/`data`/`add_sign`
+    /// (the paper's `begin_nnz`).
+    pub nnz_start: usize,
+    pub nnz: usize,
+    /// Start of this block's slots in `zero_row`/`output_hash`.
+    pub slot_start: usize,
+    /// Rows (= slots) in this block; edge blocks may be short.
+    pub nrows: usize,
+    /// Start of this block's groups in `begin_ptr`.
+    pub group_start: usize,
+    pub ngroups: usize,
+}
+
+/// The HBP matrix.
+#[derive(Clone, Debug)]
+pub struct Hbp {
+    pub rows: usize,
+    pub cols: usize,
+    pub grid: BlockGrid,
+    /// Non-empty blocks, column-major (fixed-allocation order, §III-C).
+    pub blocks: Vec<HbpBlock>,
+    pub col: Vec<u32>,
+    pub data: Vec<f64>,
+    pub add_sign: Vec<i32>,
+    pub zero_row: Vec<i32>,
+    pub output_hash: Vec<u32>,
+    pub begin_ptr: Vec<usize>,
+}
+
+impl Hbp {
+    pub fn nnz(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Approximate in-memory footprint (storage-cost ablation): fixed,
+    /// unlike zero-padding formats — the paper's §III-A storage argument.
+    pub fn storage_bytes(&self) -> usize {
+        self.col.len() * 4
+            + self.data.len() * 8
+            + self.add_sign.len() * 4
+            + self.zero_row.len() * 4
+            + self.output_hash.len() * 4
+            + self.begin_ptr.len() * 8
+            + self.blocks.len() * std::mem::size_of::<HbpBlock>()
+    }
+
+    /// Structural invariants — exercised by the property suite.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let warp = self.grid.cfg.warp;
+        anyhow::ensure!(self.col.len() == self.data.len());
+        anyhow::ensure!(self.add_sign.len() == self.data.len());
+        let mut nnz_cursor = 0usize;
+        let mut slot_cursor = 0usize;
+        let mut group_cursor = 0usize;
+        for (i, b) in self.blocks.iter().enumerate() {
+            anyhow::ensure!(b.nnz_start == nnz_cursor, "block {i} nnz_start");
+            anyhow::ensure!(b.slot_start == slot_cursor, "block {i} slot_start");
+            anyhow::ensure!(b.group_start == group_cursor, "block {i} group_start");
+            anyhow::ensure!(b.nnz > 0, "block {i} empty");
+            anyhow::ensure!(b.ngroups == b.nrows.div_ceil(warp), "block {i} ngroups");
+            // output_hash is a permutation of local rows
+            let oh = &self.output_hash[b.slot_start..b.slot_start + b.nrows];
+            let mut seen = vec![false; b.nrows];
+            for &r in oh {
+                anyhow::ensure!((r as usize) < b.nrows && !seen[r as usize], "block {i} output_hash not a permutation");
+                seen[r as usize] = true;
+            }
+            // add_sign chains cover exactly the block's element range
+            let mut covered = vec![false; b.nnz];
+            for g in 0..b.ngroups {
+                let gslots = (g * warp)..(((g + 1) * warp).min(b.nrows));
+                let gp = self.begin_ptr[b.group_start + g];
+                let mut active_rank = 0usize;
+                for s in gslots {
+                    let z = self.zero_row[b.slot_start + s];
+                    if z == -1 {
+                        continue;
+                    }
+                    let mut j = gp + active_rank;
+                    active_rank += 1;
+                    loop {
+                        let local = j - b.nnz_start;
+                        anyhow::ensure!(local < b.nnz, "block {i} walk out of range");
+                        anyhow::ensure!(!covered[local], "block {i} element {local} visited twice");
+                        covered[local] = true;
+                        match self.add_sign[j] {
+                            -1 => break,
+                            step if step > 0 => j += step as usize,
+                            bad => anyhow::bail!("block {i} bad add_sign {bad}"),
+                        }
+                    }
+                }
+            }
+            anyhow::ensure!(covered.iter().all(|&c| c), "block {i} uncovered elements");
+            nnz_cursor += b.nnz;
+            slot_cursor += b.nrows;
+            group_cursor += b.ngroups;
+        }
+        anyhow::ensure!(nnz_cursor == self.nnz(), "total nnz mismatch");
+        Ok(())
+    }
+}
+
+/// Build HBP with the paper's hash reordering.
+pub fn build_hbp(m: &Csr, cfg: PartitionConfig) -> Hbp {
+    build_hbp_with(m, cfg, &HashReorder::default())
+}
+
+/// Build HBP with an arbitrary reorder strategy (sort2D / DP2D / identity
+/// for the baselines — downstream engines are strategy-agnostic).
+pub fn build_hbp_with(m: &Csr, cfg: PartitionConfig, reorder: &dyn Reorder) -> Hbp {
+    cfg.validate().expect("invalid partition config");
+    let grid = BlockGrid::new(m.rows, m.cols, cfg);
+    let views = block_views(m, &grid);
+
+    let mut hbp = Hbp {
+        rows: m.rows,
+        cols: m.cols,
+        grid,
+        blocks: Vec::with_capacity(views.len()),
+        col: Vec::with_capacity(m.nnz()),
+        data: Vec::with_capacity(m.nnz()),
+        add_sign: Vec::with_capacity(m.nnz()),
+        zero_row: vec![],
+        output_hash: vec![],
+        begin_ptr: vec![],
+    };
+
+    for view in &views {
+        append_block(&mut hbp, m, view, reorder);
+    }
+    hbp
+}
+
+/// Build one block's arrays and append (shared with the parallel builder,
+/// which builds per-block chunks independently then stitches).
+pub(crate) fn append_block(hbp: &mut Hbp, m: &Csr, view: &BlockView, reorder: &dyn Reorder) {
+    let cfg = hbp.grid.cfg;
+    let warp = cfg.warp;
+    let nrows = view.row_ranges.len();
+    let row_nnz = view.row_nnz();
+    let (col_start, _) = hbp.grid.col_range(view.bj);
+
+    let order = reorder.order(&row_nnz, warp);
+    debug_assert_eq!(order.len(), nrows);
+
+    let block = HbpBlock {
+        bi: view.bi as u32,
+        bj: view.bj as u32,
+        nnz_start: hbp.col.len(),
+        nnz: view.nnz,
+        slot_start: hbp.zero_row.len(),
+        nrows,
+        group_start: hbp.begin_ptr.len(),
+        ngroups: nrows.div_ceil(warp),
+    };
+
+    // output_hash: slot -> original local row
+    hbp.output_hash.extend_from_slice(&order);
+
+    // per group: zero_row bookkeeping + round-major element emission
+    let mut prev_pos: Vec<usize> = vec![usize::MAX; nrows]; // by local row
+    for g in 0..block.ngroups {
+        let slot_lo = g * warp;
+        let slot_hi = ((g + 1) * warp).min(nrows);
+        hbp.begin_ptr.push(hbp.col.len());
+
+        // zero_row: -1 for inactive; else #zeros before it in the group
+        let mut zeros_before = 0i32;
+        let mut active: Vec<u32> = Vec::with_capacity(slot_hi - slot_lo);
+        for s in slot_lo..slot_hi {
+            let r = order[s];
+            if row_nnz[r as usize] == 0 {
+                hbp.zero_row.push(-1);
+                zeros_before += 1;
+            } else {
+                hbp.zero_row.push(zeros_before);
+                active.push(r);
+            }
+        }
+
+        // round-major emission: round k emits the k-th nonzero of every
+        // row still active; rows retire as they exhaust.
+        let mut k = 0usize;
+        let mut live = active;
+        while !live.is_empty() {
+            live.retain(|&r| {
+                let (s, e) = view.row_ranges[r as usize];
+                if s + k >= e {
+                    return false;
+                }
+                let src = s + k;
+                let pos = hbp.col.len();
+                hbp.col.push(m.col[src] - col_start as u32);
+                hbp.data.push(m.data[src]);
+                hbp.add_sign.push(-1); // patched when the next round emits
+                if prev_pos[r as usize] != usize::MAX {
+                    let prev = prev_pos[r as usize];
+                    hbp.add_sign[prev] = (pos - prev) as i32;
+                }
+                prev_pos[r as usize] = pos;
+                true
+            });
+            k += 1;
+        }
+    }
+
+    hbp.blocks.push(block);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Coo;
+    use crate::gen::random;
+    use crate::preprocess::reorder::{IdentityReorder, SortReorder};
+
+    fn small_cfg() -> PartitionConfig {
+        PartitionConfig::test_small() // 16 rows, 32 cols, warp 4
+    }
+
+    #[test]
+    fn single_block_structure() {
+        // 4 rows, 8 cols, one block
+        let mut coo = Coo::new(4, 8);
+        coo.push(0, 1, 1.0);
+        coo.push(0, 3, 2.0);
+        coo.push(1, 0, 3.0);
+        coo.push(3, 2, 4.0);
+        coo.push(3, 5, 5.0);
+        coo.push(3, 7, 6.0);
+        let m = coo.to_csr();
+        let hbp = build_hbp_with(&m, small_cfg(), &IdentityReorder);
+        assert_eq!(hbp.blocks.len(), 1);
+        let b = hbp.blocks[0];
+        assert_eq!(b.nnz, 6);
+        assert_eq!(b.nrows, 4);
+        assert_eq!(b.ngroups, 1);
+        hbp.validate().unwrap();
+        // identity order: slots = rows; row 2 is a zero row, so row 3 has
+        // one zero-row before it within the group
+        assert_eq!(hbp.zero_row, vec![0, 0, -1, 1]);
+        // round-major: round0 = first elems of rows 0,1,3 -> cols 1,0,2
+        assert_eq!(&hbp.col[0..3], &[1, 0, 2]);
+        // add_sign of row0's first element: 3 active rows -> stride 3
+        assert_eq!(hbp.add_sign[0], 3);
+        // row1 has 1 elem -> -1 immediately
+        assert_eq!(hbp.add_sign[1], -1);
+    }
+
+    #[test]
+    fn local_column_indices() {
+        // matrix wide enough for 2 col blocks (cols_per_block = 32)
+        let mut coo = Coo::new(4, 64);
+        coo.push(0, 33, 1.0);
+        coo.push(2, 63, 2.0);
+        let m = coo.to_csr();
+        let hbp = build_hbp_with(&m, small_cfg(), &IdentityReorder);
+        assert_eq!(hbp.blocks.len(), 1); // only col-block 1 nonempty
+        assert_eq!(hbp.blocks[0].bj, 1);
+        // local col = global - 32
+        let mut cols = hbp.col.clone();
+        cols.sort_unstable();
+        assert_eq!(cols, vec![1, 31]);
+    }
+
+    #[test]
+    fn validates_on_random_matrices_all_strategies() {
+        for seed in 0..5 {
+            let m = random::power_law_rows(100, 150, 2.0, 40, seed);
+            for r in [
+                &HashReorder::default() as &dyn Reorder,
+                &IdentityReorder,
+                &SortReorder,
+            ] {
+                let hbp = build_hbp_with(&m, small_cfg(), r);
+                hbp.validate()
+                    .unwrap_or_else(|e| panic!("seed {seed} {}: {e}", r.name()));
+                assert_eq!(hbp.nnz(), m.nnz());
+            }
+        }
+    }
+
+    #[test]
+    fn storage_is_fixed_no_padding() {
+        // HBP stores exactly nnz elements regardless of skew — the paper's
+        // fixed-storage-cost claim vs zero padding.
+        let skewed = random::with_row_lengths(&[1, 1, 1, 30], 32, 3);
+        let hbp = build_hbp(&skewed, small_cfg());
+        assert_eq!(hbp.col.len(), skewed.nnz());
+        assert_eq!(hbp.data.len(), skewed.nnz());
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let m = Csr::empty(8, 8);
+        let hbp = build_hbp(&m, small_cfg());
+        assert!(hbp.blocks.is_empty());
+        hbp.validate().unwrap();
+    }
+
+    #[test]
+    fn edge_partial_block_and_group() {
+        // 18 rows with warp 4, rows_per_block 16 -> second block has 2 rows
+        let m = random::uniform(18, 20, 0.3, 7);
+        let hbp = build_hbp(&m, small_cfg());
+        hbp.validate().unwrap();
+        let total_rows: usize = hbp.blocks.iter().map(|b| b.nrows).sum();
+        // all blocks are in col-block 0; row coverage = rows with nnz blocks
+        assert!(total_rows <= 18 + 16);
+    }
+
+    #[test]
+    fn begin_nnz_equivalent_monotone() {
+        let m = random::uniform(64, 64, 0.1, 21);
+        let hbp = build_hbp(&m, small_cfg());
+        for w in hbp.blocks.windows(2) {
+            assert_eq!(w[0].nnz_start + w[0].nnz, w[1].nnz_start);
+        }
+    }
+}

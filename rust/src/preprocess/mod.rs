@@ -1,0 +1,23 @@
+//! Preprocessing: reordering strategies + HBP format construction.
+//!
+//! This is the paper's benchmarked preprocessing step (Fig. 7):
+//! - [`reorder`] — the row-reordering strategies: the paper's nonlinear
+//!   **hash** (HBP), the **sort2D** baseline, the **DP2D** dynamic-
+//!   programming baseline (Regu2D's method), and identity (plain 2D).
+//! - [`hbp_build`] — Algorithm 2 + format conversion: build the full HBP
+//!   structure (`col`, `data`, `add_sign`, `zero_row`, `begin_nnz`/
+//!   `begin_ptr`, `output_hash`) from CSR.
+//! - [`parallel`] — the multithreaded build; the hash's atomicity is what
+//!   makes per-row/per-block parallelism possible (the paper's argument
+//!   for why zero-padding formats can't parallelize their conversion).
+//! - [`group_ell`] — export to the dense group-ELL tensors consumed by
+//!   the L1 Pallas kernel through PJRT.
+
+pub mod reorder;
+pub mod hbp_build;
+pub mod parallel;
+pub mod group_ell;
+
+pub use hbp_build::{build_hbp, build_hbp_with, Hbp, HbpBlock};
+pub use parallel::build_hbp_parallel;
+pub use reorder::{DpReorder, HashReorder, IdentityReorder, Reorder, SortReorder};

@@ -1,0 +1,147 @@
+//! Multithreaded HBP construction.
+//!
+//! The hash's atomicity means every block (and every row within a block)
+//! reorders independently — no cross-block dependency, unlike zero-padding
+//! conversions where each thread must know the padded length of everything
+//! before it (the paper's §II critique of Regu2D). Blocks are built in
+//! parallel chunks and stitched with pure offset arithmetic.
+
+use super::hbp_build::{append_block, Hbp};
+use super::reorder::Reorder;
+use crate::formats::Csr;
+use crate::partition::{block_views, BlockGrid, PartitionConfig};
+
+/// Parallel HBP build over `threads` workers (1 = serial fallback).
+pub fn build_hbp_parallel(
+    m: &Csr,
+    cfg: PartitionConfig,
+    reorder: &(dyn Reorder + Sync),
+    threads: usize,
+) -> Hbp {
+    cfg.validate().expect("invalid partition config");
+    let grid = BlockGrid::new(m.rows, m.cols, cfg);
+    let views = block_views(m, &grid);
+    let threads = threads.max(1).min(views.len().max(1));
+
+    let empty = |grid: BlockGrid| Hbp {
+        rows: m.rows,
+        cols: m.cols,
+        grid,
+        blocks: vec![],
+        col: vec![],
+        data: vec![],
+        add_sign: vec![],
+        zero_row: vec![],
+        output_hash: vec![],
+        begin_ptr: vec![],
+    };
+
+    if threads <= 1 || views.is_empty() {
+        let mut hbp = empty(grid);
+        for v in &views {
+            append_block(&mut hbp, m, v, reorder);
+        }
+        return hbp;
+    }
+
+    // nnz-balanced contiguous chunking (preserves column-major order)
+    let total_nnz: usize = views.iter().map(|v| v.nnz).sum();
+    let target = total_nnz.div_ceil(threads);
+    let mut chunks: Vec<&[crate::partition::BlockView]> = vec![];
+    let mut start = 0;
+    let mut acc = 0;
+    for (i, v) in views.iter().enumerate() {
+        acc += v.nnz;
+        if acc >= target && i + 1 < views.len() {
+            chunks.push(&views[start..=i]);
+            start = i + 1;
+            acc = 0;
+        }
+    }
+    chunks.push(&views[start..]);
+
+    // build per-chunk partials in parallel
+    let partials: Vec<Hbp> = std::thread::scope(|scope| {
+        let handles: Vec<_> = chunks
+            .iter()
+            .map(|chunk| {
+                scope.spawn(move || {
+                    let mut part = empty(grid);
+                    for v in *chunk {
+                        append_block(&mut part, m, v, reorder);
+                    }
+                    part
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("builder thread panicked")).collect()
+    });
+
+    // stitch with offset fixups
+    let mut out = empty(grid);
+    for mut part in partials {
+        let nnz_base = out.col.len();
+        let slot_base = out.zero_row.len();
+        let group_base = out.begin_ptr.len();
+        for b in &mut part.blocks {
+            b.nnz_start += nnz_base;
+            b.slot_start += slot_base;
+            b.group_start += group_base;
+        }
+        for p in &mut part.begin_ptr {
+            *p += nnz_base;
+        }
+        out.blocks.append(&mut part.blocks);
+        out.col.append(&mut part.col);
+        out.data.append(&mut part.data);
+        out.add_sign.append(&mut part.add_sign);
+        out.zero_row.append(&mut part.zero_row);
+        out.output_hash.append(&mut part.output_hash);
+        out.begin_ptr.append(&mut part.begin_ptr);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::random;
+    use crate::preprocess::reorder::HashReorder;
+    use crate::preprocess::build_hbp_with;
+    use crate::partition::PartitionConfig;
+
+    #[test]
+    fn parallel_equals_serial() {
+        let m = random::power_law_rows(300, 300, 2.0, 60, 17);
+        let cfg = PartitionConfig::test_small();
+        let r = HashReorder::default();
+        let serial = build_hbp_with(&m, cfg, &r);
+        for threads in [2, 4, 7] {
+            let par = build_hbp_parallel(&m, cfg, &r, threads);
+            par.validate().unwrap();
+            assert_eq!(serial.col, par.col, "threads={threads}");
+            assert_eq!(serial.data, par.data);
+            assert_eq!(serial.add_sign, par.add_sign);
+            assert_eq!(serial.zero_row, par.zero_row);
+            assert_eq!(serial.output_hash, par.output_hash);
+            assert_eq!(serial.begin_ptr, par.begin_ptr);
+            assert_eq!(serial.blocks.len(), par.blocks.len());
+        }
+    }
+
+    #[test]
+    fn more_threads_than_blocks() {
+        let m = random::uniform(10, 10, 0.5, 3);
+        let cfg = PartitionConfig::test_small();
+        let hbp = build_hbp_parallel(&m, cfg, &HashReorder::default(), 64);
+        hbp.validate().unwrap();
+        assert_eq!(hbp.nnz(), m.nnz());
+    }
+
+    #[test]
+    fn empty_matrix_parallel() {
+        let m = crate::formats::Csr::empty(100, 100);
+        let hbp = build_hbp_parallel(&m, PartitionConfig::test_small(), &HashReorder::default(), 4);
+        assert!(hbp.blocks.is_empty());
+    }
+}

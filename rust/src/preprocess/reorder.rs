@@ -1,0 +1,342 @@
+//! Row-reordering strategies compared in Fig. 7.
+//!
+//! Every strategy maps a block's per-row nonzero counts to an execution
+//! order (a permutation of local rows). The HBP engine is agnostic to
+//! which strategy produced the order — that is what makes the Fig. 6/7
+//! comparisons apples-to-apples.
+
+use crate::hash::{sample_params, HashTable, NonlinearHash};
+
+/// A row-reordering strategy.
+pub trait Reorder: Sync {
+    /// `row_nnz[i]` = in-block nonzeros of local row `i`; returns
+    /// `order[slot] = local row` — a permutation of `0..row_nnz.len()`.
+    /// `warp` is provided because some strategies (DP) group-align.
+    fn order(&self, row_nnz: &[usize], warp: usize) -> Vec<u32>;
+
+    /// Display name for bench tables.
+    fn name(&self) -> &'static str;
+}
+
+/// Plain 2D-partitioning: no reordering (the paper's "2D" baseline).
+pub struct IdentityReorder;
+
+impl Reorder for IdentityReorder {
+    fn order(&self, row_nnz: &[usize], _warp: usize) -> Vec<u32> {
+        (0..row_nnz.len() as u32).collect()
+    }
+    fn name(&self) -> &'static str {
+        "2d"
+    }
+}
+
+/// The paper's nonlinear-hash reordering (HBP).
+///
+/// O(R) with a tiny constant and no comparison sort anywhere — the
+/// entire Fig. 7 speedup story. Collisions are resolved by **chaining
+/// flattened in slot order** (counting placement): rows hashing to the
+/// same slot execute consecutively, exactly the aggregation property the
+/// warp grouping needs, in four linear passes that vectorize and
+/// parallelize (the paper's argument for why hashing beats sorting on
+/// device). The probing variant ([`HashReorder::order_probing`],
+/// backed by [`HashTable`]) gives the same grouping quality at higher
+/// cost — compared in `benches/ablation_hash_params.rs`.
+pub struct HashReorder {
+    pub seed: u64,
+}
+
+impl Default for HashReorder {
+    fn default() -> Self {
+        HashReorder { seed: 0x9A5 }
+    }
+}
+
+impl HashReorder {
+    /// Alternative collision strategy: first-free-slot probing (the
+    /// union-find table). Same aggregation quality, ~2-3x slower build;
+    /// kept for the ablation and as the reference semantics.
+    pub fn order_probing(&self, row_nnz: &[usize]) -> Vec<u32> {
+        let n = row_nnz.len();
+        if n == 0 {
+            return vec![];
+        }
+        let params = sample_params(row_nnz, n, self.seed);
+        let h = NonlinearHash::new(params);
+        let mut t = HashTable::new(n);
+        for (r, &l) in row_nnz.iter().enumerate() {
+            t.insert(&h, r as u32, l);
+        }
+        t.into_output_hash()
+    }
+}
+
+impl Reorder for HashReorder {
+    fn order(&self, row_nnz: &[usize], _warp: usize) -> Vec<u32> {
+        let n = row_nnz.len();
+        if n == 0 {
+            return vec![];
+        }
+        let params = sample_params(row_nnz, n, self.seed);
+        let h = NonlinearHash::new(params);
+        // counting placement: count pass, prefix pass, stable scatter.
+        // The counts buffer is thread-local scratch (preprocessing is
+        // per-block parallel; allocation here is the Fig. 7 hot path)
+        // and keys are recomputed rather than stored — slot() is a few
+        // ALU ops, cheaper than a second O(n) array round-trip.
+        thread_local! {
+            static COUNTS: std::cell::RefCell<(Vec<u32>, Vec<u32>)> =
+                const { std::cell::RefCell::new((Vec::new(), Vec::new())) };
+        }
+        COUNTS.with(|c| {
+            let mut scratch = c.borrow_mut();
+            let (counts, keys) = &mut *scratch;
+            // invariant: `counts` is all-zero between calls; only the
+            // touched slot range is re-zeroed below, so uniform blocks
+            // (banded matrices: every row hashes to one slot) cost ~2n.
+            if counts.len() < n + 1 {
+                counts.resize(n + 1, 0);
+            }
+            keys.clear();
+            keys.reserve(n);
+            let mut min_k = usize::MAX;
+            let mut max_k = 0usize;
+            for &l in row_nnz {
+                let k = h.slot(l);
+                keys.push(k as u32);
+                counts[k] += 1;
+                min_k = min_k.min(k);
+                max_k = max_k.max(k);
+            }
+            let mut acc = 0u32;
+            for c in counts[min_k..=max_k].iter_mut() {
+                let t = *c;
+                *c = acc;
+                acc += t;
+            }
+            // scatter writes every position of `out` exactly once
+            // (slot counts sum to n), so skip the zero-init
+            let mut out: Vec<u32> = Vec::with_capacity(n);
+            #[allow(clippy::uninit_vec)]
+            unsafe {
+                out.set_len(n);
+            }
+            for (r, &k) in keys.iter().enumerate() {
+                let slot = &mut counts[k as usize];
+                // SAFETY: *slot < n by the counting-sort invariant
+                unsafe { *out.get_unchecked_mut(*slot as usize) = r as u32 };
+                *slot += 1;
+            }
+            // restore the all-zero invariant
+            for c in counts[min_k..=max_k].iter_mut() {
+                *c = 0;
+            }
+            out
+        })
+    }
+    fn name(&self) -> &'static str {
+        "hbp"
+    }
+}
+
+/// sort2D baseline: stable sort of rows by nonzero count.
+///
+/// Produces the *optimal* grouping quality (monotone lengths => groups of
+/// near-identical rows) at O(R log R) serial cost — the quality ceiling
+/// the hash approximates, and the preprocessing cost HBP beats.
+pub struct SortReorder;
+
+impl Reorder for SortReorder {
+    fn order(&self, row_nnz: &[usize], _warp: usize) -> Vec<u32> {
+        let mut idx: Vec<u32> = (0..row_nnz.len() as u32).collect();
+        idx.sort_by_key(|&r| row_nnz[r as usize]);
+        idx
+    }
+    fn name(&self) -> &'static str {
+        "sort2d"
+    }
+}
+
+/// DP2D baseline: the Regu2D-style dynamic-programming arrangement.
+///
+/// Regu2D sorts rows by length, then uses DP to partition the sorted
+/// sequence into contiguous groups (each padded to its longest row) that
+/// minimize total padded storage, subject to a maximum group extent of
+/// `MAX_GROUPS_SPAN` warps. The DP runs *after* a full sort — which is
+/// why the paper reports it even slower than sort2D alone.
+pub struct DpReorder {
+    /// Max group span in warps (Regu2D merges up to a few vector widths).
+    pub max_span_warps: usize,
+}
+
+impl Default for DpReorder {
+    fn default() -> Self {
+        DpReorder { max_span_warps: 4 }
+    }
+}
+
+impl Reorder for DpReorder {
+    fn order(&self, row_nnz: &[usize], warp: usize) -> Vec<u32> {
+        let n = row_nnz.len();
+        if n == 0 {
+            return vec![];
+        }
+        // 1) sort descending (dense rows execute together first)
+        let mut idx: Vec<u32> = (0..n as u32).collect();
+        idx.sort_by_key(|&r| std::cmp::Reverse(row_nnz[r as usize]));
+
+        // 2) DP over the sorted sequence: dp[i] = min padded cells for
+        // suffix starting at i; group sizes are multiples of `warp`
+        // up to max_span_warps*warp (the vectorization constraint).
+        let warp = warp.max(1);
+        let max_group = (self.max_span_warps * warp).max(warp);
+        let mut dp = vec![u64::MAX; n + 1];
+        let mut cut = vec![0usize; n + 1];
+        dp[n] = 0;
+        for i in (0..n).rev() {
+            let longest = row_nnz[idx[i] as usize] as u64; // descending => max of any group starting at i
+            let mut size = warp;
+            while size <= max_group {
+                let j = (i + size).min(n);
+                if dp[j] != u64::MAX {
+                    let cost = longest * (j - i) as u64 + dp[j];
+                    if cost < dp[i] {
+                        dp[i] = cost;
+                        cut[i] = j;
+                    }
+                }
+                if j == n {
+                    break;
+                }
+                size += warp;
+            }
+            if dp[i] == u64::MAX {
+                // fallback: single warp group
+                let j = (i + warp).min(n);
+                dp[i] = longest * (j - i) as u64 + dp[j];
+                cut[i] = j;
+            }
+        }
+
+        // 3) emit groups in DP order (order within a group = sorted order)
+        let mut out = Vec::with_capacity(n);
+        let mut i = 0;
+        while i < n {
+            let j = cut[i];
+            out.extend_from_slice(&idx[i..j]);
+            i = j;
+        }
+        out
+    }
+    fn name(&self) -> &'static str {
+        "dp2d"
+    }
+}
+
+/// Check that a strategy's output is a permutation (shared test helper,
+/// also used by the property suite).
+pub fn is_permutation(order: &[u32]) -> bool {
+    let n = order.len();
+    let mut seen = vec![false; n];
+    for &r in order {
+        let r = r as usize;
+        if r >= n || seen[r] {
+            return false;
+        }
+        seen[r] = true;
+    }
+    true
+}
+
+/// Per-group standard deviations of row lengths under an ordering — the
+/// Fig. 6 metric ("standard deviation of nonzero elements per warp of
+/// rows within a matrix block").
+pub fn group_stddevs(row_nnz: &[usize], order: &[u32], warp: usize) -> Vec<f64> {
+    order
+        .chunks(warp.max(1))
+        .map(|chunk| {
+            let lens: Vec<f64> = chunk.iter().map(|&r| row_nnz[r as usize] as f64).collect();
+            crate::util::Stats::of(&lens).std
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_lens(n: usize, seed: u64) -> Vec<usize> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.power_law(2.0, 300)).collect()
+    }
+
+    #[test]
+    fn all_strategies_produce_permutations() {
+        let lens = random_lens(512, 3);
+        let strategies: Vec<Box<dyn Reorder>> = vec![
+            Box::new(IdentityReorder),
+            Box::new(HashReorder::default()),
+            Box::new(SortReorder),
+            Box::new(DpReorder::default()),
+        ];
+        for s in &strategies {
+            let o = s.order(&lens, 32);
+            assert!(is_permutation(&o), "{} not a permutation", s.name());
+        }
+    }
+
+    #[test]
+    fn sort_is_monotone() {
+        let lens = random_lens(128, 5);
+        let o = SortReorder.order(&lens, 32);
+        for w in o.windows(2) {
+            assert!(lens[w[0] as usize] <= lens[w[1] as usize]);
+        }
+    }
+
+    #[test]
+    fn hash_reduces_group_stddev_vs_identity() {
+        // the Fig. 6 claim, as a unit test
+        let lens = random_lens(512, 11);
+        let id = IdentityReorder.order(&lens, 32);
+        let hash = HashReorder::default().order(&lens, 32);
+        let before: f64 = group_stddevs(&lens, &id, 32).iter().sum();
+        let after: f64 = group_stddevs(&lens, &hash, 32).iter().sum();
+        assert!(
+            after < before * 0.8,
+            "hash should reduce total group stddev: before={before:.1} after={after:.1}"
+        );
+    }
+
+    #[test]
+    fn sort_is_the_quality_ceiling() {
+        let lens = random_lens(512, 13);
+        let hash = HashReorder::default().order(&lens, 32);
+        let sort = SortReorder.order(&lens, 32);
+        let h: f64 = group_stddevs(&lens, &hash, 32).iter().sum();
+        let s: f64 = group_stddevs(&lens, &sort, 32).iter().sum();
+        assert!(s <= h + 1e-9, "sort quality {s:.2} should lower-bound hash {h:.2}");
+    }
+
+    #[test]
+    fn dp_groups_align_and_cover() {
+        let lens = random_lens(200, 7);
+        let o = DpReorder::default().order(&lens, 32);
+        assert!(is_permutation(&o));
+        // descending within the whole order except at group boundaries:
+        // at least verify all rows present and heavy rows early
+        let first_group_mean: f64 =
+            o[..32].iter().map(|&r| lens[r as usize] as f64).sum::<f64>() / 32.0;
+        let last_group_mean: f64 =
+            o[o.len() - 32..].iter().map(|&r| lens[r as usize] as f64).sum::<f64>() / 32.0;
+        assert!(first_group_mean >= last_group_mean);
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        for s in [&HashReorder::default() as &dyn Reorder, &SortReorder, &DpReorder::default()] {
+            assert!(s.order(&[], 32).is_empty());
+            assert_eq!(s.order(&[5], 32), vec![0]);
+        }
+    }
+}

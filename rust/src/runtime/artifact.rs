@@ -1,0 +1,123 @@
+//! Artifact store: manifest parsing + lazy executable compilation cache.
+
+use super::client::{Executable, Runtime};
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+/// Metadata of one AOT executable (from `manifest.json`).
+#[derive(Clone, Debug)]
+pub struct ExecMeta {
+    pub name: String,
+    pub kind: String,
+    pub file: String,
+    pub groups: usize,
+    pub lmax: usize,
+    pub warp: usize,
+    pub seg: usize,
+}
+
+/// The artifact directory: manifest + lazily compiled executables.
+pub struct ArtifactStore {
+    pub dir: PathBuf,
+    pub groups: usize,
+    pub warp: usize,
+    pub seg: usize,
+    pub execs: Vec<ExecMeta>,
+    runtime: Runtime,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+impl ArtifactStore {
+    /// Open an artifact directory (reads `manifest.json`, creates the
+    /// PJRT client; compilation is lazy per executable).
+    pub fn open(dir: impl Into<PathBuf>) -> Result<ArtifactStore> {
+        let dir = dir.into();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts` first"))?;
+        let m = Json::parse(&text).context("parsing manifest.json")?;
+        let mut execs = vec![];
+        for e in m.get("executables").and_then(Json::as_arr).unwrap_or(&[]) {
+            execs.push(ExecMeta {
+                name: e.req_str("name")?.to_string(),
+                kind: e.req_str("kind")?.to_string(),
+                file: e.req_str("file")?.to_string(),
+                groups: e.get("groups").and_then(Json::as_usize).unwrap_or(0),
+                lmax: e.get("lmax").and_then(Json::as_usize).unwrap_or(0),
+                warp: e.get("warp").and_then(Json::as_usize).unwrap_or(0),
+                seg: e.get("seg").and_then(Json::as_usize).unwrap_or(0),
+            });
+        }
+        Ok(ArtifactStore {
+            groups: m.req_usize("groups")?,
+            warp: m.req_usize("warp")?,
+            seg: m.req_usize("seg")?,
+            dir,
+            execs,
+            runtime: Runtime::cpu()?,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Available spmv L buckets (sorted), for batch-1 executables.
+    pub fn spmv_l_buckets(&self) -> Vec<usize> {
+        let mut ls: Vec<usize> = self
+            .execs
+            .iter()
+            .filter(|e| e.kind == "spmv" && e.groups == self.groups)
+            .map(|e| e.lmax)
+            .collect();
+        ls.sort_unstable();
+        ls.dedup();
+        ls
+    }
+
+    /// Smallest available spmv bucket with `lmax >= l` (batch-1).
+    pub fn spmv_bucket_for(&self, l: usize) -> Option<&ExecMeta> {
+        self.execs
+            .iter()
+            .filter(|e| e.kind == "spmv" && e.groups == self.groups && e.lmax >= l)
+            .min_by_key(|e| e.lmax)
+    }
+
+    /// Get (compiling on first use) an executable by manifest name.
+    pub fn executable(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(e) = cache.get(name) {
+                return Ok(e.clone());
+            }
+        }
+        let meta = self
+            .execs
+            .iter()
+            .find(|e| e.name == name)
+            .with_context(|| format!("no executable {name:?} in manifest"))?;
+        let exe = std::sync::Arc::new(
+            self.runtime.compile_hlo_file(self.dir.join(&meta.file), name)?,
+        );
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    pub fn platform(&self) -> String {
+        self.runtime.platform()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_missing_dir_is_clear_error() {
+        let err = match ArtifactStore::open("/nonexistent/artifacts") {
+            Err(e) => e,
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,236 @@
+//! Group-ELL block dispatch through PJRT: the runtime SpMV path where
+//! the L1 Pallas kernel (AOT-lowered) does the block compute and rust
+//! does scatter + combine.
+
+use super::artifact::ArtifactStore;
+use super::client::{literal_f32, literal_i32};
+use crate::preprocess::group_ell::{export_all, GroupEllBlock, PAD_ROW};
+use crate::preprocess::Hbp;
+use anyhow::{Context, Result};
+
+/// A prepared PJRT SpMV: exported blocks + routing to shape buckets.
+pub struct PjrtSpmv<'a> {
+    store: &'a ArtifactStore,
+    hbp: &'a Hbp,
+    blocks: Vec<GroupEllBlock>,
+    /// Per block: bucket executable name, or None -> rust fallback.
+    routes: Vec<Option<String>>,
+    /// Blocks that exceeded every available bucket (reported, rust path).
+    pub fallback_blocks: usize,
+}
+
+impl<'a> PjrtSpmv<'a> {
+    /// Export all HBP blocks and route each to the smallest bucket that
+    /// fits. Blocks larger than every bucket fall back to the rust
+    /// engine (counted in `fallback_blocks`).
+    pub fn prepare(store: &'a ArtifactStore, hbp: &'a Hbp) -> Result<PjrtSpmv<'a>> {
+        anyhow::ensure!(
+            hbp.grid.cfg.warp == store.warp,
+            "warp mismatch: hbp {} vs artifacts {}",
+            hbp.grid.cfg.warp,
+            store.warp
+        );
+        anyhow::ensure!(
+            hbp.grid.cfg.cols_per_block == store.seg,
+            "segment mismatch: hbp {} vs artifacts {}",
+            hbp.grid.cfg.cols_per_block,
+            store.seg
+        );
+        let blocks = export_all(hbp);
+        let mut routes = Vec::with_capacity(blocks.len());
+        let mut fallback_blocks = 0;
+        for b in &blocks {
+            match store.spmv_bucket_for(b.lmax) {
+                Some(meta) if b.ngroups <= meta.groups => routes.push(Some(meta.name.clone())),
+                _ => {
+                    fallback_blocks += 1;
+                    routes.push(None);
+                }
+            }
+        }
+        Ok(PjrtSpmv { store, hbp, blocks, routes, fallback_blocks })
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Full SpMV through the **batched** PJRT path: same-bucket blocks
+    /// are dispatched `nb` at a time through the `spmv_g{nb*G}` batch
+    /// executables (the batch folds into the grid axis; column indices
+    /// get the `b*S` offset, x segments are concatenated). Falls back to
+    /// [`Self::spmv`] when no batch executables are in the manifest.
+    ///
+    /// Serving rationale: one PJRT dispatch per `nb` blocks amortizes
+    /// the execute-call overhead the same way the coordinator's request
+    /// batching amortizes scheduling.
+    pub fn spmv_batched(&self, x: &[f64], y: &mut [f64], nb: usize) -> Result<()> {
+        assert_eq!(x.len(), self.hbp.cols);
+        assert_eq!(y.len(), self.hbp.rows);
+        let g1 = self.store.groups;
+        let seg = self.store.seg;
+        // batch executables have groups == nb * G and seg == nb * S
+        let has_batch = |l: usize| {
+            self.store
+                .execs
+                .iter()
+                .any(|e| e.kind == "spmv" && e.groups == nb * g1 && e.lmax >= l && e.seg == nb * seg)
+        };
+        if nb <= 1 || !has_batch(4) {
+            return self.spmv(x, y);
+        }
+        y.fill(0.0);
+
+        // group routable blocks by their L bucket; fallback blocks run rust
+        use std::collections::BTreeMap;
+        let mut by_bucket: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for (i, (blk, route)) in self.blocks.iter().zip(&self.routes).enumerate() {
+            match route {
+                Some(_) if has_batch(blk.lmax) => {
+                    let meta_l = self.store.spmv_bucket_for(blk.lmax).unwrap().lmax;
+                    by_bucket.entry(meta_l).or_default().push(i);
+                }
+                _ => {
+                    let hb = &self.hbp.blocks[i];
+                    let (rs, _) = self.hbp.grid.row_range(hb.bi as usize);
+                    let mut part = vec![0.0f64; hb.nrows];
+                    crate::exec::HbpEngine::block_spmv(self.hbp, hb, x, &mut part);
+                    for (local, v) in part.iter().enumerate() {
+                        y[rs + local] += v;
+                    }
+                }
+            }
+        }
+
+        let w = self.store.warp;
+        for (meta_l, idxs) in by_bucket {
+            let exe_meta = self
+                .store
+                .execs
+                .iter()
+                .find(|e| e.kind == "spmv" && e.groups == nb * g1 && e.lmax == meta_l && e.seg == nb * seg)
+                .context("batch executable vanished")?;
+            let exe = self.store.executable(&exe_meta.name)?;
+            for chunk in idxs.chunks(nb) {
+                // pack nb blocks (zero-padding the tail of the last chunk)
+                let mut cols = vec![0i32; nb * g1 * meta_l * w];
+                let mut vals = vec![0f32; nb * g1 * meta_l * w];
+                let mut xsegs = vec![0f32; nb * seg];
+                for (b, &bidx) in chunk.iter().enumerate() {
+                    let blk = &self.blocks[bidx];
+                    let base = b * g1 * meta_l * w;
+                    let col_off = (b * seg) as i32;
+                    for g in 0..blk.ngroups {
+                        for k in 0..blk.lmax {
+                            let src = (g * blk.lmax + k) * w;
+                            let dst = base + (g * meta_l + k) * w;
+                            for lane in 0..w {
+                                cols[dst + lane] = blk.cols[src + lane] + col_off;
+                                vals[dst + lane] = blk.vals[src + lane];
+                            }
+                        }
+                    }
+                    let (cs, ce) = self.hbp.grid.col_range(blk.bj as usize);
+                    for (i, &v) in x[cs..ce].iter().enumerate() {
+                        xsegs[b * seg + i] = v as f32;
+                    }
+                }
+                let out = exe.run_f32(&[
+                    literal_i32(&cols, &[(nb * g1) as i64, meta_l as i64, w as i64])?,
+                    literal_f32(&vals, &[(nb * g1) as i64, meta_l as i64, w as i64])?,
+                    literal_f32(&xsegs, &[(nb * seg) as i64])?,
+                ])?;
+                // scatter each block's [G, W] slice
+                for (b, &bidx) in chunk.iter().enumerate() {
+                    let blk = &self.blocks[bidx];
+                    let (rs, _) = self.hbp.grid.row_range(blk.bi as usize);
+                    for (slot, &orig) in blk.slot_rows.iter().enumerate() {
+                        if orig != PAD_ROW {
+                            let g = slot / w;
+                            let lane = slot % w;
+                            y[rs + orig as usize] +=
+                                out[(b * g1 + g) * w + lane] as f64;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Full SpMV through the PJRT path: per block, pad to the bucket,
+    /// execute the kernel, scatter slot sums via `slot_rows`; combine by
+    /// accumulation into `y` (f64 accumulate over f32 block results).
+    pub fn spmv(&self, x: &[f64], y: &mut [f64]) -> Result<()> {
+        assert_eq!(x.len(), self.hbp.cols);
+        assert_eq!(y.len(), self.hbp.rows);
+        y.fill(0.0);
+        let g_full = self.store.groups;
+        let seg = self.store.seg;
+
+        for (blk, (route, hb)) in self.blocks.iter().zip(self.routes.iter().zip(&self.hbp.blocks)) {
+            let (rs, _) = self.hbp.grid.row_range(blk.bi as usize);
+            match route {
+                Some(name) => {
+                    let meta_l = self
+                        .store
+                        .spmv_bucket_for(blk.lmax)
+                        .context("route disappeared")?
+                        .lmax;
+                    let exe = self.store.executable(name)?;
+
+                    // pad [G, L, W] -> [g_full, meta_l, W]
+                    let w = blk.warp;
+                    let mut cols = vec![0i32; g_full * meta_l * w];
+                    let mut vals = vec![0f32; g_full * meta_l * w];
+                    for g in 0..blk.ngroups {
+                        for k in 0..blk.lmax {
+                            let src = (g * blk.lmax + k) * w;
+                            let dst = (g * meta_l + k) * w;
+                            cols[dst..dst + w]
+                                .copy_from_slice(&blk.cols[src..src + w]);
+                            vals[dst..dst + w]
+                                .copy_from_slice(&blk.vals[src..src + w]);
+                        }
+                    }
+                    // x segment (pad the matrix edge with zeros)
+                    let (cs, ce) = self.hbp.grid.col_range(blk.bj as usize);
+                    let mut xseg = vec![0f32; seg];
+                    for (i, &v) in x[cs..ce].iter().enumerate() {
+                        xseg[i] = v as f32;
+                    }
+
+                    let out = exe.run_f32(&[
+                        literal_i32(&cols, &[g_full as i64, meta_l as i64, w as i64])?,
+                        literal_f32(&vals, &[g_full as i64, meta_l as i64, w as i64])?,
+                        literal_f32(&xseg, &[seg as i64])?,
+                    ])?;
+                    // out: [g_full, w] slot sums; scatter through slot_rows
+                    for (slot, &orig) in blk.slot_rows.iter().enumerate() {
+                        if orig != PAD_ROW {
+                            let g = slot / w;
+                            let lane = slot % w;
+                            y[rs + orig as usize] += out[g * w + lane] as f64;
+                        }
+                    }
+                }
+                None => {
+                    // rust fallback for over-bucket blocks
+                    let mut part = vec![0.0f64; hb.nrows];
+                    crate::exec::HbpEngine::block_spmv(self.hbp, hb, x, &mut part);
+                    for (local, v) in part.iter().enumerate() {
+                        y[rs + local] += v;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT execution tests live in rust/tests/runtime_pjrt.rs (they need
+    // built artifacts). Here: routing logic only, with a fake manifest —
+    // covered in the integration suite.
+}

@@ -1,0 +1,94 @@
+//! PJRT client wrapper: HLO text -> compiled executable -> execution.
+//!
+//! Pattern from /opt/xla-example/load_hlo: `PjRtClient::cpu()` ->
+//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//! `client.compile` -> `execute`. Lowered with `return_tuple=True`, so
+//! outputs unwrap with `to_tuple1`.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A PJRT runtime instance (one CPU client + compiled executables).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// One compiled executable.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load HLO text from `path` and compile it.
+    pub fn compile_hlo_file(&self, path: impl AsRef<Path>, name: &str) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path.as_ref())
+            .with_context(|| format!("parsing HLO text {:?}", path.as_ref()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        Ok(Executable { exe, name: name.to_string() })
+    }
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the first output of the
+    /// result tuple as a literal.
+    pub fn run(&self, args: &[xla::Literal]) -> Result<xla::Literal> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // aot.py lowers with return_tuple=True
+        lit.to_tuple1().context("unwrapping 1-tuple result")
+    }
+
+    /// Run and read back a flat f32 vector.
+    pub fn run_f32(&self, args: &[xla::Literal]) -> Result<Vec<f32>> {
+        self.run(args)?.to_vec::<f32>().context("reading f32 output")
+    }
+}
+
+/// Build an f32 literal of the given dims from a flat slice.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "literal shape/data mismatch");
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Build an i32 literal of the given dims from a flat slice.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "literal shape/data mismatch");
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Runtime tests that need real artifacts live in
+    // rust/tests/runtime_pjrt.rs; here only literal plumbing.
+    #[test]
+    fn literal_shape_checks() {
+        assert!(literal_f32(&[1.0, 2.0], &[2]).is_ok());
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(literal_i32(&[1, 2, 3, 4], &[2, 2]).is_ok());
+        assert!(literal_i32(&[1], &[2]).is_err());
+    }
+}

@@ -1,0 +1,25 @@
+//! The PJRT runtime: loads AOT artifacts (HLO text produced by
+//! `python/compile/aot.py`) and executes them on the request path —
+//! Python is build-time only.
+//!
+//! - [`artifact`] — `manifest.json` + `*.hlo.txt` loading, executable
+//!   cache keyed by shape bucket.
+//! - [`client`] — thin wrapper over the `xla` crate's PJRT CPU client.
+//! - [`block_exec`] — group-ELL block dispatch: pad blocks to their
+//!   bucket, run the L1 kernel executable, scatter slot sums through
+//!   `output_hash`, combine.
+
+pub mod artifact;
+pub mod client;
+pub mod block_exec;
+
+pub use artifact::{ArtifactStore, ExecMeta};
+pub use block_exec::PjrtSpmv;
+pub use client::Runtime;
+
+/// Default artifact directory, overridable via `HBP_ARTIFACTS`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("HBP_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}

@@ -1,0 +1,105 @@
+//! Device models for the paper's two testbeds.
+
+/// GPU device parameters for the cost model.
+#[derive(Clone, Copy, Debug)]
+pub struct DeviceConfig {
+    pub name: &'static str,
+    /// Streaming multiprocessors.
+    pub num_sms: usize,
+    /// Concurrently *executing* warp slots per SM (warp schedulers).
+    pub warp_slots_per_sm: usize,
+    /// SIMT width.
+    pub warp_size: usize,
+    /// Core clock, GHz.
+    pub clock_ghz: f64,
+    /// Peak DRAM bandwidth, GB/s.
+    pub dram_bw_gbps: f64,
+    /// DRAM round-trip latency, cycles.
+    pub dram_latency_cycles: f64,
+    /// Memory-level parallelism: outstanding misses a warp slot
+    /// effectively overlaps. This folds in latency hiding from warp
+    /// oversubscription (resident warps >> executing warps), which the
+    /// slot-level scheduler does not model explicitly.
+    pub mlp: f64,
+    /// Shared-memory access latency, cycles (per warp-wide access).
+    pub smem_latency_cycles: f64,
+    /// Cycles per FMA round (pipelined issue cost per warp instruction).
+    pub fma_cycles: f64,
+    /// DRAM transaction size, bytes.
+    pub line_bytes: usize,
+}
+
+impl DeviceConfig {
+    /// NVIDIA Jetson AGX Orin 64GB: 2048-core Ampere (16 SMs x 128),
+    /// 4 warp schedulers/SM, ~1.3 GHz, 204.8 GB/s LPDDR5.
+    pub fn orin() -> Self {
+        DeviceConfig {
+            name: "orin",
+            num_sms: 16,
+            warp_slots_per_sm: 4,
+            warp_size: 32,
+            clock_ghz: 1.3,
+            dram_bw_gbps: 204.8,
+            dram_latency_cycles: 600.0,
+            mlp: 32.0,
+            smem_latency_cycles: 30.0,
+            fma_cycles: 4.0,
+            line_bytes: 128,
+        }
+    }
+
+    /// NVIDIA RTX 4090: 16384-core Ada (128 SMs x 128), 4 warp
+    /// schedulers/SM, ~2.52 GHz boost, 1008 GB/s GDDR6X.
+    pub fn rtx4090() -> Self {
+        DeviceConfig {
+            name: "rtx4090",
+            num_sms: 128,
+            warp_slots_per_sm: 4,
+            warp_size: 32,
+            clock_ghz: 2.52,
+            dram_bw_gbps: 1008.0,
+            dram_latency_cycles: 500.0,
+            mlp: 48.0,
+            smem_latency_cycles: 25.0,
+            fma_cycles: 4.0,
+            line_bytes: 128,
+        }
+    }
+
+    /// Total concurrent warp slots.
+    pub fn total_slots(&self) -> usize {
+        self.num_sms * self.warp_slots_per_sm
+    }
+
+    /// DRAM bytes per core cycle (whole device).
+    pub fn bytes_per_cycle(&self) -> f64 {
+        self.dram_bw_gbps / self.clock_ghz
+    }
+
+    /// Seconds for a cycle count.
+    pub fn secs(&self, cycles: f64) -> f64 {
+        cycles / (self.clock_ghz * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_sane() {
+        let o = DeviceConfig::orin();
+        let r = DeviceConfig::rtx4090();
+        assert!(r.num_sms > o.num_sms * 4);
+        assert!(r.dram_bw_gbps > o.dram_bw_gbps * 3.0);
+        assert_eq!(o.warp_size, 32);
+        assert!(o.total_slots() < r.total_slots());
+    }
+
+    #[test]
+    fn unit_conversions() {
+        let o = DeviceConfig::orin();
+        assert!((o.secs(1.3e9) - 1.0).abs() < 1e-9);
+        assert!(o.bytes_per_cycle() > 100.0);
+    }
+}

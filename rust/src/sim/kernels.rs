@@ -1,0 +1,301 @@
+//! Trace-driven kernel models for the three engines.
+//!
+//! Each simulator walks the *actual* matrix/HBP structure, counts the
+//! exact rounds, transactions and distinct x-lines every warp performs,
+//! and reduces them to a kernel time via the SM-slot schedule and the
+//! DRAM bandwidth bound.
+
+use super::device::DeviceConfig;
+use super::memory::{self, MemTraffic};
+use super::metrics::SimReport;
+use super::simt::{self, WarpTask};
+use crate::formats::Csr;
+use crate::preprocess::Hbp;
+
+/// Bytes per stored nonzero (8B value + 4B column index).
+const ELEM_BYTES: f64 = 12.0;
+
+/// Finalize a report: kernel time = max(slot-schedule makespan, DRAM
+/// bandwidth bound) for the SpMV phase; combine is bandwidth-bound.
+fn finalize(
+    dev: &DeviceConfig,
+    makespan_cycles: f64,
+    spmv_traffic: &MemTraffic,
+    combine_bytes: f64,
+    nnz: usize,
+) -> SimReport {
+    let sched_secs = dev.secs(makespan_cycles);
+    let bw_secs = spmv_traffic.dram_bytes / (dev.dram_bw_gbps * 1e9);
+    let spmv_secs = sched_secs.max(bw_secs);
+    let combine_secs = combine_bytes / (dev.dram_bw_gbps * 1e9);
+    SimReport {
+        spmv_secs,
+        combine_secs,
+        dram_bytes: spmv_traffic.dram_bytes + combine_bytes,
+        nnz,
+    }
+}
+
+/// Simulate CSR SpMV (Algorithm 1): one thread per row, warps of 32
+/// consecutive rows, static scheduling.
+pub fn simulate_csr(m: &Csr, dev: &DeviceConfig) -> SimReport {
+    let w = dev.warp_size;
+    let mut tasks = Vec::with_capacity(m.rows.div_ceil(w));
+    let mut total = MemTraffic::default();
+    let mut cols_scratch: Vec<usize> = Vec::with_capacity(w);
+
+    for warp_start in (0..m.rows).step_by(w) {
+        let rows = warp_start..(warp_start + w).min(m.rows);
+        let rounds = rows.clone().map(|r| m.row_nnz(r)).max().unwrap_or(0);
+        let mut traffic = MemTraffic::default();
+
+        // element loads: each lane streams its own row; CSR rows are
+        // stored back-to-back, so the warp's element data is one
+        // contiguous byte range (+1 line for boundary misalignment)
+        let elem_bytes: f64 = rows.clone().map(|r| m.row_nnz(r) as f64 * ELEM_BYTES).sum();
+        let elem_lines = (elem_bytes / dev.line_bytes as f64).ceil() + 1.0;
+        traffic.add(&memory::streamed(elem_lines * dev.line_bytes as f64));
+
+        // x gathers: per round, exact distinct lines over lanes' columns.
+        // Latency is paid every round (gathers serialize on the memory
+        // pipeline); DRAM *bytes* are paid once per distinct line per
+        // warp (L2 catches the re-touches) — this split is what makes
+        // divergent matrices slow AND low-throughput, as in Table II.
+        let mut warp_lines: std::collections::HashSet<usize> = std::collections::HashSet::new();
+        let per_line = (dev.line_bytes / 8).max(1);
+        for k in 0..rounds {
+            cols_scratch.clear();
+            for r in rows.clone() {
+                let (cols, _) = m.row(r);
+                if let Some(&c) = cols.get(k) {
+                    cols_scratch.push(c as usize);
+                }
+            }
+            let lines = memory::distinct_lines(&cols_scratch, dev.line_bytes);
+            let mut new_lines = 0usize;
+            for &c in &cols_scratch {
+                if warp_lines.insert(c / per_line) {
+                    new_lines += 1;
+                }
+            }
+            traffic.add(&MemTraffic {
+                dram_bytes: (new_lines * dev.line_bytes) as f64,
+                latency_transactions: lines as f64,
+                smem_accesses: 0.0,
+            });
+        }
+
+        // y write
+        traffic.add(&memory::streamed(rows.len() as f64 * 8.0));
+
+        let cycles = simt::compute_cycles(rounds, dev) + traffic.warp_cycles(dev);
+        tasks.push(WarpTask { cycles });
+        total.add(&traffic);
+    }
+
+    let makespan = simt::schedule_static(&tasks, dev.total_slots());
+    finalize(dev, makespan, &total, 0.0, m.nnz())
+}
+
+/// Shared block-engine skeleton: walk an HBP structure, costing one warp
+/// task per *block*; `coalesced` selects the HBP round-major layout
+/// (streamed element loads) vs the plain-2D row-major layout (scattered
+/// element gathers + divergent rounds computed from *natural* order).
+fn simulate_blocks(hbp: &Hbp, dev: &DeviceConfig, coalesced: bool, competitive_frac: f64) -> SimReport {
+    let w = hbp.grid.cfg.warp;
+    let mut tasks = Vec::with_capacity(hbp.blocks.len());
+    let mut total = MemTraffic::default();
+    let mut total_slots = 0usize;
+
+    for b in &hbp.blocks {
+        let mut traffic = MemTraffic::default();
+        let mut cycles = 0.0;
+
+        // x-segment prefetch into shared memory, once per (warp, block):
+        // coalesced stream of the block's column range ("a considerable
+        // amount of unnecessary data", §IV-C — counted in full)
+        let (cs, ce) = hbp.grid.col_range(b.bj as usize);
+        traffic.add(&memory::streamed((ce - cs) as f64 * 8.0));
+
+        // per-group lane walks
+        for g in 0..b.ngroups {
+            let slot_lo = g * w;
+            let slot_hi = ((g + 1) * w).min(b.nrows);
+            // lane lengths in execution order
+            let mut lens = Vec::with_capacity(slot_hi - slot_lo);
+            for s in slot_lo..slot_hi {
+                if hbp.zero_row[b.slot_start + s] == -1 {
+                    lens.push(0);
+                } else {
+                    // walk chain length via add_sign
+                    let gp = hbp.begin_ptr[b.group_start + g];
+                    let rank = (s - slot_lo) as i32 - hbp.zero_row[b.slot_start + s];
+                    let mut j = gp + rank as usize;
+                    let mut l = 1usize;
+                    while hbp.add_sign[j] != -1 {
+                        j += hbp.add_sign[j] as usize;
+                        l += 1;
+                    }
+                    lens.push(l);
+                }
+            }
+            let rounds = lens.iter().copied().max().unwrap_or(0);
+            let group_nnz: usize = lens.iter().sum();
+
+            if coalesced {
+                // HBP: round-major layout => element loads stream
+                let bytes = group_nnz as f64 * ELEM_BYTES;
+                let lines = (bytes / dev.line_bytes as f64).ceil() + 1.0;
+                traffic.add(&memory::streamed(lines * dev.line_bytes as f64));
+            } else {
+                // plain 2D: row-major layout => bytes stream (each lane's
+                // row is contiguous, lines are reused across rounds like
+                // CSR), but each round issues one partially-coalesced
+                // gather per ~4 active lanes (adjacent rows rarely share
+                // a line within a round)
+                let bytes = group_nnz as f64 * ELEM_BYTES;
+                let lines = (bytes / dev.line_bytes as f64).ceil() + 1.0;
+                traffic.add(&memory::streamed(lines * dev.line_bytes as f64));
+                for k in 0..rounds {
+                    let active = lens.iter().filter(|&&l| l > k).count();
+                    traffic.add(&MemTraffic {
+                        dram_bytes: 0.0,
+                        latency_transactions: (active as f64 / 4.0).ceil(),
+                        smem_accesses: 0.0,
+                    });
+                }
+            }
+            // x gathers from shared memory: one warp-wide access per round
+            traffic.add(&memory::shared(rounds as f64));
+            cycles += simt::compute_cycles(rounds, dev);
+        }
+
+        // partial-vector write (streamed)
+        traffic.add(&memory::streamed(b.nrows as f64 * 8.0));
+        total_slots += b.nrows;
+
+        cycles += traffic.warp_cycles(dev);
+        tasks.push(WarpTask { cycles });
+        total.add(&traffic);
+    }
+
+    let makespan = if competitive_frac > 0.0 {
+        simt::schedule_mixed(&tasks, dev.total_slots(), competitive_frac)
+    } else {
+        simt::schedule_static(&tasks, dev.total_slots())
+    };
+
+    // combine: read partials + accumulate + write y (bandwidth-bound)
+    let combine_bytes = total_slots as f64 * 8.0 * 2.0 + hbp.rows as f64 * 8.0;
+    finalize(dev, makespan, &total, combine_bytes, hbp.nnz())
+}
+
+/// Simulate the HBP kernel (hash-reordered, coalesced layout, mixed
+/// fixed/competitive schedule).
+pub fn simulate_hbp(hbp: &Hbp, dev: &DeviceConfig, competitive_frac: f64) -> SimReport {
+    simulate_blocks(hbp, dev, true, competitive_frac)
+}
+
+/// Simulate the plain 2D-partitioning kernel over an identity-ordered
+/// HBP shell (no reorder, row-major element access, static schedule).
+pub fn simulate_spmv2d(shell: &Hbp, dev: &DeviceConfig) -> SimReport {
+    simulate_blocks(shell, dev, false, 0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{matrix_by_id, Scale};
+    use crate::partition::PartitionConfig;
+    use crate::preprocess::{build_hbp, build_hbp_with, IdentityReorder};
+
+    fn sims(id: &str) -> (SimReport, SimReport, SimReport) {
+        let (_, m) = matrix_by_id(id, Scale::Ci).unwrap();
+        let dev = DeviceConfig::orin();
+        let cfg = PartitionConfig::default();
+        let hbp = build_hbp(&m, cfg);
+        let shell = build_hbp_with(&m, cfg, &IdentityReorder);
+        (
+            simulate_csr(&m, &dev),
+            simulate_spmv2d(&shell, &dev),
+            simulate_hbp(&hbp, &dev, 0.25),
+        )
+    }
+
+    #[test]
+    fn hbp_beats_csr_on_scattered_kron() {
+        // the paper's m4 story: scattered vector access kills CSR
+        let (csr, _d2, hbp) = sims("m4");
+        assert!(
+            hbp.gflops() > csr.gflops(),
+            "HBP {:.2} should beat CSR {:.2} GFLOPS on kron",
+            hbp.gflops(),
+            csr.gflops()
+        );
+    }
+
+    #[test]
+    fn csr_holds_on_banded_barrier() {
+        // the paper's m3 story: banded locality favors CSR
+        let (csr, _d2, hbp) = sims("m3");
+        assert!(
+            csr.gflops() > 0.8 * hbp.gflops(),
+            "CSR {:.2} should stay competitive with HBP {:.2} on banded",
+            csr.gflops(),
+            hbp.gflops()
+        );
+    }
+
+    #[test]
+    fn hbp_beats_plain_2d() {
+        let (_csr, d2, hbp) = sims("m2");
+        assert!(
+            hbp.gflops() > d2.gflops(),
+            "HBP {:.2} should beat 2D {:.2}",
+            hbp.gflops(),
+            d2.gflops()
+        );
+    }
+
+    #[test]
+    fn hbp_raises_memory_throughput_on_saturating_circuit() {
+        // Table II shape: circuit-matrix CSR throughput low (latency
+        // bound), HBP high (streaming). Needs a matrix big enough to
+        // saturate the device's warp slots — CI-scale suite matrices
+        // underfill the 4090/Orin models, so generate one directly.
+        let m = crate::gen::circuit::circuit(&crate::gen::circuit::CircuitConfig::asic_like(
+            40_000, 7,
+        ));
+        let dev = DeviceConfig::orin();
+        let cfg = PartitionConfig::default();
+        let hbp = build_hbp(&m, cfg);
+        let csr = simulate_csr(&m, &dev);
+        let h = simulate_hbp(&hbp, &dev, 0.25);
+        assert!(
+            h.mem_throughput_gbps() > 1.5 * csr.mem_throughput_gbps(),
+            "HBP throughput {:.1} should exceed CSR {:.1}",
+            h.mem_throughput_gbps(),
+            csr.mem_throughput_gbps()
+        );
+        // and HBP must also be faster in wall-clock terms here
+        assert!(h.total_secs() < csr.total_secs());
+    }
+
+    #[test]
+    fn faster_device_is_faster() {
+        let (_, m) = matrix_by_id("m1", Scale::Ci).unwrap();
+        let hbp = build_hbp(&m, PartitionConfig::default());
+        let orin = simulate_hbp(&hbp, &DeviceConfig::orin(), 0.25);
+        let ada = simulate_hbp(&hbp, &DeviceConfig::rtx4090(), 0.25);
+        assert!(ada.total_secs() < orin.total_secs());
+    }
+
+    #[test]
+    fn reports_are_deterministic() {
+        let (a1, b1, c1) = sims("m9");
+        let (a2, b2, c2) = sims("m9");
+        assert_eq!(a1.total_secs(), a2.total_secs());
+        assert_eq!(b1.total_secs(), b2.total_secs());
+        assert_eq!(c1.total_secs(), c2.total_secs());
+    }
+}

@@ -1,0 +1,110 @@
+//! Memory-system cost accounting.
+//!
+//! Two access regimes, following the CUDA memory model at the fidelity
+//! the paper's Table II requires:
+//!
+//! - **Streaming** (coalesced): cost is carried by the global bandwidth
+//!   bound; per-warp cycles are negligible next to latency-bound traffic.
+//! - **Latency-bound** (scattered gathers): each distinct DRAM line is a
+//!   transaction; a warp overlaps `mlp` of them, so cycles =
+//!   `lines * latency / mlp`.
+//!
+//! Distinct-line counts for x-vector gathers are computed *exactly* from
+//! the column indices each warp round touches — this is what gives banded
+//! matrices their locality advantage under CSR and makes kron matrices
+//! latency-bound, reproducing the paper's m3 vs m4 behaviour.
+
+use super::device::DeviceConfig;
+
+/// Accumulated memory-traffic statistics for one simulated kernel.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MemTraffic {
+    /// Bytes moved over DRAM (line-granular).
+    pub dram_bytes: f64,
+    /// Latency-bound transactions (scattered gathers).
+    pub latency_transactions: f64,
+    /// Shared-memory warp-wide accesses.
+    pub smem_accesses: f64,
+}
+
+impl MemTraffic {
+    pub fn add(&mut self, other: &MemTraffic) {
+        self.dram_bytes += other.dram_bytes;
+        self.latency_transactions += other.latency_transactions;
+        self.smem_accesses += other.smem_accesses;
+    }
+
+    /// Per-warp latency-bound + shared-memory cycles.
+    pub fn warp_cycles(&self, dev: &DeviceConfig) -> f64 {
+        self.latency_transactions * dev.dram_latency_cycles / dev.mlp
+            + self.smem_accesses * dev.smem_latency_cycles
+    }
+}
+
+/// Count distinct `line_bytes`-sized lines touched by accessing 8-byte
+/// elements at the given indices (indices are element offsets into an
+/// f64 array). Exact, allocation-light for the warp-sized inputs it gets.
+pub fn distinct_lines(indices: &[usize], line_bytes: usize) -> usize {
+    let per_line = (line_bytes / 8).max(1);
+    match indices.len() {
+        0 => 0,
+        1 => 1,
+        _ => {
+            let mut lines: Vec<usize> = indices.iter().map(|&i| i / per_line).collect();
+            lines.sort_unstable();
+            lines.dedup();
+            lines.len()
+        }
+    }
+}
+
+/// Streaming traffic for `bytes` of coalesced transfer.
+pub fn streamed(bytes: f64) -> MemTraffic {
+    MemTraffic { dram_bytes: bytes, latency_transactions: 0.0, smem_accesses: 0.0 }
+}
+
+/// Scattered gather of `lines` distinct DRAM lines.
+pub fn gathered(lines: usize, dev: &DeviceConfig) -> MemTraffic {
+    MemTraffic {
+        dram_bytes: (lines * dev.line_bytes) as f64,
+        latency_transactions: lines as f64,
+        smem_accesses: 0.0,
+    }
+}
+
+/// `n` warp-wide shared-memory accesses.
+pub fn shared(n: f64) -> MemTraffic {
+    MemTraffic { dram_bytes: 0.0, latency_transactions: 0.0, smem_accesses: n }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distinct_lines_counts() {
+        // 16 doubles per 128B line
+        assert_eq!(distinct_lines(&[0, 1, 15], 128), 1);
+        assert_eq!(distinct_lines(&[0, 16], 128), 2);
+        assert_eq!(distinct_lines(&[], 128), 0);
+        assert_eq!(distinct_lines(&[100, 100, 100], 128), 1);
+        // widely scattered: one line each
+        let scattered: Vec<usize> = (0..32).map(|i| i * 1000).collect();
+        assert_eq!(distinct_lines(&scattered, 128), 32);
+    }
+
+    #[test]
+    fn traffic_accumulates() {
+        let dev = DeviceConfig::orin();
+        let mut t = MemTraffic::default();
+        t.add(&streamed(1024.0));
+        t.add(&gathered(4, &dev));
+        t.add(&shared(2.0));
+        assert_eq!(t.dram_bytes, 1024.0 + 4.0 * 128.0);
+        assert_eq!(t.latency_transactions, 4.0);
+        let cycles = t.warp_cycles(&dev);
+        assert!(cycles > 0.0);
+        let expect = 4.0 * dev.dram_latency_cycles / dev.mlp + 2.0 * dev.smem_latency_cycles;
+        assert!((cycles - expect).abs() < 1e-9);
+    }
+}

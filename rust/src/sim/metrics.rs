@@ -1,0 +1,67 @@
+//! Simulation outputs: the quantities the paper reports.
+
+use super::device::DeviceConfig;
+
+/// Result of simulating one SpMV kernel on a device model.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SimReport {
+    /// SpMV-phase seconds.
+    pub spmv_secs: f64,
+    /// Combine-phase seconds (0 for CSR).
+    pub combine_secs: f64,
+    /// Modeled DRAM bytes moved.
+    pub dram_bytes: f64,
+    /// Matrix nonzeros (for GFLOPS).
+    pub nnz: usize,
+}
+
+impl SimReport {
+    pub fn total_secs(&self) -> f64 {
+        self.spmv_secs + self.combine_secs
+    }
+
+    /// The paper's GFLOPS metric `2*nnz / t` over SpMV+combine.
+    pub fn gflops(&self) -> f64 {
+        crate::util::timer::spmv_gflops(self.nnz, self.total_secs())
+    }
+
+    /// Nsight-style "Mem Busy": fraction of kernel time DRAM was needed
+    /// at peak bandwidth.
+    pub fn mem_busy(&self, dev: &DeviceConfig) -> f64 {
+        if self.total_secs() <= 0.0 {
+            return 0.0;
+        }
+        let bw_time = self.dram_bytes / (dev.dram_bw_gbps * 1e9);
+        (bw_time / self.total_secs()).min(1.0)
+    }
+
+    /// Nsight-style "Mem Throughput" in GB/s: achieved bytes over time.
+    pub fn mem_throughput_gbps(&self) -> f64 {
+        if self.total_secs() <= 0.0 {
+            return 0.0;
+        }
+        self.dram_bytes / self.total_secs() / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derived_metrics() {
+        let r = SimReport { spmv_secs: 1.0, combine_secs: 1.0, dram_bytes: 200e9, nnz: 1_000_000_000 };
+        assert!((r.gflops() - 1.0).abs() < 1e-9);
+        assert!((r.mem_throughput_gbps() - 100.0).abs() < 1e-9);
+        let dev = DeviceConfig::orin(); // 204.8 GB/s
+        let busy = r.mem_busy(&dev);
+        assert!((busy - (200.0 / 204.8 / 2.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_time_is_safe() {
+        let r = SimReport::default();
+        assert_eq!(r.mem_throughput_gbps(), 0.0);
+        assert_eq!(r.mem_busy(&DeviceConfig::orin()), 0.0);
+    }
+}

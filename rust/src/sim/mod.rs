@@ -1,0 +1,37 @@
+//! Warp-level GPU cost simulator.
+//!
+//! The paper's device-specific results (Figs 8/10 GFLOPS on Jetson AGX
+//! Orin and RTX 4090, Table II Nsight memory counters) cannot be measured
+//! here — there is no GPU. Per DESIGN.md §2 the substitution is a
+//! **trace-driven analytical cost model** at warp granularity:
+//!
+//! - SIMT lockstep: a warp-group's round count is the *max* lane length —
+//!   the divergence cost the nonlinear hash removes.
+//! - Memory system: 128B DRAM transactions; element streams are costed by
+//!   the lines they touch (coalesced layouts touch ~nnz*12/128, scattered
+//!   layouts touch up to one line per lane per round); x-vector gathers
+//!   are costed by *exact* distinct-line counts computed from the actual
+//!   column indices (so banded matrices get their cache locality, and
+//!   kron matrices get punished — the m3-vs-m4 crossover in the paper).
+//! - Shared memory: block engines prefetch the x segment once per
+//!   (warp, block) and then gather at cheap fixed latency.
+//! - Scheduling: warp tasks are list-scheduled onto SM slots either
+//!   statically (CSR, plain 2D) or greedily/earliest-free (HBP's
+//!   competitive tail).
+//! - Kernel time = max(schedule makespan, DRAM-bandwidth bound); Mem Busy
+//!   and Mem Throughput follow the Nsight definitions on modeled bytes.
+//!
+//! This is a *cost model*, not a cycle-accurate simulator: absolute
+//! numbers are indicative, relative orderings (who wins, where the
+//! crossovers are) are the reproduction target. Constants live in
+//! [`device::DeviceConfig`] with sources in comments.
+
+pub mod device;
+pub mod memory;
+pub mod simt;
+pub mod kernels;
+pub mod metrics;
+
+pub use device::DeviceConfig;
+pub use kernels::{simulate_csr, simulate_hbp, simulate_spmv2d};
+pub use metrics::SimReport;

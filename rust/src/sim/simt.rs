@@ -1,0 +1,103 @@
+//! SIMT warp tasks and SM-slot scheduling.
+
+use super::device::DeviceConfig;
+
+/// One warp's worth of work (a warp-group of rows, or a block phase).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WarpTask {
+    /// Latency/compute cycles this warp occupies its slot.
+    pub cycles: f64,
+}
+
+/// Static scheduling: tasks pre-chunked round-robin over slots (the CSR
+/// and plain-2D model — no work stealing). Returns makespan cycles.
+pub fn schedule_static(tasks: &[WarpTask], slots: usize) -> f64 {
+    let slots = slots.max(1);
+    let mut slot_time = vec![0.0f64; slots];
+    for (i, t) in tasks.iter().enumerate() {
+        slot_time[i % slots] += t.cycles;
+    }
+    slot_time.into_iter().fold(0.0, f64::max)
+}
+
+/// Dynamic/competitive scheduling: each task goes to the earliest-free
+/// slot, in order — the behaviour of warps pulling tickets (§III-C).
+/// `fixed_frac` of the tasks are first distributed statically (the fixed
+/// part), the tail dynamically.
+pub fn schedule_mixed(tasks: &[WarpTask], slots: usize, competitive_frac: f64) -> f64 {
+    let slots = slots.max(1);
+    let comp = ((tasks.len() as f64) * competitive_frac.clamp(0.0, 1.0)).round() as usize;
+    let fixed_end = tasks.len() - comp.min(tasks.len());
+    let mut slot_time = vec![0.0f64; slots];
+
+    // fixed part: contiguous equal chunks (column-major adjacency)
+    let base = fixed_end / slots;
+    let rem = fixed_end % slots;
+    let mut cursor = 0;
+    for (w, st) in slot_time.iter_mut().enumerate() {
+        let len = base + usize::from(w < rem);
+        for t in &tasks[cursor..cursor + len] {
+            *st += t.cycles;
+        }
+        cursor += len;
+    }
+
+    // competitive tail: earliest-free slot takes the next ticket
+    for t in &tasks[fixed_end..] {
+        let (idx, _) = slot_time
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        slot_time[idx] += t.cycles;
+    }
+    slot_time.into_iter().fold(0.0, f64::max)
+}
+
+/// Compute cycles for `rounds` FMA rounds.
+pub fn compute_cycles(rounds: usize, dev: &DeviceConfig) -> f64 {
+    rounds as f64 * dev.fma_cycles
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tasks(cs: &[f64]) -> Vec<WarpTask> {
+        cs.iter().map(|&c| WarpTask { cycles: c }).collect()
+    }
+
+    #[test]
+    fn static_round_robin_makespan() {
+        // slots=2: slot0 = 10+30 = 40, slot1 = 20+40 = 60
+        let t = tasks(&[10.0, 20.0, 30.0, 40.0]);
+        assert_eq!(schedule_static(&t, 2), 60.0);
+    }
+
+    #[test]
+    fn dynamic_beats_static_on_imbalance() {
+        // one huge task + many small: static round-robin stacks smalls
+        // behind the big one; dynamic routes around it
+        let mut cs = vec![1000.0];
+        cs.extend(std::iter::repeat_n(10.0, 99));
+        let t = tasks(&cs);
+        let stat = schedule_static(&t, 4);
+        let dyn_ = schedule_mixed(&t, 4, 1.0);
+        assert!(dyn_ < stat, "dynamic {dyn_} should beat static {stat}");
+        assert!(dyn_ >= 1000.0); // can't beat the critical path
+    }
+
+    #[test]
+    fn mixed_frac_zero_equals_chunked_static() {
+        let t = tasks(&[5.0, 5.0, 5.0, 5.0, 5.0, 5.0]);
+        // perfectly uniform: any schedule gives the same makespan
+        assert_eq!(schedule_mixed(&t, 3, 0.0), 10.0);
+        assert_eq!(schedule_mixed(&t, 3, 1.0), 10.0);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert_eq!(schedule_static(&[], 4), 0.0);
+        assert_eq!(schedule_mixed(&tasks(&[7.0]), 4, 0.5), 7.0);
+    }
+}

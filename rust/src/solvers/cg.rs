@@ -1,0 +1,136 @@
+//! Conjugate gradient for symmetric positive-definite systems.
+
+use super::{axpy, dot, norm2, SolveStats};
+use crate::exec::SpmvEngine;
+use crate::util::Timer;
+
+/// Solve `A x = b` by CG. `x` holds the initial guess on entry and the
+/// solution on exit. A must be SPD (not checked).
+pub fn cg(
+    a: &dyn SpmvEngine,
+    b: &[f64],
+    x: &mut [f64],
+    tol: f64,
+    max_iter: usize,
+) -> SolveStats {
+    let n = b.len();
+    assert_eq!(a.rows(), n);
+    assert_eq!(a.cols(), n, "CG needs a square system");
+    assert_eq!(x.len(), n);
+
+    let mut spmv_secs = 0.0;
+    let mut ap = vec![0.0; n];
+
+    // r = b - A x0
+    let t = Timer::start();
+    a.spmv(x, &mut ap);
+    spmv_secs += t.elapsed_secs();
+    let mut r: Vec<f64> = b.iter().zip(&ap).map(|(bi, ai)| bi - ai).collect();
+    let mut p = r.clone();
+    let mut rs = dot(&r, &r);
+    let b_norm = norm2(b).max(1e-300);
+
+    for it in 0..max_iter {
+        if rs.sqrt() / b_norm < tol {
+            return SolveStats { iterations: it, residual: rs.sqrt() / b_norm, converged: true, spmv_secs };
+        }
+        let t = Timer::start();
+        a.spmv(&p, &mut ap);
+        spmv_secs += t.elapsed_secs();
+        let alpha = rs / dot(&p, &ap).max(f64::MIN_POSITIVE);
+        axpy(alpha, &p, x);
+        axpy(-alpha, &ap, &mut r);
+        let rs_new = dot(&r, &r);
+        let beta = rs_new / rs;
+        for (pi, ri) in p.iter_mut().zip(&r) {
+            *pi = ri + beta * *pi;
+        }
+        rs = rs_new;
+    }
+    SolveStats {
+        iterations: max_iter,
+        residual: rs.sqrt() / b_norm,
+        converged: rs.sqrt() / b_norm < tol,
+        spmv_secs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{CsrSerial, HbpEngine};
+    use crate::formats::Coo;
+    use crate::partition::PartitionConfig;
+    use crate::preprocess::build_hbp;
+
+    fn laplacian_1d(n: usize) -> crate::formats::Csr {
+        let mut coo = Coo::new(n, n);
+        for i in 0..n {
+            coo.push(i, i, 2.0);
+            if i > 0 {
+                coo.push(i, i - 1, -1.0);
+            }
+            if i + 1 < n {
+                coo.push(i, i + 1, -1.0);
+            }
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn solves_laplacian_exactly() {
+        let m = laplacian_1d(64);
+        let eng = CsrSerial::new(m.clone());
+        let expect: Vec<f64> = (0..64).map(|i| (i as f64 * 0.1).sin()).collect();
+        let mut b = vec![0.0; 64];
+        m.spmv(&expect, &mut b);
+        let mut x = vec![0.0; 64];
+        let stats = cg(&eng, &b, &mut x, 1e-12, 1000);
+        assert!(stats.converged, "residual {}", stats.residual);
+        for (xi, ei) in x.iter().zip(&expect) {
+            assert!((xi - ei).abs() < 1e-8);
+        }
+        assert!(stats.spmv_secs > 0.0);
+    }
+
+    #[test]
+    fn hbp_engine_converges_identically() {
+        let m = laplacian_1d(200);
+        let hbp = HbpEngine::new(build_hbp(&m, PartitionConfig::test_small()), 2, 0.25);
+        let csr = CsrSerial::new(m.clone());
+        let b = vec![1.0; 200];
+        let mut x1 = vec![0.0; 200];
+        let mut x2 = vec![0.0; 200];
+        let s1 = cg(&hbp, &b, &mut x1, 1e-10, 2000);
+        let s2 = cg(&csr, &b, &mut x2, 1e-10, 2000);
+        assert!(s1.converged && s2.converged);
+        assert_eq!(s1.iterations, s2.iterations, "engines changed convergence");
+        for (a, b) in x1.iter().zip(&x2) {
+            assert!((a - b).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn warm_start_converges_immediately() {
+        let m = laplacian_1d(32);
+        let eng = CsrSerial::new(m.clone());
+        let expect = vec![1.0; 32];
+        let mut b = vec![0.0; 32];
+        m.spmv(&expect, &mut b);
+        let mut x = expect.clone(); // exact initial guess
+        let stats = cg(&eng, &b, &mut x, 1e-10, 100);
+        assert_eq!(stats.iterations, 0);
+        assert!(stats.converged);
+    }
+
+    #[test]
+    fn reports_nonconvergence() {
+        let m = laplacian_1d(512);
+        let eng = CsrSerial::new(m);
+        let b = vec![1.0; 512];
+        let mut x = vec![0.0; 512];
+        let stats = cg(&eng, &b, &mut x, 1e-14, 3);
+        assert!(!stats.converged);
+        assert_eq!(stats.iterations, 3);
+    }
+}

@@ -1,0 +1,42 @@
+//! Iterative solvers on top of the SpMV engines.
+//!
+//! The paper's introduction motivates SpMV through "mathematical
+//! solutions for sparse linear equations", "iterative algorithm-solving"
+//! and "graph processing" — this module is that downstream API: solvers
+//! are generic over [`crate::exec::SpmvEngine`], so the HBP engine (or
+//! any baseline) plugs in unchanged, and the preprocessing cost
+//! amortizes over the iteration count.
+
+pub mod cg;
+pub mod bicgstab;
+pub mod power;
+
+pub use bicgstab::bicgstab;
+pub use cg::cg;
+pub use power::{pagerank, power_iteration};
+
+/// Convergence report shared by the solvers.
+#[derive(Clone, Copy, Debug)]
+pub struct SolveStats {
+    pub iterations: usize,
+    /// Final relative residual (solvers) or iterate delta (power).
+    pub residual: f64,
+    pub converged: bool,
+    /// Seconds spent inside SpMV calls.
+    pub spmv_secs: f64,
+}
+
+pub(crate) fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+pub(crate) fn norm2(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// y += alpha * x
+pub(crate) fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}

@@ -1,0 +1,174 @@
+//! Miniature benchmark harness (criterion is not in the offline cache).
+//!
+//! Each `cargo bench` target is a `harness = false` binary that uses
+//! [`Bench`] to run warmups + timed iterations and print a column-aligned
+//! table, mirroring the rows/series of the corresponding paper figure.
+
+use super::stats::{percentile, Stats};
+use super::timer::Timer;
+
+/// Result of benchmarking one case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration wall time in seconds.
+    pub samples: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> f64 {
+        Stats::of(&self.samples).mean
+    }
+    pub fn median(&self) -> f64 {
+        percentile(&self.samples, 50.0)
+    }
+    pub fn std(&self) -> f64 {
+        Stats::of(&self.samples).std
+    }
+    pub fn min(&self) -> f64 {
+        Stats::of(&self.samples).min
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub iters: usize,
+    /// Minimum total measured time; iterations extend until reached.
+    pub min_time_secs: f64,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup_iters: 2, iters: 5, min_time_secs: 0.2 }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench { warmup_iters: 1, iters: 3, min_time_secs: 0.05 }
+    }
+
+    /// Honors `HBP_BENCH_FAST=1` for CI smoke runs.
+    pub fn from_env() -> Self {
+        if std::env::var("HBP_BENCH_FAST").map(|v| v == "1").unwrap_or(false) {
+            Bench::quick()
+        } else {
+            Bench::default()
+        }
+    }
+
+    /// Run `f` repeatedly, returning per-iteration timings. A `black_box`
+    /// on the closure result prevents the optimizer from deleting work.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        let total = Timer::start();
+        let mut i = 0;
+        while i < self.iters || total.elapsed_secs() < self.min_time_secs {
+            let t = Timer::start();
+            std::hint::black_box(f());
+            samples.push(t.elapsed_secs());
+            i += 1;
+            if i > 10_000 {
+                break; // safety valve for ~ns-scale closures
+            }
+        }
+        BenchResult { name: name.to_string(), samples }
+    }
+}
+
+/// Column-aligned table printer for bench outputs.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                line.push_str(&format!("{:<w$}", c, w = widths[i]));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        let total: usize = widths.iter().sum::<usize>() + 2 * (widths.len() - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.to_string());
+    }
+}
+
+/// Print a standard bench header so every figure bench output is
+/// self-describing in `bench_output.txt`.
+pub fn banner(figure: &str, description: &str) {
+    println!();
+    println!("=== {figure} ===");
+    println!("{description}");
+    println!();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let b = Bench { warmup_iters: 1, iters: 3, min_time_secs: 0.0 };
+        let r = b.run("noop", || 1 + 1);
+        assert!(r.samples.len() >= 3);
+        assert!(r.mean() >= 0.0);
+        assert!(r.median() >= 0.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["longer".into(), "2".into()]);
+        let s = t.to_string();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("name"));
+        assert!(lines[2].starts_with("a"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

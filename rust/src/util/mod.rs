@@ -1,0 +1,20 @@
+//! Support substrate: PRNG, statistics, timing, CLI parsing, bench harness
+//! and a miniature property-testing framework.
+//!
+//! The build environment is fully offline with only `xla` and `anyhow`
+//! cached, so everything that would normally come from `rand`, `clap`,
+//! `criterion` or `proptest` is implemented here.
+
+pub mod rng;
+pub mod stats;
+pub mod timer;
+pub mod cli;
+pub mod bench;
+pub mod quickcheck;
+pub mod sync;
+pub mod json;
+pub mod pool;
+
+pub use rng::Rng;
+pub use stats::Stats;
+pub use timer::Timer;

@@ -1,0 +1,248 @@
+//! Persistent worker pool.
+//!
+//! §Perf (L3): the engines originally used `std::thread::scope` per SpMV
+//! call; spawning N threads costs ~100µs each, which dominated both the
+//! SpMV and combine phases at small matrix sizes (quickstart showed a
+//! 3.7ms combine for 30K slots — pure spawn overhead). The pool keeps
+//! workers parked on a condvar and hands them one *generation* of work
+//! at a time; the mixed fixed/competitive schedule of §III-C runs on top
+//! unchanged (worker identity = pool index).
+
+use super::Timer;
+use crate::exec::scheduler::{MixedSchedule, WorkerStats};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Type-erased per-generation job.
+struct Job {
+    /// `work(worker_index)`; must be safe to call from many threads.
+    work: *const (dyn Fn(usize, &mut WorkerStats) + Sync),
+}
+// SAFETY: the pointer is only dereferenced while `run_generation` blocks
+// the submitting thread (the pointee outlives every worker's use).
+unsafe impl Send for Job {}
+
+struct Shared {
+    job: Mutex<(u64, Option<Job>)>,
+    job_cv: Condvar,
+    done: Mutex<(u64, usize, Vec<WorkerStats>)>,
+    done_cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// A fixed-size persistent worker pool.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    pub workers: usize,
+}
+
+impl WorkerPool {
+    pub fn new(workers: usize) -> WorkerPool {
+        let workers = workers.max(1);
+        let shared = Arc::new(Shared {
+            job: Mutex::new((0, None)),
+            job_cv: Condvar::new(),
+            done: Mutex::new((0, 0, vec![WorkerStats::default(); workers])),
+            done_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let handles = (0..workers)
+            .map(|w| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("hbp-worker-{w}"))
+                    .spawn(move || worker_loop(w, shared))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        WorkerPool { shared, handles, workers }
+    }
+
+    /// Run `work(worker_index, stats)` once on every worker; blocks until
+    /// all workers finish the generation. Returns per-worker stats.
+    pub fn run_generation<F>(&self, work: F) -> Vec<WorkerStats>
+    where
+        F: Fn(usize, &mut WorkerStats) + Sync,
+    {
+        let gen = {
+            let mut job = self.shared.job.lock().unwrap();
+            job.0 += 1;
+            // SAFETY: we erase the lifetime; `work` outlives this call
+            // because we block on the done condvar below before returning.
+            let erased: *const (dyn Fn(usize, &mut WorkerStats) + Sync) =
+                &work as &(dyn Fn(usize, &mut WorkerStats) + Sync);
+            let erased: *const (dyn Fn(usize, &mut WorkerStats) + Sync) =
+                unsafe { std::mem::transmute(erased) };
+            job.1 = Some(Job { work: erased });
+            self.shared.job_cv.notify_all();
+            job.0
+        };
+        let mut done = self.shared.done.lock().unwrap();
+        while !(done.0 == gen && done.1 == self.workers) {
+            done = self.shared.done_cv.wait(done).unwrap();
+        }
+        done.2.clone()
+    }
+
+    /// Execute a mixed fixed/competitive schedule on the pool (the §III-C
+    /// semantics of [`crate::exec::run_mixed`], without thread spawns).
+    /// `sched.fixed.len()` must equal the pool size.
+    pub fn run_mixed<F>(&self, sched: &MixedSchedule, work: F) -> Vec<WorkerStats>
+    where
+        F: Fn(usize) + Sync,
+    {
+        assert_eq!(sched.fixed.len(), self.workers, "schedule/pool size mismatch");
+        let ticket = AtomicUsize::new(sched.fixed_end);
+        self.run_generation(|w, stats| {
+            let t = Timer::start();
+            let (lo, hi) = sched.fixed[w];
+            for i in lo..hi {
+                work(i);
+                stats.fixed_done += 1;
+            }
+            loop {
+                let i = ticket.fetch_add(1, Ordering::Relaxed);
+                if i >= sched.total {
+                    break;
+                }
+                work(i);
+                stats.competitive_done += 1;
+            }
+            stats.busy_secs = t.elapsed_secs();
+        })
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.job_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(w: usize, shared: Arc<Shared>) {
+    let mut seen_gen = 0u64;
+    loop {
+        // wait for a new generation (or shutdown)
+        let job_ptr = {
+            let mut job = shared.job.lock().unwrap();
+            loop {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                if job.0 > seen_gen {
+                    seen_gen = job.0;
+                    break job.1.as_ref().map(|j| j.work);
+                }
+                job = shared.job_cv.wait(job).unwrap();
+            }
+        };
+        let mut stats = WorkerStats::default();
+        if let Some(ptr) = job_ptr {
+            // SAFETY: run_generation blocks until we report done, so the
+            // closure behind `ptr` is alive for the whole call.
+            let work = unsafe { &*ptr };
+            work(w, &mut stats);
+        }
+        // report completion
+        let mut done = shared.done.lock().unwrap();
+        if done.0 != seen_gen {
+            done.0 = seen_gen;
+            done.1 = 0;
+        }
+        done.2[w] = stats;
+        done.1 += 1;
+        if done.1 == done.2.len() {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::scheduler::mixed_schedule;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn generation_runs_every_worker_once() {
+        let pool = WorkerPool::new(6);
+        let hits: Vec<AtomicU32> = (0..6).map(|_| AtomicU32::new(0)).collect();
+        for _ in 0..10 {
+            pool.run_generation(|w, _| {
+                hits[w].fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        for h in &hits {
+            assert_eq!(h.load(Ordering::Relaxed), 10);
+        }
+    }
+
+    #[test]
+    fn mixed_on_pool_is_exactly_once() {
+        let pool = WorkerPool::new(5);
+        let total = 3000;
+        let counts: Vec<AtomicU32> = (0..total).map(|_| AtomicU32::new(0)).collect();
+        let sched = mixed_schedule(total, 5, 0.4);
+        let stats = pool.run_mixed(&sched, |i| {
+            counts[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(counts.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+        let done: usize = stats.iter().map(|s| s.fixed_done + s.competitive_done).sum();
+        assert_eq!(done, total);
+    }
+
+    #[test]
+    fn pool_reuse_is_cheap() {
+        // 100 empty generations should be far faster than 100 x N spawns
+        let pool = WorkerPool::new(8);
+        pool.run_generation(|_, _| {}); // warm
+        let t = Timer::start();
+        for _ in 0..100 {
+            pool.run_generation(|_, _| {});
+        }
+        let pool_time = t.elapsed_secs();
+        let t = Timer::start();
+        for _ in 0..100 {
+            std::thread::scope(|s| {
+                for _ in 0..8 {
+                    s.spawn(|| {});
+                }
+            });
+        }
+        let spawn_time = t.elapsed_secs();
+        assert!(
+            pool_time < spawn_time,
+            "pool {pool_time:.4}s should beat spawn {spawn_time:.4}s"
+        );
+    }
+
+    #[test]
+    fn drop_joins_cleanly() {
+        let pool = WorkerPool::new(3);
+        pool.run_generation(|_, _| {});
+        drop(pool); // must not hang
+    }
+
+    #[test]
+    fn parallel_results_visible_after_return() {
+        let pool = WorkerPool::new(4);
+        let mut buf = vec![0usize; 4096];
+        {
+            let shared = crate::util::sync::SharedMut::new(&mut buf);
+            pool.run_generation(|w, _| {
+                let chunk = unsafe { shared.slice_mut(w * 1024, 1024) };
+                for (i, v) in chunk.iter_mut().enumerate() {
+                    *v = w * 1024 + i;
+                }
+            });
+        }
+        for (i, &v) in buf.iter().enumerate() {
+            assert_eq!(v, i);
+        }
+    }
+}

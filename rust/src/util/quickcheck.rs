@@ -1,0 +1,114 @@
+//! Miniature property-based testing harness (proptest is not in the
+//! offline cache).
+//!
+//! A property is a closure over a [`Gen`] (seeded RNG wrapper with sized
+//! generators). [`check`] runs it for N seeds and reports the first
+//! failing seed; failures are reproducible by construction because every
+//! random choice derives from the case seed.
+
+use super::rng::Rng;
+
+/// Sized random-value generator handed to properties.
+pub struct Gen {
+    pub rng: Rng,
+    /// Size hint: properties should scale their structures by this.
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        if hi <= lo {
+            lo
+        } else {
+            self.rng.range(lo, hi)
+        }
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    /// Vector of f64 values with sized length in `[0, max_len]`.
+    pub fn vec_f64(&mut self, max_len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        let n = self.usize_in(0, max_len + 1);
+        (0..n).map(|_| self.rng.range_f64(lo, hi)).collect()
+    }
+
+    /// A random permutation of `0..n`.
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = (0..n).collect();
+        self.rng.shuffle(&mut v);
+        v
+    }
+}
+
+/// Outcome of a property over one generated case.
+pub type PropResult = Result<(), String>;
+
+/// Convenience: assert within a property, returning `Err` with a message.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+/// Run `prop` over `cases` generated cases with growing size. Panics with
+/// the failing seed + message on the first failure.
+pub fn check(name: &str, cases: usize, prop: impl Fn(&mut Gen) -> PropResult) {
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let size = 2 + case * 97 / cases.max(1); // grow roughly to ~100
+        let mut g = Gen { rng: Rng::new(seed), size };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property {name:?} failed on case {case}/{cases} (seed={seed:#x}, size={size}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check("reverse-twice", 50, |g| {
+            let v = g.vec_f64(g.size, -1.0, 1.0);
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            prop_assert!(v == w, "reverse twice changed the vec");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails-on-big", 50, |g| {
+            prop_assert!(g.size < 10, "size {} too big", g.size);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn permutation_is_valid() {
+        check("perm", 30, |g| {
+            let n = g.usize_in(0, g.size + 1);
+            let p = g.permutation(n);
+            let mut sorted = p.clone();
+            sorted.sort_unstable();
+            prop_assert!(sorted == (0..n).collect::<Vec<_>>(), "not a permutation");
+            Ok(())
+        });
+    }
+}

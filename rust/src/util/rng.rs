@@ -1,0 +1,258 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! `xoshiro256**` seeded through `splitmix64` — the standard construction
+//! for reproducible simulation workloads. All matrix generators and
+//! property tests take an explicit seed so every figure in EXPERIMENTS.md
+//! is exactly reproducible.
+
+/// A deterministic xoshiro256** PRNG.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
+    /// Next raw 64 random bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        // 53 high bits -> [0,1)
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform usize in `[0, n)`. `n` must be > 0.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire's multiply-shift rejection-free variant is fine here; bias
+        // at n << 2^64 is negligible for simulation purposes, but we use
+        // 128-bit multiply to keep it uniform-enough and fast.
+        (((self.next_u64() as u128) * (n as u128)) >> 64) as usize
+    }
+
+    /// Uniform usize in `[lo, hi)`.
+    #[inline]
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi > lo);
+        lo + self.below(hi - lo)
+    }
+
+    /// Bernoulli trial with probability `p`.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn gaussian(&mut self) -> f64 {
+        loop {
+            let u = self.f64();
+            if u > 1e-300 {
+                let v = self.f64();
+                return (-2.0 * u.ln()).sqrt()
+                    * (2.0 * std::f64::consts::PI * v).cos();
+            }
+        }
+    }
+
+    /// Sample from a (truncated) power-law on `[1, max]` with exponent
+    /// `alpha > 1`: `P(x) ~ x^-alpha`. Used by the circuit-style matrix
+    /// generators to reproduce UF-collection row-degree tails.
+    pub fn power_law(&mut self, alpha: f64, max: usize) -> usize {
+        debug_assert!(alpha > 1.0 && max >= 1);
+        let a1 = 1.0 - alpha;
+        let max_f = max as f64;
+        // inverse-CDF sampling of the continuous law, then floor.
+        let u = self.f64();
+        let x = ((max_f.powf(a1) - 1.0) * u + 1.0).powf(1.0 / a1);
+        (x.floor() as usize).clamp(1, max)
+    }
+
+    /// Geometric-ish exponential sample with mean `mean`, clamped to
+    /// `[min, max]`.
+    pub fn exponential(&mut self, mean: f64, min: usize, max: usize) -> usize {
+        let u = self.f64().max(1e-300);
+        let x = -mean * u.ln();
+        (x.round() as usize).clamp(min, max)
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Choose `k` distinct indices from `[0, n)` (k <= n), unordered.
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        debug_assert!(k <= n);
+        if k * 4 >= n {
+            // dense case: shuffle prefix
+            let mut all: Vec<usize> = (0..n).collect();
+            for i in 0..k {
+                let j = self.range(i, n);
+                all.swap(i, j);
+            }
+            all.truncate(k);
+            all
+        } else {
+            // sparse case: rejection with a sorted probe set
+            let mut seen = std::collections::HashSet::with_capacity(k * 2);
+            let mut out = Vec::with_capacity(k);
+            while out.len() < k {
+                let x = self.below(n);
+                if seen.insert(x) {
+                    out.push(x);
+                }
+            }
+            out
+        }
+    }
+
+    /// Fork a statistically independent child generator (for parallel
+    /// deterministic generation).
+    pub fn fork(&mut self, stream: u64) -> Rng {
+        let mut sm = self.next_u64() ^ stream.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        Rng::new(splitmix64(&mut sm))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut r = Rng::new(9);
+        let mut hits = [0usize; 10];
+        for _ in 0..10_000 {
+            hits[r.below(10)] += 1;
+        }
+        for h in hits {
+            assert!(h > 700, "bucket underpopulated: {h}");
+        }
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Rng::new(11);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.gaussian()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.03, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn power_law_bounds_and_skew() {
+        let mut r = Rng::new(13);
+        let xs: Vec<usize> = (0..20_000).map(|_| r.power_law(2.2, 1000)).collect();
+        assert!(xs.iter().all(|&x| (1..=1000).contains(&x)));
+        let ones = xs.iter().filter(|&&x| x == 1).count();
+        // heavy head: majority of mass at small values
+        assert!(ones > xs.len() / 3, "ones={ones}");
+        assert!(xs.iter().any(|&x| x > 50), "no tail present");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(5);
+        let mut v: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = Rng::new(17);
+        for &(n, k) in &[(10usize, 10usize), (1000, 10), (50, 40)] {
+            let s = r.sample_indices(n, k);
+            assert_eq!(s.len(), k);
+            let set: std::collections::HashSet<_> = s.iter().collect();
+            assert_eq!(set.len(), k);
+            assert!(s.iter().all(|&x| x < n));
+        }
+    }
+
+    #[test]
+    fn fork_streams_independent() {
+        let mut base = Rng::new(3);
+        let mut c1 = base.fork(0);
+        let mut c2 = base.fork(1);
+        let same = (0..64).filter(|_| c1.next_u64() == c2.next_u64()).count();
+        assert!(same < 4);
+    }
+}

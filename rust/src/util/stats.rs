@@ -1,0 +1,203 @@
+//! Summary statistics used across benches and the Fig. 6 analysis
+//! (standard deviation of nonzeros per warp-group).
+
+/// Summary statistics over a sample.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Stats {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    /// Compute statistics of an f64 slice (population standard deviation,
+    /// matching the paper's per-group dispersion metric).
+    pub fn of(xs: &[f64]) -> Stats {
+        if xs.is_empty() {
+            return Stats::default();
+        }
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let mut min = f64::INFINITY;
+        let mut max = f64::NEG_INFINITY;
+        for &x in xs {
+            if x < min { min = x; }
+            if x > max { max = x; }
+        }
+        Stats { n, mean, std: var.sqrt(), min, max }
+    }
+
+    /// Convenience for integer samples.
+    pub fn of_usize(xs: &[usize]) -> Stats {
+        let v: Vec<f64> = xs.iter().map(|&x| x as f64).collect();
+        Stats::of(&v)
+    }
+}
+
+/// `q`-th percentile (0..=100) via linear interpolation on a sorted copy.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (q / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let w = rank - lo as f64;
+        v[lo] * (1.0 - w) + v[hi] * w
+    }
+}
+
+/// Geometric mean (used for paper-style "average speedup" aggregation).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// Streaming mean/variance (Welford). Used by the simulator's counters
+/// where samples are too many to buffer.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Welford { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        if x < self.min { self.min = x; }
+        if x > self.max { self.max = x; }
+    }
+
+    pub fn count(&self) -> u64 { self.n }
+    pub fn mean(&self) -> f64 { self.mean }
+    pub fn min(&self) -> f64 { self.min }
+    pub fn max(&self) -> f64 { self.max }
+
+    /// Population standard deviation.
+    pub fn std(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { (self.m2 / self.n as f64).sqrt() }
+    }
+}
+
+/// Fixed-bucket histogram for latency reporting in the coordinator.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    total: u64,
+}
+
+impl Histogram {
+    /// Exponential bucket bounds from `lo` doubling `n` times.
+    pub fn exponential(lo: f64, n: usize) -> Self {
+        let bounds: Vec<f64> = (0..n).map(|i| lo * 2f64.powi(i as i32)).collect();
+        let counts = vec![0; n + 1];
+        Histogram { bounds, counts, total: 0 }
+    }
+
+    pub fn record(&mut self, x: f64) {
+        let idx = self.bounds.iter().position(|&b| x < b).unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.total += 1;
+    }
+
+    pub fn total(&self) -> u64 { self.total }
+
+    /// Approximate quantile from bucket boundaries (upper bound of the
+    /// bucket containing the q-quantile).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return f64::NAN;
+        }
+        let target = (q * self.total as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return if i < self.bounds.len() { self.bounds[i] } else { f64::INFINITY };
+            }
+        }
+        f64::INFINITY
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let s = Stats::of(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert_eq!(s.n, 8);
+        assert!((s.mean - 5.0).abs() < 1e-12);
+        assert!((s.std - 2.0).abs() < 1e-12);
+        assert_eq!(s.min, 2.0);
+        assert_eq!(s.max, 9.0);
+    }
+
+    #[test]
+    fn stats_empty() {
+        let s = Stats::of(&[]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.std, 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geomean_of_speedups() {
+        let g = geomean(&[2.0, 8.0]);
+        assert!((g - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn welford_matches_batch() {
+        let xs = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        let s = Stats::of(&xs);
+        assert!((w.mean() - s.mean).abs() < 1e-12);
+        assert!((w.std() - s.std).abs() < 1e-12);
+        assert_eq!(w.min(), s.min);
+        assert_eq!(w.max(), s.max);
+    }
+
+    #[test]
+    fn histogram_quantiles() {
+        let mut h = Histogram::exponential(1.0, 10);
+        for i in 1..=1000 {
+            h.record(i as f64 / 10.0);
+        }
+        assert_eq!(h.total(), 1000);
+        let p50 = h.quantile(0.5);
+        assert!(p50 >= 32.0 && p50 <= 128.0, "p50={p50}");
+    }
+}

@@ -1,0 +1,101 @@
+//! Shared-mutable slice for provably disjoint parallel writes.
+//!
+//! The SpMV engines write per-block partial vectors from multiple worker
+//! threads. Every block owns a *disjoint* range of the partial buffer
+//! (`slot_start..slot_start+nrows`), so the writes can never alias — but
+//! safe Rust cannot express "disjointness decided at runtime by the
+//! scheduler". [`SharedMut`] is the narrow unsafe escape hatch: callers
+//! promise ranges handed to different threads do not overlap.
+
+use std::cell::UnsafeCell;
+
+/// A slice writable from multiple threads under a caller-enforced
+/// disjointness contract.
+pub struct SharedMut<'a, T> {
+    data: &'a UnsafeCell<[T]>,
+}
+
+// SAFETY: all mutation goes through `write`/`slice_mut`, whose contracts
+// require disjoint index ranges across threads.
+unsafe impl<'a, T: Send> Sync for SharedMut<'a, T> {}
+unsafe impl<'a, T: Send> Send for SharedMut<'a, T> {}
+
+impl<'a, T> SharedMut<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> Self {
+        // SAFETY: &mut guarantees exclusivity; UnsafeCell re-enables
+        // interior mutability which we then partition manually.
+        let data = unsafe { &*(slice as *mut [T] as *const UnsafeCell<[T]>) };
+        SharedMut { data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.get().len() // raw-slice len: never races
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Write one element.
+    ///
+    /// # Safety
+    /// No other thread may concurrently access index `i`.
+    #[inline]
+    pub unsafe fn write(&self, i: usize, v: T) {
+        debug_assert!(i < self.len());
+        let ptr = self.data.get().cast::<T>();
+        unsafe { ptr.add(i).write(v) };
+    }
+
+    /// Mutable subslice `[start, start+len)`.
+    ///
+    /// # Safety
+    /// No other thread may concurrently access any index in the range.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice_mut(&self, start: usize, len: usize) -> &mut [T] {
+        debug_assert!(start + len <= self.len());
+        let ptr = self.data.get().cast::<T>();
+        unsafe { std::slice::from_raw_parts_mut(ptr.add(start), len) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disjoint_parallel_writes() {
+        let mut buf = vec![0u64; 1024];
+        {
+            let shared = SharedMut::new(&mut buf);
+            std::thread::scope(|s| {
+                for t in 0..8 {
+                    let shared = &shared;
+                    s.spawn(move || {
+                        let chunk = unsafe { shared.slice_mut(t * 128, 128) };
+                        for (i, v) in chunk.iter_mut().enumerate() {
+                            *v = (t * 128 + i) as u64;
+                        }
+                    });
+                }
+            });
+        }
+        for (i, &v) in buf.iter().enumerate() {
+            assert_eq!(v, i as u64);
+        }
+    }
+
+    #[test]
+    fn single_writes() {
+        let mut buf = vec![0u32; 4];
+        {
+            let shared = SharedMut::new(&mut buf);
+            unsafe {
+                shared.write(2, 7);
+            }
+            assert_eq!(shared.len(), 4);
+        }
+        assert_eq!(buf, vec![0, 0, 7, 0]);
+    }
+}

@@ -1,0 +1,116 @@
+//! Cross-engine correctness: every engine must agree with the dense
+//! oracle (and each other) on the full CI-scale Table I suite.
+
+use hbp_spmv::exec::{CsrParallel, CsrSerial, HbpEngine, SpmvEngine, Spmv2dEngine};
+use hbp_spmv::formats::dense::allclose;
+use hbp_spmv::formats::{Dia, Ell};
+use hbp_spmv::gen::{matrix_by_id, suite, Scale};
+use hbp_spmv::partition::PartitionConfig;
+use hbp_spmv::preprocess::{build_hbp_parallel, HashReorder};
+
+#[test]
+fn all_engines_agree_on_full_ci_suite() {
+    let threads = 4;
+    let cfg = PartitionConfig::default();
+    for meta in suite() {
+        let (_, m) = matrix_by_id(meta.id, Scale::Ci).unwrap();
+        let x = hbp_spmv::gen::random::vector(m.cols, 99);
+        let mut expect = vec![0.0; m.rows];
+        m.spmv(&x, &mut expect);
+
+        let hbp = build_hbp_parallel(&m, cfg, &HashReorder::default(), threads);
+        let engines: Vec<Box<dyn SpmvEngine>> = vec![
+            Box::new(CsrSerial::new(m.clone())),
+            Box::new(CsrParallel::new(m.clone(), threads)),
+            Box::new(Spmv2dEngine::new(m.clone(), cfg, threads)),
+            Box::new(HbpEngine::new(hbp, threads, 0.25)),
+        ];
+        for e in &engines {
+            let mut y = vec![0.0; m.rows];
+            e.spmv(&x, &mut y);
+            assert!(
+                allclose(&y, &expect, 1e-9, 1e-11),
+                "{} diverged on {} ({})",
+                e.name(),
+                meta.id,
+                meta.name
+            );
+        }
+    }
+}
+
+#[test]
+fn classic_formats_agree_on_small_matrices() {
+    // ELL and DIA baselines (introduction formats) against CSR
+    let m = hbp_spmv::gen::banded::banded(&hbp_spmv::gen::banded::BandedConfig::barrier_like(
+        600, 3,
+    ));
+    let x = hbp_spmv::gen::random::vector(600, 5);
+    let mut expect = vec![0.0; 600];
+    m.spmv(&x, &mut expect);
+
+    let ell = Ell::from_csr(&m);
+    let mut y = vec![0.0; 600];
+    ell.spmv(&x, &mut y);
+    assert!(allclose(&y, &expect, 1e-12, 1e-12), "ELL diverged");
+
+    if let Some(dia) = Dia::from_csr(&m, 4096) {
+        let mut y = vec![0.0; 600];
+        dia.spmv(&x, &mut y);
+        assert!(allclose(&y, &expect, 1e-12, 1e-12), "DIA diverged");
+    }
+}
+
+#[test]
+fn engines_handle_pathological_shapes() {
+    let threads = 3;
+    let cfg = PartitionConfig::test_small();
+    let cases = vec![
+        // single row, wide
+        hbp_spmv::gen::random::with_row_lengths(&[50], 100, 1),
+        // single dense column domination
+        {
+            let mut coo = hbp_spmv::formats::Coo::new(40, 40);
+            for r in 0..40 {
+                coo.push(r, 0, 1.0);
+            }
+            coo.to_csr()
+        },
+        // all-zero rows except one
+        hbp_spmv::gen::random::with_row_lengths(
+            &[0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 12],
+            20,
+            2,
+        ),
+        // tall skinny
+        hbp_spmv::gen::random::power_law_rows(200, 3, 2.0, 3, 3),
+    ];
+    for (i, m) in cases.into_iter().enumerate() {
+        let x = hbp_spmv::gen::random::vector(m.cols, i as u64);
+        let mut expect = vec![0.0; m.rows];
+        m.spmv(&x, &mut expect);
+        let hbp = build_hbp_parallel(&m, cfg, &HashReorder::default(), threads);
+        hbp.validate().unwrap_or_else(|e| panic!("case {i}: {e}"));
+        let eng = HbpEngine::new(hbp, threads, 0.5);
+        let mut y = vec![0.0; m.rows];
+        eng.spmv(&x, &mut y);
+        assert!(allclose(&y, &expect, 1e-10, 1e-12), "case {i} diverged");
+    }
+}
+
+#[test]
+fn repeated_execution_is_stable() {
+    // the engine must be pure: same x -> same y across runs & schedules
+    let (_, m) = matrix_by_id("m9", Scale::Ci).unwrap();
+    let cfg = PartitionConfig::default();
+    let hbp = build_hbp_parallel(&m, cfg, &HashReorder::default(), 4);
+    let eng = HbpEngine::new(hbp, 4, 0.25);
+    let x = hbp_spmv::gen::random::vector(m.cols, 1);
+    let mut y1 = vec![0.0; m.rows];
+    let mut y2 = vec![0.0; m.rows];
+    eng.spmv(&x, &mut y1);
+    for _ in 0..5 {
+        eng.spmv(&x, &mut y2);
+        assert_eq!(y1, y2, "nondeterministic result");
+    }
+}

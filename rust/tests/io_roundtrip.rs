@@ -1,0 +1,64 @@
+//! I/O round-trips across the generator suite: MatrixMarket text and the
+//! binary cache must both reproduce the exact matrix.
+
+use hbp_spmv::gen::{matrix_by_id, Scale};
+use hbp_spmv::io::{read_bin, read_matrix_market, write_bin, write_matrix_market};
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("hbp_io_roundtrip");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+#[test]
+fn binary_roundtrip_suite() {
+    for id in ["m1", "m3", "m4", "m8", "m11"] {
+        let (_, m) = matrix_by_id(id, Scale::Ci).unwrap();
+        let path = tmp(&format!("{id}.bin"));
+        write_bin(&path, &m).unwrap();
+        let back = read_bin(&path).unwrap();
+        assert_eq!(m, back, "{id} binary roundtrip");
+    }
+}
+
+#[test]
+fn matrix_market_roundtrip_values_exact() {
+    let (_, m) = matrix_by_id("m9", Scale::Ci).unwrap();
+    let path = tmp("m9.mtx");
+    write_matrix_market(&path, &m.to_coo()).unwrap();
+    let back = read_matrix_market(&path).unwrap().to_csr();
+    assert_eq!(m.rows, back.rows);
+    assert_eq!(m.nnz(), back.nnz());
+    // %.17e printing preserves f64 exactly
+    assert_eq!(m, back);
+}
+
+#[test]
+fn mtx_and_bin_agree_through_engines() {
+    let (_, m) = matrix_by_id("m12", Scale::Ci).unwrap();
+    let p_mtx = tmp("m12.mtx");
+    let p_bin = tmp("m12.bin");
+    write_matrix_market(&p_mtx, &m.to_coo()).unwrap();
+    write_bin(&p_bin, &m).unwrap();
+    let a = read_matrix_market(&p_mtx).unwrap().to_csr();
+    let b = read_bin(&p_bin).unwrap();
+    assert_eq!(a, b);
+
+    let x = hbp_spmv::gen::random::vector(m.cols, 3);
+    let mut ya = vec![0.0; m.rows];
+    let mut yb = vec![0.0; m.rows];
+    a.spmv(&x, &mut ya);
+    b.spmv(&x, &mut yb);
+    assert_eq!(ya, yb);
+}
+
+#[test]
+fn corrupted_binary_detected() {
+    let (_, m) = matrix_by_id("m13", Scale::Ci).unwrap();
+    let path = tmp("corrupt.bin");
+    write_bin(&path, &m).unwrap();
+    // truncate the file
+    let data = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &data[..data.len() / 2]).unwrap();
+    assert!(read_bin(&path).is_err(), "truncated file not detected");
+}

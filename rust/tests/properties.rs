@@ -1,0 +1,195 @@
+//! Property-based invariants over randomized inputs (the mini-proptest
+//! harness in `util::quickcheck`).
+
+use hbp_spmv::formats::dense::allclose;
+use hbp_spmv::gen::random;
+use hbp_spmv::partition::PartitionConfig;
+use hbp_spmv::preprocess::group_ell::{export_all, PAD_ROW};
+use hbp_spmv::preprocess::reorder::{group_stddevs, is_permutation};
+use hbp_spmv::preprocess::{
+    build_hbp_parallel, build_hbp_with, DpReorder, HashReorder, IdentityReorder, Reorder,
+    SortReorder,
+};
+use hbp_spmv::prop_assert;
+use hbp_spmv::util::quickcheck::check;
+
+fn random_cfg(g: &mut hbp_spmv::util::quickcheck::Gen) -> PartitionConfig {
+    let warp = [2usize, 4, 8][g.usize_in(0, 3)];
+    let rows_per_block = warp * g.usize_in(1, 6);
+    let cols_per_block = [16usize, 32, 64][g.usize_in(0, 3)];
+    PartitionConfig { rows_per_block, cols_per_block, warp }
+}
+
+#[test]
+fn prop_hbp_structure_validates() {
+    check("hbp-validate", 60, |g| {
+        let rows = g.usize_in(1, 4 * g.size + 2);
+        let cols = g.usize_in(1, 4 * g.size + 2);
+        let m = random::power_law_rows(rows, cols, 2.0, (cols / 2).max(1), g.rng.next_u64());
+        let cfg = random_cfg(g);
+        let hbp = build_hbp_with(&m, cfg, &HashReorder::default());
+        hbp.validate().map_err(|e| format!("{e:#}"))?;
+        prop_assert!(hbp.nnz() == m.nnz(), "nnz {} != {}", hbp.nnz(), m.nnz());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_every_reorder_is_a_permutation() {
+    check("reorder-permutation", 80, |g| {
+        let n = g.usize_in(0, 8 * g.size + 1);
+        let lens: Vec<usize> = (0..n).map(|_| g.rng.power_law(2.0, 200)).collect();
+        let warp = [1usize, 4, 32][g.usize_in(0, 3)];
+        let strategies: Vec<Box<dyn Reorder>> = vec![
+            Box::new(HashReorder { seed: g.rng.next_u64() }),
+            Box::new(SortReorder),
+            Box::new(DpReorder::default()),
+            Box::new(IdentityReorder),
+        ];
+        for s in &strategies {
+            let o = s.order(&lens, warp);
+            prop_assert!(o.len() == n, "{}: wrong length", s.name());
+            prop_assert!(is_permutation(&o), "{}: not a permutation", s.name());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hash_bounded_on_any_block_and_improves_on_average() {
+    // Per-case, the hash may occasionally lose on small/odd blocks (the
+    // paper's own rajat30 improves only 5%); the Fig. 6 claim is about
+    // realistic block sizes *on average*. Property: (a) never a blow-up
+    // beyond 2x on any block of >= 8 warps; (b) the mean ratio across
+    // cases is a clear improvement.
+    let mut ratios = vec![];
+    check("hash-grouping-bounded", 40, |g| {
+        let n = 256 + g.usize_in(0, 16 * g.size + 64);
+        let lens: Vec<usize> = (0..n).map(|_| g.rng.power_law(1.8, 500)).collect();
+        let id: f64 = group_stddevs(&lens, &IdentityReorder.order(&lens, 32), 32)
+            .iter()
+            .sum();
+        let hash_order = HashReorder { seed: g.rng.next_u64() }.order(&lens, 32);
+        let hs: f64 = group_stddevs(&lens, &hash_order, 32).iter().sum();
+        // ratios collected outside; can't capture &mut in Fn, so recompute
+        prop_assert!(
+            hs <= id * 2.0 + 1.0,
+            "hash blew up grouping: {hs:.2} vs identity {id:.2} (n={n})"
+        );
+        Ok(())
+    });
+    // average-improvement half, deterministic seeds
+    for seed in 0..25u64 {
+        let mut rng = hbp_spmv::util::Rng::new(seed);
+        let n = 512;
+        let lens: Vec<usize> = (0..n).map(|_| rng.power_law(1.8, 500)).collect();
+        let id: f64 = group_stddevs(&lens, &IdentityReorder.order(&lens, 32), 32)
+            .iter()
+            .sum();
+        let hs: f64 = group_stddevs(&lens, &HashReorder { seed }.order(&lens, 32), 32)
+            .iter()
+            .sum();
+        ratios.push(hs / id.max(1e-9));
+    }
+    let mean = ratios.iter().sum::<f64>() / ratios.len() as f64;
+    assert!(
+        mean < 0.75,
+        "hash should cut mean group stddev by >25%: mean ratio {mean:.3}"
+    );
+}
+
+#[test]
+fn prop_engines_agree_with_dense_oracle() {
+    check("engine-oracle", 40, |g| {
+        let rows = g.usize_in(1, 3 * g.size + 2);
+        let cols = g.usize_in(1, 3 * g.size + 2);
+        let m = random::uniform(rows, cols, 0.2, g.rng.next_u64());
+        let cfg = random_cfg(g);
+        let x = random::vector(cols, g.rng.next_u64());
+        let dense = m.to_dense();
+        let expect = dense.spmv(&x);
+
+        let hbp = build_hbp_with(&m, cfg, &HashReorder::default());
+        let eng = hbp_spmv::exec::HbpEngine::new(hbp, g.usize_in(1, 5), g.f64_in(0.0, 1.0));
+        let mut y = vec![0.0; rows];
+        use hbp_spmv::exec::SpmvEngine;
+        eng.spmv(&x, &mut y);
+        prop_assert!(
+            allclose(&y, &expect, 1e-9, 1e-10),
+            "hbp engine diverged from dense oracle ({rows}x{cols})"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parallel_build_equals_serial() {
+    check("parallel-build", 30, |g| {
+        let rows = g.usize_in(1, 4 * g.size + 2);
+        let cols = g.usize_in(1, 4 * g.size + 2);
+        let m = random::power_law_rows(rows, cols, 2.2, (cols / 2).max(1), g.rng.next_u64());
+        let cfg = random_cfg(g);
+        let r = HashReorder { seed: 7 };
+        let serial = build_hbp_with(&m, cfg, &r);
+        let par = build_hbp_parallel(&m, cfg, &r, g.usize_in(2, 9));
+        prop_assert!(serial.col == par.col, "col arrays differ");
+        prop_assert!(serial.data == par.data, "data arrays differ");
+        prop_assert!(serial.output_hash == par.output_hash, "output_hash differs");
+        prop_assert!(serial.begin_ptr == par.begin_ptr, "begin_ptr differs");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_group_ell_export_reconstructs_spmv() {
+    check("group-ell-roundtrip", 30, |g| {
+        let rows = g.usize_in(1, 3 * g.size + 2);
+        let cols = g.usize_in(1, 3 * g.size + 2);
+        let m = random::uniform(rows, cols, 0.25, g.rng.next_u64());
+        let cfg = random_cfg(g);
+        let hbp = build_hbp_with(&m, cfg, &HashReorder::default());
+        let x = random::vector(cols, g.rng.next_u64());
+
+        let mut y = vec![0.0f64; rows];
+        for (blk, hb) in export_all(&hbp).iter().zip(&hbp.blocks) {
+            let (cs, ce) = hbp.grid.col_range(blk.bj as usize);
+            let xseg: Vec<f32> = x[cs..ce].iter().map(|&v| v as f32).collect();
+            let sums = hbp_spmv::preprocess::group_ell::block_spmv_ref(blk, &xseg);
+            let (rs, _) = hbp.grid.row_range(hb.bi as usize);
+            for (slot, &orig) in blk.slot_rows.iter().enumerate() {
+                if orig != PAD_ROW {
+                    y[rs + orig as usize] += sums[slot] as f64;
+                }
+            }
+        }
+        let mut expect = vec![0.0; rows];
+        m.spmv(&x, &mut expect);
+        prop_assert!(
+            allclose(&y, &expect, 1e-3, 1e-3),
+            "group-ELL reconstruction diverged"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sim_reports_are_positive_and_monotone() {
+    check("sim-sanity", 20, |g| {
+        let rows = g.usize_in(64, 16 * g.size + 128);
+        let m = random::power_law_rows(rows, rows, 2.0, (rows / 4).max(2), g.rng.next_u64());
+        let cfg = PartitionConfig::default();
+        let hbp = hbp_spmv::preprocess::build_hbp(&m, cfg);
+        let dev = hbp_spmv::sim::DeviceConfig::orin();
+        let r = hbp_spmv::sim::simulate_hbp(&hbp, &dev, 0.25);
+        prop_assert!(r.total_secs() > 0.0, "zero kernel time");
+        prop_assert!(r.dram_bytes > 0.0, "zero traffic");
+        prop_assert!(r.mem_busy(&dev) <= 1.0, "mem busy > 100%");
+        // a faster device can't be slower
+        let r2 = hbp_spmv::sim::simulate_hbp(&hbp, &hbp_spmv::sim::DeviceConfig::rtx4090(), 0.25);
+        prop_assert!(
+            r2.total_secs() <= r.total_secs() * 1.01,
+            "4090 slower than orin"
+        );
+        Ok(())
+    });
+}

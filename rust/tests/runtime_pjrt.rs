@@ -1,0 +1,178 @@
+//! PJRT runtime integration: load real AOT artifacts, execute the L1
+//! kernel + L2 composition, verify against the rust engines.
+//!
+//! Requires `make artifacts` (skips with a message otherwise — CI always
+//! builds artifacts first via the Makefile `test` target).
+
+use hbp_spmv::gen::{matrix_by_id, Scale};
+use hbp_spmv::partition::PartitionConfig;
+use hbp_spmv::preprocess::{build_hbp, HashReorder};
+use hbp_spmv::runtime::client::{literal_f32, literal_i32};
+use hbp_spmv::runtime::{artifacts_dir, ArtifactStore, PjrtSpmv};
+
+fn store() -> Option<ArtifactStore> {
+    match ArtifactStore::open(artifacts_dir()) {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!("SKIP: artifacts not built ({e:#}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+#[test]
+fn kernel_executable_matches_manual_compute() {
+    let Some(store) = store() else { return };
+    let meta = store.spmv_bucket_for(4).expect("smallest bucket").clone();
+    let exe = store.executable(&meta.name).unwrap();
+
+    // deterministic input: cols/vals with a known dot product
+    let g = meta.groups;
+    let (l, w, s) = (meta.lmax, meta.warp, meta.seg);
+    let mut cols = vec![0i32; g * l * w];
+    let mut vals = vec![0f32; g * l * w];
+    let mut xseg = vec![0f32; s];
+    for (i, x) in xseg.iter_mut().enumerate() {
+        *x = (i % 17) as f32 * 0.25;
+    }
+    let mut rng = 1u64;
+    for i in 0..g * l * w {
+        rng = rng.wrapping_mul(6364136223846793005).wrapping_add(1);
+        cols[i] = ((rng >> 33) % s as u64) as i32;
+        vals[i] = (((rng >> 11) % 1000) as f32 - 500.0) / 500.0;
+    }
+
+    let out = exe
+        .run_f32(&[
+            literal_i32(&cols, &[g as i64, l as i64, w as i64]).unwrap(),
+            literal_f32(&vals, &[g as i64, l as i64, w as i64]).unwrap(),
+            literal_f32(&xseg, &[s as i64]).unwrap(),
+        ])
+        .unwrap();
+    assert_eq!(out.len(), g * w);
+
+    // manual reference
+    for gi in 0..g {
+        for wi in 0..w {
+            let mut acc = 0f32;
+            for k in 0..l {
+                let idx = (gi * l + k) * w + wi;
+                acc += vals[idx] * xseg[cols[idx] as usize];
+            }
+            let got = out[gi * w + wi];
+            assert!(
+                (got - acc).abs() <= 1e-3 * acc.abs().max(1.0),
+                "mismatch at g={gi} w={wi}: {got} vs {acc}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_spmv_matches_rust_engine_on_suite() {
+    let Some(store) = store() else { return };
+    let cfg = PartitionConfig::default();
+    for id in ["m1", "m3"] {
+        let (_, m) = matrix_by_id(id, Scale::Ci).unwrap();
+        let hbp = build_hbp(&m, cfg);
+        let pjrt = PjrtSpmv::prepare(&store, &hbp).unwrap();
+        let x = hbp_spmv::gen::random::vector(m.cols, 3);
+        let mut y = vec![0.0; m.rows];
+        pjrt.spmv(&x, &mut y).unwrap();
+
+        let mut expect = vec![0.0; m.rows];
+        m.spmv(&x, &mut expect);
+        let max_rel = y
+            .iter()
+            .zip(&expect)
+            .map(|(a, b)| (a - b).abs() / b.abs().max(1.0))
+            .fold(0.0f64, f64::max);
+        assert!(max_rel < 1e-3, "{id}: PJRT path rel error {max_rel}");
+    }
+}
+
+#[test]
+fn batched_pjrt_matches_unbatched() {
+    let Some(store) = store() else { return };
+    // batch executables are only in the full artifact set
+    let has_batch = store.execs.iter().any(|e| e.kind == "spmv" && e.groups > store.groups);
+    if !has_batch {
+        eprintln!("SKIP: no batch executables (quick artifact build)");
+        return;
+    }
+    let (_, m) = matrix_by_id("m1", Scale::Ci).unwrap();
+    let hbp = build_hbp(&m, PartitionConfig::default());
+    let pjrt = PjrtSpmv::prepare(&store, &hbp).unwrap();
+    let x = hbp_spmv::gen::random::vector(m.cols, 5);
+    let mut y1 = vec![0.0; m.rows];
+    let mut y8 = vec![0.0; m.rows];
+    pjrt.spmv(&x, &mut y1).unwrap();
+    pjrt.spmv_batched(&x, &mut y8, 8).unwrap();
+    for (a, b) in y1.iter().zip(&y8) {
+        assert!((a - b).abs() <= 1e-4 * b.abs().max(1.0), "batched diverged: {a} vs {b}");
+    }
+}
+
+#[test]
+fn combine_executable_sums_partials() {
+    let Some(store) = store() else { return };
+    let Some(meta) = store.execs.iter().find(|e| e.kind == "combine") else {
+        eprintln!("SKIP: no combine executable in manifest");
+        return;
+    };
+    let exe = store.executable(&meta.name).unwrap();
+    // manifest combine is k8_r512
+    let (k, r) = (8usize, 512usize);
+    let parts: Vec<f32> = (0..k * r).map(|i| (i % 7) as f32 - 3.0).collect();
+    let out = exe
+        .run_f32(&[literal_f32(&parts, &[k as i64, r as i64]).unwrap()])
+        .unwrap();
+    assert_eq!(out.len(), r);
+    for (j, &o) in out.iter().enumerate() {
+        let expect: f32 = (0..k).map(|i| parts[i * r + j]).sum();
+        assert!((o - expect).abs() < 1e-4, "col {j}: {o} vs {expect}");
+    }
+}
+
+#[test]
+fn row_block_composition_executes() {
+    let Some(store) = store() else { return };
+    let Some(meta) = store
+        .execs
+        .iter()
+        .find(|e| e.kind == "row_block")
+        .cloned()
+    else {
+        eprintln!("SKIP: no row_block executable (quick artifact build)");
+        return;
+    };
+    let exe = store.executable(&meta.name).unwrap();
+    // row_block_nb4: [nb, g, l, w] + xsegs [nb, s] + inv_perm [nb, g*w]
+    let nb = 4usize;
+    let (g, l, w, s) = (meta.groups, meta.lmax, meta.warp, meta.seg);
+    let rows = g * w;
+    let cols = vec![0i32; nb * g * l * w];
+    let vals = vec![1f32; nb * g * l * w];
+    let mut xsegs = vec![0f32; nb * s];
+    for b in 0..nb {
+        xsegs[b * s] = (b + 1) as f32; // column 0 = b+1
+    }
+    // identity permutation per block
+    let inv_perm: Vec<i32> = (0..nb).flat_map(|_| (0..rows as i32)).collect();
+
+    let out = exe
+        .run_f32(&[
+            literal_i32(&cols, &[nb as i64, g as i64, l as i64, w as i64]).unwrap(),
+            literal_f32(&vals, &[nb as i64, g as i64, l as i64, w as i64]).unwrap(),
+            literal_f32(&xsegs, &[nb as i64, s as i64]).unwrap(),
+            literal_i32(&inv_perm, &[nb as i64, rows as i64]).unwrap(),
+        ])
+        .unwrap();
+    assert_eq!(out.len(), rows);
+    // every lane sums L copies of x[0] per block, then combine adds the
+    // blocks: expect L * (1+2+3+4)
+    let expect = (l * (1 + 2 + 3 + 4)) as f32;
+    for (i, &o) in out.iter().enumerate() {
+        assert!((o - expect).abs() < 1e-2, "row {i}: {o} vs {expect}");
+    }
+}

@@ -1,0 +1,145 @@
+//! Serving coordinator over real TCP: protocol round-trips, concurrent
+//! clients, error paths, metrics.
+
+use hbp_spmv::coordinator::server::{serve_background, Client};
+use hbp_spmv::coordinator::{BatcherConfig, Coordinator, Router};
+use hbp_spmv::partition::PartitionConfig;
+use hbp_spmv::util::json::{num_arr, obj, Json};
+use std::sync::Arc;
+
+fn start() -> (Arc<Coordinator>, std::net::SocketAddr, usize, usize) {
+    let mut router = Router::new(PartitionConfig::test_small(), 2);
+    let m = hbp_spmv::gen::random::power_law_rows(80, 60, 2.0, 20, 5);
+    let (rows, cols) = (m.rows, m.cols);
+    router.register("test", m).unwrap();
+    let c = Arc::new(Coordinator::new(router, BatcherConfig::default()));
+    let addr = serve_background(c.clone()).unwrap();
+    (c, addr, rows, cols)
+}
+
+#[test]
+fn tcp_spmv_round_trip_matches_local() {
+    let (c, addr, rows, cols) = start();
+    let x = hbp_spmv::gen::random::vector(cols, 9);
+    let mut client = Client::connect(addr).unwrap();
+    let y = client.spmv("test", &x).unwrap();
+    assert_eq!(y.len(), rows);
+    let local = c
+        .spmv("test", hbp_spmv::coordinator::EngineKind::Hbp, x.clone())
+        .unwrap();
+    for (a, b) in y.iter().zip(&local) {
+        assert!((a - b).abs() < 1e-9, "TCP result differs from local");
+    }
+}
+
+#[test]
+fn list_and_stats_endpoints() {
+    let (_c, addr, _rows, cols) = start();
+    let mut client = Client::connect(addr).unwrap();
+
+    let list = client.call(&obj(&[("op", Json::Str("list".into()))])).unwrap();
+    assert_eq!(list.get("ok"), Some(&Json::Bool(true)));
+    let mats = list.get("matrices").unwrap().as_arr().unwrap();
+    assert_eq!(mats.len(), 1);
+    assert_eq!(mats[0].req_str("name").unwrap(), "test");
+    assert_eq!(mats[0].req_usize("cols").unwrap(), cols);
+
+    // issue one request then read stats
+    let x = vec![0.5; cols];
+    client.spmv("test", &x).unwrap();
+    let stats = client.call(&obj(&[("op", Json::Str("stats".into()))])).unwrap();
+    assert_eq!(stats.get("ok"), Some(&Json::Bool(true)));
+    assert!(stats.get("stats").unwrap().req_usize("requests").unwrap() >= 1);
+}
+
+#[test]
+fn protocol_errors_do_not_kill_connection() {
+    let (_c, addr, _rows, cols) = start();
+    let mut client = Client::connect(addr).unwrap();
+
+    // bad JSON
+    let r = client.call(&Json::Str("not an object".into())).unwrap();
+    assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+
+    // unknown matrix
+    let r = client
+        .call(&obj(&[
+            ("op", Json::Str("spmv".into())),
+            ("matrix", Json::Str("ghost".into())),
+            ("x", num_arr(&[1.0])),
+        ]))
+        .unwrap();
+    assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+    assert!(r.req_str("error").unwrap().contains("ghost"));
+
+    // wrong dimension
+    let r = client
+        .call(&obj(&[
+            ("op", Json::Str("spmv".into())),
+            ("matrix", Json::Str("test".into())),
+            ("x", num_arr(&[1.0, 2.0])),
+        ]))
+        .unwrap();
+    assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+
+    // connection still alive after three errors
+    let x = vec![0.1; cols];
+    assert!(client.spmv("test", &x).is_ok());
+}
+
+#[test]
+fn concurrent_clients_are_isolated() {
+    let (c, addr, rows, cols) = start();
+    let n_clients = 6;
+    let per_client = 10;
+    std::thread::scope(|s| {
+        for cid in 0..n_clients {
+            s.spawn(move || {
+                let mut client = Client::connect(addr).unwrap();
+                for i in 0..per_client {
+                    let x = hbp_spmv::gen::random::vector(cols, (cid * 100 + i) as u64);
+                    let y = client.spmv("test", &x).unwrap();
+                    assert_eq!(y.len(), rows);
+                }
+            });
+        }
+    });
+    let snap = c.metrics.snapshot();
+    assert_eq!(snap.requests as usize, n_clients * per_client);
+    assert_eq!(snap.errors, 0);
+}
+
+#[test]
+fn engine_selection_via_protocol() {
+    let (_c, addr, rows, cols) = start();
+    let mut client = Client::connect(addr).unwrap();
+    let x = hbp_spmv::gen::random::vector(cols, 4);
+    let mut results = vec![];
+    for engine in ["hbp", "csr", "2d"] {
+        let r = client
+            .call(&obj(&[
+                ("op", Json::Str("spmv".into())),
+                ("matrix", Json::Str("test".into())),
+                ("engine", Json::Str(engine.into())),
+                ("x", num_arr(&x)),
+            ]))
+            .unwrap();
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{engine}");
+        let y: Vec<f64> = r
+            .get("y")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .collect();
+        assert_eq!(y.len(), rows);
+        results.push(y);
+    }
+    // all engines agree through the wire too
+    for w in results.windows(2) {
+        for (a, b) in w[0].iter().zip(&w[1]) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+}
