@@ -1,0 +1,48 @@
+# Three-layer build driver.
+#
+#   make build        — release build of the rust workspace (L3)
+#   make test         — tier-1 verify: cargo build --release && cargo test -q
+#   make test-python  — L1/L2 pytest suite (CPU jax; HYPOTHESIS_PROFILE=ci)
+#   make bench-smoke  — compile + fast-run all paper-figure benches at CI scale
+#   make artifacts    — AOT-lower the L1/L2 graphs to artifacts/ (HLO text)
+#   make clean        — drop build products
+
+CARGO  ?= cargo
+PYTHON ?= python3
+
+.PHONY: all build test test-python bench-smoke bench-build artifacts artifacts-quick clean
+
+all: build
+
+build:
+	$(CARGO) build --release
+
+# Tier-1 verify (ROADMAP.md): must exit 0.
+test:
+	$(CARGO) build --release
+	$(CARGO) test -q
+
+test-python:
+	HYPOTHESIS_PROFILE=ci JAX_PLATFORMS=cpu $(PYTHON) -m pytest python/tests -q
+
+# Compile every bench target without running (CI gate).
+bench-build:
+	$(CARGO) bench --no-run
+
+# Fast pass over all paper-figure benches: CI-scale matrices, quick timer.
+bench-smoke:
+	HBP_BENCH_FAST=1 HBP_BENCH_SCALE=ci $(CARGO) bench
+
+# Full AOT artifact set (all L buckets + batch executables).
+artifacts:
+	$(PYTHON) python/compile/aot.py --out artifacts
+
+# Reduced artifact set for quick local runs.
+artifacts-quick:
+	$(PYTHON) python/compile/aot.py --out artifacts --quick
+
+clean:
+	$(CARGO) clean
+	rm -rf artifacts python/.pytest_cache python/build python/dist
+	find python -name __pycache__ -type d -prune -exec rm -rf {} + 2>/dev/null || true
+	find python -name "*.egg-info" -type d -prune -exec rm -rf {} + 2>/dev/null || true

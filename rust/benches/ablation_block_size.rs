@@ -21,7 +21,10 @@ fn main() {
     let (meta, m) = common::load("m1");
     banner(
         "Ablation: block size",
-        &format!("matrix {} ({}) on the Orin model; paper default N=512, M=4096", meta.id, meta.name),
+        &format!(
+            "matrix {} ({}) on the Orin model; paper default N=512, M=4096",
+            meta.id, meta.name
+        ),
     );
 
     let mut t = Table::new(&[

@@ -100,10 +100,12 @@ fn main() {
         .median();
     println!("partials + combine: {:.3} ms", t_combine * 1e3);
     println!("atomic direct write: {:.3} ms", t_atomic * 1e3);
-    println!(
-        "paper's Discussion finding (atomicity costs more than combining): {}",
-        if t_atomic > t_combine { "reproduced" } else { "NOT reproduced at this scale" }
-    );
+    let finding = if t_atomic > t_combine {
+        "reproduced"
+    } else {
+        "NOT reproduced at this scale"
+    };
+    println!("paper's Discussion finding (atomicity costs more than combining): {finding}");
     // sanity: atomic path computes the same result
     let ya: Vec<f64> = y_atomic.iter().map(|c| f64::from_bits(c.load(Ordering::Relaxed))).collect();
     assert!(

@@ -61,7 +61,11 @@ fn main() {
             a.map(|v| v.to_string()).unwrap_or_else(|| "sampled".into()),
             format!("{:.3}", stddev_sum / groups.max(1) as f64),
             probes.to_string(),
-            if a.is_none() { "paper's method".into() } else { String::new() },
+            if a.is_none() {
+                "paper's method".into()
+            } else {
+                String::new()
+            },
         ]);
     }
     t.print();

@@ -1,4 +1,5 @@
 //! Shared bench helpers (included per-bench via `#[path]`).
+#![allow(dead_code)] // each bench uses a different subset of these helpers
 
 use hbp_spmv::gen::{matrix_by_id, Scale, SuiteMatrix};
 use hbp_spmv::formats::Csr;
@@ -31,10 +32,6 @@ pub fn load(id: &str) -> (&'static SuiteMatrix, Csr) {
 pub const ALL_IDS: [&str; 14] = [
     "m1", "m2", "m3", "m4", "m5", "m6", "m7", "m8", "m9", "m10", "m11", "m12", "m13", "m14",
 ];
-
-/// The RTX-4090 subset (paper: m4-m7 exceed the 4090's memory).
-pub const RTX4090_IDS: [&str; 10] =
-    ["m1", "m2", "m3", "m8", "m9", "m10", "m11", "m12", "m13", "m14"];
 
 pub fn threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)

@@ -35,7 +35,11 @@ fn main() {
             format!("{:.1}", s.mean),
             format!("{paper_mean:.1}"),
             format!("{}", s.max as usize),
-            if meta.symmetric { "yes".into() } else { "no".into() },
+            if meta.symmetric {
+                "yes".into()
+            } else {
+                "no".into()
+            },
         ]);
     }
     t.print();

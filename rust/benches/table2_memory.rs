@@ -16,6 +16,7 @@ use hbp_spmv::sim::{simulate_csr, simulate_hbp, DeviceConfig};
 use hbp_spmv::util::bench::{banner, Table};
 
 /// Table II rows with the paper's reported throughputs (CSR, HBP) GB/s.
+#[rustfmt::skip]
 const CASES: [(&str, f64, f64); 10] = [
     ("m1", 2.85, 145.12),
     ("m2", 3.29, 189.77),
@@ -55,6 +56,12 @@ fn main() {
         if got_order == paper_order {
             order_hits += 1;
         }
+        let order = if got_order { "yes" } else { "no" };
+        let marker = if got_order == paper_order {
+            " =paper"
+        } else {
+            " !paper"
+        };
         t.row(&[
             meta.id.into(),
             format!("{:.2}%", 100.0 * r_csr.mem_busy(&dev)),
@@ -63,7 +70,7 @@ fn main() {
             format!("{:.2}", r_hbp.mem_throughput_gbps()),
             format!("{p_csr:.2}"),
             format!("{p_hbp:.2}"),
-            format!("{}{}", if got_order { "yes" } else { "no" }, if got_order == paper_order { " =paper" } else { " !paper" }),
+            format!("{order}{marker}"),
         ]);
     }
     t.print();

@@ -191,8 +191,7 @@ impl Client {
         let resp = self.call(&req)?;
         anyhow::ensure!(
             resp.get("ok") == Some(&Json::Bool(true)),
-            "server error: {}",
-            resp.to_string()
+            "server error: {resp}"
         );
         resp.get("y")
             .and_then(Json::as_arr)

@@ -57,7 +57,7 @@ pub fn combine(hbp: &Hbp, partials: &[f64], y: &mut [f64], threads: usize) {
         return;
     }
     let by_bi = blocks_by_row_block(hbp);
-    let threads = threads.max(1).min(hbp.grid.row_blocks);
+    let threads = threads.clamp(1, hbp.grid.row_blocks.max(1));
     let shared = SharedMut::new(y);
     std::thread::scope(|s| {
         for w in 0..threads {

@@ -39,7 +39,12 @@ impl Coo {
     }
 
     pub fn push(&mut self, r: usize, c: usize, v: f64) {
-        debug_assert!(r < self.rows && c < self.cols, "({r},{c}) out of {}x{}", self.rows, self.cols);
+        debug_assert!(
+            r < self.rows && c < self.cols,
+            "({r},{c}) out of {}x{}",
+            self.rows,
+            self.cols
+        );
         self.row.push(r as u32);
         self.col.push(c as u32);
         self.data.push(v);

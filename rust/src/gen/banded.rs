@@ -72,7 +72,11 @@ pub fn banded(cfg: &BandedConfig) -> Csr {
         for &o in fixed.iter().take(target) {
             let c = r as i64 + o;
             if c >= 0 && (c as usize) < n && placed.insert(c) {
-                let v = if o == 0 { 4.0 + rng.f64() } else { rng.range_f64(-1.0, 0.0) };
+                let v = if o == 0 {
+                    4.0 + rng.f64()
+                } else {
+                    rng.range_f64(-1.0, 0.0)
+                };
                 coo.push(r, c as usize, v);
             }
         }

@@ -66,7 +66,6 @@ pub fn block_dense(cfg: &BlockDenseConfig) -> Csr {
         }
     }
 
-    let mut coo = coo;
     coo.normalize(); // dedup overlapping upper-triangle picks first
     coo.symmetrize();
     coo.to_csr()

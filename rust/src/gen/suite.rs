@@ -74,6 +74,7 @@ pub enum Family {
 }
 
 /// The 14 Table I matrices.
+#[rustfmt::skip]
 pub const SUITE: [SuiteMatrix; 14] = [
     SuiteMatrix { id: "m1", name: "ASIC_320k", paper_rows: 321_000, paper_nnz: 1_900_000, symmetric: false, family: Family::Circuit },
     SuiteMatrix { id: "m2", name: "ASIC_680k", paper_rows: 682_000, paper_nnz: 3_800_000, symmetric: false, family: Family::Circuit },

@@ -65,7 +65,7 @@ impl NonlinearHash {
     /// rows clamp to bucket 8 and are "treated as rows assigned to 8".
     #[inline]
     pub fn aggregate(&self, nnz: usize) -> usize {
-        ((nnz >> self.params.a) as usize).min(NUM_BUCKETS - 1)
+        (nnz >> self.params.a).min(NUM_BUCKETS - 1)
     }
 
     /// **Dispersion**: spread bucket `k` to table region `[k*c, (k+1)*c)`.

@@ -44,7 +44,12 @@ pub fn read_matrix_market_str(text: &str) -> Result<Coo> {
 fn parse<R: BufRead>(mut r: R) -> Result<Coo> {
     let mut header = String::new();
     r.read_line(&mut header).context("reading header")?;
-    let h: Vec<String> = header.trim().to_ascii_lowercase().split_whitespace().map(String::from).collect();
+    let h: Vec<String> = header
+        .trim()
+        .to_ascii_lowercase()
+        .split_whitespace()
+        .map(String::from)
+        .collect();
     if h.len() < 5 || !h[0].starts_with("%%matrixmarket") {
         bail!("not a MatrixMarket file: {header:?}");
     }
@@ -113,7 +118,11 @@ fn parse<R: BufRead>(mut r: R) -> Result<Coo> {
         }
         coo.push(i - 1, j - 1, v);
         if symmetry != Symmetry::General && i != j {
-            let mirrored = if symmetry == Symmetry::SkewSymmetric { -v } else { v };
+            let mirrored = if symmetry == Symmetry::SkewSymmetric {
+                -v
+            } else {
+                v
+            };
             coo.push(j - 1, i - 1, mirrored);
         }
         seen += 1;
@@ -188,9 +197,11 @@ mod tests {
 
     #[test]
     fn rejects_array_format_and_bad_header() {
-        assert!(read_matrix_market_str("%%MatrixMarket matrix array real general\n2 2\n1\n2\n3\n4\n").is_err());
+        let array = "%%MatrixMarket matrix array real general\n2 2\n1\n2\n3\n4\n";
+        assert!(read_matrix_market_str(array).is_err());
         assert!(read_matrix_market_str("not a header\n1 1 0\n").is_err());
-        assert!(read_matrix_market_str("%%MatrixMarket matrix coordinate complex general\n1 1 1\n1 1 1 0\n").is_err());
+        let complex = "%%MatrixMarket matrix coordinate complex general\n1 1 1\n1 1 1 0\n";
+        assert!(read_matrix_market_str(complex).is_err());
     }
 
     #[test]

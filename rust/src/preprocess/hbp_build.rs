@@ -98,7 +98,10 @@ impl Hbp {
             let oh = &self.output_hash[b.slot_start..b.slot_start + b.nrows];
             let mut seen = vec![false; b.nrows];
             for &r in oh {
-                anyhow::ensure!((r as usize) < b.nrows && !seen[r as usize], "block {i} output_hash not a permutation");
+                anyhow::ensure!(
+                    (r as usize) < b.nrows && !seen[r as usize],
+                    "block {i} output_hash not a permutation"
+                );
                 seen[r as usize] = true;
             }
             // add_sign chains cover exactly the block's element range

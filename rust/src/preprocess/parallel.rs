@@ -21,7 +21,7 @@ pub fn build_hbp_parallel(
     cfg.validate().expect("invalid partition config");
     let grid = BlockGrid::new(m.rows, m.cols, cfg);
     let views = block_views(m, &grid);
-    let threads = threads.max(1).min(views.len().max(1));
+    let threads = threads.clamp(1, views.len().max(1));
 
     let empty = |grid: BlockGrid| Hbp {
         rows: m.rows,

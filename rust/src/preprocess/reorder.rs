@@ -193,7 +193,8 @@ impl Reorder for DpReorder {
         let mut cut = vec![0usize; n + 1];
         dp[n] = 0;
         for i in (0..n).rev() {
-            let longest = row_nnz[idx[i] as usize] as u64; // descending => max of any group starting at i
+            // descending => max of any group starting at i
+            let longest = row_nnz[idx[i] as usize] as u64;
             let mut size = warp;
             while size <= max_group {
                 let j = (i + size).min(n);

@@ -71,10 +71,9 @@ impl<'a> PjrtSpmv<'a> {
         let seg = self.store.seg;
         // batch executables have groups == nb * G and seg == nb * S
         let has_batch = |l: usize| {
-            self.store
-                .execs
-                .iter()
-                .any(|e| e.kind == "spmv" && e.groups == nb * g1 && e.lmax >= l && e.seg == nb * seg)
+            self.store.execs.iter().any(|e| {
+                e.kind == "spmv" && e.groups == nb * g1 && e.lmax >= l && e.seg == nb * seg
+            })
         };
         if nb <= 1 || !has_batch(4) {
             return self.spmv(x, y);
@@ -108,7 +107,9 @@ impl<'a> PjrtSpmv<'a> {
                 .store
                 .execs
                 .iter()
-                .find(|e| e.kind == "spmv" && e.groups == nb * g1 && e.lmax == meta_l && e.seg == nb * seg)
+                .find(|e| {
+                    e.kind == "spmv" && e.groups == nb * g1 && e.lmax == meta_l && e.seg == nb * seg
+                })
                 .context("batch executable vanished")?;
             let exe = self.store.executable(&exe_meta.name)?;
             for chunk in idxs.chunks(nb) {

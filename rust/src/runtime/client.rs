@@ -8,6 +8,18 @@
 use anyhow::{Context, Result};
 use std::path::Path;
 
+// Offline builds route the `xla::` paths below to the API-compatible stub;
+// the `xla` feature switches back to the real crate once it is vendored.
+#[cfg(not(feature = "xla"))]
+use super::xla_stub as xla;
+
+#[cfg(feature = "xla")]
+compile_error!(
+    "the `xla` feature requires vendoring the real xla crate and declaring it \
+     as a dependency in rust/Cargo.toml; the default (offline) build uses the \
+     stub in src/runtime/xla_stub.rs"
+);
+
 /// A PJRT runtime instance (one CPU client + compiled executables).
 pub struct Runtime {
     client: xla::PjRtClient,

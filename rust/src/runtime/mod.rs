@@ -12,6 +12,11 @@
 pub mod artifact;
 pub mod client;
 pub mod block_exec;
+// `pub` (not `pub(crate)`) because client.rs exposes stub types like
+// `Literal` in public signatures; doc(hidden) keeps it out of the API docs.
+#[cfg(not(feature = "xla"))]
+#[doc(hidden)]
+pub mod xla_stub;
 
 pub use artifact::{ArtifactStore, ExecMeta};
 pub use block_exec::PjrtSpmv;

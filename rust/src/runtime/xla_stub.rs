@@ -1,0 +1,206 @@
+//! Offline stand-in for the `xla` PJRT bindings.
+//!
+//! The runtime layer ([`super::client`]) is written against the `xla`
+//! crate's API (`PjRtClient` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `compile` → `execute`). That crate is not
+//! available in the offline build, so this module mirrors the exact type
+//! surface the client uses: literal construction works for real (it is pure
+//! host-side data plumbing, unit-tested in `client.rs`), while client
+//! creation fails with a clear diagnostic — every artifact-dependent test
+//! and example detects that error and skips, exactly as it would when
+//! `make artifacts` has not been run.
+//!
+//! Enabling the `xla` cargo feature switches [`super::client`] back to the
+//! real crate (which must then be vendored or cached).
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type standing in for `xla::Error`.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla (stub): {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error(
+        "PJRT backend not built into this binary; rebuild with the `xla` \
+         feature and a vendored xla crate"
+            .to_string(),
+    ))
+}
+
+/// Stub PJRT client: construction always fails, so no executable can exist.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+/// Parsed HLO module (never constructed by the stub).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+/// XLA computation handle.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Compiled executable handle (never constructed by the stub).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+/// Device buffer handle (never constructed by the stub).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+/// Element types a [`Literal`] can hold (implementation detail).
+#[doc(hidden)]
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Host-side literal: fully functional (the only stub type real code paths
+/// construct — `literal_f32` / `literal_i32` in the client are unit-tested).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    payload: Payload,
+    dims: Vec<i64>,
+}
+
+/// Types storable in a [`Literal`].
+pub trait NativeType: Sized {
+    fn wrap(data: &[Self]) -> Payload;
+    fn unwrap(payload: &Payload) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(data: &[f32]) -> Payload {
+        Payload::F32(data.to_vec())
+    }
+    fn unwrap(payload: &Payload) -> Option<Vec<f32>> {
+        match payload {
+            Payload::F32(v) => Some(v.clone()),
+            Payload::I32(_) => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: &[i32]) -> Payload {
+        Payload::I32(data.to_vec())
+    }
+    fn unwrap(payload: &Payload) -> Option<Vec<i32>> {
+        match payload {
+            Payload::I32(v) => Some(v.clone()),
+            Payload::F32(_) => None,
+        }
+    }
+}
+
+impl Literal {
+    fn len(&self) -> usize {
+        match &self.payload {
+            Payload::F32(v) => v.len(),
+            Payload::I32(v) => v.len(),
+        }
+    }
+
+    /// Rank-1 literal from a flat slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { dims: vec![data.len() as i64], payload: T::wrap(data) }
+    }
+
+    /// Reshape; the element count must match the new dims' product.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.len() {
+            return Err(Error(format!(
+                "reshape: {} elements do not fit dims {dims:?}",
+                self.len()
+            )));
+        }
+        Ok(Literal { payload: self.payload.clone(), dims: dims.to_vec() })
+    }
+
+    /// Unwrap a 1-tuple result (identity in the stub).
+    #[allow(clippy::wrong_self_convention)] // mirrors the real xla crate's consuming API
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Ok(self)
+    }
+
+    /// Read back as a flat vector of `T`.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.payload)
+            .ok_or_else(|| Error("literal element type mismatch".to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_is_unavailable_with_clear_message() {
+        let err = PjRtClient::cpu().err().expect("stub must not create clients");
+        assert!(format!("{err}").contains("xla"));
+    }
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3]).is_err());
+        assert!(r.to_vec::<i32>().is_err());
+    }
+}

@@ -101,7 +101,12 @@ pub fn simulate_csr(m: &Csr, dev: &DeviceConfig) -> SimReport {
 /// task per *block*; `coalesced` selects the HBP round-major layout
 /// (streamed element loads) vs the plain-2D row-major layout (scattered
 /// element gathers + divergent rounds computed from *natural* order).
-fn simulate_blocks(hbp: &Hbp, dev: &DeviceConfig, coalesced: bool, competitive_frac: f64) -> SimReport {
+fn simulate_blocks(
+    hbp: &Hbp,
+    dev: &DeviceConfig,
+    coalesced: bool,
+    competitive_frac: f64,
+) -> SimReport {
     let w = hbp.grid.cfg.warp;
     let mut tasks = Vec::with_capacity(hbp.blocks.len());
     let mut total = MemTraffic::default();

@@ -50,7 +50,12 @@ mod tests {
 
     #[test]
     fn derived_metrics() {
-        let r = SimReport { spmv_secs: 1.0, combine_secs: 1.0, dram_bytes: 200e9, nnz: 1_000_000_000 };
+        let r = SimReport {
+            spmv_secs: 1.0,
+            combine_secs: 1.0,
+            dram_bytes: 200e9,
+            nnz: 1_000_000_000,
+        };
         assert!((r.gflops() - 1.0).abs() < 1e-9);
         assert!((r.mem_throughput_gbps() - 100.0).abs() < 1e-9);
         let dev = DeviceConfig::orin(); // 204.8 GB/s

@@ -32,7 +32,12 @@ pub fn cg(
 
     for it in 0..max_iter {
         if rs.sqrt() / b_norm < tol {
-            return SolveStats { iterations: it, residual: rs.sqrt() / b_norm, converged: true, spmv_secs };
+            return SolveStats {
+                iterations: it,
+                residual: rs.sqrt() / b_norm,
+                converged: true,
+                spmv_secs,
+            };
         }
         let t = Timer::start();
         a.spmv(&p, &mut ap);

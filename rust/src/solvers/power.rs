@@ -91,7 +91,10 @@ pub fn pagerank(
             *r = nv;
         }
         if delta < tol {
-            return (rank, SolveStats { iterations: it + 1, residual: delta, converged: true, spmv_secs });
+            return (
+                rank,
+                SolveStats { iterations: it + 1, residual: delta, converged: true, spmv_secs },
+            );
         }
     }
     (rank, SolveStats { iterations: max_iter, residual: f64::NAN, converged: false, spmv_secs })

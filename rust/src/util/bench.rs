@@ -97,7 +97,14 @@ impl Table {
         self.rows.push(cells.to_vec());
     }
 
-    pub fn to_string(&self) -> String {
+    pub fn print(&self) {
+        print!("{self}");
+    }
+}
+
+/// Column-aligned rendering; `table.to_string()` comes from this impl.
+impl std::fmt::Display for Table {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
         for row in &self.rows {
             for (i, c) in row.iter().enumerate() {
@@ -123,11 +130,7 @@ impl Table {
         for row in &self.rows {
             out.push_str(&fmt_row(row, &widths));
         }
-        out
-    }
-
-    pub fn print(&self) {
-        print!("{}", self.to_string());
+        f.write_str(&out)
     }
 }
 

@@ -76,13 +76,6 @@ impl Json {
             .with_context(|| format!("missing numeric field {key:?}"))
     }
 
-    /// Serialize (compact).
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s);
-        s
-    }
-
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -137,6 +130,15 @@ impl Json {
     }
 }
 
+/// Compact serialization; `value.to_string()` comes from this impl.
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
+    }
+}
+
 /// Build an object from pairs (protocol convenience).
 pub fn obj(pairs: &[(&str, Json)]) -> Json {
     Json::Obj(pairs.iter().map(|(k, v)| (k.to_string(), v.clone())).collect())
@@ -152,7 +154,7 @@ struct Parser<'a> {
     i: usize,
 }
 
-impl<'a> Parser<'a> {
+impl Parser<'_> {
     fn ws(&mut self) {
         while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
             self.i += 1;

@@ -1,9 +1,10 @@
 //! Support substrate: PRNG, statistics, timing, CLI parsing, bench harness
 //! and a miniature property-testing framework.
 //!
-//! The build environment is fully offline with only `xla` and `anyhow`
-//! cached, so everything that would normally come from `rand`, `clap`,
-//! `criterion` or `proptest` is implemented here.
+//! The build environment is fully offline (`anyhow` is a vendored shim in
+//! `vendor/anyhow`; the `xla` bindings are stubbed behind a feature), so
+//! everything that would normally come from `rand`, `clap`, `criterion` or
+//! `proptest` is implemented here.
 
 pub mod rng;
 pub mod stats;

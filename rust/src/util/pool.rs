@@ -68,12 +68,13 @@ impl WorkerPool {
         let gen = {
             let mut job = self.shared.job.lock().unwrap();
             job.0 += 1;
-            // SAFETY: we erase the lifetime; `work` outlives this call
+            let local: &(dyn Fn(usize, &mut WorkerStats) + Sync) = &work;
+            // SAFETY: we erase the closure's lifetime to the pointer's
+            // implicit 'static bound; `work` outlives every worker's use
             // because we block on the done condvar below before returning.
+            #[allow(clippy::useless_transmute, clippy::missing_transmute_annotations)]
             let erased: *const (dyn Fn(usize, &mut WorkerStats) + Sync) =
-                &work as &(dyn Fn(usize, &mut WorkerStats) + Sync);
-            let erased: *const (dyn Fn(usize, &mut WorkerStats) + Sync) =
-                unsafe { std::mem::transmute(erased) };
+                unsafe { std::mem::transmute(local) };
             job.1 = Some(Job { work: erased });
             self.shared.job_cv.notify_all();
             job.0

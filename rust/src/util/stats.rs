@@ -24,8 +24,12 @@ impl Stats {
         let mut min = f64::INFINITY;
         let mut max = f64::NEG_INFINITY;
         for &x in xs {
-            if x < min { min = x; }
-            if x > max { max = x; }
+            if x < min {
+                min = x;
+            }
+            if x > max {
+                max = x;
+            }
         }
         Stats { n, mean, std: var.sqrt(), min, max }
     }
@@ -84,18 +88,34 @@ impl Welford {
         let d = x - self.mean;
         self.mean += d / self.n as f64;
         self.m2 += d * (x - self.mean);
-        if x < self.min { self.min = x; }
-        if x > self.max { self.max = x; }
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
     }
 
-    pub fn count(&self) -> u64 { self.n }
-    pub fn mean(&self) -> f64 { self.mean }
-    pub fn min(&self) -> f64 { self.min }
-    pub fn max(&self) -> f64 { self.max }
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
 
     /// Population standard deviation.
     pub fn std(&self) -> f64 {
-        if self.n == 0 { 0.0 } else { (self.m2 / self.n as f64).sqrt() }
+        if self.n == 0 {
+            0.0
+        } else {
+            (self.m2 / self.n as f64).sqrt()
+        }
     }
 }
 
@@ -121,7 +141,9 @@ impl Histogram {
         self.total += 1;
     }
 
-    pub fn total(&self) -> u64 { self.total }
+    pub fn total(&self) -> u64 {
+        self.total
+    }
 
     /// Approximate quantile from bucket boundaries (upper bound of the
     /// bucket containing the q-quantile).
@@ -134,7 +156,11 @@ impl Histogram {
         for (i, &c) in self.counts.iter().enumerate() {
             acc += c;
             if acc >= target {
-                return if i < self.bounds.len() { self.bounds[i] } else { f64::INFINITY };
+                return if i < self.bounds.len() {
+                    self.bounds[i]
+                } else {
+                    f64::INFINITY
+                };
             }
         }
         f64::INFINITY

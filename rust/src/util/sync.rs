@@ -17,8 +17,8 @@ pub struct SharedMut<'a, T> {
 
 // SAFETY: all mutation goes through `write`/`slice_mut`, whose contracts
 // require disjoint index ranges across threads.
-unsafe impl<'a, T: Send> Sync for SharedMut<'a, T> {}
-unsafe impl<'a, T: Send> Send for SharedMut<'a, T> {}
+unsafe impl<T: Send> Sync for SharedMut<'_, T> {}
+unsafe impl<T: Send> Send for SharedMut<'_, T> {}
 
 impl<'a, T> SharedMut<'a, T> {
     pub fn new(slice: &'a mut [T]) -> Self {

@@ -1,0 +1,108 @@
+//! End-to-end CLI smoke test: `hbp gen` a suite matrix into a temp dir,
+//! then `hbp info` and `hbp spmv --engine hbp --verify` on the produced
+//! file. Exercises the binary the way the README tells a user to.
+
+use std::path::PathBuf;
+use std::process::{Command, Output};
+
+fn hbp() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_hbp"))
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("hbp_cli_smoke_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn assert_success(out: &Output, what: &str) -> String {
+    assert!(
+        out.status.success(),
+        "{what} failed (status {:?})\nstdout: {}\nstderr: {}",
+        out.status.code(),
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+#[test]
+fn gen_info_spmv_roundtrip() {
+    let dir = tmpdir("roundtrip");
+    let bin = dir.join("m1.bin");
+    let bin_str = bin.to_str().unwrap();
+
+    // gen: write the m1 (ASIC_320k profile) CI-scale matrix to a file
+    let out = hbp()
+        .args(["gen", "--matrix", "m1", "--scale", "ci", "--out", bin_str])
+        .output()
+        .expect("spawning hbp gen");
+    let stdout = assert_success(&out, "hbp gen m1");
+    assert!(stdout.contains("m1"), "gen output missing matrix id: {stdout}");
+    assert!(bin.exists(), "gen did not write {bin_str}");
+
+    // info: structural statistics from the generated file
+    let out = hbp()
+        .args(["info", "--matrix", bin_str])
+        .output()
+        .expect("spawning hbp info");
+    let stdout = assert_success(&out, "hbp info");
+    assert!(stdout.contains("nnz"), "info output missing nnz: {stdout}");
+    assert!(stdout.contains("2D blocks"), "info output missing block count: {stdout}");
+
+    // spmv: HBP engine with verification against serial CSR
+    let out = hbp()
+        .args([
+            "spmv", "--matrix", bin_str, "--engine", "hbp", "--iters", "2", "--verify",
+        ])
+        .output()
+        .expect("spawning hbp spmv");
+    let stdout = assert_success(&out, "hbp spmv --engine hbp --verify");
+    assert!(
+        stdout.contains("verify vs serial CSR: OK"),
+        "HBP output did not verify against CSR: {stdout}"
+    );
+}
+
+#[test]
+fn gen_mtx_output_and_csr_engine() {
+    let dir = tmpdir("mtx");
+    let mtx = dir.join("m3.mtx");
+    let mtx_str = mtx.to_str().unwrap();
+
+    let out = hbp()
+        .args(["gen", "--matrix", "m3", "--scale", "ci", "--out", mtx_str])
+        .output()
+        .expect("spawning hbp gen");
+    assert_success(&out, "hbp gen m3 (.mtx)");
+    assert!(mtx.exists());
+
+    let out = hbp()
+        .args([
+            "spmv", "--matrix", mtx_str, "--engine", "csr", "--iters", "1", "--verify",
+        ])
+        .output()
+        .expect("spawning hbp spmv csr");
+    let stdout = assert_success(&out, "hbp spmv --engine csr --verify");
+    assert!(stdout.contains("verify vs serial CSR: OK"), "csr engine failed verify: {stdout}");
+}
+
+#[test]
+fn help_succeeds_and_unknown_subcommand_fails() {
+    let out = hbp().arg("help").output().expect("spawning hbp help");
+    let stdout = assert_success(&out, "hbp help");
+    assert!(stdout.contains("SUBCOMMANDS"), "help text missing: {stdout}");
+
+    let out = hbp().arg("frobnicate").output().expect("spawning hbp frobnicate");
+    assert!(!out.status.success(), "unknown subcommand must exit nonzero");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("unknown subcommand"), "missing error: {stderr}");
+}
+
+#[test]
+fn missing_matrix_argument_is_an_error() {
+    let out = hbp().arg("info").output().expect("spawning hbp info (no args)");
+    assert!(!out.status.success(), "info without --matrix must fail");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("--matrix"), "error should name the flag: {stderr}");
+}

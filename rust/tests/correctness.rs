@@ -65,7 +65,7 @@ fn classic_formats_agree_on_small_matrices() {
 fn engines_handle_pathological_shapes() {
     let threads = 3;
     let cfg = PartitionConfig::test_small();
-    let cases = vec![
+    let cases = [
         // single row, wide
         hbp_spmv::gen::random::with_row_lengths(&[50], 100, 1),
         // single dense column domination
