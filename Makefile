@@ -4,13 +4,14 @@
 #   make test         — tier-1 verify: cargo build --release && cargo test -q
 #   make test-python  — L1/L2 pytest suite (CPU jax; HYPOTHESIS_PROFILE=ci)
 #   make bench-smoke  — compile + fast-run all paper-figure benches at CI scale
+#   make bench-preprocess — fig7 preprocessing bench at CI scale, JSON datapoint
 #   make artifacts    — AOT-lower the L1/L2 graphs to artifacts/ (HLO text)
 #   make clean        — drop build products
 
 CARGO  ?= cargo
 PYTHON ?= python3
 
-.PHONY: all build test test-python bench-smoke bench-build artifacts artifacts-quick clean
+.PHONY: all build test test-python bench-smoke bench-build bench-preprocess artifacts artifacts-quick clean
 
 all: build
 
@@ -32,6 +33,14 @@ bench-build:
 # Fast pass over all paper-figure benches: CI-scale matrices, quick timer.
 bench-smoke:
 	HBP_BENCH_FAST=1 HBP_BENCH_SCALE=ci $(CARGO) bench
+
+# Preprocessing perf datapoint: fig7 at CI scale, JSON to BENCH_preprocess.json
+# (committed baseline + per-PR CI artifact; schema in README).
+# HBP_BENCH_JSON must be absolute: cargo runs bench binaries with
+# cwd = the package root (rust/), not the repo root.
+bench-preprocess:
+	HBP_BENCH_FAST=1 HBP_BENCH_SCALE=ci HBP_BENCH_JSON=$(CURDIR)/BENCH_preprocess.json \
+		$(CARGO) bench --bench fig7_preprocess
 
 # Full AOT artifact set (all L buckets + batch executables).
 artifacts:

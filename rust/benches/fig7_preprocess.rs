@@ -4,42 +4,60 @@
 //! Paper result: HBP is 3.53x faster than sort2D on average (max 7.23x)
 //! and 3.67x faster than DP2D (max 7.67x).
 //!
-//! What is timed: the **row-reordering step** over every non-empty block
-//! — the paper's object of comparison (Algorithm 2's nnz counting and
-//! the format conversion are identical across methods and run before /
-//! after it unchanged). A full-build column is reported for context.
+//! Two things are timed per matrix:
+//! - the **row-reordering step** over every non-empty block — the
+//!   paper's object of comparison (the plan pass and the fill pass are
+//!   identical across methods and run before/after it unchanged);
+//! - the **full plan/fill build** per strategy, serial and parallel —
+//!   the end-to-end conversion cost an iterative solver actually pays.
+//!
+//! With `HBP_BENCH_JSON=<path>` the per-matrix numbers are written as a
+//! JSON datapoint (the `make bench-preprocess` artifact; schema in
+//! README "Preprocessing pipeline").
 
 #[path = "common/mod.rs"]
 mod common;
 
 use hbp_spmv::partition::{block_views, BlockGrid, PartitionConfig};
 use hbp_spmv::preprocess::{
-    build_hbp_parallel, DpReorder, HashReorder, Reorder, SortReorder,
+    build_hbp_parallel, build_hbp_with, DpReorder, HashReorder, Reorder, SortReorder,
 };
 use hbp_spmv::util::bench::{banner, Bench, Table};
+use hbp_spmv::util::json::{obj, Json};
 use hbp_spmv::util::stats::geomean;
 
 fn main() {
     let b = Bench::from_env();
     let threads = common::threads();
     let cfg = PartitionConfig::default();
+    let json_path = std::env::var("HBP_BENCH_JSON").ok();
     banner(
         "Fig 7",
         &format!(
-            "Reordering time ratio vs HBP over all blocks (scale={}, serial per-block as on-device); \
-             paper avg: sort2D 3.53x, DP2D 3.67x",
+            "Reordering time ratio vs HBP over all blocks (scale={}, serial per-block as \
+             on-device) + full plan/fill build times; paper avg: sort2D 3.53x, DP2D 3.67x",
             common::scale_name(common::bench_scale()),
         ),
     );
     let mut t = Table::new(&[
-        "id", "hbp", "sort2d", "dp2d", "sort2d/hbp", "dp2d/hbp", "full build(hbp)",
+        "id",
+        "hbp",
+        "sort2d",
+        "dp2d",
+        "sort2d/hbp",
+        "dp2d/hbp",
+        "build serial",
+        "build par",
+        "par speedup",
     ]);
     let mut sort_ratios = vec![];
     let mut dp_ratios = vec![];
+    let mut par_speedups = vec![];
+    let mut matrices = vec![];
     for id in common::ALL_IDS {
         let (meta, m) = common::load(id);
         let grid = BlockGrid::new(m.rows, m.cols, cfg);
-        // Algorithm 2's data preparation (shared by all strategies):
+        // the plan pass's per-block lengths (shared by all strategies):
         let lens: Vec<Vec<usize>> = block_views(&m, &grid)
             .iter()
             .map(|v| v.row_nnz())
@@ -47,9 +65,12 @@ fn main() {
 
         let time_reorder = |s: &dyn Reorder| {
             b.run(s.name(), || {
+                // reused scratch, as in the fill path
+                let mut out = Vec::new();
                 let mut acc = 0usize;
                 for l in &lens {
-                    acc += s.order(l, cfg.warp).len();
+                    s.order_into(&mut out, l, cfg.warp);
+                    acc += out.len();
                 }
                 acc
             })
@@ -59,12 +80,14 @@ fn main() {
         let h = time_reorder(&hash);
         let s = time_reorder(&SortReorder);
         let d = time_reorder(&DpReorder::default());
-        let full = b
-            .run("full", || build_hbp_parallel(&m, cfg, &hash, threads))
+        let serial = b.run("build-serial", || build_hbp_with(&m, cfg, &hash)).median();
+        let par = b
+            .run("build-parallel", || build_hbp_parallel(&m, cfg, &hash, threads))
             .median();
 
         sort_ratios.push(s / h);
         dp_ratios.push(d / h);
+        par_speedups.push(serial / par);
         t.row(&[
             meta.id.into(),
             format!("{:.3} ms", h * 1e3),
@@ -72,8 +95,33 @@ fn main() {
             format!("{:.3} ms", d * 1e3),
             format!("{:.2}x", s / h),
             format!("{:.2}x", d / h),
-            format!("{:.2} ms", full * 1e3),
+            format!("{:.2} ms", serial * 1e3),
+            format!("{:.2} ms", par * 1e3),
+            format!("{:.2}x", serial / par),
         ]);
+        if json_path.is_some() {
+            // the sort2D/DP2D *full* builds are recorded only for the
+            // JSON datapoint — skip the extra work on plain bench runs
+            let sort_full = b
+                .run("build-sort2d", || build_hbp_with(&m, cfg, &SortReorder))
+                .median();
+            let dp_full = b
+                .run("build-dp2d", || build_hbp_with(&m, cfg, &DpReorder::default()))
+                .median();
+            matrices.push(obj(&[
+                ("id", Json::Str(meta.id.to_string())),
+                ("rows", Json::Num(m.rows as f64)),
+                ("cols", Json::Num(m.cols as f64)),
+                ("nnz", Json::Num(m.nnz() as f64)),
+                ("reorder_hbp_secs", Json::Num(h)),
+                ("reorder_sort2d_secs", Json::Num(s)),
+                ("reorder_dp2d_secs", Json::Num(d)),
+                ("build_serial_secs", Json::Num(serial)),
+                ("build_parallel_secs", Json::Num(par)),
+                ("build_sort2d_secs", Json::Num(sort_full)),
+                ("build_dp2d_secs", Json::Num(dp_full)),
+            ]));
+        }
     }
     t.print();
     println!(
@@ -86,4 +134,26 @@ fn main() {
         geomean(&dp_ratios),
         dp_ratios.iter().cloned().fold(0.0, f64::max)
     );
+    println!(
+        "mean speedup (geomean): parallel fill vs serial {:.2}x on {threads} threads",
+        geomean(&par_speedups)
+    );
+
+    if let Some(path) = json_path {
+        let doc = obj(&[
+            ("bench", Json::Str("preprocess".to_string())),
+            (
+                "scale",
+                Json::Str(common::scale_name(common::bench_scale()).to_string()),
+            ),
+            ("threads", Json::Num(threads as f64)),
+            ("geomean_sort2d_over_hbp", Json::Num(geomean(&sort_ratios))),
+            ("geomean_dp2d_over_hbp", Json::Num(geomean(&dp_ratios))),
+            ("geomean_parallel_speedup", Json::Num(geomean(&par_speedups))),
+            ("matrices", Json::Arr(matrices)),
+        ]);
+        std::fs::write(&path, format!("{doc}\n"))
+            .unwrap_or_else(|e| panic!("writing HBP_BENCH_JSON={path}: {e}"));
+        println!("\nwrote preprocessing datapoint to {path}");
+    }
 }

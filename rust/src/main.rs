@@ -59,7 +59,7 @@ USAGE: hbp <subcommand> [options]
 
 SUBCOMMANDS
   gen        --matrix m4 --scale ci|small|full [--out file.mtx|file.bin] [--all]
-  info       --matrix <id|path> [--scale ci]
+  info       --matrix <id|path> [--scale ci] [--threads N]
   preprocess --matrix <id|path> [--scale ci] [--threads N]
   spmv       --matrix <id|path> [--engine hbp|csr|2d|nnz-split] [--iters 10] [--verify]
   sim        --matrix <id|path> [--device orin|rtx4090]
@@ -138,14 +138,25 @@ fn cmd_info(args: &Args) -> Result<()> {
     println!("zero rows  {zeros}");
     println!("density    {:.3e}", m.info().density());
     let cfg = PartitionConfig::default();
-    let hbp = hbp_spmv::preprocess::build_hbp(&m, cfg);
+    let nthreads = threads(args);
+    let (hbp, serial_secs) = time(|| hbp_spmv::preprocess::build_hbp(&m, cfg));
     println!(
         "2D blocks  {} non-empty (grid {} x {})",
         hbp.blocks.len(),
         hbp.grid.row_blocks,
         hbp.grid.col_blocks
     );
-    println!("hbp bytes  {}", hbp.storage_bytes());
+    println!("hbp bytes  {} (storage_bytes)", hbp.storage_bytes());
+    // warm-up: the first parallel build pays the one-time shared-pool
+    // worker spawn, which would skew a single timed call on small inputs
+    let _ = build_hbp_parallel(&m, cfg, &HashReorder::default(), nthreads);
+    let (_, par_secs) = time(|| build_hbp_parallel(&m, cfg, &HashReorder::default(), nthreads));
+    println!(
+        "hbp build  serial {}  |  {nthreads} threads {}  ({:.2}x)",
+        fmt_duration(serial_secs),
+        fmt_duration(par_secs),
+        serial_secs / par_secs.max(1e-12)
+    );
     Ok(())
 }
 

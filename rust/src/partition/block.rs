@@ -5,12 +5,222 @@
 //! column range. Because CSR rows store columns sorted, each row is split
 //! across column blocks by a forward scan (one pass per row over its
 //! nonzeros — the same O(nnz) bound as the paper's per-thread scan).
+//!
+//! The planning structure is [`BlockMap`], a CSR-of-blocks: the grid's
+//! **non-empty** blocks in column-major order, each owning a contiguous
+//! run of sparse [`RowSeg`] row segments. Empty grid cells never
+//! materialize anything — planning memory is O(non-empty blocks + row
+//! segments) with O(col_blocks + row_blocks) scratch, never the old
+//! O(row_blocks × col_blocks × rows_per_block) dense `Vec<Vec<BlockView>>`
+//! (one `row_ranges` allocation per grid cell, empty or not).
+//!
+//! [`BlockView`] — a dense per-slot view of one block — survives as a
+//! thin adapter over [`BlockMap`] for consumers that index by slot
+//! (the 2D baseline engine, the Fig. 6 stddev bench).
 
 use super::BlockGrid;
 use crate::formats::Csr;
 
-/// A (row-block, col-block) view: for each local row, the `[start, end)`
-/// range in the parent CSR arrays that falls inside this block.
+/// One row's nonzero run inside a single block: `[start, end)` into the
+/// parent CSR `col`/`data` arrays. Only rows that actually have nonzeros
+/// in the block get a segment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RowSeg {
+    /// Row index local to the row-block.
+    pub local_row: u32,
+    pub start: usize,
+    pub end: usize,
+}
+
+impl RowSeg {
+    /// Nonzeros in this segment (always ≥ 1 for segments in a [`BlockMap`]).
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+}
+
+/// Per-block descriptor in the [`BlockMap`] plan.
+#[derive(Clone, Copy, Debug)]
+pub struct BlockEntry {
+    /// Row-block index.
+    pub bi: u32,
+    /// Column-block index.
+    pub bj: u32,
+    /// Nonzeros in this block.
+    pub nnz: usize,
+    /// Start of this block's run in [`BlockMap::segs`] (rows ascending).
+    pub seg_start: usize,
+    /// End (exclusive) of this block's run in [`BlockMap::segs`].
+    pub seg_end: usize,
+}
+
+/// CSR-of-blocks: the non-empty blocks of the 2D grid in column-major
+/// order (the fixed-allocation order of §III-C), each owning a contiguous
+/// ascending-row run of segments in `segs`.
+#[derive(Clone, Debug, Default)]
+pub struct BlockMap {
+    pub blocks: Vec<BlockEntry>,
+    pub segs: Vec<RowSeg>,
+}
+
+impl BlockMap {
+    /// Row segments of block index `b`.
+    pub fn segs_of(&self, b: usize) -> &[RowSeg] {
+        let e = &self.blocks[b];
+        &self.segs[e.seg_start..e.seg_end]
+    }
+
+    /// Total nonzeros across all blocks (= the parent matrix nnz).
+    pub fn total_nnz(&self) -> usize {
+        self.blocks.iter().map(|b| b.nnz).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.blocks.is_empty()
+    }
+}
+
+/// Build the CSR-of-blocks plan in two O(nnz) passes (count, then place).
+///
+/// Pass 1 scans each row-block, tallying per-column-block nnz and
+/// present-row counts for exactly the touched cells; flushed protos are
+/// arranged column-major by counting placement (bi stays ascending within
+/// a column because flushes happen in bi order — no comparison sort).
+/// Pass 2 re-scans and scatters each row segment into its block's run.
+pub fn block_map(m: &Csr, grid: &BlockGrid) -> BlockMap {
+    let cb = grid.col_blocks;
+    let rb = grid.row_blocks;
+
+    struct Proto {
+        bi: u32,
+        bj: u32,
+        nnz: usize,
+        nsegs: usize,
+    }
+    let mut protos: Vec<Proto> = Vec::new();
+    let mut nnz_in = vec![0usize; cb]; // per-bj tallies, reset at flush
+    let mut segs_in = vec![0usize; cb];
+    let mut touched: Vec<usize> = Vec::new();
+    let mut per_col = vec![0usize; cb + 1]; // non-empty blocks per bj
+    let mut total_segs = 0usize;
+
+    for bi in 0..rb {
+        let (r0, r1) = grid.row_range(bi);
+        for r in r0..r1 {
+            let (row_s, row_e) = (m.ptr[r], m.ptr[r + 1]);
+            let mut k = row_s;
+            while k < row_e {
+                let bj = grid.col_block_of(m.col[k] as usize);
+                let col_end = grid.col_range(bj).1;
+                let start = k;
+                while k < row_e && (m.col[k] as usize) < col_end {
+                    k += 1;
+                }
+                if nnz_in[bj] == 0 {
+                    touched.push(bj);
+                }
+                nnz_in[bj] += k - start;
+                segs_in[bj] += 1;
+            }
+        }
+        for &bj in &touched {
+            protos.push(Proto {
+                bi: bi as u32,
+                bj: bj as u32,
+                nnz: nnz_in[bj],
+                nsegs: segs_in[bj],
+            });
+            per_col[bj + 1] += 1;
+            total_segs += segs_in[bj];
+            nnz_in[bj] = 0;
+            segs_in[bj] = 0;
+        }
+        touched.clear();
+    }
+
+    // Column-major arrangement by counting placement.
+    for j in 0..cb {
+        per_col[j + 1] += per_col[j];
+    }
+    let nblocks = protos.len();
+    let mut blocks = vec![BlockEntry { bi: 0, bj: 0, nnz: 0, seg_start: 0, seg_end: 0 }; nblocks];
+    {
+        let mut cursor: Vec<usize> = per_col[..cb].to_vec();
+        for p in &protos {
+            let at = cursor[p.bj as usize];
+            cursor[p.bj as usize] += 1;
+            // seg_start temporarily holds the count; prefix-summed below
+            blocks[at] =
+                BlockEntry { bi: p.bi, bj: p.bj, nnz: p.nnz, seg_start: p.nsegs, seg_end: 0 };
+        }
+    }
+    let mut seg_acc = 0usize;
+    for b in &mut blocks {
+        let n = b.seg_start;
+        b.seg_start = seg_acc;
+        seg_acc += n;
+        b.seg_end = seg_acc;
+    }
+    debug_assert_eq!(seg_acc, total_segs);
+
+    // Pass 2 (place). The bj → block-index map is rebuilt per row-block
+    // from a counting sort of block indices by bi; every segment's bj is
+    // written before use because its block is in the current bi's bucket.
+    let mut bi_ptr = vec![0usize; rb + 1];
+    for b in &blocks {
+        bi_ptr[b.bi as usize + 1] += 1;
+    }
+    for i in 0..rb {
+        bi_ptr[i + 1] += bi_ptr[i];
+    }
+    let mut by_bi = vec![0u32; nblocks];
+    {
+        let mut cursor: Vec<usize> = bi_ptr[..rb].to_vec();
+        for (idx, b) in blocks.iter().enumerate() {
+            let at = &mut cursor[b.bi as usize];
+            by_bi[*at] = idx as u32;
+            *at += 1;
+        }
+    }
+
+    let mut segs = vec![RowSeg { local_row: 0, start: 0, end: 0 }; total_segs];
+    let mut seg_cursor: Vec<usize> = blocks.iter().map(|b| b.seg_start).collect();
+    let mut block_of = vec![0u32; cb]; // bj → block index for the current bi
+    for bi in 0..rb {
+        for &idx in &by_bi[bi_ptr[bi]..bi_ptr[bi + 1]] {
+            block_of[blocks[idx as usize].bj as usize] = idx;
+        }
+        let (r0, r1) = grid.row_range(bi);
+        for r in r0..r1 {
+            let local = (r - r0) as u32;
+            let (row_s, row_e) = (m.ptr[r], m.ptr[r + 1]);
+            let mut k = row_s;
+            while k < row_e {
+                let bj = grid.col_block_of(m.col[k] as usize);
+                let col_end = grid.col_range(bj).1;
+                let start = k;
+                while k < row_e && (m.col[k] as usize) < col_end {
+                    k += 1;
+                }
+                let b = block_of[bj] as usize;
+                segs[seg_cursor[b]] = RowSeg { local_row: local, start, end: k };
+                seg_cursor[b] += 1;
+            }
+        }
+    }
+    debug_assert!(blocks.iter().enumerate().all(|(i, b)| seg_cursor[i] == b.seg_end));
+
+    BlockMap { blocks, segs }
+}
+
+/// A (row-block, col-block) view: for each local row (slot), the
+/// `[start, end)` range in the parent CSR arrays that falls inside this
+/// block. Dense over the block's rows — rows without nonzeros hold the
+/// `(0, 0)` sentinel.
 #[derive(Clone, Debug)]
 pub struct BlockView {
     pub bi: usize,
@@ -31,50 +241,20 @@ impl BlockView {
     }
 }
 
-/// Split a CSR matrix into non-empty block views, ordered column-major
-/// (all row-blocks of column-block 0 first — the fixed-allocation order).
-///
-/// Single O(nnz + rows * col_blocks) pass.
+/// Split a CSR matrix into dense non-empty block views, ordered
+/// column-major. Thin adapter over [`block_map`]: only non-empty blocks
+/// ever materialize a `row_ranges` vector.
 pub fn block_views(m: &Csr, grid: &BlockGrid) -> Vec<BlockView> {
-    let rb = grid.row_blocks;
-    let cb = grid.col_blocks;
-    // views[bj][local stuff]: build all in one sweep
-    let mut views: Vec<Vec<BlockView>> = (0..cb)
-        .map(|bj| {
-            (0..rb)
-                .map(|bi| BlockView {
-                    bi,
-                    bj,
-                    row_ranges: vec![(0, 0); grid.rows_in(bi)],
-                    nnz: 0,
-                })
-                .collect()
-        })
-        .collect();
-
-    for r in 0..m.rows {
-        let bi = r / grid.cfg.rows_per_block;
-        let local = r - bi * grid.cfg.rows_per_block;
-        let (rs, re) = (m.ptr[r], m.ptr[r + 1]);
-        let mut k = rs;
-        while k < re {
-            let bj = grid.col_block_of(m.col[k] as usize);
-            // scan to the end of this column block within the row
-            let col_end = grid.col_range(bj).1;
-            let start = k;
-            while k < re && (m.col[k] as usize) < col_end {
-                k += 1;
+    let map = block_map(m, grid);
+    map.blocks
+        .iter()
+        .map(|e| {
+            let mut row_ranges = vec![(0usize, 0usize); grid.rows_in(e.bi as usize)];
+            for s in &map.segs[e.seg_start..e.seg_end] {
+                row_ranges[s.local_row as usize] = (s.start, s.end);
             }
-            let v = &mut views[bj][bi];
-            v.row_ranges[local] = (start, k);
-            v.nnz += k - start;
-        }
-    }
-
-    views
-        .into_iter()
-        .flatten()
-        .filter(|v| !v.is_empty())
+            BlockView { bi: e.bi as usize, bj: e.bj as usize, row_ranges, nnz: e.nnz }
+        })
         .collect()
 }
 
@@ -167,5 +347,66 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn block_map_agrees_with_views() {
+        let m = crate::gen::random::power_law_rows(100, 200, 2.0, 50, 5);
+        let g = grid(100, 200);
+        let map = block_map(&m, &g);
+        let views = block_views(&m, &g);
+        assert_eq!(map.blocks.len(), views.len());
+        assert_eq!(map.total_nnz(), m.nnz());
+        for (i, (e, v)) in map.blocks.iter().zip(&views).enumerate() {
+            assert_eq!((e.bi as usize, e.bj as usize), (v.bi, v.bj));
+            assert_eq!(e.nnz, v.nnz);
+            let seg_nnz: usize = map.segs_of(i).iter().map(|s| s.len()).sum();
+            assert_eq!(seg_nnz, e.nnz, "block {i} segment nnz");
+        }
+    }
+
+    #[test]
+    fn block_map_rows_ascending_and_nonempty() {
+        let m = crate::gen::random::uniform(70, 130, 0.15, 13);
+        let g = grid(70, 130);
+        let map = block_map(&m, &g);
+        for (i, e) in map.blocks.iter().enumerate() {
+            let segs = map.segs_of(i);
+            assert!(!segs.is_empty(), "block {i} has no segments");
+            for s in segs {
+                assert!(!s.is_empty(), "block {i} empty segment");
+                assert!((s.local_row as usize) < g.rows_in(e.bi as usize));
+            }
+            for w in segs.windows(2) {
+                assert!(w[0].local_row < w[1].local_row, "block {i} rows not ascending");
+            }
+        }
+    }
+
+    #[test]
+    fn block_map_wide_matrix_only_touched_cells() {
+        // 10 x 1000: 32-wide column blocks => 32 cells per row-block, but
+        // only 2 columns are touched — planning must stay proportional to
+        // the touched cells, not the grid.
+        let mut coo = Coo::new(10, 1000);
+        coo.push(0, 3, 1.0);
+        coo.push(7, 990, 2.0);
+        let m = coo.to_csr();
+        let g = grid(10, 1000);
+        let map = block_map(&m, &g);
+        assert_eq!(map.blocks.len(), 2);
+        assert_eq!(map.segs.len(), 2);
+        assert_eq!(map.blocks[0].bj, 0);
+        assert_eq!(map.blocks[1].bj as usize, 990 / g.cfg.cols_per_block);
+    }
+
+    #[test]
+    fn block_map_empty_matrix() {
+        let m = Csr::empty(8, 8);
+        let g = grid(8, 8);
+        let map = block_map(&m, &g);
+        assert!(map.is_empty());
+        assert!(map.segs.is_empty());
+        assert_eq!(map.total_nnz(), 0);
     }
 }

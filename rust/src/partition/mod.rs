@@ -10,6 +10,6 @@ pub mod config;
 pub mod grid;
 pub mod block;
 
-pub use block::{block_views, BlockView};
+pub use block::{block_map, block_views, BlockEntry, BlockMap, BlockView, RowSeg};
 pub use config::PartitionConfig;
 pub use grid::BlockGrid;

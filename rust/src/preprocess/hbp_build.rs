@@ -22,9 +22,32 @@
 //! - `begin_ptr[group]` — offset of the group's first element.
 //! - `begin_nnz[block]` — offset of the block's first element
 //!   (CSR-ptr equivalent at block granularity).
+//!
+//! # Construction: plan → fill
+//!
+//! Building is a two-phase, zero-copy pipeline:
+//!
+//! 1. **Plan** ([`plan_hbp`]): one counting pass over the CSR produces
+//!    the [`BlockMap`] (non-empty blocks + sparse row segments only),
+//!    then per-block `nnz`/`nrows`/`ngroups` prefix-sum into the exact
+//!    final `nnz_start`/`slot_start`/`group_start` offsets — the
+//!    complete `blocks: Vec<HbpBlock>` — before any element moves.
+//! 2. **Fill** ([`fill_block`] per block): every output array is
+//!    allocated once at its exact final size, and each block writes its
+//!    own **disjoint slices** (`nnz_start..`, `slot_start..`,
+//!    `group_start..`). Because the slices are disjoint by the plan's
+//!    prefix sums, serial and parallel fills produce bit-identical
+//!    arrays by construction, and the parallel builder needs no stitch
+//!    copy (see [`crate::preprocess::parallel`]).
+//!
+//! Per-worker [`FillScratch`] (densified row ranges, the reorder
+//! permutation, `prev_pos` chain state, the live-row ring) is reused
+//! across blocks, so the steady-state fill performs no allocation —
+//! the hash, not the allocator, is the bottleneck, which is the whole
+//! Fig. 7 preprocessing-speed story.
 
 use crate::formats::Csr;
-use crate::partition::{block_views, BlockGrid, BlockView, PartitionConfig};
+use crate::partition::{block_map, BlockGrid, BlockMap, PartitionConfig, RowSeg};
 use crate::preprocess::reorder::{HashReorder, Reorder};
 
 /// Per-block descriptor.
@@ -140,6 +163,201 @@ impl Hbp {
     }
 }
 
+/// Phase-1 output: the exact layout of every HBP array before a single
+/// element is written. Shared by the serial and parallel fillers — there
+/// is exactly one construction code path.
+#[derive(Clone, Debug)]
+pub struct HbpPlan {
+    pub grid: BlockGrid,
+    /// Sparse per-block row segments (the counting pass's output).
+    pub map: BlockMap,
+    /// Final block descriptors with exact prefix-summed offsets.
+    pub blocks: Vec<HbpBlock>,
+    pub total_nnz: usize,
+    pub total_slots: usize,
+    pub total_groups: usize,
+}
+
+/// Phase 1: count + prefix-sum. O(nnz) time, O(non-empty blocks +
+/// row segments) memory — empty grid cells cost nothing.
+pub fn plan_hbp(m: &Csr, cfg: PartitionConfig) -> HbpPlan {
+    cfg.validate().expect("invalid partition config");
+    let grid = BlockGrid::new(m.rows, m.cols, cfg);
+    let map = block_map(m, &grid);
+    let warp = cfg.warp;
+    let mut blocks = Vec::with_capacity(map.blocks.len());
+    let (mut nnz, mut slots, mut groups) = (0usize, 0usize, 0usize);
+    for e in &map.blocks {
+        let nrows = grid.rows_in(e.bi as usize);
+        let ngroups = nrows.div_ceil(warp);
+        blocks.push(HbpBlock {
+            bi: e.bi,
+            bj: e.bj,
+            nnz_start: nnz,
+            nnz: e.nnz,
+            slot_start: slots,
+            nrows,
+            group_start: groups,
+            ngroups,
+        });
+        nnz += e.nnz;
+        slots += nrows;
+        groups += ngroups;
+    }
+    HbpPlan { grid, map, blocks, total_nnz: nnz, total_slots: slots, total_groups: groups }
+}
+
+/// Allocate the output arrays at their exact final sizes (one allocation
+/// per array — the "zero-copy" half of plan/fill).
+///
+/// `vec![0; n]` goes through `alloc_zeroed`, which for large arrays is
+/// lazily-zeroed mmap pages — no eager memset, and first touch happens
+/// in the worker that fills the page (the NUMA-friendly placement).
+/// Don't "optimize" this into `set_len` over uninit memory.
+pub(crate) fn alloc_from_plan(m: &Csr, plan: &HbpPlan) -> Hbp {
+    Hbp {
+        rows: m.rows,
+        cols: m.cols,
+        grid: plan.grid,
+        blocks: plan.blocks.clone(),
+        col: vec![0; plan.total_nnz],
+        data: vec![0.0; plan.total_nnz],
+        add_sign: vec![0; plan.total_nnz],
+        zero_row: vec![0; plan.total_slots],
+        output_hash: vec![0; plan.total_slots],
+        begin_ptr: vec![0; plan.total_groups],
+    }
+}
+
+/// Reusable per-worker scratch for [`fill_block`]: densified row ranges,
+/// the reorder permutation, per-row chain positions and the live-row
+/// list. Reused across blocks so steady-state fill allocates nothing.
+#[derive(Default)]
+pub struct FillScratch {
+    row_nnz: Vec<usize>,
+    row_start: Vec<usize>,
+    order: Vec<u32>,
+    prev_pos: Vec<usize>,
+    live: Vec<u32>,
+}
+
+/// Phase 2, one block: write the block's elements into its exact slices
+/// of the final arrays. The slices must be the block's own ranges
+/// (`col`/`data`/`add_sign` at `nnz_start..nnz_start+nnz`,
+/// `zero_row`/`output_hash` at `slot_start..slot_start+nrows`,
+/// `begin_ptr` at `group_start..group_start+ngroups`). Distinct blocks
+/// own disjoint ranges by the plan's prefix sums — that disjointness is
+/// the entire parallel-safety argument (same as `spmv_partials`), and it
+/// also makes parallel output bit-identical to serial by construction.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn fill_block(
+    m: &Csr,
+    grid: &BlockGrid,
+    b: &HbpBlock,
+    segs: &[RowSeg],
+    reorder: &dyn Reorder,
+    scratch: &mut FillScratch,
+    col: &mut [u32],
+    data: &mut [f64],
+    add_sign: &mut [i32],
+    zero_row: &mut [i32],
+    output_hash: &mut [u32],
+    begin_ptr: &mut [usize],
+) {
+    let warp = grid.cfg.warp;
+    let nrows = b.nrows;
+    let (col_start, _) = grid.col_range(b.bj as usize);
+    let FillScratch { row_nnz, row_start, order, prev_pos, live } = scratch;
+
+    // densify the block's sparse row segments (scratch, O(nrows))
+    row_nnz.clear();
+    row_nnz.resize(nrows, 0);
+    row_start.clear();
+    row_start.resize(nrows, 0);
+    for s in segs {
+        row_start[s.local_row as usize] = s.start;
+        row_nnz[s.local_row as usize] = s.end - s.start;
+    }
+
+    // output_hash: slot -> original local row
+    reorder.order_into(order, row_nnz, warp);
+    debug_assert_eq!(order.len(), nrows);
+    output_hash.copy_from_slice(order);
+
+    // per group: zero_row bookkeeping + round-major element emission
+    prev_pos.clear();
+    prev_pos.resize(nrows, usize::MAX);
+    let mut cursor = 0usize; // block-local element cursor
+    for g in 0..b.ngroups {
+        let slot_lo = g * warp;
+        let slot_hi = ((g + 1) * warp).min(nrows);
+        begin_ptr[g] = b.nnz_start + cursor;
+
+        // zero_row: -1 for inactive; else #zeros before it in the group
+        let mut zeros_before = 0i32;
+        live.clear();
+        for s in slot_lo..slot_hi {
+            let r = order[s];
+            if row_nnz[r as usize] == 0 {
+                zero_row[s] = -1;
+                zeros_before += 1;
+            } else {
+                zero_row[s] = zeros_before;
+                live.push(r);
+            }
+        }
+
+        // round-major emission: round k emits the k-th nonzero of every
+        // row still active; rows retire as they exhaust.
+        let mut k = 0usize;
+        while !live.is_empty() {
+            live.retain(|&r| {
+                let r = r as usize;
+                if k >= row_nnz[r] {
+                    return false;
+                }
+                let src = row_start[r] + k;
+                let pos = cursor;
+                col[pos] = m.col[src] - col_start as u32;
+                data[pos] = m.data[src];
+                add_sign[pos] = -1; // patched when the next round emits
+                if prev_pos[r] != usize::MAX {
+                    add_sign[prev_pos[r]] = (pos - prev_pos[r]) as i32;
+                }
+                prev_pos[r] = pos;
+                cursor += 1;
+                true
+            });
+            k += 1;
+        }
+    }
+    debug_assert_eq!(cursor, b.nnz);
+}
+
+/// Serial fill over a plan (also the parallel builder's 1-thread and
+/// empty-matrix path — one construction code path).
+pub(crate) fn fill_hbp_serial(m: &Csr, plan: &HbpPlan, reorder: &dyn Reorder) -> Hbp {
+    let mut hbp = alloc_from_plan(m, plan);
+    let mut scratch = FillScratch::default();
+    for (b, e) in plan.blocks.iter().zip(&plan.map.blocks) {
+        fill_block(
+            m,
+            &plan.grid,
+            b,
+            &plan.map.segs[e.seg_start..e.seg_end],
+            reorder,
+            &mut scratch,
+            &mut hbp.col[b.nnz_start..b.nnz_start + b.nnz],
+            &mut hbp.data[b.nnz_start..b.nnz_start + b.nnz],
+            &mut hbp.add_sign[b.nnz_start..b.nnz_start + b.nnz],
+            &mut hbp.zero_row[b.slot_start..b.slot_start + b.nrows],
+            &mut hbp.output_hash[b.slot_start..b.slot_start + b.nrows],
+            &mut hbp.begin_ptr[b.group_start..b.group_start + b.ngroups],
+        );
+    }
+    hbp
+}
+
 /// Build HBP with the paper's hash reordering.
 pub fn build_hbp(m: &Csr, cfg: PartitionConfig) -> Hbp {
     build_hbp_with(m, cfg, &HashReorder::default())
@@ -148,103 +366,8 @@ pub fn build_hbp(m: &Csr, cfg: PartitionConfig) -> Hbp {
 /// Build HBP with an arbitrary reorder strategy (sort2D / DP2D / identity
 /// for the baselines — downstream engines are strategy-agnostic).
 pub fn build_hbp_with(m: &Csr, cfg: PartitionConfig, reorder: &dyn Reorder) -> Hbp {
-    cfg.validate().expect("invalid partition config");
-    let grid = BlockGrid::new(m.rows, m.cols, cfg);
-    let views = block_views(m, &grid);
-
-    let mut hbp = Hbp {
-        rows: m.rows,
-        cols: m.cols,
-        grid,
-        blocks: Vec::with_capacity(views.len()),
-        col: Vec::with_capacity(m.nnz()),
-        data: Vec::with_capacity(m.nnz()),
-        add_sign: Vec::with_capacity(m.nnz()),
-        zero_row: vec![],
-        output_hash: vec![],
-        begin_ptr: vec![],
-    };
-
-    for view in &views {
-        append_block(&mut hbp, m, view, reorder);
-    }
-    hbp
-}
-
-/// Build one block's arrays and append (shared with the parallel builder,
-/// which builds per-block chunks independently then stitches).
-pub(crate) fn append_block(hbp: &mut Hbp, m: &Csr, view: &BlockView, reorder: &dyn Reorder) {
-    let cfg = hbp.grid.cfg;
-    let warp = cfg.warp;
-    let nrows = view.row_ranges.len();
-    let row_nnz = view.row_nnz();
-    let (col_start, _) = hbp.grid.col_range(view.bj);
-
-    let order = reorder.order(&row_nnz, warp);
-    debug_assert_eq!(order.len(), nrows);
-
-    let block = HbpBlock {
-        bi: view.bi as u32,
-        bj: view.bj as u32,
-        nnz_start: hbp.col.len(),
-        nnz: view.nnz,
-        slot_start: hbp.zero_row.len(),
-        nrows,
-        group_start: hbp.begin_ptr.len(),
-        ngroups: nrows.div_ceil(warp),
-    };
-
-    // output_hash: slot -> original local row
-    hbp.output_hash.extend_from_slice(&order);
-
-    // per group: zero_row bookkeeping + round-major element emission
-    let mut prev_pos: Vec<usize> = vec![usize::MAX; nrows]; // by local row
-    for g in 0..block.ngroups {
-        let slot_lo = g * warp;
-        let slot_hi = ((g + 1) * warp).min(nrows);
-        hbp.begin_ptr.push(hbp.col.len());
-
-        // zero_row: -1 for inactive; else #zeros before it in the group
-        let mut zeros_before = 0i32;
-        let mut active: Vec<u32> = Vec::with_capacity(slot_hi - slot_lo);
-        for s in slot_lo..slot_hi {
-            let r = order[s];
-            if row_nnz[r as usize] == 0 {
-                hbp.zero_row.push(-1);
-                zeros_before += 1;
-            } else {
-                hbp.zero_row.push(zeros_before);
-                active.push(r);
-            }
-        }
-
-        // round-major emission: round k emits the k-th nonzero of every
-        // row still active; rows retire as they exhaust.
-        let mut k = 0usize;
-        let mut live = active;
-        while !live.is_empty() {
-            live.retain(|&r| {
-                let (s, e) = view.row_ranges[r as usize];
-                if s + k >= e {
-                    return false;
-                }
-                let src = s + k;
-                let pos = hbp.col.len();
-                hbp.col.push(m.col[src] - col_start as u32);
-                hbp.data.push(m.data[src]);
-                hbp.add_sign.push(-1); // patched when the next round emits
-                if prev_pos[r as usize] != usize::MAX {
-                    let prev = prev_pos[r as usize];
-                    hbp.add_sign[prev] = (pos - prev) as i32;
-                }
-                prev_pos[r as usize] = pos;
-                true
-            });
-            k += 1;
-        }
-    }
-
-    hbp.blocks.push(block);
+    let plan = plan_hbp(m, cfg);
+    fill_hbp_serial(m, &plan, reorder)
 }
 
 #[cfg(test)]
@@ -355,6 +478,24 @@ mod tests {
         let hbp = build_hbp(&m, small_cfg());
         for w in hbp.blocks.windows(2) {
             assert_eq!(w[0].nnz_start + w[0].nnz, w[1].nnz_start);
+        }
+    }
+
+    #[test]
+    fn plan_offsets_are_exact() {
+        // the planner's prefix sums must equal what the fill emits
+        let m = random::power_law_rows(120, 180, 2.0, 45, 33);
+        let plan = plan_hbp(&m, small_cfg());
+        assert_eq!(plan.total_nnz, m.nnz());
+        let hbp = build_hbp(&m, small_cfg());
+        assert_eq!(hbp.col.len(), plan.total_nnz);
+        assert_eq!(hbp.zero_row.len(), plan.total_slots);
+        assert_eq!(hbp.begin_ptr.len(), plan.total_groups);
+        assert_eq!(hbp.blocks.len(), plan.blocks.len());
+        for (a, b) in hbp.blocks.iter().zip(&plan.blocks) {
+            assert_eq!(a.nnz_start, b.nnz_start);
+            assert_eq!(a.slot_start, b.slot_start);
+            assert_eq!(a.group_start, b.group_start);
         }
     }
 }

@@ -4,12 +4,16 @@
 //! - [`reorder`] — the row-reordering strategies: the paper's nonlinear
 //!   **hash** (HBP), the **sort2D** baseline, the **DP2D** dynamic-
 //!   programming baseline (Regu2D's method), and identity (plain 2D).
-//! - [`hbp_build`] — Algorithm 2 + format conversion: build the full HBP
-//!   structure (`col`, `data`, `add_sign`, `zero_row`, `begin_nnz`/
-//!   `begin_ptr`, `output_hash`) from CSR.
-//! - [`parallel`] — the multithreaded build; the hash's atomicity is what
-//!   makes per-row/per-block parallelism possible (the paper's argument
-//!   for why zero-padding formats can't parallelize their conversion).
+//! - [`hbp_build`] — Algorithm 2 + format conversion as a two-phase
+//!   **plan → fill** pipeline: a counting pass prefix-sums every block's
+//!   exact array offsets, then each block fills its disjoint slices of
+//!   single-allocation output arrays (`col`, `data`, `add_sign`,
+//!   `zero_row`, `begin_nnz`/`begin_ptr`, `output_hash`).
+//! - [`parallel`] — the multithreaded fill on the persistent worker
+//!   pools; the hash's atomicity is what makes per-row/per-block
+//!   parallelism possible (the paper's argument for why zero-padding
+//!   formats can't parallelize their conversion), and the plan's
+//!   disjoint slices make parallel output bit-identical to serial.
 //! - [`group_ell`] — export to the dense group-ELL tensors consumed by
 //!   the L1 Pallas kernel through PJRT.
 
@@ -18,6 +22,6 @@ pub mod hbp_build;
 pub mod parallel;
 pub mod group_ell;
 
-pub use hbp_build::{build_hbp, build_hbp_with, Hbp, HbpBlock};
-pub use parallel::build_hbp_parallel;
+pub use hbp_build::{build_hbp, build_hbp_with, plan_hbp, Hbp, HbpBlock, HbpPlan};
+pub use parallel::{build_hbp_parallel, build_hbp_pooled};
 pub use reorder::{DpReorder, HashReorder, IdentityReorder, Reorder, SortReorder};

@@ -3,112 +3,135 @@
 //! The hash's atomicity means every block (and every row within a block)
 //! reorders independently — no cross-block dependency, unlike zero-padding
 //! conversions where each thread must know the padded length of everything
-//! before it (the paper's §II critique of Regu2D). Blocks are built in
-//! parallel chunks and stitched with pure offset arithmetic.
+//! before it (the paper's §II critique of Regu2D).
+//!
+//! The build is the plan → fill pipeline of
+//! [`crate::preprocess::hbp_build`]: the plan's prefix sums give every
+//! block an exact disjoint slice of each output array, so workers fill
+//! the final arrays **in place** through [`SharedMut`] (the same
+//! disjointness contract as `spmv_partials`) — no per-chunk `Hbp`
+//! partials, no stitch copy, and parallel output is bit-identical to
+//! serial by construction. Work is scheduled on the persistent
+//! process-wide [`WorkerPool`]s (`util::pool::shared_pool`) in
+//! nnz-balanced contiguous chunks, instead of spawning threads per call.
 
-use super::hbp_build::{append_block, Hbp};
+use super::hbp_build::{alloc_from_plan, fill_block, fill_hbp_serial, plan_hbp, FillScratch};
+use super::hbp_build::{Hbp, HbpBlock, HbpPlan};
 use super::reorder::Reorder;
 use crate::formats::Csr;
-use crate::partition::{block_views, BlockGrid, PartitionConfig};
+use crate::partition::PartitionConfig;
+use crate::util::pool::{shared_pool, WorkerPool};
+use crate::util::sync::SharedMut;
 
-/// Parallel HBP build over `threads` workers (1 = serial fallback).
+/// Hard cap on shared-pool size: generous headroom over the machine's
+/// parallelism, but a stop against absurd `--threads` values spawning
+/// unbounded *permanent* OS threads through the pool registry.
+fn pool_thread_cap() -> usize {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(8);
+    cores.saturating_mul(4).max(32)
+}
+
+/// Parallel HBP build over `threads` workers (1 = serial fill; same code
+/// path, same output).
 pub fn build_hbp_parallel(
     m: &Csr,
     cfg: PartitionConfig,
     reorder: &(dyn Reorder + Sync),
     threads: usize,
 ) -> Hbp {
-    cfg.validate().expect("invalid partition config");
-    let grid = BlockGrid::new(m.rows, m.cols, cfg);
-    let views = block_views(m, &grid);
-    let threads = threads.clamp(1, views.len().max(1));
-
-    let empty = |grid: BlockGrid| Hbp {
-        rows: m.rows,
-        cols: m.cols,
-        grid,
-        blocks: vec![],
-        col: vec![],
-        data: vec![],
-        add_sign: vec![],
-        zero_row: vec![],
-        output_hash: vec![],
-        begin_ptr: vec![],
-    };
-
-    if threads <= 1 || views.is_empty() {
-        let mut hbp = empty(grid);
-        for v in &views {
-            append_block(&mut hbp, m, v, reorder);
-        }
-        return hbp;
+    let plan = plan_hbp(m, cfg);
+    // ≤1 thread or ≤1 block: fill serially. Note `threads` is NOT
+    // clamped to the block count before the pool lookup — that would
+    // mint a permanent pool per distinct small block count; extra
+    // workers beyond the chunk count simply return immediately.
+    let threads = threads.min(pool_thread_cap());
+    if threads <= 1 || plan.blocks.len() <= 1 {
+        return fill_hbp_serial(m, &plan, reorder);
     }
+    fill_hbp_on(m, &plan, reorder, &shared_pool(threads))
+}
 
-    // nnz-balanced contiguous chunking (preserves column-major order)
-    let total_nnz: usize = views.iter().map(|v| v.nnz).sum();
-    let target = total_nnz.div_ceil(threads);
-    let mut chunks: Vec<&[crate::partition::BlockView]> = vec![];
+/// Parallel HBP build on a caller-owned pool (for engines and services
+/// that keep a long-lived [`WorkerPool`]).
+pub fn build_hbp_pooled(
+    m: &Csr,
+    cfg: PartitionConfig,
+    reorder: &(dyn Reorder + Sync),
+    pool: &WorkerPool,
+) -> Hbp {
+    let plan = plan_hbp(m, cfg);
+    if plan.blocks.is_empty() {
+        return fill_hbp_serial(m, &plan, reorder);
+    }
+    fill_hbp_on(m, &plan, reorder, pool)
+}
+
+/// Contiguous nnz-balanced chunking of the block list: at most `workers`
+/// chunks, preserving column-major order.
+fn nnz_chunks(blocks: &[HbpBlock], workers: usize) -> Vec<(usize, usize)> {
+    let total: usize = blocks.iter().map(|b| b.nnz).sum();
+    let target = total.div_ceil(workers).max(1);
+    let mut chunks = Vec::with_capacity(workers);
     let mut start = 0;
     let mut acc = 0;
-    for (i, v) in views.iter().enumerate() {
-        acc += v.nnz;
-        if acc >= target && i + 1 < views.len() {
-            chunks.push(&views[start..=i]);
+    for (i, b) in blocks.iter().enumerate() {
+        acc += b.nnz;
+        if acc >= target && i + 1 < blocks.len() && chunks.len() + 1 < workers {
+            chunks.push((start, i + 1));
             start = i + 1;
             acc = 0;
         }
     }
-    chunks.push(&views[start..]);
+    chunks.push((start, blocks.len()));
+    chunks
+}
 
-    // build per-chunk partials in parallel
-    let partials: Vec<Hbp> = std::thread::scope(|scope| {
-        let handles: Vec<_> = chunks
-            .iter()
-            .map(|chunk| {
-                scope.spawn(move || {
-                    let mut part = empty(grid);
-                    for v in *chunk {
-                        append_block(&mut part, m, v, reorder);
-                    }
-                    part
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("builder thread panicked")).collect()
-    });
-
-    // stitch with offset fixups
-    let mut out = empty(grid);
-    for mut part in partials {
-        let nnz_base = out.col.len();
-        let slot_base = out.zero_row.len();
-        let group_base = out.begin_ptr.len();
-        for b in &mut part.blocks {
-            b.nnz_start += nnz_base;
-            b.slot_start += slot_base;
-            b.group_start += group_base;
-        }
-        for p in &mut part.begin_ptr {
-            *p += nnz_base;
-        }
-        out.blocks.append(&mut part.blocks);
-        out.col.append(&mut part.col);
-        out.data.append(&mut part.data);
-        out.add_sign.append(&mut part.add_sign);
-        out.zero_row.append(&mut part.zero_row);
-        out.output_hash.append(&mut part.output_hash);
-        out.begin_ptr.append(&mut part.begin_ptr);
+/// Phase-2 parallel fill: one generation on the pool, each worker filling
+/// its chunk's blocks directly into the final arrays.
+fn fill_hbp_on(m: &Csr, plan: &HbpPlan, reorder: &(dyn Reorder + Sync), pool: &WorkerPool) -> Hbp {
+    let mut hbp = alloc_from_plan(m, plan);
+    let chunks = nnz_chunks(&plan.blocks, pool.workers.min(plan.blocks.len()).max(1));
+    {
+        let col = SharedMut::new(&mut hbp.col[..]);
+        let data = SharedMut::new(&mut hbp.data[..]);
+        let add_sign = SharedMut::new(&mut hbp.add_sign[..]);
+        let zero_row = SharedMut::new(&mut hbp.zero_row[..]);
+        let output_hash = SharedMut::new(&mut hbp.output_hash[..]);
+        let begin_ptr = SharedMut::new(&mut hbp.begin_ptr[..]);
+        let chunks = &chunks;
+        pool.run_generation(|w, _| {
+            let Some(&(lo, hi)) = chunks.get(w) else { return };
+            let mut scratch = FillScratch::default();
+            for (b, e) in plan.blocks[lo..hi].iter().zip(&plan.map.blocks[lo..hi]) {
+                // SAFETY: the plan's prefix sums make per-block ranges
+                // disjoint, chunks partition the block list, and each
+                // chunk is visited by exactly one worker — no two
+                // threads ever touch the same index.
+                let (c, d, a, z, o, p) = unsafe {
+                    (
+                        col.slice_mut(b.nnz_start, b.nnz),
+                        data.slice_mut(b.nnz_start, b.nnz),
+                        add_sign.slice_mut(b.nnz_start, b.nnz),
+                        zero_row.slice_mut(b.slot_start, b.nrows),
+                        output_hash.slice_mut(b.slot_start, b.nrows),
+                        begin_ptr.slice_mut(b.group_start, b.ngroups),
+                    )
+                };
+                let segs = &plan.map.segs[e.seg_start..e.seg_end];
+                fill_block(m, &plan.grid, b, segs, reorder, &mut scratch, c, d, a, z, o, p);
+            }
+        });
     }
-    out
+    hbp
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::gen::random;
-    use crate::preprocess::reorder::HashReorder;
-    use crate::preprocess::build_hbp_with;
     use crate::partition::PartitionConfig;
+    use crate::preprocess::build_hbp_with;
+    use crate::preprocess::reorder::HashReorder;
 
     #[test]
     fn parallel_equals_serial() {
@@ -143,5 +166,39 @@ mod tests {
         let m = crate::formats::Csr::empty(100, 100);
         let hbp = build_hbp_parallel(&m, PartitionConfig::test_small(), &HashReorder::default(), 4);
         assert!(hbp.blocks.is_empty());
+    }
+
+    #[test]
+    fn pooled_build_matches_serial() {
+        let m = random::power_law_rows(200, 250, 2.0, 50, 23);
+        let cfg = PartitionConfig::test_small();
+        let r = HashReorder::default();
+        let serial = build_hbp_with(&m, cfg, &r);
+        let pool = crate::util::pool::WorkerPool::new(3);
+        for _ in 0..3 {
+            // repeated builds on the same pool must be identical (the
+            // persistent-pool path the router/bench loop exercises)
+            let par = build_hbp_pooled(&m, cfg, &r, &pool);
+            par.validate().unwrap();
+            assert_eq!(serial.col, par.col);
+            assert_eq!(serial.data, par.data);
+            assert_eq!(serial.begin_ptr, par.begin_ptr);
+        }
+    }
+
+    #[test]
+    fn nnz_chunks_partition_blocks() {
+        let m = random::power_law_rows(300, 300, 2.0, 60, 9);
+        let plan = super::plan_hbp(&m, PartitionConfig::test_small());
+        for workers in [1usize, 2, 3, 8, 200] {
+            let chunks = nnz_chunks(&plan.blocks, workers);
+            assert!(chunks.len() <= workers, "workers={workers}");
+            assert_eq!(chunks[0].0, 0);
+            assert_eq!(chunks.last().unwrap().1, plan.blocks.len());
+            for w in chunks.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "chunks must tile contiguously");
+                assert!(w[0].0 < w[0].1, "empty chunk");
+            }
+        }
     }
 }

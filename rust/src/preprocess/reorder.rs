@@ -9,10 +9,21 @@ use crate::hash::{sample_params, HashTable, NonlinearHash};
 
 /// A row-reordering strategy.
 pub trait Reorder: Sync {
-    /// `row_nnz[i]` = in-block nonzeros of local row `i`; returns
-    /// `order[slot] = local row` — a permutation of `0..row_nnz.len()`.
-    /// `warp` is provided because some strategies (DP) group-align.
-    fn order(&self, row_nnz: &[usize], warp: usize) -> Vec<u32>;
+    /// Write `order[slot] = local row` — a permutation of
+    /// `0..row_nnz.len()` — into `out` (cleared first, capacity reused).
+    /// `row_nnz[i]` = in-block nonzeros of local row `i`; `warp` is
+    /// provided because some strategies (DP) group-align. This is the
+    /// required method so the allocation-free path is the one every
+    /// strategy provides: the plan/fill HBP builder calls it once per
+    /// block with a per-worker scratch vector.
+    fn order_into(&self, out: &mut Vec<u32>, row_nnz: &[usize], warp: usize);
+
+    /// Allocating convenience wrapper around [`Reorder::order_into`].
+    fn order(&self, row_nnz: &[usize], warp: usize) -> Vec<u32> {
+        let mut out = Vec::new();
+        self.order_into(&mut out, row_nnz, warp);
+        out
+    }
 
     /// Display name for bench tables.
     fn name(&self) -> &'static str;
@@ -22,8 +33,9 @@ pub trait Reorder: Sync {
 pub struct IdentityReorder;
 
 impl Reorder for IdentityReorder {
-    fn order(&self, row_nnz: &[usize], _warp: usize) -> Vec<u32> {
-        (0..row_nnz.len() as u32).collect()
+    fn order_into(&self, out: &mut Vec<u32>, row_nnz: &[usize], _warp: usize) {
+        out.clear();
+        out.extend(0..row_nnz.len() as u32);
     }
     fn name(&self) -> &'static str {
         "2d"
@@ -71,10 +83,11 @@ impl HashReorder {
 }
 
 impl Reorder for HashReorder {
-    fn order(&self, row_nnz: &[usize], _warp: usize) -> Vec<u32> {
+    fn order_into(&self, out: &mut Vec<u32>, row_nnz: &[usize], _warp: usize) {
         let n = row_nnz.len();
+        out.clear();
         if n == 0 {
-            return vec![];
+            return;
         }
         let params = sample_params(row_nnz, n, self.seed);
         let h = NonlinearHash::new(params);
@@ -115,7 +128,7 @@ impl Reorder for HashReorder {
             }
             // scatter writes every position of `out` exactly once
             // (slot counts sum to n), so skip the zero-init
-            let mut out: Vec<u32> = Vec::with_capacity(n);
+            out.reserve(n);
             #[allow(clippy::uninit_vec)]
             unsafe {
                 out.set_len(n);
@@ -130,7 +143,6 @@ impl Reorder for HashReorder {
             for c in counts[min_k..=max_k].iter_mut() {
                 *c = 0;
             }
-            out
         })
     }
     fn name(&self) -> &'static str {
@@ -146,10 +158,10 @@ impl Reorder for HashReorder {
 pub struct SortReorder;
 
 impl Reorder for SortReorder {
-    fn order(&self, row_nnz: &[usize], _warp: usize) -> Vec<u32> {
-        let mut idx: Vec<u32> = (0..row_nnz.len() as u32).collect();
-        idx.sort_by_key(|&r| row_nnz[r as usize]);
-        idx
+    fn order_into(&self, out: &mut Vec<u32>, row_nnz: &[usize], _warp: usize) {
+        out.clear();
+        out.extend(0..row_nnz.len() as u32);
+        out.sort_by_key(|&r| row_nnz[r as usize]);
     }
     fn name(&self) -> &'static str {
         "sort2d"
@@ -175,18 +187,22 @@ impl Default for DpReorder {
 }
 
 impl Reorder for DpReorder {
-    fn order(&self, row_nnz: &[usize], warp: usize) -> Vec<u32> {
+    fn order_into(&self, out: &mut Vec<u32>, row_nnz: &[usize], warp: usize) {
         let n = row_nnz.len();
+        out.clear();
         if n == 0 {
-            return vec![];
+            return;
         }
         // 1) sort descending (dense rows execute together first)
-        let mut idx: Vec<u32> = (0..n as u32).collect();
-        idx.sort_by_key(|&r| std::cmp::Reverse(row_nnz[r as usize]));
+        out.extend(0..n as u32);
+        out.sort_by_key(|&r| std::cmp::Reverse(row_nnz[r as usize]));
+        let idx = &out[..];
 
         // 2) DP over the sorted sequence: dp[i] = min padded cells for
         // suffix starting at i; group sizes are multiples of `warp`
         // up to max_span_warps*warp (the vectorization constraint).
+        // dp/cut are the DP baseline's modeled cost, deliberately kept
+        // per-call: this is what Fig. 7 charges Regu2D for.
         let warp = warp.max(1);
         let max_group = (self.max_span_warps * warp).max(warp);
         let mut dp = vec![u64::MAX; n + 1];
@@ -218,15 +234,19 @@ impl Reorder for DpReorder {
             }
         }
 
-        // 3) emit groups in DP order (order within a group = sorted order)
-        let mut out = Vec::with_capacity(n);
-        let mut i = 0;
-        while i < n {
-            let j = cut[i];
-            out.extend_from_slice(&idx[i..j]);
-            i = j;
+        // 3) the DP's groups tile [0, n) contiguously in increasing
+        // order, so emitting them concatenates consecutive ranges of
+        // `idx` — the final order IS the sorted sequence (group
+        // boundaries are implicit every `warp` slots downstream), and
+        // `out` already holds it. Verify the tiling in debug builds.
+        #[cfg(debug_assertions)]
+        {
+            let mut i = 0usize;
+            while i < n {
+                debug_assert!(cut[i] > i && cut[i] <= n, "bad DP cut at {i}");
+                i = cut[i];
+            }
         }
-        out
     }
     fn name(&self) -> &'static str {
         "dp2d"
@@ -331,6 +351,27 @@ mod tests {
         let last_group_mean: f64 =
             o[o.len() - 32..].iter().map(|&r| lens[r as usize] as f64).sum::<f64>() / 32.0;
         assert!(first_group_mean >= last_group_mean);
+    }
+
+    #[test]
+    fn order_into_matches_order_and_reuses_buffer() {
+        let lens = random_lens(300, 17);
+        let strategies: Vec<Box<dyn Reorder>> = vec![
+            Box::new(IdentityReorder),
+            Box::new(HashReorder::default()),
+            Box::new(SortReorder),
+            Box::new(DpReorder::default()),
+        ];
+        let mut out = Vec::new();
+        for s in &strategies {
+            s.order_into(&mut out, &lens, 32);
+            assert_eq!(out, s.order(&lens, 32), "{} order_into != order", s.name());
+            let cap = out.capacity();
+            s.order_into(&mut out, &lens, 32);
+            assert_eq!(cap, out.capacity(), "{} grew the scratch buffer", s.name());
+            s.order_into(&mut out, &[], 32);
+            assert!(out.is_empty(), "{} nonempty on empty input", s.name());
+        }
     }
 
     #[test]

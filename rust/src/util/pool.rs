@@ -11,7 +11,7 @@
 use super::Timer;
 use crate::exec::scheduler::{MixedSchedule, WorkerStats};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Type-erased per-generation job.
 struct Job {
@@ -25,7 +25,8 @@ unsafe impl Send for Job {}
 struct Shared {
     job: Mutex<(u64, Option<Job>)>,
     job_cv: Condvar,
-    done: Mutex<(u64, usize, Vec<WorkerStats>)>,
+    /// (generation, workers done, per-worker stats, workers panicked).
+    done: Mutex<(u64, usize, Vec<WorkerStats>, usize)>,
     done_cv: Condvar,
     shutdown: AtomicBool,
 }
@@ -35,6 +36,11 @@ pub struct WorkerPool {
     shared: Arc<Shared>,
     handles: Vec<std::thread::JoinHandle<()>>,
     pub workers: usize,
+    /// Serializes concurrent `run_generation` callers: the process-wide
+    /// [`shared_pool`]s are reachable from many threads at once (parallel
+    /// HBP builds from tests/services), and a generation's job slot and
+    /// done-counter are single-occupancy.
+    submit: Mutex<()>,
 }
 
 impl WorkerPool {
@@ -43,7 +49,7 @@ impl WorkerPool {
         let shared = Arc::new(Shared {
             job: Mutex::new((0, None)),
             job_cv: Condvar::new(),
-            done: Mutex::new((0, 0, vec![WorkerStats::default(); workers])),
+            done: Mutex::new((0, 0, vec![WorkerStats::default(); workers], 0)),
             done_cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
         });
@@ -56,15 +62,23 @@ impl WorkerPool {
                     .expect("spawning pool worker")
             })
             .collect();
-        WorkerPool { shared, handles, workers }
+        WorkerPool { shared, handles, workers, submit: Mutex::new(()) }
     }
 
     /// Run `work(worker_index, stats)` once on every worker; blocks until
     /// all workers finish the generation. Returns per-worker stats.
+    /// Concurrent callers are serialized (generations never overlap).
+    /// A panic inside `work` is caught on the worker (which stays alive
+    /// for later generations) and re-raised here on the submitter — the
+    /// same propagation the old per-call `thread::scope` builders had.
     pub fn run_generation<F>(&self, work: F) -> Vec<WorkerStats>
     where
         F: Fn(usize, &mut WorkerStats) + Sync,
     {
+        // tolerate poison: it only means a previous submitter re-raised a
+        // worker panic; the guarded state is () and generations are
+        // self-resetting, so there is nothing inconsistent to inherit.
+        let _submit = self.submit.lock().unwrap_or_else(|e| e.into_inner());
         let gen = {
             let mut job = self.shared.job.lock().unwrap();
             job.0 += 1;
@@ -83,7 +97,10 @@ impl WorkerPool {
         while !(done.0 == gen && done.1 == self.workers) {
             done = self.shared.done_cv.wait(done).unwrap();
         }
-        done.2.clone()
+        let (stats, panics) = (done.2.clone(), done.3);
+        drop(done);
+        assert!(panics == 0, "{panics} pool worker(s) panicked during generation {gen}");
+        stats
     }
 
     /// Execute a mixed fixed/competitive schedule on the pool (the §III-C
@@ -115,6 +132,26 @@ impl WorkerPool {
     }
 }
 
+/// Process-wide persistent pools keyed by worker count, for callers that
+/// do not own a long-lived engine (the parallel HBP builder, tests, the
+/// CLI). Created on first use, then parked between calls — repeated
+/// builds at the same thread count reuse warm workers instead of paying
+/// a per-call `thread::scope` spawn (§Perf: ~100µs per thread, which
+/// dominated small-matrix preprocessing). The distinct sizes requested
+/// by a process are few, so the registry stays tiny; pools live until
+/// process exit.
+pub fn shared_pool(workers: usize) -> Arc<WorkerPool> {
+    static POOLS: OnceLock<Mutex<Vec<Arc<WorkerPool>>>> = OnceLock::new();
+    let registry = POOLS.get_or_init(|| Mutex::new(Vec::new()));
+    let mut pools = registry.lock().unwrap();
+    if let Some(p) = pools.iter().find(|p| p.workers == workers) {
+        return Arc::clone(p);
+    }
+    let p = Arc::new(WorkerPool::new(workers));
+    pools.push(Arc::clone(&p));
+    p
+}
+
 impl Drop for WorkerPool {
     fn drop(&mut self) {
         self.shared.shutdown.store(true, Ordering::SeqCst);
@@ -143,20 +180,31 @@ fn worker_loop(w: usize, shared: Arc<Shared>) {
             }
         };
         let mut stats = WorkerStats::default();
+        let mut panicked = false;
         if let Some(ptr) = job_ptr {
             // SAFETY: run_generation blocks until we report done, so the
             // closure behind `ptr` is alive for the whole call.
             let work = unsafe { &*ptr };
-            work(w, &mut stats);
+            // catch panics so the generation still completes (no hang on
+            // the done condvar) and the worker survives for later
+            // generations; run_generation re-raises on the submitter.
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                work(w, &mut stats);
+            }));
+            panicked = result.is_err();
         }
         // report completion
         let mut done = shared.done.lock().unwrap();
         if done.0 != seen_gen {
             done.0 = seen_gen;
             done.1 = 0;
+            done.3 = 0;
         }
         done.2[w] = stats;
         done.1 += 1;
+        if panicked {
+            done.3 += 1;
+        }
         if done.1 == done.2.len() {
             shared.done_cv.notify_all();
         }
@@ -220,6 +268,55 @@ mod tests {
             pool_time < spawn_time,
             "pool {pool_time:.4}s should beat spawn {spawn_time:.4}s"
         );
+    }
+
+    #[test]
+    fn concurrent_generations_serialize() {
+        let pool = Arc::new(WorkerPool::new(3));
+        let total = Arc::new(AtomicU32::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let pool = Arc::clone(&pool);
+                let total = Arc::clone(&total);
+                s.spawn(move || {
+                    for _ in 0..20 {
+                        pool.run_generation(|_, _| {
+                            total.fetch_add(1, Ordering::Relaxed);
+                        });
+                    }
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 4 * 20 * 3);
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run_generation(|w, _| {
+                if w == 0 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(result.is_err(), "worker panic must propagate to the submitter");
+        // the pool must still serve later generations
+        let stats = pool.run_generation(|_, _| {});
+        assert_eq!(stats.len(), 2);
+    }
+
+    #[test]
+    fn shared_pool_registry_reuses_instances() {
+        let a = shared_pool(2);
+        let b = shared_pool(2);
+        assert!(Arc::ptr_eq(&a, &b), "same size must return the same pool");
+        assert_eq!(a.workers, 2);
+        let c = shared_pool(5);
+        assert_eq!(c.workers, 5);
+        assert!(!Arc::ptr_eq(&a, &c));
+        a.run_generation(|_, _| {});
+        c.run_generation(|_, _| {});
     }
 
     #[test]

@@ -49,6 +49,11 @@ fn gen_info_spmv_roundtrip() {
     let stdout = assert_success(&out, "hbp info");
     assert!(stdout.contains("nnz"), "info output missing nnz: {stdout}");
     assert!(stdout.contains("2D blocks"), "info output missing block count: {stdout}");
+    assert!(stdout.contains("storage_bytes"), "info output missing storage bytes: {stdout}");
+    assert!(
+        stdout.contains("hbp build  serial"),
+        "info output missing build wall-time: {stdout}"
+    );
 
     // spmv: HBP engine with verification against serial CSR
     let out = hbp()

@@ -123,6 +123,55 @@ fn prop_engines_agree_with_dense_oracle() {
 }
 
 #[test]
+fn plan_fill_parity_across_strategies_threads_and_shapes() {
+    use hbp_spmv::formats::Csr;
+    // cfg: 16 rows/block, 32 cols/block, warp 4
+    let cfg = PartitionConfig::test_small();
+    // edge shapes: empty matrix, single row, rows >> warp, entire
+    // row-blocks of zero rows, wide matrix with many empty column blocks
+    let zero_row_blocks = {
+        let mut lens = vec![0usize; 62];
+        lens[0] = 5;
+        lens[1] = 3;
+        lens[60] = 9; // row-blocks 1 and 2 are entirely empty
+        random::with_row_lengths(&lens, 48, 11)
+    };
+    let shapes: Vec<(&str, Csr)> = vec![
+        ("empty", Csr::empty(8, 8)),
+        ("single-row", random::with_row_lengths(&[20], 64, 1)),
+        ("rows-much-larger-than-warp", random::power_law_rows(300, 90, 2.0, 45, 7)),
+        ("zero-row-blocks", zero_row_blocks),
+        ("wide-empty-col-blocks", random::with_row_lengths(&[2, 0, 4, 1], 1000, 19)),
+    ];
+    let strategies: Vec<Box<dyn Reorder + Sync>> = vec![
+        Box::new(HashReorder::default()),
+        Box::new(SortReorder),
+        Box::new(DpReorder::default()),
+        Box::new(IdentityReorder),
+    ];
+    for (tag, m) in &shapes {
+        for s in &strategies {
+            let serial = build_hbp_with(m, cfg, s.as_ref());
+            serial
+                .validate()
+                .unwrap_or_else(|e| panic!("{tag}/{}: {e:#}", s.name()));
+            assert_eq!(serial.nnz(), m.nnz(), "{tag}/{}", s.name());
+            for threads in [1usize, 2, 3, 8] {
+                let par = build_hbp_parallel(m, cfg, s.as_ref(), threads);
+                let ctx = format!("{tag}/{}/threads={threads}", s.name());
+                assert_eq!(serial.col, par.col, "{ctx}: col");
+                assert_eq!(serial.data, par.data, "{ctx}: data");
+                assert_eq!(serial.add_sign, par.add_sign, "{ctx}: add_sign");
+                assert_eq!(serial.zero_row, par.zero_row, "{ctx}: zero_row");
+                assert_eq!(serial.output_hash, par.output_hash, "{ctx}: output_hash");
+                assert_eq!(serial.begin_ptr, par.begin_ptr, "{ctx}: begin_ptr");
+                assert_eq!(serial.blocks.len(), par.blocks.len(), "{ctx}: blocks");
+            }
+        }
+    }
+}
+
+#[test]
 fn prop_parallel_build_equals_serial() {
     check("parallel-build", 30, |g| {
         let rows = g.usize_in(1, 4 * g.size + 2);
