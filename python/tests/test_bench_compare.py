@@ -1,0 +1,123 @@
+"""The CI bench-trajectory gate (tools/bench_compare.py): pure-stdlib
+module, tested deterministically — no jax/hypothesis involvement."""
+
+import importlib.util
+import json
+import os
+import sys
+
+_TOOL = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__)))),
+    "tools",
+    "bench_compare.py",
+)
+_spec = importlib.util.spec_from_file_location("bench_compare", _TOOL)
+bench_compare = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(bench_compare)
+
+
+def _doc(entries):
+    return {"bench": "preprocess", "scale": "ci", "matrices": entries}
+
+
+def _entry(mid, **secs):
+    e = {"id": mid, "rows": 10, "cols": 10, "nnz": 20}
+    for f in bench_compare.SECS_FIELDS:
+        e[f] = secs.get(f)
+    return e
+
+
+def _write(tmp_path, name, doc):
+    p = tmp_path / name
+    p.write_text(json.dumps(doc))
+    return str(p)
+
+
+def _run(tmp_path, baseline, current, threshold=None, summary=None, monkeypatch=None):
+    argv = [
+        "--baseline",
+        _write(tmp_path, "base.json", baseline),
+        "--current",
+        _write(tmp_path, "cur.json", current),
+    ]
+    if threshold is not None:
+        argv += ["--threshold", str(threshold)]
+    if monkeypatch is not None:
+        if summary is not None:
+            monkeypatch.setenv("GITHUB_STEP_SUMMARY", summary)
+        else:
+            monkeypatch.delenv("GITHUB_STEP_SUMMARY", raising=False)
+    return bench_compare.main(argv)
+
+
+def test_all_null_seed_baseline_passes(tmp_path, monkeypatch):
+    baseline = _doc([_entry("m1"), _entry("m2")])  # schema-only seed
+    current = _doc([_entry("m1", build_serial_secs=0.5)])
+    assert _run(tmp_path, baseline, current, monkeypatch=monkeypatch) == 0
+
+
+def test_within_threshold_passes(tmp_path, monkeypatch):
+    baseline = _doc([_entry("m1", build_serial_secs=1.0, reorder_hbp_secs=0.1)])
+    current = _doc([_entry("m1", build_serial_secs=1.2, reorder_hbp_secs=0.11)])
+    assert _run(tmp_path, baseline, current, monkeypatch=monkeypatch) == 0
+
+
+def test_large_regression_fails(tmp_path, monkeypatch):
+    baseline = _doc([_entry("m1", build_serial_secs=1.0), _entry("m2", build_serial_secs=1.0)])
+    current = _doc([_entry("m1", build_serial_secs=2.0), _entry("m2", build_serial_secs=2.0)])
+    assert _run(tmp_path, baseline, current, monkeypatch=monkeypatch) == 1
+
+
+def test_speedup_passes_and_threshold_is_configurable(tmp_path, monkeypatch):
+    baseline = _doc([_entry("m1", build_serial_secs=2.0)])
+    current = _doc([_entry("m1", build_serial_secs=1.0)])
+    assert _run(tmp_path, baseline, current, monkeypatch=monkeypatch) == 0
+    # a tight custom threshold turns a mild slowdown into a failure
+    baseline = _doc([_entry("m1", build_serial_secs=1.0)])
+    current = _doc([_entry("m1", build_serial_secs=1.1)])
+    assert _run(tmp_path, baseline, current, threshold=1.05, monkeypatch=monkeypatch) == 1
+
+
+def test_step_summary_written(tmp_path, monkeypatch):
+    baseline = _doc([_entry("m1", build_serial_secs=1.0)])
+    current = _doc([_entry("m1", build_serial_secs=1.0)])
+    summary = tmp_path / "summary.md"
+    assert (
+        _run(tmp_path, baseline, current, summary=str(summary), monkeypatch=monkeypatch) == 0
+    )
+    text = summary.read_text()
+    assert "Preprocessing bench trajectory" in text
+    assert "| m1 |" in text
+
+
+def test_unreadable_input_is_a_distinct_error(tmp_path, monkeypatch):
+    monkeypatch.delenv("GITHUB_STEP_SUMMARY", raising=False)
+    assert (
+        bench_compare.main(
+            ["--baseline", str(tmp_path / "missing.json"), "--current", str(tmp_path / "m2.json")]
+        )
+        == 2
+    )
+
+
+def test_geomean_matches_hand_computation():
+    import math
+
+    rows, ratios = bench_compare.compare(
+        _doc([_entry("m1", build_serial_secs=1.0, build_parallel_secs=4.0)]),
+        _doc([_entry("m1", build_serial_secs=2.0, build_parallel_secs=2.0)]),
+    )
+    assert sorted(ratios) == [0.5, 2.0]
+    assert abs(bench_compare.geomean(ratios) - 1.0) < 1e-12
+    (mid, n, g, worst_field, worst) = rows[0]
+    assert mid == "m1" and n == 2
+    assert worst_field == "build_serial_secs" and abs(worst - 2.0) < 1e-12
+    assert abs(g - 1.0) < 1e-12
+
+
+def test_null_fields_are_skipped_not_zero():
+    _, ratios = bench_compare.compare(
+        _doc([_entry("m1", build_serial_secs=1.0, reorder_hbp_secs=None)]),
+        _doc([_entry("m1", build_serial_secs=1.0, reorder_hbp_secs=0.5)]),
+    )
+    assert ratios == [1.0]

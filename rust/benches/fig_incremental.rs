@@ -1,0 +1,95 @@
+//! Incremental update: delta-repair vs full rebuild across touched-row
+//! fractions.
+//!
+//! The paper's headline is cheap preprocessing; the serving path should
+//! not pay even that per update. This bench scales a fraction of each
+//! suite matrix's rows (a pattern-preserving delta), repairs only the
+//! touched blocks through `Hbp::apply_delta`, and compares against the
+//! full plan/fill rebuild the same change would otherwise cost —
+//! reporting how many blocks the repair actually touched.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use hbp_spmv::partition::PartitionConfig;
+use hbp_spmv::preprocess::{build_hbp_parallel, build_hbp_updatable, HashReorder, MatrixDelta};
+use hbp_spmv::util::bench::{banner, Bench, Table};
+use hbp_spmv::util::stats::geomean;
+
+const FRACS: [f64; 3] = [0.001, 0.01, 0.1];
+
+fn main() {
+    let b = Bench::from_env();
+    let threads = common::threads();
+    let cfg = PartitionConfig::default();
+    banner(
+        "Incremental",
+        &format!(
+            "Delta-repair (touched blocks only) vs full plan/fill rebuild across \
+             touched-row fractions (scale={}, {threads} threads)",
+            common::scale_name(common::bench_scale()),
+        ),
+    );
+    let mut t = Table::new(&[
+        "id",
+        "frac",
+        "rows",
+        "blocks touched",
+        "repair",
+        "rebuild",
+        "speedup",
+    ]);
+    let mut speedups_by_frac: Vec<Vec<f64>> = vec![Vec::new(); FRACS.len()];
+    for id in common::ALL_IDS {
+        let (meta, m) = common::load(id);
+        let reorder = HashReorder::default();
+        let (hbp0, map) = build_hbp_updatable(&m, cfg, &reorder, threads);
+        let rebuild = b
+            .run("full-rebuild", || build_hbp_parallel(&m, cfg, &reorder, threads))
+            .median();
+        let nonzero_rows: Vec<usize> = (0..m.rows).filter(|&r| m.row_nnz(r) > 0).collect();
+        if nonzero_rows.is_empty() {
+            continue;
+        }
+        for (fi, &frac) in FRACS.iter().enumerate() {
+            let k = ((frac * m.rows as f64).ceil() as usize).clamp(1, nonzero_rows.len());
+            let stride = (nonzero_rows.len() / k).max(1);
+            let mut delta = MatrixDelta::new();
+            for &r in nonzero_rows.iter().step_by(stride).take(k) {
+                // factor 1.0: repair timings are steady-state (every
+                // iteration writes the same bits)
+                delta = delta.scale_row(r, 1.0);
+            }
+            let mut hbp = hbp0.clone();
+            let mut m_mut = m.clone();
+            let mut report = Default::default();
+            let repair = b
+                .run("delta-repair", || {
+                    report = hbp
+                        .apply_delta(&mut m_mut, &map, &delta, &reorder, threads)
+                        .expect("pattern-preserving delta");
+                    report.blocks_touched
+                })
+                .median();
+            speedups_by_frac[fi].push(rebuild / repair.max(1e-12));
+            t.row(&[
+                meta.id.into(),
+                format!("{frac}"),
+                format!("{k}"),
+                format!("{} / {}", report.blocks_touched, report.blocks_total),
+                format!("{:.3} ms", repair * 1e3),
+                format!("{:.3} ms", rebuild * 1e3),
+                format!("{:.2}x", rebuild / repair.max(1e-12)),
+            ]);
+        }
+    }
+    t.print();
+    for (fi, &frac) in FRACS.iter().enumerate() {
+        if !speedups_by_frac[fi].is_empty() {
+            println!(
+                "geomean repair speedup at frac {frac}: {:.2}x over full rebuild",
+                geomean(&speedups_by_frac[fi])
+            );
+        }
+    }
+}

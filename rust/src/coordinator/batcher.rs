@@ -6,9 +6,17 @@
 //! serving-system batching discipline (vLLM-style), applied to SpMV.
 //! Batching matters here because requests against the same matrix share
 //! the preprocessed HBP structure and its cache residency.
+//!
+//! Matrix **updates** ride the same queue as SpMV requests, so a client
+//! that submits `spmv, update, spmv` observes them in that order: the
+//! dispatcher flushes the SpMV groups accumulated so far before applying
+//! an update, then keeps batching. The update itself goes through
+//! [`Router::update`]'s per-matrix write lock, so it is atomic against
+//! requests from other connections too.
 
 use super::router::{EngineKind, Router};
 use crate::coordinator::metrics::ServiceMetrics;
+use crate::preprocess::{MatrixDelta, UpdateReport};
 use anyhow::Result;
 use std::collections::BTreeMap;
 use std::sync::mpsc;
@@ -28,12 +36,23 @@ impl Default for BatcherConfig {
     }
 }
 
+/// What a queued request asks for.
+pub enum Payload {
+    Spmv {
+        engine: EngineKind,
+        x: Vec<f64>,
+        reply: mpsc::Sender<Result<Vec<f64>>>,
+    },
+    Update {
+        delta: MatrixDelta,
+        reply: mpsc::Sender<Result<UpdateReport>>,
+    },
+}
+
 /// One queued request.
 pub struct Request {
     pub matrix: String,
-    pub engine: EngineKind,
-    pub x: Vec<f64>,
-    pub reply: mpsc::Sender<Result<Vec<f64>>>,
+    pub payload: Payload,
 }
 
 /// Handle for submitting requests.
@@ -47,7 +66,23 @@ impl BatcherHandle {
     pub fn spmv(&self, matrix: &str, engine: EngineKind, x: Vec<f64>) -> Result<Vec<f64>> {
         let (reply, rx) = mpsc::channel();
         self.tx
-            .send(Request { matrix: matrix.to_string(), engine, x, reply })
+            .send(Request {
+                matrix: matrix.to_string(),
+                payload: Payload::Spmv { engine, x, reply },
+            })
+            .map_err(|_| anyhow::anyhow!("batcher shut down"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("batcher dropped request"))?
+    }
+
+    /// Submit a matrix delta and wait for its report. Ordered with this
+    /// handle's SpMV submissions.
+    pub fn update(&self, matrix: &str, delta: MatrixDelta) -> Result<UpdateReport> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request {
+                matrix: matrix.to_string(),
+                payload: Payload::Update { delta, reply },
+            })
             .map_err(|_| anyhow::anyhow!("batcher shut down"))?;
         rx.recv().map_err(|_| anyhow::anyhow!("batcher dropped request"))?
     }
@@ -84,6 +119,14 @@ impl Drop for Batcher {
     }
 }
 
+/// A drained SpMV awaiting group execution.
+struct PendingSpmv {
+    matrix: String,
+    engine: EngineKind,
+    x: Vec<f64>,
+    reply: mpsc::Sender<Result<Vec<f64>>>,
+}
+
 fn dispatcher(
     router: Arc<Router>,
     metrics: Arc<ServiceMetrics>,
@@ -110,53 +153,78 @@ fn dispatcher(
             }
         }
 
-        // group by (matrix, engine) preserving order
-        let mut groups: BTreeMap<(String, String), Vec<Request>> = BTreeMap::new();
+        // Process in arrival order: SpMVs accumulate and execute as
+        // (matrix, engine) groups; an update flushes what came before
+        // it, then applies, so order is preserved around mutation.
+        let mut pending: Vec<PendingSpmv> = Vec::new();
         for r in batch {
-            groups
-                .entry((r.matrix.clone(), format!("{:?}", r.engine)))
-                .or_default()
-                .push(r);
-        }
-        for ((_, _), reqs) in groups {
-            if reqs.len() > 1 {
-                // same-matrix batch: run as SpMM (element reuse across the
-                // batch); falls back to per-request on validation errors
-                let matrix = reqs[0].matrix.clone();
-                let engine = reqs[0].engine;
-                let dims_ok = router
-                    .get(&matrix)
-                    .map(|m| reqs.iter().all(|r| r.x.len() == m.cols))
-                    .unwrap_or(false);
-                if dims_ok {
+            match r.payload {
+                Payload::Spmv { engine, x, reply } => {
+                    pending.push(PendingSpmv { matrix: r.matrix, engine, x, reply });
+                }
+                Payload::Update { delta, reply } => {
+                    flush_spmvs(&router, &metrics, std::mem::take(&mut pending));
                     let t = crate::util::Timer::start();
-                    let xs: Vec<Vec<f64>> = reqs.iter().map(|r| r.x.clone()).collect();
-                    match router.spmm(&matrix, engine, xs) {
-                        Ok(ys) => {
-                            let secs = t.elapsed_secs() / reqs.len() as f64;
-                            let nnz = router.get(&matrix).map(|m| m.nnz).unwrap_or(0);
-                            for (req, y) in reqs.into_iter().zip(ys) {
-                                metrics.record_request(secs, nnz);
-                                let _ = req.reply.send(Ok(y));
-                            }
-                            continue;
-                        }
-                        Err(_) => { /* fall through to per-request path */ }
+                    let result = router.update(&r.matrix, &delta);
+                    match &result {
+                        Ok(report) => metrics.record_update(t.elapsed_secs(), report),
+                        Err(_) => metrics.record_error(),
                     }
+                    let _ = reply.send(result);
                 }
             }
-            for req in reqs {
+        }
+        flush_spmvs(&router, &metrics, pending);
+    }
+}
+
+/// Execute a drained run of SpMV requests: group by (matrix, engine),
+/// run same-matrix groups as SpMM (element reuse across the batch),
+/// fall back to per-request on validation errors.
+fn flush_spmvs(router: &Router, metrics: &ServiceMetrics, batch: Vec<PendingSpmv>) {
+    let mut groups: BTreeMap<(String, String), Vec<PendingSpmv>> = BTreeMap::new();
+    for r in batch {
+        groups
+            .entry((r.matrix.clone(), format!("{:?}", r.engine)))
+            .or_default()
+            .push(r);
+    }
+    for ((_, _), reqs) in groups {
+        if reqs.len() > 1 {
+            let matrix = reqs[0].matrix.clone();
+            let engine = reqs[0].engine;
+            let dims_ok = router
+                .get(&matrix)
+                .map(|m| reqs.iter().all(|r| r.x.len() == m.cols))
+                .unwrap_or(false);
+            if dims_ok {
                 let t = crate::util::Timer::start();
-                let result = router.spmv(&req.matrix, req.engine, &req.x);
-                match &result {
-                    Ok(_) => {
-                        let nnz = router.get(&req.matrix).map(|m| m.nnz).unwrap_or(0);
-                        metrics.record_request(t.elapsed_secs(), nnz);
+                let xs: Vec<Vec<f64>> = reqs.iter().map(|r| r.x.clone()).collect();
+                match router.spmm(&matrix, engine, xs) {
+                    Ok(ys) => {
+                        let secs = t.elapsed_secs() / reqs.len() as f64;
+                        let nnz = router.get(&matrix).map(|m| m.nnz).unwrap_or(0);
+                        for (req, y) in reqs.into_iter().zip(ys) {
+                            metrics.record_request(secs, nnz);
+                            let _ = req.reply.send(Ok(y));
+                        }
+                        continue;
                     }
-                    Err(_) => metrics.record_error(),
+                    Err(_) => { /* fall through to per-request path */ }
                 }
-                let _ = req.reply.send(result);
             }
+        }
+        for req in reqs {
+            let t = crate::util::Timer::start();
+            let result = router.spmv(&req.matrix, req.engine, &req.x);
+            match &result {
+                Ok(_) => {
+                    let nnz = router.get(&req.matrix).map(|m| m.nnz).unwrap_or(0);
+                    metrics.record_request(t.elapsed_secs(), nnz);
+                }
+                Err(_) => metrics.record_error(),
+            }
+            let _ = req.reply.send(result);
         }
     }
 }
@@ -178,6 +246,7 @@ mod tests {
         let (router, metrics) = setup();
         let m = router.get("m").unwrap();
         let (rows, cols) = (m.rows, m.cols);
+        drop(m);
         let batcher = Batcher::start(router.clone(), metrics.clone(), BatcherConfig::default());
         let h = batcher.handle();
         let results: Vec<Vec<f64>> = std::thread::scope(|s| {
@@ -201,5 +270,61 @@ mod tests {
         let err = batcher.handle().spmv("nope", EngineKind::Csr, vec![0.0; 50]);
         assert!(err.is_err());
         assert_eq!(metrics.snapshot().errors, 1);
+    }
+
+    #[test]
+    fn updates_interleave_with_spmv_traffic() {
+        let (router, metrics) = setup();
+        let cols = router.get("m").unwrap().cols;
+        let batcher = Batcher::start(router.clone(), metrics.clone(), BatcherConfig::default());
+        let h = batcher.handle();
+
+        let x = random::vector(cols, 4);
+        let before = h.spmv("m", EngineKind::Hbp, x.clone()).unwrap();
+        let report = h.update("m", MatrixDelta::new().scale_row(0, 2.0)).unwrap();
+        assert!(report.blocks_touched <= report.blocks_total);
+        let after = h.spmv("m", EngineKind::Hbp, x.clone()).unwrap();
+        // row 0 scaled by an exact power of two: y[0] doubles exactly
+        assert_eq!(after[0], 2.0 * before[0]);
+        for r in 1..before.len() {
+            assert_eq!(after[r], before[r], "row {r} must be unchanged");
+        }
+
+        // failed update: error surfaces, traffic continues
+        assert!(h.update("m", MatrixDelta::new().zero_row(999)).is_err());
+        assert!(h.spmv("m", EngineKind::Hbp, x).is_ok());
+
+        let snap = metrics.snapshot();
+        assert_eq!(snap.updates, 1);
+        assert_eq!(snap.errors, 1);
+        assert!(snap.mean_update_secs >= 0.0);
+    }
+
+    #[test]
+    fn concurrent_updates_and_spmvs_all_answered() {
+        let (router, metrics) = setup();
+        let cols = router.get("m").unwrap().cols;
+        let batcher = Batcher::start(router.clone(), metrics.clone(), BatcherConfig::default());
+        let h = batcher.handle();
+        std::thread::scope(|s| {
+            for i in 0..8 {
+                let h = h.clone();
+                s.spawn(move || {
+                    let y = h.spmv("m", EngineKind::Hbp, random::vector(cols, i)).unwrap();
+                    assert_eq!(y.len(), 60);
+                });
+            }
+            for _ in 0..4 {
+                let h = h.clone();
+                s.spawn(move || {
+                    // factor 1.0 keeps values stable under any ordering
+                    h.update("m", MatrixDelta::new().scale_row(1, 1.0)).unwrap();
+                });
+            }
+        });
+        let snap = metrics.snapshot();
+        assert_eq!(snap.requests, 8);
+        assert_eq!(snap.updates, 4);
+        assert_eq!(snap.errors, 0);
     }
 }

@@ -11,6 +11,12 @@ struct Inner {
     latency_stats: Welford,
     nnz_processed: f64,
     started: Instant,
+    // matrix-update traffic (the incremental-rebuild path)
+    updates: u64,
+    full_rebuilds: u64,
+    update_blocks_touched: u64,
+    update_blocks_total: u64,
+    update_secs: Welford,
 }
 
 /// Thread-safe service metrics.
@@ -35,6 +41,11 @@ impl ServiceMetrics {
                 latency_stats: Welford::new(),
                 nnz_processed: 0.0,
                 started: Instant::now(),
+                updates: 0,
+                full_rebuilds: 0,
+                update_blocks_touched: 0,
+                update_blocks_total: 0,
+                update_secs: Welford::new(),
             }),
         }
     }
@@ -51,6 +62,20 @@ impl ServiceMetrics {
         self.inner.lock().unwrap().errors += 1;
     }
 
+    /// Record one applied matrix delta: its latency and how much of the
+    /// HBP it had to re-fill (the blocks-touched vs blocks-total ratio
+    /// is the incremental path's whole value proposition).
+    pub fn record_update(&self, secs: f64, report: &crate::preprocess::UpdateReport) {
+        let mut m = self.inner.lock().unwrap();
+        m.updates += 1;
+        if report.full_rebuild {
+            m.full_rebuilds += 1;
+        }
+        m.update_blocks_touched += report.blocks_touched as u64;
+        m.update_blocks_total += report.blocks_total as u64;
+        m.update_secs.push(secs);
+    }
+
     /// Snapshot for the `stats` endpoint.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let m = self.inner.lock().unwrap();
@@ -63,6 +88,11 @@ impl ServiceMetrics {
             p99_latency_secs: m.latency.quantile(0.99),
             requests_per_sec: m.requests as f64 / elapsed.max(1e-9),
             gflops: 2.0 * m.nnz_processed / elapsed.max(1e-9) / 1e9,
+            updates: m.updates,
+            full_rebuilds: m.full_rebuilds,
+            update_blocks_touched: m.update_blocks_touched,
+            update_blocks_total: m.update_blocks_total,
+            mean_update_secs: m.update_secs.mean(),
         }
     }
 }
@@ -77,6 +107,13 @@ pub struct MetricsSnapshot {
     pub p99_latency_secs: f64,
     pub requests_per_sec: f64,
     pub gflops: f64,
+    pub updates: u64,
+    pub full_rebuilds: u64,
+    /// Cumulative blocks re-filled across all updates.
+    pub update_blocks_touched: u64,
+    /// Cumulative pre-update block counts across all updates.
+    pub update_blocks_total: u64,
+    pub mean_update_secs: f64,
 }
 
 impl MetricsSnapshot {
@@ -90,6 +127,11 @@ impl MetricsSnapshot {
             ("p99_latency_secs", Json::Num(self.p99_latency_secs)),
             ("requests_per_sec", Json::Num(self.requests_per_sec)),
             ("gflops", Json::Num(self.gflops)),
+            ("updates", Json::Num(self.updates as f64)),
+            ("full_rebuilds", Json::Num(self.full_rebuilds as f64)),
+            ("update_blocks_touched", Json::Num(self.update_blocks_touched as f64)),
+            ("update_blocks_total", Json::Num(self.update_blocks_total as f64)),
+            ("mean_update_secs", Json::Num(self.mean_update_secs)),
         ])
     }
 }
@@ -111,6 +153,36 @@ mod tests {
         assert!(s.mean_latency_secs > 0.0);
         assert!(s.p99_latency_secs >= s.p50_latency_secs);
         assert!(s.gflops > 0.0);
+    }
+
+    #[test]
+    fn records_updates() {
+        use crate::preprocess::UpdateReport;
+        let m = ServiceMetrics::new();
+        let partial = UpdateReport {
+            rows_touched: 2,
+            blocks_touched: 3,
+            blocks_total: 10,
+            full_rebuild: false,
+        };
+        let full = UpdateReport {
+            rows_touched: 9,
+            blocks_touched: 10,
+            blocks_total: 10,
+            full_rebuild: true,
+        };
+        m.record_update(1e-4, &partial);
+        m.record_update(2e-3, &full);
+        let s = m.snapshot();
+        assert_eq!(s.updates, 2);
+        assert_eq!(s.full_rebuilds, 1);
+        assert_eq!(s.update_blocks_touched, 13);
+        assert_eq!(s.update_blocks_total, 20);
+        assert!(s.mean_update_secs > 0.0);
+        // the json view carries the update fields
+        let j = s.to_json();
+        assert_eq!(j.get("updates").and_then(|v| v.as_usize()), Some(2));
+        assert_eq!(j.get("full_rebuilds").and_then(|v| v.as_usize()), Some(1));
     }
 
     #[test]

@@ -6,6 +6,11 @@
 //! ([`metrics`]), and a line-delimited-JSON TCP front plus an in-process
 //! API ([`server`]). The request path is pure rust — the PJRT runtime
 //! executes the AOT-compiled kernels, Python is long gone.
+//!
+//! Hosted matrices are **mutable**: the `update` request kind applies a
+//! value-level [`crate::preprocess::MatrixDelta`] to every resident
+//! engine under the matrix's write lock, with the HBP operand repaired
+//! incrementally (touched blocks only) instead of rebuilt.
 
 pub mod metrics;
 pub mod router;

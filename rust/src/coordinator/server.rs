@@ -6,17 +6,26 @@
 //! ```text
 //! -> {"op":"spmv", "matrix":"m1", "x":[...], "engine":"hbp"}
 //! <- {"ok":true, "y":[...]}
+//! -> {"op":"update", "matrix":"m1", "ops":[{"kind":"scale_row","row":3,"factor":0.5}, ...]}
+//! <- {"ok":true, "rows_touched":1, "blocks_touched":2, "blocks_total":40, "full_rebuild":false}
 //! -> {"op":"list"}
 //! <- {"ok":true, "matrices":[{"name":"m1","rows":...,"cols":...,"nnz":...}]}
 //! -> {"op":"stats"}
 //! <- {"ok":true, "stats":{...}}
 //! ```
+//!
+//! Update op kinds mirror [`DeltaOp`]:
+//! `{"kind":"set","row":R,"col":C,"value":V}`,
+//! `{"kind":"scale_row","row":R,"factor":F}`,
+//! `{"kind":"zero_row","row":R}`, and
+//! `{"kind":"replace_row","row":R,"cols":[...],"values":[...]}`.
 
 use super::batcher::{Batcher, BatcherConfig, BatcherHandle};
 use super::metrics::ServiceMetrics;
 use super::router::{EngineKind, Router};
+use crate::preprocess::{DeltaOp, MatrixDelta, UpdateReport};
 use crate::util::json::{obj, Json};
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
@@ -44,6 +53,12 @@ impl Coordinator {
     /// Synchronous SpMV through the batching pipeline.
     pub fn spmv(&self, matrix: &str, engine: EngineKind, x: Vec<f64>) -> Result<Vec<f64>> {
         self.handle.spmv(matrix, engine, x)
+    }
+
+    /// Synchronous matrix update through the batching pipeline (ordered
+    /// with SpMV submissions on the same queue).
+    pub fn update(&self, matrix: &str, delta: MatrixDelta) -> Result<UpdateReport> {
+        self.handle.update(matrix, delta)
     }
 
     pub fn handle(&self) -> BatcherHandle {
@@ -82,6 +97,12 @@ impl Coordinator {
                     ("y", crate::util::json::num_arr(&y)),
                 ]))
             }
+            "update" => {
+                let matrix = req.req_str("matrix")?;
+                let delta = delta_from_json(&req)?;
+                let report = self.update(matrix, delta)?;
+                Ok(report_json(&report))
+            }
             "list" => {
                 let matrices: Vec<Json> = self
                     .router
@@ -107,6 +128,125 @@ impl Coordinator {
             other => anyhow::bail!("unknown op {other:?}"),
         }
     }
+}
+
+/// Strict index parse for update ops: `Json::as_usize` is a saturating
+/// float cast (`-1` → 0, `3.9` → 3), which on a *write* endpoint would
+/// silently mutate the wrong row — reject anything non-integral,
+/// negative, or out of exact-f64 range instead.
+fn req_index(op: &Json, key: &str, ctx: &str) -> Result<usize> {
+    let n = op
+        .get(key)
+        .and_then(Json::as_f64)
+        .with_context(|| format!("{ctx}: missing numeric {key:?}"))?;
+    anyhow::ensure!(
+        n.fract() == 0.0 && (0.0..=9.007_199_254_740_992e15).contains(&n),
+        "{ctx}: {key} must be a non-negative integer, got {n}"
+    );
+    Ok(n as usize)
+}
+
+/// Parse the `ops` array of an `update` request into a [`MatrixDelta`].
+fn delta_from_json(req: &Json) -> Result<MatrixDelta> {
+    let ops = req
+        .get("ops")
+        .and_then(Json::as_arr)
+        .context("missing array field \"ops\"")?;
+    let mut delta = MatrixDelta::new();
+    for (i, op) in ops.iter().enumerate() {
+        let ctx = format!("ops[{i}]");
+        let kind = op.req_str("kind").with_context(|| ctx.clone())?;
+        let row = req_index(op, "row", &ctx)?;
+        match kind {
+            "set" => {
+                let col = req_index(op, "col", &ctx)?;
+                let value = op
+                    .get("value")
+                    .and_then(Json::as_f64)
+                    .with_context(|| format!("ops[{i}]: missing numeric \"value\""))?;
+                delta = delta.set(row, col, value);
+            }
+            "scale_row" => {
+                let factor = op
+                    .get("factor")
+                    .and_then(Json::as_f64)
+                    .with_context(|| format!("ops[{i}]: missing numeric \"factor\""))?;
+                delta = delta.scale_row(row, factor);
+            }
+            "zero_row" => delta = delta.zero_row(row),
+            "replace_row" => {
+                let cols: Vec<u32> = op
+                    .get("cols")
+                    .and_then(Json::as_arr)
+                    .with_context(|| format!("ops[{i}]: missing array \"cols\""))?
+                    .iter()
+                    .map(|v| {
+                        let n = v.as_f64().with_context(|| format!("ops[{i}]: non-numeric col"))?;
+                        anyhow::ensure!(
+                            n.fract() == 0.0 && (0.0..=u32::MAX as f64).contains(&n),
+                            "ops[{i}]: col must be a non-negative integer, got {n}"
+                        );
+                        Ok(n as u32)
+                    })
+                    .collect::<Result<_>>()?;
+                let values: Vec<f64> = op
+                    .get("values")
+                    .and_then(Json::as_arr)
+                    .with_context(|| format!("ops[{i}]: missing array \"values\""))?
+                    .iter()
+                    .map(|v| v.as_f64().with_context(|| format!("ops[{i}]: non-numeric value")))
+                    .collect::<Result<_>>()?;
+                delta = delta.replace_row(row, cols, values);
+            }
+            other => bail!("ops[{i}]: unknown kind {other:?}"),
+        }
+    }
+    Ok(delta)
+}
+
+/// Serialize a delta into the protocol's `ops` array (client side).
+fn delta_to_json(delta: &MatrixDelta) -> Json {
+    let ops: Vec<Json> = delta
+        .ops
+        .iter()
+        .map(|op| match op {
+            DeltaOp::Set { row, col, value } => obj(&[
+                ("kind", Json::Str("set".into())),
+                ("row", Json::Num(*row as f64)),
+                ("col", Json::Num(*col as f64)),
+                ("value", Json::Num(*value)),
+            ]),
+            DeltaOp::ScaleRow { row, factor } => obj(&[
+                ("kind", Json::Str("scale_row".into())),
+                ("row", Json::Num(*row as f64)),
+                ("factor", Json::Num(*factor)),
+            ]),
+            DeltaOp::ZeroRow { row } => obj(&[
+                ("kind", Json::Str("zero_row".into())),
+                ("row", Json::Num(*row as f64)),
+            ]),
+            DeltaOp::ReplaceRow { row, cols, values } => obj(&[
+                ("kind", Json::Str("replace_row".into())),
+                ("row", Json::Num(*row as f64)),
+                (
+                    "cols",
+                    Json::Arr(cols.iter().map(|&c| Json::Num(c as f64)).collect()),
+                ),
+                ("values", crate::util::json::num_arr(values)),
+            ]),
+        })
+        .collect();
+    Json::Arr(ops)
+}
+
+fn report_json(report: &UpdateReport) -> Json {
+    obj(&[
+        ("ok", Json::Bool(true)),
+        ("rows_touched", Json::Num(report.rows_touched as f64)),
+        ("blocks_touched", Json::Num(report.blocks_touched as f64)),
+        ("blocks_total", Json::Num(report.blocks_total as f64)),
+        ("full_rebuild", Json::Bool(report.full_rebuild)),
+    ])
 }
 
 /// Serve the coordinator over TCP until the process exits. Binds to
@@ -200,6 +340,26 @@ impl Client {
             .map(|v| v.as_f64().context("bad y entry"))
             .collect()
     }
+
+    /// Apply a delta to a hosted matrix, returning the server's report.
+    pub fn update(&mut self, matrix: &str, delta: &MatrixDelta) -> Result<UpdateReport> {
+        let req = obj(&[
+            ("op", Json::Str("update".into())),
+            ("matrix", Json::Str(matrix.into())),
+            ("ops", delta_to_json(delta)),
+        ]);
+        let resp = self.call(&req)?;
+        anyhow::ensure!(
+            resp.get("ok") == Some(&Json::Bool(true)),
+            "server error: {resp}"
+        );
+        Ok(UpdateReport {
+            rows_touched: resp.req_usize("rows_touched")?,
+            blocks_touched: resp.req_usize("blocks_touched")?,
+            blocks_total: resp.req_usize("blocks_total")?,
+            full_rebuild: resp.get("full_rebuild") == Some(&Json::Bool(true)),
+        })
+    }
 }
 
 #[cfg(test)]
@@ -232,6 +392,73 @@ mod tests {
 
         let stats = c.handle_json(r#"{"op":"stats"}"#);
         assert!(stats.get("stats").unwrap().req_usize("requests").unwrap() >= 1);
+    }
+
+    #[test]
+    fn json_api_update_round_trip() {
+        let c = coordinator();
+        let x: Vec<f64> = (0..30).map(|i| (i as f64 + 1.0) / 30.0).collect();
+        let before = c.spmv("t", EngineKind::Hbp, x.clone()).unwrap();
+
+        let resp = c.handle_json(
+            r#"{"op":"update","matrix":"t","ops":[{"kind":"scale_row","row":0,"factor":2}]}"#,
+        );
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+        assert_eq!(resp.get("full_rebuild"), Some(&Json::Bool(false)));
+        assert!(resp.req_usize("blocks_total").unwrap() >= 1);
+
+        let after = c.spmv("t", EngineKind::Hbp, x).unwrap();
+        assert_eq!(after[0], 2.0 * before[0]);
+        assert_eq!(&after[1..], &before[1..]);
+
+        let stats = c.handle_json(r#"{"op":"stats"}"#);
+        assert_eq!(stats.get("stats").unwrap().req_usize("updates").unwrap(), 1);
+    }
+
+    #[test]
+    fn json_api_update_errors() {
+        let c = coordinator();
+        // missing ops array
+        let r = c.handle_json(r#"{"op":"update","matrix":"t"}"#);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+        // unknown kind
+        let r = c.handle_json(r#"{"op":"update","matrix":"t","ops":[{"kind":"nope","row":0}]}"#);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+        // out-of-range row surfaces the router error
+        let r = c.handle_json(
+            r#"{"op":"update","matrix":"t","ops":[{"kind":"zero_row","row":4000}]}"#,
+        );
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+        // fractional / negative indices are rejected, not truncated onto
+        // some other row
+        for bad in [
+            r#"{"op":"update","matrix":"t","ops":[{"kind":"zero_row","row":3.9}]}"#,
+            r#"{"op":"update","matrix":"t","ops":[{"kind":"zero_row","row":-1}]}"#,
+        ] {
+            let r = c.handle_json(bad);
+            assert_eq!(r.get("ok"), Some(&Json::Bool(false)), "{bad}");
+        }
+        let frac_col = r#"{"ops":[{"kind":"replace_row","row":0,"cols":[1.5],"values":[2]}]}"#;
+        assert!(delta_from_json(&Json::parse(frac_col).unwrap()).is_err());
+        // still serving
+        let x: Vec<f64> = vec![0.1; 30];
+        assert!(c.spmv("t", EngineKind::Hbp, x).is_ok());
+    }
+
+    #[test]
+    fn delta_json_round_trips() {
+        let delta = MatrixDelta::new()
+            .set(1, 2, 3.5)
+            .scale_row(4, 0.5)
+            .zero_row(7)
+            .replace_row(2, vec![0, 5, 9], vec![1.0, -2.0, 3.0]);
+        let req = obj(&[
+            ("op", Json::Str("update".into())),
+            ("matrix", Json::Str("t".into())),
+            ("ops", delta_to_json(&delta)),
+        ]);
+        let parsed = delta_from_json(&Json::parse(&req.to_string()).unwrap()).unwrap();
+        assert_eq!(parsed, delta);
     }
 
     #[test]

@@ -110,6 +110,23 @@ impl SpmvEngine for CsrParallel {
         PhaseTimes { spmv: t.elapsed_secs(), combine: 0.0 }
     }
 
+    /// Value-level update in place. CSR derives nothing from the values
+    /// and the row extents never change (ReplaceRow stays within its
+    /// row), so the nnz-balanced `bounds` stay valid for every delta
+    /// kind — even pattern-changing ones.
+    fn update(
+        &mut self,
+        delta: &crate::preprocess::MatrixDelta,
+    ) -> anyhow::Result<crate::preprocess::UpdateReport> {
+        let change = crate::preprocess::apply_to_csr(&mut self.m, delta)?;
+        Ok(crate::preprocess::UpdateReport {
+            rows_touched: change.touched_rows.len(),
+            blocks_touched: 0,
+            blocks_total: 0,
+            full_rebuild: false,
+        })
+    }
+
     /// SpMM with a vector-inner loop: every matrix element is read once
     /// and applied to the whole batch (k-way reuse of the expensive
     /// stream) — the win the coordinator's same-matrix batching buys.
@@ -193,6 +210,25 @@ mod tests {
             eng.spmv(x, &mut expect);
             assert!(allclose(y, &expect, 1e-12, 1e-12));
         }
+    }
+
+    #[test]
+    fn update_applies_values_in_place() {
+        use crate::preprocess::MatrixDelta;
+        let m = random::power_law_rows(60, 50, 2.0, 15, 11);
+        let mut eng = CsrParallel::new(m.clone(), 3);
+        let row = (0..60).find(|&r| m.row_nnz(r) >= 1).unwrap();
+        let report = eng.update(&MatrixDelta::new().scale_row(row, 4.0)).unwrap();
+        assert_eq!(report.rows_touched, 1);
+        let x = random::vector(50, 2);
+        let mut y = vec![0.0; 60];
+        eng.spmv(&x, &mut y);
+        let mut mutated = m.clone();
+        crate::preprocess::apply_to_csr(&mut mutated, &MatrixDelta::new().scale_row(row, 4.0))
+            .unwrap();
+        let mut expect = vec![0.0; 60];
+        mutated.spmv(&x, &mut expect);
+        assert!(allclose(&y, &expect, 1e-12, 1e-12));
     }
 
     #[test]

@@ -1,6 +1,8 @@
 //! The engine abstraction shared by benches, examples and the
 //! coordinator's router.
 
+use crate::preprocess::{MatrixDelta, UpdateReport};
+
 /// Timing breakdown of a two-phase (SpMV + combine) execution — the
 /// quantities plotted in Fig. 9.
 #[derive(Clone, Copy, Debug, Default)]
@@ -48,6 +50,15 @@ pub trait SpmvEngine: Sync {
     /// GFLOPS for a measured execution time (the paper's `2*nnz/t`).
     fn gflops(&self, secs: f64) -> f64 {
         crate::util::timer::spmv_gflops(self.nnz(), secs)
+    }
+
+    /// Apply a value-level matrix update in place so the resident
+    /// operand keeps serving without a re-registration. Engines that
+    /// hold derived structure repair only what the delta invalidates
+    /// (see [`crate::exec::HbpEngine::update`]); the default refuses,
+    /// and callers fall back to rebuilding the engine.
+    fn update(&mut self, _delta: &MatrixDelta) -> anyhow::Result<UpdateReport> {
+        anyhow::bail!("engine {:?} does not support incremental updates", self.name())
     }
 }
 

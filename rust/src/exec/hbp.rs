@@ -11,10 +11,21 @@
 use super::combine::{combine_on_pool, combine_sparse_on_pool, CombineIndex};
 use super::engine::{PhaseTimes, SpmvEngine};
 use super::scheduler::{mixed_schedule, MixedSchedule, WorkerStats};
-use crate::preprocess::{Hbp, HbpBlock};
+use crate::formats::Csr;
+use crate::partition::{block_map, BlockMap, PartitionConfig};
+use crate::preprocess::{build_hbp_updatable, Hbp, HbpBlock, MatrixDelta, Reorder, UpdateReport};
 use crate::util::pool::WorkerPool;
 use crate::util::sync::SharedMut;
 use crate::util::Timer;
+
+/// What [`HbpEngine::update`] needs to repair the resident HBP without
+/// a re-upload: the source CSR (kept in lock-step with the HBP), the
+/// plan's block map, and the reorder strategy for fallback rebuilds.
+struct UpdateSource {
+    m: Csr,
+    map: BlockMap,
+    reorder: Box<dyn Reorder + Send + Sync>,
+}
 
 /// HBP execution engine.
 pub struct HbpEngine {
@@ -38,6 +49,9 @@ pub struct HbpEngine {
     /// Sparsity-aware combine (the paper's Discussion/future-work
     /// optimization): `None` disables it (dense streaming combine).
     combine_index: Option<CombineIndex>,
+    /// Present only for engines built through
+    /// [`HbpEngine::new_updatable`]; [`HbpEngine::update`] requires it.
+    update_src: Option<UpdateSource>,
 }
 
 impl HbpEngine {
@@ -59,7 +73,62 @@ impl HbpEngine {
             partials: std::sync::Mutex::new(Vec::new()),
             pool: WorkerPool::new(threads),
             combine_index,
+            update_src: None,
         }
+    }
+
+    /// Build an engine that **retains its source** (CSR + plan map +
+    /// reorder strategy) so [`HbpEngine::update`] can repair the
+    /// resident HBP in place instead of requiring a re-registration.
+    /// Costs one CSR copy held alongside the HBP — the serving-path
+    /// trade the coordinator makes for every hosted matrix.
+    pub fn new_updatable(
+        m: Csr,
+        cfg: PartitionConfig,
+        reorder: Box<dyn Reorder + Send + Sync>,
+        threads: usize,
+        competitive_frac: f64,
+    ) -> Self {
+        let (hbp, map) = build_hbp_updatable(&m, cfg, reorder.as_ref(), threads);
+        let mut eng = HbpEngine::new(hbp, threads, competitive_frac);
+        eng.update_src = Some(UpdateSource { m, map, reorder });
+        eng
+    }
+
+    /// Apply a delta to the resident (CSR, HBP) pair. Pattern-preserving
+    /// deltas re-fill only the touched blocks' slices and leave every
+    /// derived engine structure (schedule, slot count, combine index)
+    /// valid by construction; a pattern-changing delta rebuilds the HBP
+    /// and re-derives them. Errors if the engine was built without
+    /// [`HbpEngine::new_updatable`] or the delta is invalid (in which
+    /// case nothing is modified).
+    pub fn update(&mut self, delta: &MatrixDelta) -> anyhow::Result<UpdateReport> {
+        let HbpEngine { hbp, update_src, threads, .. } = self;
+        let src = update_src.as_mut().ok_or_else(|| {
+            anyhow::anyhow!("HBP engine holds no update source (use HbpEngine::new_updatable)")
+        })?;
+        let reorder: &(dyn Reorder + Sync) = src.reorder.as_ref();
+        let report = hbp.apply_delta(&mut src.m, &src.map, delta, reorder, *threads)?;
+        if report.full_rebuild {
+            src.map = block_map(&src.m, &hbp.grid);
+            self.reinit_derived();
+        }
+        Ok(report)
+    }
+
+    /// Source CSR of an updatable engine (kept in lock-step with the
+    /// HBP by [`HbpEngine::update`]).
+    pub fn source(&self) -> Option<&Csr> {
+        self.update_src.as_ref().map(|s| &s.m)
+    }
+
+    /// Re-derive the structure-dependent caches after the HBP's block
+    /// list changed (full-rebuild fallback).
+    fn reinit_derived(&mut self) {
+        self.schedule = mixed_schedule(self.hbp.blocks.len(), self.threads, self.competitive_frac);
+        self.total_slots = self.hbp.blocks.iter().map(|b| b.nrows).sum();
+        let combine_index = CombineIndex::build(&self.hbp);
+        self.combine_index = (combine_index.sparse_fraction() > 0.0).then_some(combine_index);
     }
 
     /// Disable the sparsity-aware combine (ablation / A-B comparison).
@@ -128,7 +197,7 @@ impl HbpEngine {
         }
     }
 
-    /// Public wrapper over [`Self::block_spmv`] for external harnesses
+    /// Public wrapper over `Self::block_spmv` for external harnesses
     /// (the atomic-write ablation bench reimplements the write phase).
     pub fn block_spmv_public(hbp: &Hbp, b: &HbpBlock, x: &[f64], out: &mut [f64]) {
         Self::block_spmv(hbp, b, x, out)
@@ -183,6 +252,10 @@ impl SpmvEngine for HbpEngine {
             None => combine_on_pool(&self.hbp, &partials, y, &self.pool),
         }
         PhaseTimes { spmv: spmv_secs, combine: t.elapsed_secs() }
+    }
+
+    fn update(&mut self, delta: &MatrixDelta) -> anyhow::Result<UpdateReport> {
+        HbpEngine::update(self, delta)
     }
 }
 
@@ -285,6 +358,74 @@ mod tests {
         assert_eq!(y[1], 0.0);
         assert_eq!(y[2], 0.0);
         assert_eq!(y[4], 0.0);
+    }
+
+    #[test]
+    fn updatable_engine_tracks_deltas() {
+        use crate::preprocess::{HashReorder, MatrixDelta};
+        let m = random::power_law_rows(150, 120, 2.0, 30, 19);
+        let mut eng = HbpEngine::new_updatable(
+            m.clone(),
+            PartitionConfig::test_small(),
+            Box::new(HashReorder::default()),
+            3,
+            0.25,
+        );
+        let x = random::vector(120, 8);
+        let row = (0..150).find(|&r| m.row_nnz(r) >= 1).unwrap();
+        let report = eng.update(&MatrixDelta::new().scale_row(row, -3.0)).unwrap();
+        assert!(!report.full_rebuild);
+        assert!(report.blocks_touched >= 1);
+        // engine output matches a CSR oracle on the mutated matrix
+        let mut expect = vec![0.0; 150];
+        eng.source().unwrap().spmv(&x, &mut expect);
+        let mut y = vec![0.0; 150];
+        eng.spmv(&x, &mut y);
+        assert!(allclose(&y, &expect, 1e-10, 1e-12));
+        // and differs from the pre-update product in the scaled row
+        let mut before = vec![0.0; 150];
+        m.spmv(&x, &mut before);
+        assert!((y[row] - before[row]).abs() > 0.0 || before[row] == 0.0);
+    }
+
+    #[test]
+    fn updatable_engine_survives_pattern_fallback() {
+        use crate::preprocess::{HashReorder, MatrixDelta};
+        let m = random::power_law_rows(100, 150, 2.0, 30, 23);
+        let mut eng = HbpEngine::new_updatable(
+            m.clone(),
+            PartitionConfig::test_small(),
+            Box::new(HashReorder::default()),
+            2,
+            0.25,
+        );
+        let row = (0..100).find(|&r| m.row_nnz(r) >= 1).unwrap();
+        let n = m.row_nnz(row);
+        let old = m.row(row).0.to_vec();
+        let new: Vec<u32> = (0..150u32).filter(|c| !old.contains(c)).take(n).collect();
+        let report = eng
+            .update(&MatrixDelta::new().replace_row(row, new, vec![2.0; n]))
+            .unwrap();
+        assert!(report.full_rebuild);
+        // engine still serves correctly after the rebuild path
+        let x = random::vector(150, 2);
+        let mut expect = vec![0.0; 100];
+        eng.source().unwrap().spmv(&x, &mut expect);
+        let mut y = vec![0.0; 100];
+        eng.spmv(&x, &mut y);
+        assert!(allclose(&y, &expect, 1e-10, 1e-12));
+        // a follow-up partial update still works against the refreshed map
+        let r2 = eng.update(&MatrixDelta::new().scale_row(row, 0.5)).unwrap();
+        assert!(!r2.full_rebuild);
+    }
+
+    #[test]
+    fn non_updatable_engine_refuses_updates() {
+        use crate::preprocess::MatrixDelta;
+        let m = random::uniform(20, 20, 0.3, 4);
+        let hbp = build_hbp(&m, PartitionConfig::test_small());
+        let mut eng = HbpEngine::new(hbp, 2, 0.25);
+        assert!(eng.update(&MatrixDelta::new().zero_row(0)).is_err());
     }
 
     #[test]

@@ -99,6 +99,36 @@ impl SpmvEngine for Spmv2dEngine {
         super::combine::combine_on_pool(&self.shell, &partials, y, &self.pool);
         PhaseTimes { spmv: spmv_secs, combine: t.elapsed_secs() }
     }
+
+    /// Value-level update in place: the block views hold index *ranges*
+    /// into the parent arrays, so mutated values are picked up with no
+    /// repair at all. Only a pattern change (columns moving between
+    /// blocks) invalidates the views and the combine shell — rebuild
+    /// both then.
+    fn update(
+        &mut self,
+        delta: &crate::preprocess::MatrixDelta,
+    ) -> anyhow::Result<crate::preprocess::UpdateReport> {
+        let change = crate::preprocess::apply_to_csr(&mut self.m, delta)?;
+        if change.pattern_changed {
+            self.views = block_views(&self.m, &self.grid);
+            self.shell = build_hbp_with(&self.m, self.grid.cfg, &IdentityReorder);
+            self.total_slots = self.shell.blocks.iter().map(|b| b.nrows).sum();
+            // both counts describe the rebuilt views: all were written
+            return Ok(crate::preprocess::UpdateReport {
+                rows_touched: change.touched_rows.len(),
+                blocks_touched: self.views.len(),
+                blocks_total: self.views.len(),
+                full_rebuild: true,
+            });
+        }
+        Ok(crate::preprocess::UpdateReport {
+            rows_touched: change.touched_rows.len(),
+            blocks_touched: 0,
+            blocks_total: self.views.len(),
+            full_rebuild: false,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -142,5 +172,35 @@ mod tests {
         let mut y = vec![1.0; 8];
         eng.spmv(&vec![1.0; 8], &mut y);
         assert_eq!(y, vec![0.0; 8]);
+    }
+
+    #[test]
+    fn update_value_only_and_pattern_change() {
+        use crate::preprocess::MatrixDelta;
+        let m = random::power_law_rows(80, 100, 2.0, 25, 13);
+        let mut eng = Spmv2dEngine::new(m.clone(), PartitionConfig::test_small(), 2);
+        let row = (0..80).find(|&r| m.row_nnz(r) >= 2).unwrap();
+        // value-only: views untouched, output tracks the new values
+        let r1 = eng.update(&MatrixDelta::new().scale_row(row, -1.5)).unwrap();
+        assert!(!r1.full_rebuild);
+        let x = random::vector(100, 5);
+        let mut y = vec![0.0; 80];
+        eng.spmv(&x, &mut y);
+        let mut expect = vec![0.0; 80];
+        eng.m.spmv(&x, &mut expect);
+        assert!(allclose(&y, &expect, 1e-10, 1e-12));
+        // pattern change: views + shell rebuilt, still correct
+        let n = eng.m.row_nnz(row);
+        let old = eng.m.row(row).0.to_vec();
+        let new: Vec<u32> = (0..100u32).filter(|c| !old.contains(c)).take(n).collect();
+        let r2 = eng
+            .update(&MatrixDelta::new().replace_row(row, new, vec![1.0; n]))
+            .unwrap();
+        assert!(r2.full_rebuild);
+        let mut y = vec![0.0; 80];
+        eng.spmv(&x, &mut y);
+        let mut expect = vec![0.0; 80];
+        eng.m.spmv(&x, &mut expect);
+        assert!(allclose(&y, &expect, 1e-10, 1e-12));
     }
 }

@@ -65,6 +65,13 @@ pub struct BlockEntry {
 pub struct BlockMap {
     pub blocks: Vec<BlockEntry>,
     pub segs: Vec<RowSeg>,
+    /// Row-block index (CSR-style): `by_bi[bi_ptr[bi]..bi_ptr[bi+1]]`
+    /// are the indices into `blocks` of row-block `bi`'s blocks,
+    /// ascending. Built free of charge from the placement pass; it is
+    /// what keeps [`BlockMap::blocks_for_rows`] proportional to the
+    /// touched row-blocks' blocks rather than the whole block list.
+    pub bi_ptr: Vec<usize>,
+    pub by_bi: Vec<u32>,
 }
 
 impl BlockMap {
@@ -81,6 +88,51 @@ impl BlockMap {
 
     pub fn is_empty(&self) -> bool {
         self.blocks.is_empty()
+    }
+
+    /// Indices into [`BlockMap::blocks`] of the blocks that hold
+    /// nonzeros of `row` — the incremental-update path's localization
+    /// step. Convenience wrapper over [`BlockMap::blocks_for_rows`].
+    pub fn blocks_for_row(&self, grid: &BlockGrid, row: usize) -> Vec<usize> {
+        self.blocks_for_rows(grid, &[row])
+    }
+
+    /// Indices into [`BlockMap::blocks`] (ascending) of every block that
+    /// holds nonzeros of any of `rows`. Rows bucket by row-block, the
+    /// `bi_ptr`/`by_bi` index yields each touched row-block's blocks
+    /// directly, and each candidate binary-searches its segments (sorted
+    /// by `local_row`) — O(touched blocks), never a scan of the whole
+    /// block list. Rows may repeat and may be unsorted; rows with no
+    /// nonzeros match no block.
+    pub fn blocks_for_rows(&self, grid: &BlockGrid, rows: &[usize]) -> Vec<usize> {
+        use std::collections::BTreeMap;
+        let mut touched: BTreeMap<usize, Vec<u32>> = BTreeMap::new();
+        for &r in rows {
+            debug_assert!(r < grid.rows, "row {r} out of range");
+            let bi = grid.row_block_of(r);
+            let local = (r - grid.row_range(bi).0) as u32;
+            touched.entry(bi).or_default().push(local);
+        }
+        let mut out = Vec::new();
+        for (&bi, locals) in &touched {
+            if bi + 1 >= self.bi_ptr.len() {
+                continue; // empty/default map, or bi beyond the plan
+            }
+            for &idx in &self.by_bi[self.bi_ptr[bi]..self.bi_ptr[bi + 1]] {
+                let i = idx as usize;
+                let segs = self.segs_of(i);
+                if locals
+                    .iter()
+                    .any(|&lr| segs.binary_search_by_key(&lr, |s| s.local_row).is_ok())
+                {
+                    out.push(i);
+                }
+            }
+        }
+        // per-bucket runs are ascending but buckets are bi-ordered while
+        // `blocks` is column-major — restore global block-index order
+        out.sort_unstable();
+        out
     }
 }
 
@@ -170,6 +222,8 @@ pub fn block_map(m: &Csr, grid: &BlockGrid) -> BlockMap {
     // Pass 2 (place). The bj → block-index map is rebuilt per row-block
     // from a counting sort of block indices by bi; every segment's bj is
     // written before use because its block is in the current bi's bucket.
+    // (bi_ptr/by_bi survive into the returned BlockMap as the row-block
+    // index the incremental-update path localizes through.)
     let mut bi_ptr = vec![0usize; rb + 1];
     for b in &blocks {
         bi_ptr[b.bi as usize + 1] += 1;
@@ -214,7 +268,7 @@ pub fn block_map(m: &Csr, grid: &BlockGrid) -> BlockMap {
     }
     debug_assert!(blocks.iter().enumerate().all(|(i, b)| seg_cursor[i] == b.seg_end));
 
-    BlockMap { blocks, segs }
+    BlockMap { blocks, segs, bi_ptr, by_bi }
 }
 
 /// A (row-block, col-block) view: for each local row (slot), the
@@ -398,6 +452,64 @@ mod tests {
         assert_eq!(map.segs.len(), 2);
         assert_eq!(map.blocks[0].bj, 0);
         assert_eq!(map.blocks[1].bj as usize, 990 / g.cfg.cols_per_block);
+    }
+
+    #[test]
+    fn blocks_for_rows_finds_exactly_the_holding_blocks() {
+        let m = crate::gen::random::power_law_rows(100, 200, 2.0, 50, 41);
+        let g = grid(100, 200);
+        let map = block_map(&m, &g);
+        for row in [0usize, 17, 50, 99] {
+            let found = map.blocks_for_row(&g, row);
+            // oracle: every block either holds the row's nonzeros or not
+            for (i, e) in map.blocks.iter().enumerate() {
+                let bi = g.row_block_of(row);
+                let local = (row - g.row_range(bi).0) as u32;
+                let holds = e.bi as usize == bi
+                    && map.segs_of(i).iter().any(|s| s.local_row == local);
+                assert_eq!(found.contains(&i), holds, "row {row} block {i}");
+            }
+        }
+        // ascending + deduped even with repeated unsorted input rows
+        let multi = map.blocks_for_rows(&g, &[99, 0, 99, 0, 17]);
+        for w in multi.windows(2) {
+            assert!(w[0] < w[1], "not ascending/deduped: {multi:?}");
+        }
+    }
+
+    #[test]
+    fn row_block_index_covers_blocks_exactly_once() {
+        let m = crate::gen::random::power_law_rows(90, 180, 2.0, 40, 53);
+        let g = grid(90, 180);
+        let map = block_map(&m, &g);
+        assert_eq!(map.bi_ptr.len(), g.row_blocks + 1);
+        assert_eq!(map.by_bi.len(), map.blocks.len());
+        let mut seen = vec![false; map.blocks.len()];
+        for bi in 0..g.row_blocks {
+            let bucket = &map.by_bi[map.bi_ptr[bi]..map.bi_ptr[bi + 1]];
+            for w in bucket.windows(2) {
+                assert!(w[0] < w[1], "bucket {bi} not ascending");
+            }
+            for &idx in bucket {
+                assert_eq!(map.blocks[idx as usize].bi as usize, bi);
+                assert!(!seen[idx as usize], "block {idx} in two buckets");
+                seen[idx as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "index missed a block");
+    }
+
+    #[test]
+    fn blocks_for_rows_zero_nnz_row_matches_nothing() {
+        let mut coo = Coo::new(40, 40);
+        coo.push(0, 0, 1.0);
+        coo.push(39, 39, 2.0);
+        let m = coo.to_csr();
+        let g = grid(40, 40);
+        let map = block_map(&m, &g);
+        assert!(map.blocks_for_row(&g, 5).is_empty());
+        assert_eq!(map.blocks_for_row(&g, 0).len(), 1);
+        assert_eq!(map.blocks_for_row(&g, 39).len(), 1);
     }
 
     #[test]

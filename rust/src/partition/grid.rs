@@ -51,6 +51,12 @@ impl BlockGrid {
         col / self.cfg.cols_per_block
     }
 
+    /// Which row block a row index falls into (the update path's
+    /// touched-row → row-block mapping).
+    pub fn row_block_of(&self, row: usize) -> usize {
+        row / self.cfg.rows_per_block
+    }
+
     /// Flat block index, column-major (the fixed-allocation order of
     /// §III-C: consecutive blocks share a column => vector-segment reuse).
     pub fn flat_col_major(&self, bi: usize, bj: usize) -> usize {
@@ -87,6 +93,21 @@ mod tests {
         assert_eq!(g.col_block_of(4095), 0);
         assert_eq!(g.col_block_of(4096), 1);
         assert_eq!(g.col_block_of(9999), 2);
+    }
+
+    #[test]
+    fn row_block_lookup() {
+        let g = BlockGrid::new(1000, 100, PartitionConfig::default());
+        assert_eq!(g.row_block_of(0), 0);
+        assert_eq!(g.row_block_of(511), 0);
+        assert_eq!(g.row_block_of(512), 1);
+        assert_eq!(g.row_block_of(999), 1);
+        // consistent with row_range
+        for r in [0usize, 511, 512, 999] {
+            let bi = g.row_block_of(r);
+            let (lo, hi) = g.row_range(bi);
+            assert!(r >= lo && r < hi);
+        }
     }
 
     #[test]

@@ -32,7 +32,7 @@
 //!    then per-block `nnz`/`nrows`/`ngroups` prefix-sum into the exact
 //!    final `nnz_start`/`slot_start`/`group_start` offsets — the
 //!    complete `blocks: Vec<HbpBlock>` — before any element moves.
-//! 2. **Fill** ([`fill_block`] per block): every output array is
+//! 2. **Fill** (`fill_block` per block): every output array is
 //!    allocated once at its exact final size, and each block writes its
 //!    own **disjoint slices** (`nnz_start..`, `slot_start..`,
 //!    `group_start..`). Because the slices are disjoint by the plan's
@@ -229,7 +229,7 @@ pub(crate) fn alloc_from_plan(m: &Csr, plan: &HbpPlan) -> Hbp {
     }
 }
 
-/// Reusable per-worker scratch for [`fill_block`]: densified row ranges,
+/// Reusable per-worker scratch for `fill_block`: densified row ranges,
 /// the reorder permutation, per-row chain positions and the live-row
 /// list. Reused across blocks so steady-state fill allocates nothing.
 #[derive(Default)]

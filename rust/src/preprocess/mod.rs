@@ -16,12 +16,17 @@
 //!   disjoint slices make parallel output bit-identical to serial.
 //! - [`group_ell`] — export to the dense group-ELL tensors consumed by
 //!   the L1 Pallas kernel through PJRT.
+//! - [`update`] — incremental repair on matrix updates: value-level
+//!   deltas re-fill only the touched blocks' disjoint slices, falling
+//!   back to a full rebuild when the sparsity pattern changes.
 
 pub mod reorder;
 pub mod hbp_build;
 pub mod parallel;
 pub mod group_ell;
+pub mod update;
 
 pub use hbp_build::{build_hbp, build_hbp_with, plan_hbp, Hbp, HbpBlock, HbpPlan};
-pub use parallel::{build_hbp_parallel, build_hbp_pooled};
+pub use parallel::{build_hbp_parallel, build_hbp_pooled, fill_hbp_parallel};
 pub use reorder::{DpReorder, HashReorder, IdentityReorder, Reorder, SortReorder};
+pub use update::{apply_to_csr, build_hbp_updatable, CsrChange, DeltaOp, MatrixDelta, UpdateReport};

@@ -26,7 +26,7 @@ use crate::util::sync::SharedMut;
 /// Hard cap on shared-pool size: generous headroom over the machine's
 /// parallelism, but a stop against absurd `--threads` values spawning
 /// unbounded *permanent* OS threads through the pool registry.
-fn pool_thread_cap() -> usize {
+pub(crate) fn pool_thread_cap() -> usize {
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(8);
     cores.saturating_mul(4).max(32)
 }
@@ -40,15 +40,27 @@ pub fn build_hbp_parallel(
     threads: usize,
 ) -> Hbp {
     let plan = plan_hbp(m, cfg);
+    fill_hbp_parallel(m, &plan, reorder, threads)
+}
+
+/// Parallel fill of an existing plan. Public so callers that retain the
+/// plan's [`crate::partition::BlockMap`] — the incremental-update path —
+/// build without planning twice.
+pub fn fill_hbp_parallel(
+    m: &Csr,
+    plan: &HbpPlan,
+    reorder: &(dyn Reorder + Sync),
+    threads: usize,
+) -> Hbp {
     // ≤1 thread or ≤1 block: fill serially. Note `threads` is NOT
     // clamped to the block count before the pool lookup — that would
     // mint a permanent pool per distinct small block count; extra
     // workers beyond the chunk count simply return immediately.
     let threads = threads.min(pool_thread_cap());
     if threads <= 1 || plan.blocks.len() <= 1 {
-        return fill_hbp_serial(m, &plan, reorder);
+        return fill_hbp_serial(m, plan, reorder);
     }
-    fill_hbp_on(m, &plan, reorder, &shared_pool(threads))
+    fill_hbp_on(m, plan, reorder, &shared_pool(threads))
 }
 
 /// Parallel HBP build on a caller-owned pool (for engines and services
@@ -67,8 +79,9 @@ pub fn build_hbp_pooled(
 }
 
 /// Contiguous nnz-balanced chunking of the block list: at most `workers`
-/// chunks, preserving column-major order.
-fn nnz_chunks(blocks: &[HbpBlock], workers: usize) -> Vec<(usize, usize)> {
+/// chunks, preserving column-major order. Also reused by the partial
+/// re-fill of `preprocess::update` over its gathered touched-block list.
+pub(crate) fn nnz_chunks(blocks: &[HbpBlock], workers: usize) -> Vec<(usize, usize)> {
     let total: usize = blocks.iter().map(|b| b.nnz).sum();
     let target = total.div_ceil(workers).max(1);
     let mut chunks = Vec::with_capacity(workers);

@@ -1,0 +1,646 @@
+//! Incremental HBP repair on matrix updates (the serving-path
+//! counterpart of the plan/fill build).
+//!
+//! A serving system whose matrices drift between requests should not pay
+//! even the paper's cheap preprocessing per update. The plan's exact
+//! per-block offsets make a cheaper contract possible: a value-level
+//! delta localizes to the touched rows' row-blocks, and only the blocks
+//! that actually hold those rows' nonzeros need their **disjoint slices**
+//! re-filled — O(touched-block nnz), not O(nnz).
+//!
+//! # Delta kinds ([`DeltaOp`])
+//!
+//! - `Set` — overwrite the value of one *existing* nonzero (an absent
+//!   coordinate is an error, not a fill-in).
+//! - `ScaleRow` / `ZeroRow` — multiply / zero every value in a row.
+//!   Zeroing stores explicit zeros: the sparsity pattern (and with it
+//!   every structural array) is untouched.
+//! - `ReplaceRow` — new columns + values for a row **within the existing
+//!   row extent** (same nonzero count, so the CSR `ptr` array never
+//!   changes). Same columns → value-only, pattern preserved; different
+//!   columns → the pattern (and possibly block occupancy) changed.
+//!
+//! # Fallback rule
+//!
+//! Pattern-preserving deltas re-fill only the touched blocks' slices
+//! (reusing [`FillScratch`], in parallel on `util::pool::shared_pool`
+//! workers when the touched set is large). A pattern-changing delta
+//! invalidates the plan itself — per-block nnz, row segments, even which
+//! blocks exist — so [`Hbp::apply_delta`] falls back to a full
+//! [`plan_hbp`] rebuild and reports `full_rebuild = true` (the caller
+//! must refresh any cached [`BlockMap`], see
+//! [`crate::exec::HbpEngine::update`]).
+//!
+//! # Parity argument
+//!
+//! For a pattern-preserving delta, the plan of the mutated matrix is
+//! *identical* to the current plan (it depends only on the pattern), and
+//! per-row nonzero counts are unchanged, so every reorder strategy
+//! reproduces the permutation already stored in `output_hash`. The
+//! partial path therefore replays the stored per-block permutation
+//! (`ReplayOrder` — no hash work at all) and re-runs `fill_block` on
+//! the touched blocks; untouched blocks hold values that did not change.
+//! The result is **bit-identical** to a from-scratch build of the
+//! mutated matrix — asserted across strategies × thread counts by the
+//! property suite.
+
+use super::hbp_build::{fill_block, plan_hbp, FillScratch, Hbp, HbpBlock};
+use super::parallel::{build_hbp_parallel, fill_hbp_parallel, nnz_chunks, pool_thread_cap};
+use super::reorder::Reorder;
+use crate::formats::Csr;
+use crate::partition::BlockMap;
+use crate::util::pool::shared_pool;
+use crate::util::sync::SharedMut;
+use anyhow::{ensure, Result};
+
+/// One matrix mutation. See the module docs for semantics.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DeltaOp {
+    /// Overwrite the value of the existing nonzero at `(row, col)`.
+    Set { row: usize, col: usize, value: f64 },
+    /// Multiply every value in `row` by `factor`.
+    ScaleRow { row: usize, factor: f64 },
+    /// Set every value in `row` to zero (explicit zeros; pattern kept).
+    ZeroRow { row: usize },
+    /// Replace `row`'s columns and values within its existing extent:
+    /// `cols` strictly ascending, in range, `cols.len()` = the row's
+    /// current nonzero count. Different columns change the pattern.
+    ReplaceRow { row: usize, cols: Vec<u32>, values: Vec<f64> },
+}
+
+impl DeltaOp {
+    fn row(&self) -> usize {
+        match self {
+            DeltaOp::Set { row, .. }
+            | DeltaOp::ScaleRow { row, .. }
+            | DeltaOp::ZeroRow { row }
+            | DeltaOp::ReplaceRow { row, .. } => *row,
+        }
+    }
+}
+
+/// An ordered batch of [`DeltaOp`]s, applied atomically: validation runs
+/// against the pre-delta matrix before any value moves, so a rejected
+/// delta leaves the matrix untouched.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MatrixDelta {
+    pub ops: Vec<DeltaOp>,
+}
+
+impl MatrixDelta {
+    pub fn new() -> Self {
+        MatrixDelta::default()
+    }
+
+    /// Builder: overwrite one existing nonzero.
+    pub fn set(mut self, row: usize, col: usize, value: f64) -> Self {
+        self.ops.push(DeltaOp::Set { row, col, value });
+        self
+    }
+
+    /// Builder: scale a row's values.
+    pub fn scale_row(mut self, row: usize, factor: f64) -> Self {
+        self.ops.push(DeltaOp::ScaleRow { row, factor });
+        self
+    }
+
+    /// Builder: zero a row's values (pattern kept).
+    pub fn zero_row(mut self, row: usize) -> Self {
+        self.ops.push(DeltaOp::ZeroRow { row });
+        self
+    }
+
+    /// Builder: replace a row within its existing extent.
+    pub fn replace_row(mut self, row: usize, cols: Vec<u32>, values: Vec<f64>) -> Self {
+        self.ops.push(DeltaOp::ReplaceRow { row, cols, values });
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+}
+
+/// What [`apply_to_csr`] did: which rows changed values (sorted,
+/// deduped, zero-nnz rows excluded — they hold nothing to change) and
+/// whether the sparsity pattern changed.
+#[derive(Clone, Debug, Default)]
+pub struct CsrChange {
+    pub touched_rows: Vec<usize>,
+    pub pattern_changed: bool,
+}
+
+/// Outcome summary of one delta application (the coordinator's
+/// blocks-touched vs blocks-total metric source).
+///
+/// `blocks_touched <= blocks_total` always: both counts describe the
+/// post-update HBP (which on the partial path has exactly the
+/// pre-update structure; on a full rebuild every block of the new plan
+/// was written, so touched == total).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct UpdateReport {
+    /// Rows whose values changed.
+    pub rows_touched: usize,
+    /// Blocks re-filled (on a full rebuild: every block of the new HBP).
+    pub blocks_touched: usize,
+    /// Non-empty blocks of the post-update HBP.
+    pub blocks_total: usize,
+    /// True when the delta changed the pattern and the whole HBP was
+    /// rebuilt from a fresh plan.
+    pub full_rebuild: bool,
+}
+
+/// Apply a delta to a CSR matrix in place.
+///
+/// Two passes: a read-only validation pass over every op (tracking
+/// per-row column replacements so later `Set`s are checked against the
+/// pattern they will actually see), then the sequential application.
+/// On `Err` the matrix is unmodified.
+pub fn apply_to_csr(m: &mut Csr, delta: &MatrixDelta) -> Result<CsrChange> {
+    use std::collections::BTreeMap;
+
+    // --- validation pass (no mutation) ---
+    // row → cols as most recently replaced within this delta
+    let mut replaced: BTreeMap<usize, &[u32]> = BTreeMap::new();
+    for (i, op) in delta.ops.iter().enumerate() {
+        let row = op.row();
+        ensure!(row < m.rows, "op {i}: row {row} out of range ({} rows)", m.rows);
+        match op {
+            DeltaOp::Set { col, .. } => {
+                ensure!(*col < m.cols, "op {i}: col {col} out of range ({} cols)", m.cols);
+                let cols: &[u32] =
+                    replaced.get(&row).copied().unwrap_or_else(|| m.row(row).0);
+                ensure!(
+                    cols.binary_search(&(*col as u32)).is_ok(),
+                    "op {i}: ({row}, {col}) is not in the sparsity pattern \
+                     (Set only overwrites existing nonzeros)"
+                );
+            }
+            DeltaOp::ScaleRow { .. } | DeltaOp::ZeroRow { .. } => {}
+            DeltaOp::ReplaceRow { cols, values, .. } => {
+                ensure!(
+                    cols.len() == values.len(),
+                    "op {i}: {} cols but {} values",
+                    cols.len(),
+                    values.len()
+                );
+                ensure!(
+                    cols.len() == m.row_nnz(row),
+                    "op {i}: replacement has {} nonzeros but row {row} holds {} \
+                     (ReplaceRow must stay within the row's extent)",
+                    cols.len(),
+                    m.row_nnz(row)
+                );
+                for w in cols.windows(2) {
+                    ensure!(w[0] < w[1], "op {i}: replacement columns not strictly ascending");
+                }
+                if let Some(&c) = cols.last() {
+                    ensure!(
+                        (c as usize) < m.cols,
+                        "op {i}: replacement col {c} out of range ({} cols)",
+                        m.cols
+                    );
+                }
+                replaced.insert(row, cols);
+            }
+        }
+    }
+
+    // --- application pass ---
+    let mut touched: Vec<usize> = Vec::new();
+    let mut pattern_changed = false;
+    for op in &delta.ops {
+        let row = op.row();
+        if m.row_nnz(row) > 0 {
+            touched.push(row);
+        }
+        let range = m.ptr[row]..m.ptr[row + 1];
+        match op {
+            DeltaOp::Set { col, value, .. } => {
+                // validated above; the search is against the current
+                // (possibly already-replaced) columns
+                let k = m.col[range.clone()]
+                    .binary_search(&(*col as u32))
+                    .expect("validated Set target vanished");
+                m.data[range.start + k] = *value;
+            }
+            DeltaOp::ScaleRow { factor, .. } => {
+                for v in &mut m.data[range] {
+                    *v *= factor;
+                }
+            }
+            DeltaOp::ZeroRow { .. } => {
+                for v in &mut m.data[range] {
+                    *v = 0.0;
+                }
+            }
+            DeltaOp::ReplaceRow { cols, values, .. } => {
+                if m.col[range.clone()] != cols[..] {
+                    pattern_changed = true;
+                    m.col[range.clone()].copy_from_slice(cols);
+                }
+                m.data[range].copy_from_slice(values);
+            }
+        }
+    }
+    touched.sort_unstable();
+    touched.dedup();
+    Ok(CsrChange { touched_rows: touched, pattern_changed })
+}
+
+/// Replays a block's previously computed permutation (its stored
+/// `output_hash` slice) instead of re-running a reorder strategy — valid
+/// on the partial path because an unchanged pattern means unchanged
+/// per-row counts, and every strategy is a deterministic function of
+/// those counts.
+struct ReplayOrder<'a>(&'a [u32]);
+
+impl Reorder for ReplayOrder<'_> {
+    fn order_into(&self, out: &mut Vec<u32>, row_nnz: &[usize], _warp: usize) {
+        debug_assert_eq!(self.0.len(), row_nnz.len());
+        out.clear();
+        out.extend_from_slice(self.0);
+    }
+    fn name(&self) -> &'static str {
+        "replay"
+    }
+}
+
+/// Touched-block threshold below which the partial re-fill stays serial:
+/// the common serving delta touches one row → a handful of blocks, where
+/// a pool generation costs more than the fill itself.
+const PARALLEL_MIN_BLOCKS: usize = 4;
+
+impl Hbp {
+    /// Apply `delta` to the matrix/HBP pair in place: mutate `m` (the
+    /// source CSR this HBP was built from), then repair `self`.
+    ///
+    /// `map` must be the [`BlockMap`] of the plan that built `self`
+    /// (`plan_hbp(m, cfg).map` before mutation). Pattern-preserving
+    /// deltas re-fill only the blocks holding the touched rows' nonzeros
+    /// — each block's disjoint slices, serial or on the shared pool —
+    /// and are bit-identical to a from-scratch rebuild of the mutated
+    /// matrix. Pattern-changing deltas rebuild everything with `reorder`
+    /// (`full_rebuild = true` in the report), after which `map` is stale
+    /// and must be refreshed by the caller via
+    /// [`crate::partition::block_map`].
+    ///
+    /// On `Err` neither `m` nor `self` is modified.
+    pub fn apply_delta(
+        &mut self,
+        m: &mut Csr,
+        map: &BlockMap,
+        delta: &MatrixDelta,
+        reorder: &(dyn Reorder + Sync),
+        threads: usize,
+    ) -> Result<UpdateReport> {
+        debug_assert_eq!(self.blocks.len(), map.blocks.len(), "map does not match this HBP");
+        let change = apply_to_csr(m, delta)?;
+
+        if change.pattern_changed {
+            *self = build_hbp_parallel(m, self.grid.cfg, reorder, threads);
+            // both counts describe the new plan: every block was written
+            return Ok(UpdateReport {
+                rows_touched: change.touched_rows.len(),
+                blocks_touched: self.blocks.len(),
+                blocks_total: self.blocks.len(),
+                full_rebuild: true,
+            });
+        }
+
+        let touched = map.blocks_for_rows(&self.grid, &change.touched_rows);
+        self.refill_blocks(m, map, &touched, threads);
+        Ok(UpdateReport {
+            rows_touched: change.touched_rows.len(),
+            blocks_touched: touched.len(),
+            blocks_total: self.blocks.len(),
+            full_rebuild: false,
+        })
+    }
+
+    /// Re-run `fill_block` on the given block indices' disjoint slices.
+    /// The disjointness argument of the parallel builder applies
+    /// unchanged: distinct blocks own disjoint ranges by the plan's
+    /// prefix sums, and each touched block is visited exactly once.
+    fn refill_blocks(&mut self, m: &Csr, map: &BlockMap, touched: &[usize], threads: usize) {
+        let grid = self.grid;
+        let threads = threads.min(pool_thread_cap());
+        if threads <= 1 || touched.len() < PARALLEL_MIN_BLOCKS {
+            let mut scratch = FillScratch::default();
+            let mut replay = Vec::new();
+            for &i in touched {
+                let b = self.blocks[i];
+                let e = &map.blocks[i];
+                replay.clear();
+                replay.extend_from_slice(&self.output_hash[b.slot_start..b.slot_start + b.nrows]);
+                fill_block(
+                    m,
+                    &grid,
+                    &b,
+                    &map.segs[e.seg_start..e.seg_end],
+                    &ReplayOrder(&replay),
+                    &mut scratch,
+                    &mut self.col[b.nnz_start..b.nnz_start + b.nnz],
+                    &mut self.data[b.nnz_start..b.nnz_start + b.nnz],
+                    &mut self.add_sign[b.nnz_start..b.nnz_start + b.nnz],
+                    &mut self.zero_row[b.slot_start..b.slot_start + b.nrows],
+                    &mut self.output_hash[b.slot_start..b.slot_start + b.nrows],
+                    &mut self.begin_ptr[b.group_start..b.group_start + b.ngroups],
+                );
+            }
+            return;
+        }
+
+        // large touched set: nnz-balanced chunks of the gathered touched
+        // blocks on the shared pool, same SharedMut contract as the
+        // full parallel build
+        let gathered: Vec<HbpBlock> = touched.iter().map(|&i| self.blocks[i]).collect();
+        let pool = shared_pool(threads);
+        let chunks = nnz_chunks(&gathered, pool.workers.min(gathered.len()).max(1));
+        let col = SharedMut::new(&mut self.col[..]);
+        let data = SharedMut::new(&mut self.data[..]);
+        let add_sign = SharedMut::new(&mut self.add_sign[..]);
+        let zero_row = SharedMut::new(&mut self.zero_row[..]);
+        let output_hash = SharedMut::new(&mut self.output_hash[..]);
+        let begin_ptr = SharedMut::new(&mut self.begin_ptr[..]);
+        let (chunks, gathered, touched) = (&chunks, &gathered, &touched);
+        pool.run_generation(|w, _| {
+            let Some(&(lo, hi)) = chunks.get(w) else { return };
+            let mut scratch = FillScratch::default();
+            let mut replay = Vec::new();
+            for (b, &i) in gathered[lo..hi].iter().zip(&touched[lo..hi]) {
+                let e = &map.blocks[i];
+                // SAFETY: per-block ranges are disjoint by the plan's
+                // prefix sums, chunks partition the touched list, and
+                // each chunk is visited by exactly one worker.
+                let (c, d, a, z, o, p) = unsafe {
+                    (
+                        col.slice_mut(b.nnz_start, b.nnz),
+                        data.slice_mut(b.nnz_start, b.nnz),
+                        add_sign.slice_mut(b.nnz_start, b.nnz),
+                        zero_row.slice_mut(b.slot_start, b.nrows),
+                        output_hash.slice_mut(b.slot_start, b.nrows),
+                        begin_ptr.slice_mut(b.group_start, b.ngroups),
+                    )
+                };
+                replay.clear();
+                replay.extend_from_slice(o);
+                let segs = &map.segs[e.seg_start..e.seg_end];
+                let replay = ReplayOrder(&replay);
+                fill_block(m, &grid, b, segs, &replay, &mut scratch, c, d, a, z, o, p);
+            }
+        });
+    }
+}
+
+/// Plan + fill + retained [`BlockMap`] in one call — the resident triple
+/// the update path needs (avoids planning twice). Returns the HBP and
+/// the map it was planned from.
+pub fn build_hbp_updatable(
+    m: &Csr,
+    cfg: crate::partition::PartitionConfig,
+    reorder: &(dyn Reorder + Sync),
+    threads: usize,
+) -> (Hbp, BlockMap) {
+    let plan = plan_hbp(m, cfg);
+    let hbp = fill_hbp_parallel(m, &plan, reorder, threads);
+    (hbp, plan.map)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::random;
+    use crate::partition::{block_map, PartitionConfig};
+    use crate::preprocess::{build_hbp_with, HashReorder};
+
+    fn cfg() -> PartitionConfig {
+        PartitionConfig::test_small()
+    }
+
+    fn assert_hbp_eq(a: &Hbp, b: &Hbp, ctx: &str) {
+        assert_eq!(a.col, b.col, "{ctx}: col");
+        assert_eq!(a.data, b.data, "{ctx}: data");
+        assert_eq!(a.add_sign, b.add_sign, "{ctx}: add_sign");
+        assert_eq!(a.zero_row, b.zero_row, "{ctx}: zero_row");
+        assert_eq!(a.output_hash, b.output_hash, "{ctx}: output_hash");
+        assert_eq!(a.begin_ptr, b.begin_ptr, "{ctx}: begin_ptr");
+        assert_eq!(a.blocks.len(), b.blocks.len(), "{ctx}: blocks");
+    }
+
+    #[test]
+    fn set_scale_zero_apply_in_place() {
+        let mut m = random::power_law_rows(50, 60, 2.0, 20, 3);
+        let before = m.clone();
+        let (r, c) = {
+            let row = (0..50).find(|&r| m.row_nnz(r) >= 2).unwrap();
+            (row, m.row(row).0[1] as usize)
+        };
+        let delta = MatrixDelta::new().set(r, c, 42.5).scale_row(r, 2.0).zero_row(49);
+        let change = apply_to_csr(&mut m, &delta).unwrap();
+        assert!(!change.pattern_changed);
+        assert_eq!(m.get(r, c), 85.0); // set then scaled
+        for &v in m.row(49).1 {
+            assert_eq!(v, 0.0);
+        }
+        // pattern untouched
+        assert_eq!(m.ptr, before.ptr);
+        assert_eq!(m.col, before.col);
+    }
+
+    #[test]
+    fn invalid_delta_leaves_matrix_untouched() {
+        let mut m = random::power_law_rows(30, 30, 2.0, 10, 7);
+        let before = m.clone();
+        // second op is invalid: Set outside the pattern
+        let missing = (0..30u32).find(|c| !m.row(0).0.contains(c)).unwrap() as usize;
+        let delta = MatrixDelta::new().scale_row(0, 3.0).set(0, missing, 1.0);
+        assert!(apply_to_csr(&mut m, &delta).is_err());
+        assert_eq!(m, before, "failed delta must not mutate");
+        // row out of range
+        assert!(apply_to_csr(&mut m, &MatrixDelta::new().zero_row(30)).is_err());
+        // replace with wrong extent
+        let delta = MatrixDelta::new().replace_row(0, vec![0], vec![1.0]);
+        if m.row_nnz(0) != 1 {
+            assert!(apply_to_csr(&mut m, &delta).is_err());
+        }
+        assert_eq!(m, before);
+    }
+
+    #[test]
+    fn replace_row_same_cols_preserves_pattern() {
+        let mut m = random::power_law_rows(40, 50, 2.0, 15, 9);
+        let row = (0..40).find(|&r| m.row_nnz(r) >= 1).unwrap();
+        let cols = m.row(row).0.to_vec();
+        let vals: Vec<f64> = (0..cols.len()).map(|i| i as f64 + 0.5).collect();
+        let change = apply_to_csr(
+            &mut m,
+            &MatrixDelta::new().replace_row(row, cols.clone(), vals.clone()),
+        )
+        .unwrap();
+        assert!(!change.pattern_changed);
+        assert_eq!(change.touched_rows, vec![row]);
+        assert_eq!(m.row(row).1, &vals[..]);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn replace_row_new_cols_flags_pattern_change() {
+        let mut m = random::with_row_lengths(&[3, 2, 4], 40, 5);
+        let old: Vec<u32> = m.row(1).0.to_vec();
+        let new: Vec<u32> = (0..40u32).filter(|c| !old.contains(c)).take(2).collect();
+        let change = apply_to_csr(
+            &mut m,
+            &MatrixDelta::new().replace_row(1, new.clone(), vec![1.0, 2.0]),
+        )
+        .unwrap();
+        assert!(change.pattern_changed);
+        assert_eq!(m.row(1).0, &new[..]);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn set_after_replace_sees_the_new_pattern() {
+        let mut m = random::with_row_lengths(&[2], 20, 1);
+        let old = m.row(0).0.to_vec();
+        let new: Vec<u32> = (0..20u32).filter(|c| !old.contains(c)).take(2).collect();
+        // Set on a NEW column after the replace must validate…
+        let delta = MatrixDelta::new()
+            .replace_row(0, new.clone(), vec![1.0, 2.0])
+            .set(0, new[1] as usize, 9.0);
+        apply_to_csr(&mut m.clone(), &delta).unwrap();
+        // …and Set on a column the replace removed must fail
+        let delta = MatrixDelta::new()
+            .replace_row(0, new, vec![1.0, 2.0])
+            .set(0, old[0] as usize, 9.0);
+        assert!(apply_to_csr(&mut m, &delta).is_err());
+    }
+
+    #[test]
+    fn partial_repair_is_bit_identical_and_localized() {
+        let m0 = random::power_law_rows(200, 260, 2.0, 60, 29);
+        let r = HashReorder::default();
+        let (mut hbp, map) = build_hbp_updatable(&m0, cfg(), &r, 1);
+        let mut m = m0.clone();
+        let row = (0..200).find(|&r| m.row_nnz(r) >= 2).unwrap();
+        let report = hbp
+            .apply_delta(&mut m, &map, &MatrixDelta::new().scale_row(row, 3.0), &r, 1)
+            .unwrap();
+        assert!(!report.full_rebuild);
+        assert!(report.blocks_touched >= 1);
+        assert!(
+            report.blocks_touched < report.blocks_total,
+            "single-row delta must not touch all {} blocks",
+            report.blocks_total
+        );
+        hbp.validate().unwrap();
+        assert_hbp_eq(&hbp, &build_hbp_with(&m, cfg(), &r), "scale_row repair");
+    }
+
+    #[test]
+    fn pattern_breaking_delta_falls_back_to_rebuild() {
+        let m0 = random::power_law_rows(120, 200, 2.0, 50, 31);
+        let r = HashReorder::default();
+        let (mut hbp, map) = build_hbp_updatable(&m0, cfg(), &r, 2);
+        let mut m = m0.clone();
+        let row = (0..120).find(|&r| m.row_nnz(r) >= 2).unwrap();
+        // move the row's nonzeros to fresh columns (likely crossing
+        // column blocks): pattern-breaking
+        let n = m.row_nnz(row);
+        let old = m.row(row).0.to_vec();
+        let new: Vec<u32> = (0..200u32).filter(|c| !old.contains(c)).take(n).collect();
+        let vals: Vec<f64> = (0..n).map(|i| -(i as f64) - 1.0).collect();
+        let report = hbp
+            .apply_delta(&mut m, &map, &MatrixDelta::new().replace_row(row, new, vals), &r, 2)
+            .unwrap();
+        assert!(report.full_rebuild);
+        // on the fallback both counts are the NEW plan's: ratio stays <= 1
+        assert_eq!(report.blocks_touched, report.blocks_total);
+        assert_eq!(report.blocks_total, hbp.blocks.len());
+        hbp.validate().unwrap();
+        assert_hbp_eq(&hbp, &build_hbp_with(&m, cfg(), &r), "fallback rebuild");
+    }
+
+    #[test]
+    fn large_touched_set_takes_the_pooled_path() {
+        // touch every row → touched blocks = all blocks ≥ the parallel
+        // threshold; output must still be bit-identical
+        let m0 = random::power_law_rows(300, 300, 2.0, 60, 37);
+        let r = HashReorder::default();
+        let (mut hbp, map) = build_hbp_updatable(&m0, cfg(), &r, 4);
+        assert!(hbp.blocks.len() >= PARALLEL_MIN_BLOCKS, "test needs many blocks");
+        let mut m = m0.clone();
+        let mut delta = MatrixDelta::new();
+        for row in 0..300 {
+            delta = delta.scale_row(row, 0.5);
+        }
+        let report = hbp.apply_delta(&mut m, &map, &delta, &r, 4).unwrap();
+        assert_eq!(report.blocks_touched, report.blocks_total);
+        assert_hbp_eq(&hbp, &build_hbp_with(&m, cfg(), &r), "pooled repair");
+    }
+
+    #[test]
+    fn empty_delta_and_empty_matrix() {
+        let m0 = Csr::empty(16, 16);
+        let r = HashReorder::default();
+        let (mut hbp, map) = build_hbp_updatable(&m0, cfg(), &r, 2);
+        let mut m = m0.clone();
+        let report = hbp.apply_delta(&mut m, &map, &MatrixDelta::new(), &r, 2).unwrap();
+        assert_eq!(report.blocks_touched, 0);
+        assert!(!report.full_rebuild);
+        // zero-nnz row ops are value no-ops
+        let report = hbp
+            .apply_delta(&mut m, &map, &MatrixDelta::new().zero_row(3).scale_row(5, 2.0), &r, 2)
+            .unwrap();
+        assert_eq!(report.rows_touched, 0);
+        assert_eq!(report.blocks_touched, 0);
+    }
+
+    #[test]
+    fn updated_hbp_serves_correct_spmv() {
+        let m0 = random::power_law_rows(150, 120, 2.0, 40, 43);
+        let r = HashReorder::default();
+        let (mut hbp, map) = build_hbp_updatable(&m0, cfg(), &r, 2);
+        let mut m = m0.clone();
+        let row = (0..150).find(|&r| m.row_nnz(r) >= 1).unwrap();
+        hbp.apply_delta(&mut m, &map, &MatrixDelta::new().scale_row(row, -2.5), &r, 2).unwrap();
+        let x = random::vector(120, 11);
+        let eng = crate::exec::HbpEngine::new(hbp, 2, 0.25);
+        use crate::exec::SpmvEngine;
+        let mut y = vec![0.0; 150];
+        eng.spmv(&x, &mut y);
+        let mut expect = vec![0.0; 150];
+        m.spmv(&x, &mut expect);
+        assert!(crate::formats::dense::allclose(&y, &expect, 1e-10, 1e-12));
+    }
+
+    #[test]
+    fn map_refresh_after_fallback_matches_fresh_plan() {
+        let m0 = random::power_law_rows(100, 150, 2.0, 40, 47);
+        let r = HashReorder::default();
+        let (mut hbp, map) = build_hbp_updatable(&m0, cfg(), &r, 1);
+        let mut m = m0.clone();
+        let row = (0..100).find(|&r| m.row_nnz(r) >= 1).unwrap();
+        let n = m.row_nnz(row);
+        let new: Vec<u32> = (100..150u32).take(n).collect();
+        let vals = vec![1.0; n];
+        let report = hbp
+            .apply_delta(&mut m, &map, &MatrixDelta::new().replace_row(row, new, vals), &r, 1)
+            .unwrap();
+        if report.full_rebuild {
+            let fresh = block_map(&m, &hbp.grid);
+            assert_eq!(fresh.blocks.len(), hbp.blocks.len());
+            // a follow-up pattern-preserving delta through the refreshed
+            // map must again match a from-scratch build
+            let report2 = hbp
+                .apply_delta(&mut m, &fresh, &MatrixDelta::new().scale_row(row, 2.0), &r, 1)
+                .unwrap();
+            assert!(!report2.full_rebuild);
+            assert_hbp_eq(&hbp, &build_hbp_with(&m, cfg(), &r), "post-fallback repair");
+        }
+    }
+}

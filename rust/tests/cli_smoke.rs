@@ -93,6 +93,25 @@ fn gen_mtx_output_and_csr_engine() {
 }
 
 #[test]
+fn update_subcommand_repairs_and_verifies() {
+    let out = hbp()
+        .args([
+            "update", "--matrix", "m1", "--scale", "ci", "--frac", "0.01", "--iters", "2",
+            "--threads", "2",
+        ])
+        .output()
+        .expect("spawning hbp update");
+    let stdout = assert_success(&out, "hbp update m1");
+    assert!(stdout.contains("delta repair"), "missing repair timing: {stdout}");
+    assert!(stdout.contains("full rebuild"), "missing rebuild timing: {stdout}");
+    assert!(stdout.contains("blocks"), "missing blocks-touched line: {stdout}");
+    assert!(
+        stdout.contains("verify vs serial CSR: OK"),
+        "repaired HBP did not verify against CSR: {stdout}"
+    );
+}
+
+#[test]
 fn help_succeeds_and_unknown_subcommand_fails() {
     let out = hbp().arg("help").output().expect("spawning hbp help");
     let stdout = assert_success(&out, "hbp help");

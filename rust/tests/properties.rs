@@ -7,8 +7,8 @@ use hbp_spmv::partition::PartitionConfig;
 use hbp_spmv::preprocess::group_ell::{export_all, PAD_ROW};
 use hbp_spmv::preprocess::reorder::{group_stddevs, is_permutation};
 use hbp_spmv::preprocess::{
-    build_hbp_parallel, build_hbp_with, DpReorder, HashReorder, IdentityReorder, Reorder,
-    SortReorder,
+    build_hbp_parallel, build_hbp_updatable, build_hbp_with, DpReorder, HashReorder, Hbp,
+    IdentityReorder, MatrixDelta, Reorder, SortReorder,
 };
 use hbp_spmv::prop_assert;
 use hbp_spmv::util::quickcheck::check;
@@ -169,6 +169,130 @@ fn plan_fill_parity_across_strategies_threads_and_shapes() {
             }
         }
     }
+}
+
+/// Shared bit-identity assertion for the delta-parity suite.
+fn assert_hbp_bit_identical(a: &Hbp, b: &Hbp, ctx: &str) {
+    assert_eq!(a.col, b.col, "{ctx}: col");
+    assert_eq!(a.data, b.data, "{ctx}: data");
+    assert_eq!(a.add_sign, b.add_sign, "{ctx}: add_sign");
+    assert_eq!(a.zero_row, b.zero_row, "{ctx}: zero_row");
+    assert_eq!(a.output_hash, b.output_hash, "{ctx}: output_hash");
+    assert_eq!(a.begin_ptr, b.begin_ptr, "{ctx}: begin_ptr");
+    assert_eq!(a.blocks.len(), b.blocks.len(), "{ctx}: blocks");
+}
+
+#[test]
+fn delta_repair_parity_across_strategies_threads_and_delta_kinds() {
+    // apply_delta must be bit-identical to a from-scratch build of the
+    // mutated matrix — strategies × threads {1,2,8} × pattern-preserving
+    // and pattern-breaking (fallback) deltas.
+    let cfg = PartitionConfig::test_small();
+    let m0 = random::power_law_rows(220, 260, 2.0, 50, 77);
+    let strategies: Vec<Box<dyn Reorder + Sync>> = vec![
+        Box::new(HashReorder::default()),
+        Box::new(SortReorder),
+        Box::new(DpReorder::default()),
+        Box::new(IdentityReorder),
+    ];
+    let touched: Vec<usize> = (0..m0.rows).filter(|&r| m0.row_nnz(r) >= 2).take(6).collect();
+    assert!(touched.len() >= 3, "test matrix too sparse");
+    for s in &strategies {
+        for threads in [1usize, 2, 8] {
+            let ctx = |tag: &str| format!("{}/threads={threads}/{tag}", s.name());
+            let (mut hbp, map) = build_hbp_updatable(&m0, cfg, s.as_ref(), threads);
+            let mut m = m0.clone();
+
+            // pattern-preserving: one of each value-level op kind, plus
+            // a same-columns replace
+            let (r_set, r_scale, r_zero, r_rep) =
+                (touched[0], touched[1], touched[2], touched[touched.len() - 1]);
+            let set_col = m.row(r_set).0[0] as usize;
+            let rep_cols = m.row(r_rep).0.to_vec();
+            let rep_vals: Vec<f64> = (0..rep_cols.len()).map(|i| 0.25 * i as f64 - 1.0).collect();
+            let delta = MatrixDelta::new()
+                .set(r_set, set_col, 123.0)
+                .scale_row(r_scale, -0.5)
+                .zero_row(r_zero)
+                .replace_row(r_rep, rep_cols, rep_vals);
+            let report = hbp
+                .apply_delta(&mut m, &map, &delta, s.as_ref(), threads)
+                .unwrap_or_else(|e| panic!("{}: {e:#}", ctx("preserving")));
+            assert!(!report.full_rebuild, "{}", ctx("preserving"));
+            assert!(
+                report.blocks_touched < report.blocks_total,
+                "{}: touched {}/{}",
+                ctx("preserving"),
+                report.blocks_touched,
+                report.blocks_total
+            );
+            let rebuilt = build_hbp_with(&m, cfg, s.as_ref());
+            assert_hbp_bit_identical(&hbp, &rebuilt, &ctx("preserving"));
+
+            // pattern-breaking: move a row's nonzeros to fresh columns
+            // (different cols within the same extent => fallback)
+            let r_brk = touched[1];
+            let old = m.row(r_brk).0.to_vec();
+            let n = old.len();
+            let new: Vec<u32> = (0..260u32).filter(|c| !old.contains(c)).take(n).collect();
+            let vals: Vec<f64> = (0..n).map(|i| i as f64 + 0.5).collect();
+            let report = hbp
+                .apply_delta(
+                    &mut m,
+                    &map,
+                    &MatrixDelta::new().replace_row(r_brk, new, vals),
+                    s.as_ref(),
+                    threads,
+                )
+                .unwrap_or_else(|e| panic!("{}: {e:#}", ctx("breaking")));
+            assert!(report.full_rebuild, "{}", ctx("breaking"));
+            let rebuilt = build_hbp_with(&m, cfg, s.as_ref());
+            assert_hbp_bit_identical(&hbp, &rebuilt, &ctx("breaking"));
+        }
+    }
+}
+
+#[test]
+fn prop_delta_repair_equals_rebuild() {
+    check("delta-repair-parity", 30, |g| {
+        let rows = g.usize_in(1, 4 * g.size + 2);
+        let cols = g.usize_in(1, 4 * g.size + 2);
+        let m0 = random::power_law_rows(rows, cols, 2.0, (cols / 2).max(1), g.rng.next_u64());
+        let cfg = random_cfg(g);
+        let r = HashReorder { seed: g.rng.next_u64() };
+        let threads = g.usize_in(1, 9);
+        let (mut hbp, map) = build_hbp_updatable(&m0, cfg, &r, threads);
+        let mut m = m0.clone();
+        // random pattern-preserving delta over up to 4 rows
+        let mut delta = MatrixDelta::new();
+        for _ in 0..g.usize_in(1, 5) {
+            let row = g.usize_in(0, rows);
+            match g.usize_in(0, 3) {
+                0 => delta = delta.scale_row(row, 1.5),
+                1 => delta = delta.zero_row(row),
+                _ => {
+                    if m.row_nnz(row) > 0 {
+                        let cols_of_row = m.row(row).0.to_vec();
+                        let pick = cols_of_row[g.usize_in(0, cols_of_row.len())] as usize;
+                        delta = delta.set(row, pick, -2.0);
+                    }
+                }
+            }
+        }
+        let report = hbp
+            .apply_delta(&mut m, &map, &delta, &r, threads)
+            .map_err(|e| format!("{e:#}"))?;
+        prop_assert!(!report.full_rebuild, "value-level delta must not rebuild");
+        let rebuilt = build_hbp_with(&m, cfg, &r);
+        prop_assert!(hbp.col == rebuilt.col, "col differs");
+        prop_assert!(hbp.data == rebuilt.data, "data differs");
+        prop_assert!(hbp.add_sign == rebuilt.add_sign, "add_sign differs");
+        prop_assert!(hbp.zero_row == rebuilt.zero_row, "zero_row differs");
+        prop_assert!(hbp.output_hash == rebuilt.output_hash, "output_hash differs");
+        prop_assert!(hbp.begin_ptr == rebuilt.begin_ptr, "begin_ptr differs");
+        hbp.validate().map_err(|e| format!("{e:#}"))?;
+        Ok(())
+    });
 }
 
 #[test]

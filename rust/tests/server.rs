@@ -143,3 +143,50 @@ fn engine_selection_via_protocol() {
         }
     }
 }
+
+#[test]
+fn update_over_tcp_mutates_the_hosted_matrix() {
+    use hbp_spmv::preprocess::MatrixDelta;
+    let (c, addr, _rows, cols) = start();
+    let mut client = Client::connect(addr).unwrap();
+    let x = hbp_spmv::gen::random::vector(cols, 31);
+
+    let before = client.spmv("test", &x).unwrap();
+    let report = client
+        .update("test", &MatrixDelta::new().scale_row(0, 2.0).zero_row(1))
+        .unwrap();
+    assert!(report.blocks_touched <= report.blocks_total);
+    assert!(!report.full_rebuild);
+
+    let after = client.spmv("test", &x).unwrap();
+    assert_eq!(after[0], 2.0 * before[0], "scaled row must double exactly");
+    assert_eq!(after[1], 0.0, "zeroed row must produce 0");
+    for r in 2..before.len() {
+        assert_eq!(after[r], before[r], "row {r} must be unchanged");
+    }
+
+    // every engine serves the updated values
+    for engine in ["hbp", "csr", "2d"] {
+        let r = client
+            .call(&obj(&[
+                ("op", Json::Str("spmv".into())),
+                ("matrix", Json::Str("test".into())),
+                ("engine", Json::Str(engine.into())),
+                ("x", num_arr(&x)),
+            ]))
+            .unwrap();
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{engine}");
+        let y0 = r.get("y").unwrap().as_arr().unwrap()[0].as_f64().unwrap();
+        assert!((y0 - after[0]).abs() < 1e-9, "{engine} serves stale values");
+    }
+
+    // a failing update reports an error and leaves the service up
+    let err = client.update("test", &MatrixDelta::new().zero_row(10_000));
+    assert!(err.is_err());
+    assert!(client.spmv("test", &x).is_ok());
+
+    let snap = c.metrics.snapshot();
+    assert_eq!(snap.updates, 1);
+    assert_eq!(snap.full_rebuilds, 0);
+    assert!(snap.update_blocks_total >= snap.update_blocks_touched);
+}

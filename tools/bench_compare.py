@@ -1,0 +1,147 @@
+#!/usr/bin/env python3
+"""Bench-trajectory gate: diff a fresh BENCH_preprocess.json against the
+committed baseline.
+
+CI regenerates BENCH_preprocess.json on every run (``make
+bench-preprocess``) and uploads it as an artifact; this script is the
+step in between that actually *reads* the trajectory. It compares every
+per-matrix ``*_secs`` timing field (lower is better) present and
+non-null in BOTH files, computes the geometric mean of the
+current/baseline ratios, and fails the job when that geomean exceeds
+the regression threshold (default +25%).
+
+Degenerate states exit 0 by design:
+- the committed seed baseline is schema-only (all measurement fields
+  null) until the first real-hardware artifact is copied over it;
+- a current file produced without a toolchain is equally null.
+
+Stdlib only — this must run on a bare CI python.
+
+Usage:
+  python3 tools/bench_compare.py --baseline OLD.json --current NEW.json \
+      [--threshold 1.25]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+
+# timing fields compared per matrix entry (all seconds, lower = better)
+SECS_FIELDS = (
+    "reorder_hbp_secs",
+    "reorder_sort2d_secs",
+    "reorder_dp2d_secs",
+    "build_serial_secs",
+    "build_parallel_secs",
+    "build_sort2d_secs",
+    "build_dp2d_secs",
+)
+
+
+def load(path):
+    with open(path, "r", encoding="utf-8") as f:
+        return json.load(f)
+
+
+def by_id(doc):
+    out = {}
+    for entry in doc.get("matrices") or []:
+        mid = entry.get("id")
+        if isinstance(mid, str):
+            out[mid] = entry
+    return out
+
+
+def geomean(xs):
+    return math.exp(sum(math.log(x) for x in xs) / len(xs))
+
+
+def compare(baseline, current):
+    """Return (rows, all_ratios): one row per matrix id present in both
+    files, each row (id, n_fields, per-matrix geomean ratio, worst field,
+    worst ratio); ratios are current/baseline over comparable fields."""
+    base_m, cur_m = by_id(baseline), by_id(current)
+    rows, all_ratios = [], []
+    for mid in sorted(base_m, key=lambda s: (len(s), s)):
+        if mid not in cur_m:
+            continue
+        ratios = {}
+        for field in SECS_FIELDS:
+            b, c = base_m[mid].get(field), cur_m[mid].get(field)
+            if isinstance(b, (int, float)) and isinstance(c, (int, float)) and b > 0 and c > 0:
+                ratios[field] = c / b
+        if not ratios:
+            continue
+        worst_field = max(ratios, key=ratios.get)
+        rows.append(
+            (mid, len(ratios), geomean(list(ratios.values())), worst_field, ratios[worst_field])
+        )
+        all_ratios.extend(ratios.values())
+    return rows, all_ratios
+
+
+def render(rows, all_ratios, threshold):
+    lines = ["## Preprocessing bench trajectory", ""]
+    if not all_ratios:
+        lines += [
+            "No comparable (non-null) timing fields between baseline and "
+            "current run — gate skipped.",
+            "",
+            "This is expected while the committed `BENCH_preprocess.json` "
+            "is still the schema-only seed; copy a real CI artifact over "
+            "it to start the trajectory.",
+        ]
+        return lines, 0
+    overall = geomean(all_ratios)
+    lines += [
+        "| matrix | fields | geomean cur/base | worst field | worst ratio |",
+        "|---|---|---|---|---|",
+    ]
+    for mid, n, g, worst_field, worst in rows:
+        lines.append(f"| {mid} | {n} | {g:.3f}x | {worst_field} | {worst:.3f}x |")
+    verdict = "REGRESSION" if overall > threshold else "ok"
+    lines += [
+        "",
+        f"**Overall geomean: {overall:.3f}x over {len(all_ratios)} fields "
+        f"(threshold {threshold:.2f}x) — {verdict}**",
+    ]
+    return lines, 1 if overall > threshold else 0
+
+
+def main(argv):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True, help="committed baseline JSON")
+    ap.add_argument("--current", required=True, help="freshly generated JSON")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=1.25,
+        help="max allowed geomean current/baseline ratio (default 1.25 = +25%%)",
+    )
+    args = ap.parse_args(argv)
+
+    try:
+        baseline = load(args.baseline)
+        current = load(args.current)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench_compare: cannot read inputs: {e}", file=sys.stderr)
+        return 2
+
+    rows, all_ratios = compare(baseline, current)
+    lines, status = render(rows, all_ratios, args.threshold)
+
+    text = "\n".join(lines)
+    print(text)
+    summary_path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary_path:
+        with open(summary_path, "a", encoding="utf-8") as f:
+            f.write(text + "\n")
+    return status
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
