@@ -5,14 +5,15 @@
 #   make test-python  — L1/L2 pytest suite (CPU jax; HYPOTHESIS_PROFILE=ci)
 #   make bench-smoke  — compile + fast-run all paper-figure benches at CI scale
 #   make bench-preprocess — fig7 preprocessing bench at CI scale, JSON datapoint
-#   make bench-compare — gate the fresh BENCH_preprocess.json vs the committed baseline
+#   make bench-autotune — autotuner ablation at CI scale, JSON datapoint
+#   make bench-compare — gate fresh BENCH_preprocess.json + BENCH_autotune.json vs the committed baselines
 #   make artifacts    — AOT-lower the L1/L2 graphs to artifacts/ (HLO text)
 #   make clean        — drop build products
 
 CARGO  ?= cargo
 PYTHON ?= python3
 
-.PHONY: all build test test-python bench-smoke bench-build bench-preprocess bench-compare artifacts artifacts-quick clean
+.PHONY: all build test test-python bench-smoke bench-build bench-preprocess bench-autotune bench-compare artifacts artifacts-quick clean
 
 all: build
 
@@ -43,15 +44,26 @@ bench-preprocess:
 	HBP_BENCH_FAST=1 HBP_BENCH_SCALE=ci HBP_BENCH_JSON=$(CURDIR)/BENCH_preprocess.json \
 		$(CARGO) bench --bench fig7_preprocess
 
+# Autotuner perf datapoint: cold-cache tuner decisions + trial timings
+# at CI scale, JSON to BENCH_autotune.json (same committed-baseline +
+# per-PR-artifact scheme as bench-preprocess; schema in README).
+bench-autotune:
+	HBP_BENCH_FAST=1 HBP_BENCH_SCALE=ci HBP_BENCH_JSON=$(CURDIR)/BENCH_autotune.json \
+		$(CARGO) bench --bench ablation_autotune
+
 # Bench-trajectory gate: compare the freshly generated working-tree
-# BENCH_preprocess.json against the committed (HEAD) baseline. Fails on
-# a >25% geomean regression over comparable non-null timing fields;
-# no-op while the committed seed is still all-null. Writes a per-matrix
-# table to $GITHUB_STEP_SUMMARY when CI sets it.
+# bench JSONs against the committed (HEAD) baselines, both pairs in one
+# invocation. Fails on a >25% geomean regression over comparable
+# non-null timing fields; no-op while a committed seed is still
+# all-null. Writes per-matrix tables to $GITHUB_STEP_SUMMARY when CI
+# sets it.
 bench-compare:
-	git show HEAD:BENCH_preprocess.json > .bench_baseline.json
-	$(PYTHON) tools/bench_compare.py --baseline .bench_baseline.json \
-		--current BENCH_preprocess.json; s=$$?; rm -f .bench_baseline.json; exit $$s
+	git show HEAD:BENCH_preprocess.json > .bench_baseline_preprocess.json && \
+	git show HEAD:BENCH_autotune.json > .bench_baseline_autotune.json && \
+	$(PYTHON) tools/bench_compare.py \
+		--baseline .bench_baseline_preprocess.json --current BENCH_preprocess.json \
+		--baseline .bench_baseline_autotune.json --current BENCH_autotune.json; \
+	s=$$?; rm -f .bench_baseline_*.json; exit $$s
 
 # Full AOT artifact set (all L buckets + batch executables).
 artifacts:

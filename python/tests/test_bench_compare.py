@@ -16,8 +16,8 @@ bench_compare = importlib.util.module_from_spec(_spec)
 _spec.loader.exec_module(bench_compare)
 
 
-def _doc(entries):
-    return {"bench": "preprocess", "scale": "ci", "matrices": entries}
+def _doc(entries, bench="preprocess"):
+    return {"bench": bench, "scale": "ci", "matrices": entries}
 
 
 def _entry(mid, **secs):
@@ -86,7 +86,7 @@ def test_step_summary_written(tmp_path, monkeypatch):
         _run(tmp_path, baseline, current, summary=str(summary), monkeypatch=monkeypatch) == 0
     )
     text = summary.read_text()
-    assert "Preprocessing bench trajectory" in text
+    assert "Bench trajectory: preprocess" in text
     assert "| m1 |" in text
 
 
@@ -121,3 +121,107 @@ def test_null_fields_are_skipped_not_zero():
         _doc([_entry("m1", build_serial_secs=1.0, reorder_hbp_secs=0.5)]),
     )
     assert ratios == [1.0]
+
+
+def _autotune_entry(mid, **fields):
+    e = {
+        "id": mid,
+        "rows": 10,
+        "cols": 10,
+        "nnz": 20,
+        "winner_engine": None,
+        "trial_hbp_secs": None,
+        "trial_csr_secs": None,
+        "trial_2d_secs": None,
+        "tune_secs": None,
+    }
+    e.update(fields)
+    return e
+
+
+def test_timing_fields_are_discovered_dynamically():
+    # the autotune schema shares no field names with SECS_FIELDS, yet
+    # its *_secs fields are compared; non-secs fields are ignored
+    _, ratios = bench_compare.compare(
+        _doc(
+            [_autotune_entry("m1", trial_hbp_secs=1.0, tune_secs=4.0, winner_engine="hbp")],
+            bench="autotune",
+        ),
+        _doc(
+            [_autotune_entry("m1", trial_hbp_secs=2.0, tune_secs=2.0, winner_engine="csr")],
+            bench="autotune",
+        ),
+    )
+    assert sorted(ratios) == [0.5, 2.0]
+
+
+def test_all_null_autotune_seed_passes(tmp_path, monkeypatch):
+    baseline = _doc([_autotune_entry("m1"), _autotune_entry("m2")], bench="autotune")
+    current = _doc([_autotune_entry("m1", trial_hbp_secs=0.5)], bench="autotune")
+    assert _run(tmp_path, baseline, current, monkeypatch=monkeypatch) == 0
+
+
+def test_multi_pair_invocation_gates_each_pair(tmp_path, monkeypatch):
+    monkeypatch.delenv("GITHUB_STEP_SUMMARY", raising=False)
+    ok_base = _write(tmp_path, "ok_base.json", _doc([_entry("m1", build_serial_secs=1.0)]))
+    ok_cur = _write(tmp_path, "ok_cur.json", _doc([_entry("m1", build_serial_secs=1.0)]))
+    bad_base = _write(
+        tmp_path,
+        "bad_base.json",
+        _doc([_autotune_entry("m1", trial_hbp_secs=1.0)], bench="autotune"),
+    )
+    bad_cur = _write(
+        tmp_path,
+        "bad_cur.json",
+        _doc([_autotune_entry("m1", trial_hbp_secs=9.0)], bench="autotune"),
+    )
+    # both pairs fine
+    assert (
+        bench_compare.main(
+            ["--baseline", ok_base, "--current", ok_cur, "--baseline", bad_base, "--current", bad_base]
+        )
+        == 0
+    )
+    # one regressing pair fails the whole invocation
+    assert (
+        bench_compare.main(
+            ["--baseline", ok_base, "--current", ok_cur, "--baseline", bad_base, "--current", bad_cur]
+        )
+        == 1
+    )
+
+
+def test_mismatched_pair_counts_are_a_usage_error(tmp_path, monkeypatch):
+    monkeypatch.delenv("GITHUB_STEP_SUMMARY", raising=False)
+    a = _write(tmp_path, "a.json", _doc([_entry("m1")]))
+    b = _write(tmp_path, "b.json", _doc([_entry("m1")]))
+    assert bench_compare.main(["--baseline", a, "--baseline", b, "--current", a]) == 2
+
+
+def test_multi_pair_summary_has_one_section_per_bench(tmp_path, monkeypatch):
+    summary = tmp_path / "summary.md"
+    monkeypatch.setenv("GITHUB_STEP_SUMMARY", str(summary))
+    pre_base = _write(tmp_path, "p_base.json", _doc([_entry("m1", build_serial_secs=1.0)]))
+    pre_cur = _write(tmp_path, "p_cur.json", _doc([_entry("m1", build_serial_secs=1.0)]))
+    at_base = _write(
+        tmp_path,
+        "a_base.json",
+        _doc([_autotune_entry("m1", tune_secs=1.0)], bench="autotune"),
+    )
+    at_cur = _write(
+        tmp_path,
+        "a_cur.json",
+        _doc([_autotune_entry("m1", tune_secs=1.0)], bench="autotune"),
+    )
+    assert (
+        bench_compare.main(
+            [
+                "--baseline", pre_base, "--current", pre_cur,
+                "--baseline", at_base, "--current", at_cur,
+            ]
+        )
+        == 0
+    )
+    text = summary.read_text()
+    assert "Bench trajectory: preprocess" in text
+    assert "Bench trajectory: autotune" in text

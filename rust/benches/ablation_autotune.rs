@@ -1,0 +1,122 @@
+//! Autotuning ablation: what does the tuner decide across the Table-I
+//! suite, and what does deciding cost?
+//!
+//! For every suite matrix a **cold** tuner (fresh in-memory cache, so
+//! every matrix pays the full feature + model + trial pipeline) ranks
+//! candidates and crowns a winner by competitive trial. The table shows
+//! the model's top pick vs the measured winner — where they disagree is
+//! exactly the slice the paper's measure-don't-model argument covers.
+//!
+//! With `HBP_BENCH_JSON=<path>` the per-matrix numbers are written as a
+//! JSON datapoint (`make bench-autotune` → `BENCH_autotune.json`,
+//! gated by `make bench-compare` next to the preprocessing trajectory;
+//! schema in README "Autotuning").
+
+#[path = "common/mod.rs"]
+mod common;
+
+use hbp_spmv::coordinator::EngineKind;
+use hbp_spmv::partition::PartitionConfig;
+use hbp_spmv::tune::{TrialConfig, Tuner};
+use hbp_spmv::util::bench::{banner, Table};
+use hbp_spmv::util::json::{obj, Json};
+use hbp_spmv::util::timer::fmt_duration;
+
+fn main() {
+    let threads = common::threads();
+    let cfg = PartitionConfig::default();
+    let fast = std::env::var("HBP_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let json_path = std::env::var("HBP_BENCH_JSON").ok();
+    banner(
+        "Autotune",
+        &format!(
+            "Cold-cache tuner decisions over the Table-I suite (scale={}, {threads} threads): \
+             model ranking vs competitive-trial winner, and the tuning cost itself",
+            common::scale_name(common::bench_scale()),
+        ),
+    );
+
+    let mut t = Table::new(&[
+        "id",
+        "row cv",
+        "model pick",
+        "winner",
+        "winner spmv",
+        "agree",
+        "tune cost",
+    ]);
+    let mut agreements = 0usize;
+    let mut matrices = vec![];
+    for id in common::ALL_IDS {
+        let (meta, m) = common::load(id);
+        // fresh tuner per matrix: every decision is a cold tune
+        let mut tuner = Tuner::new(cfg, threads);
+        tuner.trial = TrialConfig { top_k: 4, iters: if fast { 3 } else { 7 }, ..tuner.trial };
+        let outcome = tuner.tune(&m);
+        let report = outcome.report.as_ref().expect("cold tune always runs trials");
+        let model_pick = report.trials[0].kind;
+        let winner = report.winner();
+        if winner.kind == model_pick {
+            agreements += 1;
+        }
+        t.row(&[
+            meta.id.into(),
+            format!("{:.2}", outcome.features.row_cv),
+            model_pick.to_string(),
+            format!(
+                "{} {}x{}",
+                winner.kind, winner.cfg.rows_per_block, winner.cfg.cols_per_block
+            ),
+            fmt_duration(winner.median_secs),
+            if winner.kind == model_pick { "y".into() } else { "n".into() },
+            fmt_duration(outcome.tune_secs),
+        ]);
+
+        if json_path.is_some() {
+            // best (minimum) trialed median per engine kind; a kind the
+            // model kept out of the top-k stays null
+            let best = |kind: EngineKind| {
+                report
+                    .trials
+                    .iter()
+                    .filter(|tr| tr.kind == kind)
+                    .map(|tr| tr.median_secs)
+                    .fold(f64::INFINITY, f64::min)
+            };
+            let num_or_null =
+                |v: f64| if v.is_finite() { Json::Num(v) } else { Json::Null };
+            matrices.push(obj(&[
+                ("id", Json::Str(meta.id.to_string())),
+                ("rows", Json::Num(m.rows as f64)),
+                ("cols", Json::Num(m.cols as f64)),
+                ("nnz", Json::Num(m.nnz() as f64)),
+                ("winner_engine", Json::Str(winner.kind.to_string())),
+                ("trial_hbp_secs", num_or_null(best(EngineKind::Hbp))),
+                ("trial_csr_secs", num_or_null(best(EngineKind::Csr))),
+                ("trial_2d_secs", num_or_null(best(EngineKind::Plain2d))),
+                ("tune_secs", Json::Num(outcome.tune_secs)),
+            ]));
+        }
+    }
+    t.print();
+    println!(
+        "\nmodel top pick == trial winner on {agreements}/{} matrices \
+         (disagreements are what the competitive trial is for)",
+        common::ALL_IDS.len()
+    );
+
+    if let Some(path) = json_path {
+        let doc = obj(&[
+            ("bench", Json::Str("autotune".to_string())),
+            (
+                "scale",
+                Json::Str(common::scale_name(common::bench_scale()).to_string()),
+            ),
+            ("threads", Json::Num(threads as f64)),
+            ("matrices", Json::Arr(matrices)),
+        ]);
+        std::fs::write(&path, format!("{doc}\n"))
+            .unwrap_or_else(|e| panic!("writing HBP_BENCH_JSON={path}: {e}"));
+        println!("\nwrote autotune datapoint to {path}");
+    }
+}

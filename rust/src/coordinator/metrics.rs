@@ -17,6 +17,11 @@ struct Inner {
     update_blocks_touched: u64,
     update_blocks_total: u64,
     update_secs: Welford,
+    // autotuning (registration-time engine selection)
+    tunes: u64,
+    tune_cache_hits: u64,
+    tune_trials: u64,
+    tune_secs: Welford,
 }
 
 /// Thread-safe service metrics.
@@ -46,6 +51,10 @@ impl ServiceMetrics {
                 update_blocks_touched: 0,
                 update_blocks_total: 0,
                 update_secs: Welford::new(),
+                tunes: 0,
+                tune_cache_hits: 0,
+                tune_trials: 0,
+                tune_secs: Welford::new(),
             }),
         }
     }
@@ -76,6 +85,18 @@ impl ServiceMetrics {
         m.update_secs.push(secs);
     }
 
+    /// Record one tuner outcome: whether the cache short-circuited it,
+    /// how many candidates were trialed, and the end-to-end tune cost.
+    pub fn record_tune(&self, outcome: &crate::tune::TuneOutcome) {
+        let mut m = self.inner.lock().unwrap();
+        m.tunes += 1;
+        if outcome.cache_hit {
+            m.tune_cache_hits += 1;
+        }
+        m.tune_trials += outcome.report.as_ref().map(|r| r.trials.len()).unwrap_or(0) as u64;
+        m.tune_secs.push(outcome.tune_secs);
+    }
+
     /// Snapshot for the `stats` endpoint.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let m = self.inner.lock().unwrap();
@@ -93,6 +114,10 @@ impl ServiceMetrics {
             update_blocks_touched: m.update_blocks_touched,
             update_blocks_total: m.update_blocks_total,
             mean_update_secs: m.update_secs.mean(),
+            tunes: m.tunes,
+            tune_cache_hits: m.tune_cache_hits,
+            tune_trials: m.tune_trials,
+            mean_tune_secs: m.tune_secs.mean(),
         }
     }
 }
@@ -114,6 +139,13 @@ pub struct MetricsSnapshot {
     /// Cumulative pre-update block counts across all updates.
     pub update_blocks_total: u64,
     pub mean_update_secs: f64,
+    /// Tuner invocations recorded (one per registration).
+    pub tunes: u64,
+    /// How many of those were content-hash cache hits (no trial run).
+    pub tune_cache_hits: u64,
+    /// Cumulative candidates measured by competitive trials.
+    pub tune_trials: u64,
+    pub mean_tune_secs: f64,
 }
 
 impl MetricsSnapshot {
@@ -132,6 +164,10 @@ impl MetricsSnapshot {
             ("update_blocks_touched", Json::Num(self.update_blocks_touched as f64)),
             ("update_blocks_total", Json::Num(self.update_blocks_total as f64)),
             ("mean_update_secs", Json::Num(self.mean_update_secs)),
+            ("tunes", Json::Num(self.tunes as f64)),
+            ("tune_cache_hits", Json::Num(self.tune_cache_hits as f64)),
+            ("tune_trials", Json::Num(self.tune_trials as f64)),
+            ("mean_tune_secs", Json::Num(self.mean_tune_secs)),
         ])
     }
 }
@@ -183,6 +219,27 @@ mod tests {
         let j = s.to_json();
         assert_eq!(j.get("updates").and_then(|v| v.as_usize()), Some(2));
         assert_eq!(j.get("full_rebuilds").and_then(|v| v.as_usize()), Some(1));
+    }
+
+    #[test]
+    fn records_tunes() {
+        use crate::gen::random;
+        use crate::partition::PartitionConfig;
+        use crate::tune::{TrialConfig, Tuner};
+        let mut tuner = Tuner::new(PartitionConfig::test_small(), 1);
+        tuner.trial = TrialConfig { top_k: 2, warmup: 0, iters: 1, seed: 1 };
+        let m = random::uniform(20, 20, 0.3, 4);
+        let metrics = ServiceMetrics::new();
+        metrics.record_tune(&tuner.tune(&m)); // cold: trials run
+        metrics.record_tune(&tuner.tune(&m)); // warm: cache hit
+        let s = metrics.snapshot();
+        assert_eq!(s.tunes, 2);
+        assert_eq!(s.tune_cache_hits, 1);
+        assert_eq!(s.tune_trials, 2, "only the cold tune measures candidates");
+        assert!(s.mean_tune_secs >= 0.0);
+        let j = s.to_json();
+        assert_eq!(j.get("tunes").and_then(|v| v.as_usize()), Some(2));
+        assert_eq!(j.get("tune_cache_hits").and_then(|v| v.as_usize()), Some(1));
     }
 
     #[test]

@@ -11,6 +11,12 @@
 //! value-level [`crate::preprocess::MatrixDelta`] to every resident
 //! engine under the matrix's write lock, with the HBP operand repaired
 //! incrementally (touched blocks only) instead of rebuilt.
+//!
+//! Hosted matrices are also **autotuned**: registration runs the
+//! [`crate::tune::Tuner`] (features → cost model → competitive trials,
+//! short-circuited by a content-hash cache), builds only the decided
+//! engine, and serves `EngineKind::Auto` requests through that
+//! decision; the `tune` request kind reports the stored record.
 
 pub mod metrics;
 pub mod router;

@@ -1,84 +1,190 @@
-//! Matrix registry + engine routing.
+//! Matrix registry + engine routing, with autotuned lazy engines.
 //!
-//! A registered matrix is preprocessed once (the HBP build *is* the
-//! paper's cheap preprocessing step) and then serves SpMV requests
-//! through whichever engine the request names — the pure-rust HBP
-//! engine (default), the CSR/2D baselines, or the PJRT/AOT path.
+//! Registering a matrix runs the [`crate::tune::Tuner`] (features →
+//! cost model → competitive trials, short-circuited by the context-keyed
+//! content-hash cache) and eagerly builds **only the decided engine**;
+//! the other engines build lazily on the first request that names them.
+//! This replaces the old eager triple-build: a cache-hit registration
+//! pays exactly one preprocessing pass, and a cold one pays the trial
+//! builds plus one (trial engines are measurement throwaways — the
+//! resident HBP is rebuilt in updatable form, which trials don't need).
+//!
+//! `EngineKind::Auto` requests resolve to the tuned decision per
+//! matrix; explicit kinds still force a specific engine.
 //!
 //! Each entry sits behind its own `RwLock`: SpMV traffic takes shared
 //! read locks, and a [`Router::update`] takes the write lock for just
 //! that matrix — an update is atomic with respect to every in-flight
-//! request against the same matrix and invisible to all others.
+//! request against the same matrix and invisible to all others. Updates
+//! repair only the engines that were actually built; the retained
+//! source CSR keeps lazily-built engines consistent afterwards.
 
 use crate::exec::{CsrParallel, HbpEngine, SpmvEngine, Spmv2dEngine};
 use crate::formats::Csr;
 use crate::partition::PartitionConfig;
-use crate::preprocess::{HashReorder, MatrixDelta, UpdateReport};
+use crate::preprocess::{apply_to_csr, HashReorder, MatrixDelta, UpdateReport};
+use crate::tune::{TuneOutcome, Tuner};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
-use std::sync::{RwLock, RwLockReadGuard};
+use std::sync::{OnceLock, RwLock, RwLockReadGuard};
 
-/// Which engine executes a request.
+/// Which engine executes a request. `Auto` defers to the per-matrix
+/// tuned decision.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum EngineKind {
     Hbp,
     Csr,
     Plain2d,
+    Auto,
 }
 
-impl EngineKind {
-    pub fn parse(s: &str) -> Result<EngineKind> {
+impl std::str::FromStr for EngineKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<EngineKind> {
         match s {
             "hbp" => Ok(EngineKind::Hbp),
             "csr" => Ok(EngineKind::Csr),
             "2d" => Ok(EngineKind::Plain2d),
-            other => bail!("unknown engine {other:?} (expected hbp|csr|2d)"),
+            "auto" => Ok(EngineKind::Auto),
+            other => bail!("unknown engine {other:?} (expected one of: hbp, csr, 2d, auto)"),
         }
     }
 }
 
-/// A registered, preprocessed matrix.
+/// Round-trips with the `FromStr` impl: `kind.to_string().parse()` is
+/// the identity, so CLI and server output feed back in unchanged.
+impl std::fmt::Display for EngineKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            EngineKind::Hbp => "hbp",
+            EngineKind::Csr => "csr",
+            EngineKind::Plain2d => "2d",
+            EngineKind::Auto => "auto",
+        })
+    }
+}
+
+/// A registered matrix: tuned decision, retained source, and lazily
+/// built engines.
 pub struct PreparedMatrix {
     pub name: String,
     pub rows: usize,
     pub cols: usize,
     pub nnz: usize,
+    /// Build time of the decided engine (the registration cost).
     pub preprocess_secs: f64,
     /// Deltas applied since registration.
     pub updates_applied: u64,
-    hbp: HbpEngine,
-    csr: CsrParallel,
-    plain2d: Spmv2dEngine,
+    /// What the tuner learned at registration (decision, features,
+    /// trial record, cache hit) — served by the `tune` protocol op.
+    pub tune: TuneOutcome,
+    base_cfg: PartitionConfig,
+    threads: usize,
+    /// Source CSR, kept in lock-step with every built engine so a
+    /// lazily built engine always starts from the current values.
+    m: Csr,
+    hbp: OnceLock<HbpEngine>,
+    csr: OnceLock<CsrParallel>,
+    plain2d: OnceLock<Spmv2dEngine>,
 }
 
 impl PreparedMatrix {
-    pub fn engine(&self, kind: EngineKind) -> &dyn SpmvEngine {
+    /// Resolve `Auto` to the tuned decision; explicit kinds pass through.
+    pub fn resolve(&self, kind: EngineKind) -> EngineKind {
         match kind {
-            EngineKind::Hbp => &self.hbp,
-            EngineKind::Csr => &self.csr,
-            EngineKind::Plain2d => &self.plain2d,
+            EngineKind::Auto => self.tune.decision.kind,
+            k => k,
         }
     }
 
-    pub fn hbp(&self) -> &HbpEngine {
-        &self.hbp
+    /// The concrete engine kind `Auto` requests execute on.
+    pub fn resolved_kind(&self) -> EngineKind {
+        self.resolve(EngineKind::Auto)
     }
 
-    /// Apply a delta to **every** engine's resident copy, so whichever
-    /// engine a later request names serves the updated values. The HBP
-    /// engine's incremental repair supplies the report (its
-    /// blocks-touched metric is the one the paper's format makes
-    /// interesting); the CSR/2D copies apply the same value writes.
+    /// Partition config an engine of `kind` is built with: the tuned
+    /// grid when this kind *is* the decision, the base config otherwise.
+    fn cfg_for(&self, kind: EngineKind) -> PartitionConfig {
+        if self.tune.decision.kind == kind {
+            self.tune.decision.cfg
+        } else {
+            self.base_cfg
+        }
+    }
+
+    /// The engine serving `kind`, built on first use.
+    pub fn engine(&self, kind: EngineKind) -> &dyn SpmvEngine {
+        match self.resolve(kind) {
+            EngineKind::Hbp => self.hbp.get_or_init(|| {
+                HbpEngine::new_updatable(
+                    self.m.clone(),
+                    self.cfg_for(EngineKind::Hbp),
+                    Box::new(HashReorder::default()),
+                    self.threads,
+                    0.25,
+                )
+            }),
+            EngineKind::Csr => {
+                self.csr.get_or_init(|| CsrParallel::new(self.m.clone(), self.threads))
+            }
+            EngineKind::Plain2d => self.plain2d.get_or_init(|| {
+                Spmv2dEngine::new(self.m.clone(), self.cfg_for(EngineKind::Plain2d), self.threads)
+            }),
+            EngineKind::Auto => unreachable!("resolve() never returns Auto"),
+        }
+    }
+
+    /// Whether an engine of this kind has been built (`Auto` asks about
+    /// the decided kind). Lazy-construction observability for tests and
+    /// the `list` endpoint.
+    pub fn is_built(&self, kind: EngineKind) -> bool {
+        match self.resolve(kind) {
+            EngineKind::Hbp => self.hbp.get().is_some(),
+            EngineKind::Csr => self.csr.get().is_some(),
+            EngineKind::Plain2d => self.plain2d.get().is_some(),
+            EngineKind::Auto => unreachable!("resolve() never returns Auto"),
+        }
+    }
+
+    /// Engines currently resident.
+    pub fn built_kinds(&self) -> Vec<EngineKind> {
+        [EngineKind::Hbp, EngineKind::Csr, EngineKind::Plain2d]
+            .into_iter()
+            .filter(|&k| self.is_built(k))
+            .collect()
+    }
+
+    /// Apply a delta. The retained source validates and applies first —
+    /// an invalid delta mutates nothing anywhere — then every engine
+    /// that was actually built repairs its resident copy (identical
+    /// pre-delta copies, so those repairs cannot fail). Engines not yet
+    /// built need no repair: they will build from the updated source.
+    ///
+    /// The report comes from the most structure-aware engine resident:
+    /// HBP (whose blocks-touched metric is the one the paper's format
+    /// makes interesting), then the 2D baseline; with neither built no
+    /// derived structure exists, so nothing is rebuilt and the report
+    /// carries only the source-level change — `full_rebuild` stays
+    /// false even for pattern-changing deltas (a rebuild that never ran
+    /// must not inflate the `full_rebuilds` service metric).
     pub fn update(&mut self, delta: &MatrixDelta) -> Result<UpdateReport> {
-        let report = self.hbp.update(delta)?;
-        // identical pre-delta copies: the same validated delta cannot
-        // fail on the baselines
-        self.csr
-            .update(delta)
-            .expect("csr engine diverged from hbp source");
-        self.plain2d
-            .update(delta)
-            .expect("2d engine diverged from hbp source");
+        let change = apply_to_csr(&mut self.m, delta)?;
+        let mut report = UpdateReport {
+            rows_touched: change.touched_rows.len(),
+            blocks_touched: 0,
+            blocks_total: 0,
+            full_rebuild: false,
+        };
+        if let Some(csr) = self.csr.get_mut() {
+            csr.update(delta).expect("csr engine diverged from source");
+        }
+        if let Some(plain2d) = self.plain2d.get_mut() {
+            report = plain2d.update(delta).expect("2d engine diverged from source");
+        }
+        if let Some(hbp) = self.hbp.get_mut() {
+            report = hbp.update(delta).expect("hbp engine diverged from source");
+        }
         self.updates_applied += 1;
         Ok(report)
     }
@@ -88,40 +194,53 @@ impl PreparedMatrix {
 pub struct Router {
     pub threads: usize,
     pub cfg: PartitionConfig,
+    tuner: Tuner,
     matrices: BTreeMap<String, RwLock<PreparedMatrix>>,
 }
 
 impl Router {
+    /// Router with an in-memory tuner (decisions cached for the process
+    /// lifetime; re-registering identical content skips trials).
     pub fn new(cfg: PartitionConfig, threads: usize) -> Router {
-        Router { threads: threads.max(1), cfg, matrices: BTreeMap::new() }
+        let threads = threads.max(1);
+        Router { threads, cfg, tuner: Tuner::new(cfg, threads), matrices: BTreeMap::new() }
     }
 
-    /// Register a matrix: builds the updatable HBP engine (parallel,
-    /// hash reorder) and the baseline engines.
+    /// Router with a caller-configured tuner (persistent cache, custom
+    /// trial budget).
+    pub fn with_tuner(cfg: PartitionConfig, threads: usize, tuner: Tuner) -> Router {
+        Router { threads: threads.max(1), cfg, tuner, matrices: BTreeMap::new() }
+    }
+
+    pub fn tuner(&self) -> &Tuner {
+        &self.tuner
+    }
+
+    /// Register a matrix: tune it (cache-hit or competitive trials),
+    /// then build only the decided engine. Other engines build on the
+    /// first request that forces them.
     pub fn register(&mut self, name: &str, m: Csr) -> Result<()> {
         let (rows, cols, nnz) = (m.rows, m.cols, m.nnz());
-        let csr = CsrParallel::new(m.clone(), self.threads);
-        let plain2d = Spmv2dEngine::new(m.clone(), self.cfg, self.threads);
-        let (hbp, preprocess_secs) = crate::util::timer::time(|| {
-            HbpEngine::new_updatable(
-                m,
-                self.cfg,
-                Box::new(HashReorder::default()),
-                self.threads,
-                0.25,
-            )
-        });
-        let prepared = PreparedMatrix {
+        let tune = self.tuner.tune(&m);
+        let mut prepared = PreparedMatrix {
             name: name.to_string(),
             rows,
             cols,
             nnz,
-            preprocess_secs,
+            preprocess_secs: 0.0,
             updates_applied: 0,
-            hbp,
-            csr,
-            plain2d,
+            tune,
+            base_cfg: self.cfg,
+            threads: self.threads,
+            m,
+            hbp: OnceLock::new(),
+            csr: OnceLock::new(),
+            plain2d: OnceLock::new(),
         };
+        let (_, preprocess_secs) = crate::util::timer::time(|| {
+            prepared.engine(EngineKind::Auto);
+        });
+        prepared.preprocess_secs = preprocess_secs;
         self.matrices.insert(name.to_string(), RwLock::new(prepared));
         Ok(())
     }
@@ -201,9 +320,69 @@ mod tests {
         let x = random::vector(80, 1);
         let mut expect = vec![0.0; 100];
         m.spmv(&x, &mut expect);
-        for kind in [EngineKind::Hbp, EngineKind::Csr, EngineKind::Plain2d] {
+        for kind in [EngineKind::Hbp, EngineKind::Csr, EngineKind::Plain2d, EngineKind::Auto] {
             let y = r.spmv("t", kind, &x).unwrap();
             assert!(allclose(&y, &expect, 1e-10, 1e-12), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn register_builds_only_the_decided_engine() {
+        let m = random::power_law_rows(100, 80, 2.0, 20, 5);
+        let r = router_with("t", m);
+        let p = r.get("t").unwrap();
+        let decided = p.resolved_kind();
+        assert_ne!(decided, EngineKind::Auto, "decision must be concrete");
+        assert_eq!(p.built_kinds(), vec![decided], "only the decision builds eagerly");
+        assert!(p.preprocess_secs >= 0.0);
+        drop(p);
+        // forcing another kind builds it lazily, exactly once
+        let other = if decided == EngineKind::Csr { EngineKind::Hbp } else { EngineKind::Csr };
+        let x = random::vector(80, 2);
+        r.spmv("t", other, &x).unwrap();
+        let p = r.get("t").unwrap();
+        assert!(p.is_built(other), "forced kind must now be resident");
+        assert_eq!(p.built_kinds().len(), 2);
+    }
+
+    #[test]
+    fn auto_is_bit_identical_to_the_forced_winner() {
+        let m = random::power_law_rows(120, 90, 2.0, 25, 7);
+        let r = router_with("t", m);
+        let p = r.get("t").unwrap();
+        let winner = p.resolved_kind();
+        drop(p);
+        let x = random::vector(90, 3);
+        let auto = r.spmv("t", EngineKind::Auto, &x).unwrap();
+        let forced = r.spmv("t", winner, &x).unwrap();
+        assert_eq!(auto, forced, "Auto must route to the same resident engine");
+    }
+
+    #[test]
+    fn reregistering_identical_content_hits_the_tune_cache() {
+        let m = random::power_law_rows(80, 70, 2.0, 20, 11);
+        let mut r = Router::new(PartitionConfig::test_small(), 2);
+        r.register("a", m.clone()).unwrap();
+        r.register("b", m).unwrap();
+        let a = r.get("a").unwrap();
+        let b = r.get("b").unwrap();
+        assert!(!a.tune.cache_hit, "first registration runs trials");
+        assert!(a.tune.report.is_some());
+        assert!(b.tune.cache_hit, "identical content must skip trials");
+        assert!(b.tune.report.is_none(), "cache hit means no second trial run");
+        assert_eq!(a.tune.decision, b.tune.decision);
+    }
+
+    #[test]
+    fn engine_kind_round_trips_through_display_and_fromstr() {
+        for kind in [EngineKind::Hbp, EngineKind::Csr, EngineKind::Plain2d, EngineKind::Auto] {
+            let s = kind.to_string();
+            assert_eq!(s.parse::<EngineKind>().unwrap(), kind, "{s}");
+        }
+        let err = "warp".parse::<EngineKind>().unwrap_err();
+        let msg = format!("{err:#}");
+        for name in ["hbp", "csr", "2d", "auto"] {
+            assert!(msg.contains(name), "error must list {name}: {msg}");
         }
     }
 
@@ -213,8 +392,8 @@ mod tests {
         let r = router_with("t", m);
         assert!(r.spmv("missing", EngineKind::Hbp, &vec![0.0; 10]).is_err());
         assert!(r.spmv("t", EngineKind::Hbp, &vec![0.0; 5]).is_err());
-        assert!(EngineKind::parse("warp").is_err());
-        assert_eq!(EngineKind::parse("2d").unwrap(), EngineKind::Plain2d);
+        assert!("warp".parse::<EngineKind>().is_err());
+        assert_eq!("2d".parse::<EngineKind>().unwrap(), EngineKind::Plain2d);
     }
 
     #[test]
@@ -235,7 +414,8 @@ mod tests {
         let report = r.update("t", &delta).unwrap();
         assert!(report.blocks_touched <= report.blocks_total);
         assert_eq!(r.get("t").unwrap().updates_applied, 1);
-        // all three engines agree on the mutated matrix
+        // all engines — including those built only after the update —
+        // agree on the mutated matrix
         let mut mutated = m.clone();
         crate::preprocess::apply_to_csr(&mut mutated, &delta).unwrap();
         let x = random::vector(70, 5);
@@ -245,6 +425,36 @@ mod tests {
             let y = r.spmv("t", kind, &x).unwrap();
             assert!(allclose(&y, &expect, 1e-10, 1e-12), "{kind:?} after update");
         }
+    }
+
+    #[test]
+    fn update_repairs_only_built_engines_lazily_built_ones_catch_up() {
+        let m = random::power_law_rows(80, 60, 2.0, 15, 19);
+        let r = router_with("t", m.clone());
+        let built_before = r.get("t").unwrap().built_kinds();
+        assert_eq!(built_before.len(), 1, "register builds one engine");
+
+        let row = (0..80).find(|&i| m.row_nnz(i) >= 1).unwrap();
+        r.update("t", &MatrixDelta::new().scale_row(row, -3.0)).unwrap();
+        assert_eq!(
+            r.get("t").unwrap().built_kinds(),
+            built_before,
+            "an update must not force unbuilt engines into existence"
+        );
+
+        // a kind first built *after* the update serves the updated values
+        let unbuilt = [EngineKind::Hbp, EngineKind::Csr, EngineKind::Plain2d]
+            .into_iter()
+            .find(|k| !built_before.contains(k))
+            .unwrap();
+        let mut mutated = m.clone();
+        crate::preprocess::apply_to_csr(&mut mutated, &MatrixDelta::new().scale_row(row, -3.0))
+            .unwrap();
+        let x = random::vector(60, 9);
+        let mut expect = vec![0.0; 80];
+        mutated.spmv(&x, &mut expect);
+        let y = r.spmv("t", unbuilt, &x).unwrap();
+        assert!(allclose(&y, &expect, 1e-10, 1e-12), "{unbuilt:?} built from stale source");
     }
 
     #[test]

@@ -12,7 +12,13 @@
 //! <- {"ok":true, "matrices":[{"name":"m1","rows":...,"cols":...,"nnz":...}]}
 //! -> {"op":"stats"}
 //! <- {"ok":true, "stats":{...}}
+//! -> {"op":"tune", "matrix":"m1"}
+//! <- {"ok":true, "cache_hit":false, "decision":{"engine":"hbp",...},
+//!     "features":{...}, "trials":{...}}
 //! ```
+//!
+//! `spmv` accepts `"engine":"auto"` (resolved to the matrix's tuned
+//! decision); the default stays `"hbp"`.
 //!
 //! Update op kinds mirror [`DeltaOp`]:
 //! `{"kind":"set","row":R,"col":C,"value":V}`,
@@ -45,6 +51,11 @@ impl Coordinator {
     pub fn new(router: Router, cfg: BatcherConfig) -> Coordinator {
         let router = Arc::new(router);
         let metrics = Arc::new(ServiceMetrics::new());
+        // registration happens before the router is shared, so every
+        // tune outcome the registry holds is recorded here exactly once
+        for name in router.names() {
+            metrics.record_tune(&router.get(name).expect("registered matrix").tune);
+        }
         let batcher = Batcher::start(router.clone(), metrics.clone(), cfg);
         let handle = batcher.handle();
         Coordinator { router, metrics, handle, batcher }
@@ -81,9 +92,8 @@ impl Coordinator {
         match req.req_str("op")? {
             "spmv" => {
                 let matrix = req.req_str("matrix")?;
-                let engine = EngineKind::parse(
-                    req.get("engine").and_then(Json::as_str).unwrap_or("hbp"),
-                )?;
+                let engine: EngineKind =
+                    req.get("engine").and_then(Json::as_str).unwrap_or("hbp").parse()?;
                 let x: Vec<f64> = req
                     .get("x")
                     .and_then(Json::as_arr)
@@ -125,6 +135,11 @@ impl Coordinator {
                 ("ok", Json::Bool(true)),
                 ("stats", self.metrics.snapshot().to_json()),
             ])),
+            "tune" => {
+                let matrix = req.req_str("matrix")?;
+                let m = self.router.get(matrix)?;
+                Ok(tune_json(&m.tune))
+            }
             other => anyhow::bail!("unknown op {other:?}"),
         }
     }
@@ -237,6 +252,34 @@ fn delta_to_json(delta: &MatrixDelta) -> Json {
         })
         .collect();
     Json::Arr(ops)
+}
+
+/// Serialize a registration's tuning record for the `tune` op.
+fn tune_json(t: &crate::tune::TuneOutcome) -> Json {
+    obj(&[
+        ("ok", Json::Bool(true)),
+        ("key", Json::Str(format!("{:016x}", t.key))),
+        ("cache_hit", Json::Bool(t.cache_hit)),
+        (
+            "decision",
+            obj(&[
+                ("engine", Json::Str(t.decision.kind.to_string())),
+                ("rows_per_block", Json::Num(t.decision.cfg.rows_per_block as f64)),
+                ("cols_per_block", Json::Num(t.decision.cfg.cols_per_block as f64)),
+                ("warp", Json::Num(t.decision.cfg.warp as f64)),
+                ("trial_secs", Json::Num(t.decision.trial_secs)),
+            ]),
+        ),
+        ("features", t.features.to_json()),
+        (
+            "trials",
+            match &t.report {
+                Some(report) => report.to_json(),
+                None => Json::Null,
+            },
+        ),
+        ("tune_secs", Json::Num(t.tune_secs)),
+    ])
 }
 
 fn report_json(report: &UpdateReport) -> Json {
@@ -459,6 +502,34 @@ mod tests {
         ]);
         let parsed = delta_from_json(&Json::parse(&req.to_string()).unwrap()).unwrap();
         assert_eq!(parsed, delta);
+    }
+
+    #[test]
+    fn json_api_tune_and_auto_engine() {
+        let c = coordinator();
+        let resp = c.handle_json(r#"{"op":"tune","matrix":"t"}"#);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+        assert_eq!(resp.get("cache_hit"), Some(&Json::Bool(false)));
+        let decision = resp.get("decision").expect("decision object");
+        let engine = decision.req_str("engine").unwrap();
+        assert!(["hbp", "csr", "2d"].contains(&engine), "decision is concrete: {engine}");
+        assert!(resp.get("features").unwrap().get("row_cv").is_some());
+        assert!(
+            resp.get("trials").unwrap().get("winner").is_some(),
+            "register-time trials must be reported"
+        );
+        // registration-time tunes are visible in stats
+        let stats = c.handle_json(r#"{"op":"stats"}"#);
+        assert_eq!(stats.get("stats").unwrap().req_usize("tunes").unwrap(), 1);
+
+        // "auto" routes to the decision and matches forcing that kind
+        let x: Vec<f64> = (0..30).map(|i| (i as f64) / 29.0).collect();
+        let auto = c.spmv("t", EngineKind::Auto, x.clone()).unwrap();
+        let forced = c.spmv("t", engine.parse().unwrap(), x).unwrap();
+        assert_eq!(auto, forced, "auto and forced winner must be bit-identical");
+
+        let unknown = c.handle_json(r#"{"op":"tune","matrix":"ghost"}"#);
+        assert_eq!(unknown.get("ok"), Some(&Json::Bool(false)));
     }
 
     #[test]

@@ -34,6 +34,7 @@ pub mod hash;
 pub mod partition;
 pub mod preprocess;
 pub mod exec;
+pub mod tune;
 pub mod sim;
 pub mod runtime;
 pub mod coordinator;

@@ -6,11 +6,14 @@
 //! - `preprocess` — time the preprocessing strategies on a matrix (Fig. 7 style)
 //! - `update`     — time incremental delta-repair vs a full HBP rebuild
 //! - `spmv`       — run SpMV with a chosen engine, verify vs CSR, report GFLOPS
+//! - `tune`       — autotune: features, ranked candidates, trial winner
 //! - `sim`        — run the GPU cost model (Orin / RTX 4090)
 //! - `serve`      — start the TCP serving coordinator
 //!
 //! Matrices are named either by suite id (`m1`..`m14`, Table I) or by a
-//! path to a `.mtx` / `.bin` file.
+//! path to a `.mtx` / `.bin` file. The tuning cache defaults to
+//! `$HBP_TUNE_CACHE` (or the system temp dir); `--cache <path>`
+//! overrides it and `--no-cache` disables persistence.
 
 use anyhow::{bail, Context, Result};
 use hbp_spmv::coordinator::{BatcherConfig, Coordinator, Router};
@@ -22,6 +25,8 @@ use hbp_spmv::preprocess::{
     build_hbp_parallel, DpReorder, HashReorder, IdentityReorder, Reorder, SortReorder,
 };
 use hbp_spmv::sim::{simulate_csr, simulate_hbp, simulate_spmv2d, DeviceConfig};
+use hbp_spmv::tune::Tuner;
+use hbp_spmv::util::bench::Table;
 use hbp_spmv::util::cli::Args;
 use hbp_spmv::util::timer::{fmt_duration, time};
 use hbp_spmv::util::Stats;
@@ -29,13 +34,14 @@ use hbp_spmv::util::Stats;
 fn main() {
     let argv: Vec<String> = std::env::args().collect();
     let cmd = argv.get(1).map(String::as_str).unwrap_or("help");
-    let args = Args::from_env(2, &["verify", "all", "parallel"]);
+    let args = Args::from_env(2, &["verify", "all", "parallel", "no-cache"]);
     let result = match cmd {
         "gen" => cmd_gen(&args),
         "info" => cmd_info(&args),
         "preprocess" => cmd_preprocess(&args),
         "update" => cmd_update(&args),
         "spmv" => cmd_spmv(&args),
+        "tune" => cmd_tune(&args),
         "sim" => cmd_sim(&args),
         "serve" => cmd_serve(&args),
         "help" | "--help" | "-h" => {
@@ -64,9 +70,11 @@ SUBCOMMANDS
   info       --matrix <id|path> [--scale ci] [--threads N]
   preprocess --matrix <id|path> [--scale ci] [--threads N]
   update     --matrix <id|path> [--scale ci] [--frac 0.01] [--iters 3] [--threads N]
-  spmv       --matrix <id|path> [--engine hbp|csr|2d|nnz-split] [--iters 10] [--verify]
+  spmv       --matrix <id|path> [--engine auto|hbp|csr|2d|nnz-split] [--iters 10] [--verify]
+  tune       --matrix <id|path> [--scale ci] [--threads N] [--top-k 3] [--iters 5]
+             [--cache path] [--no-cache]
   sim        --matrix <id|path> [--device orin|rtx4090]
-  serve      --addr 127.0.0.1:7700 --matrices m1,m3 [--scale ci]"
+  serve      --addr 127.0.0.1:7700 --matrices m1,m3 [--scale ci] [--cache path] [--no-cache]"
     );
 }
 
@@ -94,6 +102,34 @@ fn threads(args: &Args) -> usize {
         "threads",
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
     )
+}
+
+/// Tuning-cache location: `--cache <path>` wins, then `$HBP_TUNE_CACHE`,
+/// then a per-user file in the system temp dir (the username is in the
+/// file name so users on a shared machine don't fight over one cache —
+/// decisions are context-keyed anyway, but the file itself is
+/// owner-writable only).
+fn tune_cache_path(args: &Args) -> std::path::PathBuf {
+    if let Some(p) = args.get("cache") {
+        return p.into();
+    }
+    if let Some(p) = std::env::var_os("HBP_TUNE_CACHE") {
+        return p.into();
+    }
+    let user = std::env::var("USER").unwrap_or_else(|_| "default".to_string());
+    std::env::temp_dir().join(format!("hbp-tune-{user}.cache"))
+}
+
+/// The CLI's tuner: persistent unless `--no-cache`. Trial-budget knobs
+/// are applied by `cmd_tune` only — `hbp spmv --engine auto` keeps the
+/// default budget so its own `--iters` (benchmark iterations) flag
+/// doesn't silently change how long the tuner measures.
+fn make_tuner(args: &Args, cfg: PartitionConfig, nthreads: usize) -> Tuner {
+    if args.flag("no-cache") {
+        Tuner::new(cfg, nthreads)
+    } else {
+        Tuner::with_cache(cfg, nthreads, tune_cache_path(args))
+    }
 }
 
 fn cmd_gen(args: &Args) -> Result<()> {
@@ -277,6 +313,19 @@ fn cmd_spmv(args: &Args) -> Result<()> {
         "csr" => Box::new(CsrParallel::new(m.clone(), nthreads)),
         "2d" => Box::new(Spmv2dEngine::new(m.clone(), cfg, nthreads)),
         "nnz-split" => Box::new(hbp_spmv::exec::NnzSplitEngine::new(m.clone(), nthreads)),
+        "auto" => {
+            let tuner = make_tuner(args, cfg, nthreads);
+            let outcome = tuner.tune(&m);
+            let d = outcome.decision;
+            println!(
+                "auto-tuned -> {} (rows/blk {}, cols/blk {}, {})",
+                d.kind,
+                d.cfg.rows_per_block,
+                d.cfg.cols_per_block,
+                if outcome.cache_hit { "tuning cache hit" } else { "competitive trial" }
+            );
+            hbp_spmv::tune::build_candidate(&m, d.kind, d.cfg, nthreads)
+        }
         other => bail!("unknown engine {other:?}"),
     };
 
@@ -304,6 +353,95 @@ fn cmd_spmv(args: &Args) -> Result<()> {
             bail!("verification failed");
         }
     }
+    Ok(())
+}
+
+/// `hbp tune`: run the autotuner on one matrix and print what it saw —
+/// extracted features, the model's ranked candidates (top-k measured by
+/// competitive trial), and the crowned winner. A second run on
+/// unchanged content hits the tuning cache and skips the trial run.
+fn cmd_tune(args: &Args) -> Result<()> {
+    let (name, m) = load_matrix(args)?;
+    let nthreads = threads(args);
+    let cfg = PartitionConfig::default();
+    let mut tuner = make_tuner(args, cfg, nthreads);
+    tuner.trial.top_k = args.usize_or("top-k", tuner.trial.top_k);
+    tuner.trial.iters = args.usize_or("iters", tuner.trial.iters);
+    let outcome = tuner.tune(&m);
+
+    println!("matrix      {name}");
+    match tuner.cache_path() {
+        Some(p) => println!(
+            "content     {:016x}  ({} @ {})",
+            outcome.key,
+            if outcome.cache_hit { "cache hit" } else { "cache miss" },
+            p.display()
+        ),
+        None => println!("content     {:016x}  (cache disabled)", outcome.key),
+    }
+    let f = &outcome.features;
+    println!("features    rows {}  cols {}  nnz {}", f.rows, f.cols, f.nnz);
+    println!(
+        "            row nnz mean {:.2}  std {:.2}  max {}  cv {:.2}",
+        f.row_mean, f.row_std, f.row_max, f.row_cv
+    );
+    println!(
+        "            zero rows {:.1}%  diag {:.1}%  bandwidth {:.1} cols ({:.3} of width)",
+        100.0 * f.zero_row_frac,
+        100.0 * f.diag_frac,
+        f.bandwidth_mean,
+        f.bandwidth_frac
+    );
+    println!(
+        "            non-empty blocks {}  block-nnz cv {:.2}",
+        f.nonempty_blocks, f.block_nnz_cv
+    );
+
+    println!("\ncandidates  (model-ranked; top {} measured by trial)\n", tuner.trial.top_k);
+    let mut t = Table::new(&["rank", "engine", "rows/blk", "cols/blk", "score", "median spmv", ""]);
+    match &outcome.report {
+        Some(report) => {
+            for (i, tr) in report.trials.iter().enumerate() {
+                t.row(&[
+                    format!("{}", i + 1),
+                    tr.kind.to_string(),
+                    format!("{}", tr.cfg.rows_per_block),
+                    format!("{}", tr.cfg.cols_per_block),
+                    format!("{:.2}", tr.model_score),
+                    fmt_duration(tr.median_secs),
+                    if i == report.winner { "<- winner".into() } else { String::new() },
+                ]);
+            }
+        }
+        None => {
+            // cache hit: show the model's ranking; no measurements ran
+            for (i, sc) in hbp_spmv::tune::model::rank(f, cfg).iter().enumerate() {
+                let is_winner = sc.candidate.kind == outcome.decision.kind
+                    && sc.candidate.cfg == outcome.decision.cfg;
+                t.row(&[
+                    format!("{}", i + 1),
+                    sc.candidate.kind.to_string(),
+                    format!("{}", sc.candidate.cfg.rows_per_block),
+                    format!("{}", sc.candidate.cfg.cols_per_block),
+                    format!("{:.2}", sc.score),
+                    "(cached)".into(),
+                    if is_winner { "<- winner".into() } else { String::new() },
+                ]);
+            }
+        }
+    }
+    t.print();
+
+    let d = &outcome.decision;
+    println!(
+        "\nwinner      {} rows_per_block={} cols_per_block={} ({}; median {})",
+        d.kind,
+        d.cfg.rows_per_block,
+        d.cfg.cols_per_block,
+        if outcome.cache_hit { "from tuning cache, no trial run" } else { "competitive trial" },
+        fmt_duration(d.trial_secs)
+    );
+    println!("tune cost   {}", fmt_duration(outcome.tune_secs));
     Ok(())
 }
 
@@ -348,19 +486,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.str_or("addr", "127.0.0.1:7700").to_string();
     let names = args.str_or("matrices", "m1,m3");
 
-    let mut router = Router::new(PartitionConfig::default(), nthreads);
+    let cfg = PartitionConfig::default();
+    let mut router = if args.flag("no-cache") {
+        Router::new(cfg, nthreads)
+    } else {
+        Router::with_tuner(cfg, nthreads, Tuner::with_cache(cfg, nthreads, tune_cache_path(args)))
+    };
     for id in names.split(',') {
         let (meta, m) =
             matrix_by_id(id.trim(), scale).with_context(|| format!("unknown matrix {id}"))?;
         let nnz = m.nnz();
         router.register(meta.id, m)?;
-        let secs = router.get(meta.id)?.preprocess_secs;
+        let p = router.get(meta.id)?;
         println!(
-            "registered {} ({}, {} nnz) — preprocessed in {}",
+            "registered {} ({}, {} nnz) — engine {} ({}), built in {}",
             meta.id,
             meta.name,
             nnz,
-            fmt_duration(secs)
+            p.resolved_kind(),
+            if p.tune.cache_hit { "tuning cache hit" } else { "tuned by trial" },
+            fmt_duration(p.preprocess_secs)
         );
     }
     let coordinator = std::sync::Arc::new(Coordinator::new(router, BatcherConfig::default()));

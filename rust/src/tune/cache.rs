@@ -1,0 +1,276 @@
+//! Persistent tuning cache keyed by matrix content hash.
+//!
+//! A tuned decision is a property of the matrix *content* (not the
+//! registration name) plus the tuning context it was measured in — so
+//! the cache key starts from a 64-bit FNV-1a hash over the CSR's
+//! dimensions, `ptr`, `col`, and `data` bit patterns ([`content_hash`],
+//! O(nnz), deterministic across platforms), which the tuner then mixes
+//! with its thread count and base partition config
+//! ([`crate::tune::Tuner::cache_key`]). A re-registered or
+//! server-restarted matrix hashes to the same key and skips straight to
+//! its tuned decision with no second trial run; a different context
+//! misses and re-tunes.
+//!
+//! The on-disk format follows the `io::binfmt` framing convention
+//! (little-endian u64 fields behind a magic number):
+//!
+//! ```text
+//! magic   u64 = 0x4842_5054_554e_4531  ("HBPTUNE1")
+//! count   u64
+//! entry*  key u64, kind u64, rows_per_block u64, cols_per_block u64,
+//!         warp u64, trial_secs f64-bits
+//! ```
+//!
+//! Reads validate the magic, the engine-kind code, and every decision's
+//! [`PartitionConfig`] invariants; any violation is a hard error the
+//! caller downgrades to an empty cache (a corrupt file must never
+//! poison decisions — it costs one re-tune and is overwritten by the
+//! next save).
+
+use super::Decision;
+use crate::coordinator::EngineKind;
+use crate::formats::Csr;
+use crate::partition::PartitionConfig;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: u64 = 0x4842_5054_554e_4531; // "HBPTUNE1"
+
+/// FNV-1a over the CSR's structure and values, folded 64 bits at a
+/// time. Any change to shape, pattern, or values changes the key.
+pub fn content_hash(m: &Csr) -> u64 {
+    const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = FNV_OFFSET;
+    let mut mix = |v: u64| h = (h ^ v).wrapping_mul(FNV_PRIME);
+    mix(m.rows as u64);
+    mix(m.cols as u64);
+    for &p in &m.ptr {
+        mix(p as u64);
+    }
+    for &c in &m.col {
+        mix(c as u64);
+    }
+    for &d in &m.data {
+        mix(d.to_bits());
+    }
+    h
+}
+
+fn kind_code(kind: EngineKind) -> u64 {
+    match kind {
+        EngineKind::Hbp => 0,
+        EngineKind::Csr => 1,
+        EngineKind::Plain2d => 2,
+        EngineKind::Auto => unreachable!("Auto decisions are never cached"),
+    }
+}
+
+fn kind_from_code(code: u64) -> Result<EngineKind> {
+    match code {
+        0 => Ok(EngineKind::Hbp),
+        1 => Ok(EngineKind::Csr),
+        2 => Ok(EngineKind::Plain2d),
+        other => bail!("tuning cache: unknown engine code {other}"),
+    }
+}
+
+fn write_u64<W: Write>(w: &mut W, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// In-memory map of content hash → tuned decision, with binary
+/// load/save.
+#[derive(Clone, Debug, Default)]
+pub struct TuneCache {
+    entries: BTreeMap<u64, Decision>,
+}
+
+impl TuneCache {
+    pub fn new() -> TuneCache {
+        TuneCache::default()
+    }
+
+    /// Load a cache file. A missing file is an empty cache (the normal
+    /// first-run state); a malformed one is an error — callers decide
+    /// whether to downgrade it (the [`crate::tune::Tuner`] does).
+    pub fn load(path: impl AsRef<Path>) -> Result<TuneCache> {
+        let path = path.as_ref();
+        if !path.exists() {
+            return Ok(TuneCache::new());
+        }
+        let mut r = BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?,
+        );
+        if read_u64(&mut r)? != MAGIC {
+            bail!("bad magic in tuning cache {path:?}");
+        }
+        let count = read_u64(&mut r)?;
+        let mut entries = BTreeMap::new();
+        for i in 0..count {
+            let key = read_u64(&mut r).with_context(|| format!("cache entry {i}"))?;
+            let kind = kind_from_code(read_u64(&mut r)?)?;
+            let cfg = PartitionConfig {
+                rows_per_block: read_u64(&mut r)? as usize,
+                cols_per_block: read_u64(&mut r)? as usize,
+                warp: read_u64(&mut r)? as usize,
+            };
+            cfg.validate().with_context(|| format!("cache entry {i} config"))?;
+            let trial_secs = f64::from_bits(read_u64(&mut r)?);
+            entries.insert(key, Decision { kind, cfg, trial_secs });
+        }
+        Ok(TuneCache { entries })
+    }
+
+    /// Write the cache atomically (temp file + rename), so a crash
+    /// mid-save never leaves a truncated file behind.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let tmp = path.with_extension("tmp");
+        {
+            let mut w = BufWriter::new(
+                std::fs::File::create(&tmp).with_context(|| format!("creating {tmp:?}"))?,
+            );
+            write_u64(&mut w, MAGIC)?;
+            write_u64(&mut w, self.entries.len() as u64)?;
+            for (&key, d) in &self.entries {
+                write_u64(&mut w, key)?;
+                write_u64(&mut w, kind_code(d.kind))?;
+                write_u64(&mut w, d.cfg.rows_per_block as u64)?;
+                write_u64(&mut w, d.cfg.cols_per_block as u64)?;
+                write_u64(&mut w, d.cfg.warp as u64)?;
+                write_u64(&mut w, d.trial_secs.to_bits())?;
+            }
+            w.flush()?;
+        }
+        std::fs::rename(&tmp, path).with_context(|| format!("renaming {tmp:?} -> {path:?}"))?;
+        Ok(())
+    }
+
+    pub fn get(&self, key: u64) -> Option<Decision> {
+        self.entries.get(&key).copied()
+    }
+
+    pub fn put(&mut self, key: u64, decision: Decision) {
+        assert_ne!(decision.kind, EngineKind::Auto, "Auto decisions are never cached");
+        self.entries.insert(key, decision);
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::random;
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("hbp_tune_cache_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join("tune.cache")
+    }
+
+    fn decision() -> Decision {
+        Decision {
+            kind: EngineKind::Hbp,
+            cfg: PartitionConfig::default(),
+            trial_secs: 1.25e-3,
+        }
+    }
+
+    #[test]
+    fn missing_file_is_an_empty_cache() {
+        let cache = TuneCache::load("/nonexistent/dir/tune.cache").unwrap();
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn roundtrip_preserves_decisions() {
+        let path = tmp("roundtrip");
+        let mut cache = TuneCache::new();
+        cache.put(42, decision());
+        cache.put(
+            7,
+            Decision {
+                kind: EngineKind::Csr,
+                cfg: PartitionConfig::test_small(),
+                trial_secs: 9.5e-6,
+            },
+        );
+        cache.save(&path).unwrap();
+        let back = TuneCache::load(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.get(42), Some(decision()));
+        assert_eq!(back.get(7).unwrap().kind, EngineKind::Csr);
+        assert_eq!(back.get(99), None, "unknown key is a miss");
+    }
+
+    #[test]
+    fn corrupt_file_is_an_error_not_a_decision() {
+        let path = tmp("corrupt");
+        std::fs::write(&path, b"garbage that is definitely not a cache").unwrap();
+        assert!(TuneCache::load(&path).is_err());
+        // a valid header with an invalid engine code is also corrupt
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC.to_le_bytes());
+        bytes.extend_from_slice(&1u64.to_le_bytes());
+        bytes.extend_from_slice(&5u64.to_le_bytes()); // key
+        bytes.extend_from_slice(&77u64.to_le_bytes()); // bad kind code
+        bytes.extend_from_slice(&[0u8; 32]);
+        std::fs::write(&path, bytes).unwrap();
+        assert!(TuneCache::load(&path).is_err());
+        // truncated entry list
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC.to_le_bytes());
+        bytes.extend_from_slice(&3u64.to_le_bytes());
+        std::fs::write(&path, bytes).unwrap();
+        assert!(TuneCache::load(&path).is_err());
+    }
+
+    #[test]
+    fn content_hash_tracks_values_pattern_and_shape() {
+        let m = random::power_law_rows(50, 60, 2.0, 15, 3);
+        let base = content_hash(&m);
+        assert_eq!(base, content_hash(&m.clone()), "hash is deterministic");
+
+        let mut value_changed = m.clone();
+        let k = value_changed.data.len() / 2;
+        value_changed.data[k] += 1.0;
+        assert_ne!(base, content_hash(&value_changed), "value change must re-key");
+
+        let mut pattern_changed = m.clone();
+        let row = (0..50).find(|&r| m.row_nnz(r) >= 1).unwrap();
+        let j = pattern_changed.ptr[row];
+        pattern_changed.col[j] = if pattern_changed.col[j] == 0 { 1 } else { 0 };
+        assert_ne!(base, content_hash(&pattern_changed), "pattern change must re-key");
+
+        let other = random::power_law_rows(50, 61, 2.0, 15, 3);
+        assert_ne!(base, content_hash(&other), "shape change must re-key");
+    }
+
+    #[test]
+    fn save_overwrites_a_corrupt_file() {
+        let path = tmp("repair");
+        std::fs::write(&path, b"junk").unwrap();
+        assert!(TuneCache::load(&path).is_err());
+        let mut cache = TuneCache::new();
+        cache.put(1, decision());
+        cache.save(&path).unwrap();
+        assert_eq!(TuneCache::load(&path).unwrap().len(), 1);
+    }
+}

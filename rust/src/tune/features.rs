@@ -1,0 +1,230 @@
+//! Structural feature extraction — the cheap signals the cost model
+//! reads.
+//!
+//! The paper's thesis is that inexpensive structural statistics (row
+//! nonzero counts, hash groupings, block densities) predict how a
+//! matrix should be laid out. [`MatrixFeatures::extract`] computes the
+//! tuner's signal set in O(nnz): row-length moments (what the nonlinear
+//! hash balances), diagonal/bandwidth structure (what makes CSR
+//! streaming competitive), and the per-block nnz distribution from the
+//! same [`block_map`] counting pass the HBP planner runs. Extraction is
+//! deterministic: the same matrix always yields bit-identical features,
+//! which keeps the model's ranking — and therefore the tuner's trial
+//! set — reproducible.
+
+use crate::formats::Csr;
+use crate::partition::{block_map, BlockGrid, PartitionConfig};
+use crate::util::json::{obj, Json};
+use crate::util::Stats;
+
+/// Fill-fraction histogram bucket upper bounds (last bucket is open):
+/// `fill < 1e-4`, `< 1e-3`, `< 1e-2`, `< 0.1`, `< 0.5`, `>= 0.5`.
+pub const FILL_EDGES: [f64; 5] = [1e-4, 1e-3, 1e-2, 0.1, 0.5];
+
+/// Number of buckets in [`MatrixFeatures::block_fill_hist`].
+pub const FILL_BUCKETS: usize = FILL_EDGES.len() + 1;
+
+/// One-pass structural summary of a CSR matrix under a partition grid.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatrixFeatures {
+    pub rows: usize,
+    pub cols: usize,
+    pub nnz: usize,
+    /// Row nonzero-count moments — the hash reorder's input statistics.
+    pub row_mean: f64,
+    pub row_std: f64,
+    pub row_max: usize,
+    /// Coefficient of variation `row_std / row_mean` (0 for empty
+    /// matrices) — the single strongest "does reordering pay?" signal.
+    pub row_cv: f64,
+    /// Fraction of rows with no nonzeros.
+    pub zero_row_frac: f64,
+    /// Fraction of nonzeros sitting exactly on the diagonal.
+    pub diag_frac: f64,
+    /// Mean `|col - row|` over all nonzeros — a bandwidth estimate.
+    pub bandwidth_mean: f64,
+    /// `bandwidth_mean / cols`: 0 for a pure diagonal, ~1/3 for uniform
+    /// scatter.
+    pub bandwidth_frac: f64,
+    /// Non-empty blocks of the 2D grid (the HBP planner's block count).
+    pub nonempty_blocks: usize,
+    /// Coefficient of variation of per-block nnz across non-empty
+    /// blocks — high values mean the competitive schedule has work to do.
+    pub block_nnz_cv: f64,
+    /// Fraction of non-empty blocks per fill-fraction bucket
+    /// (see [`FILL_EDGES`]); sums to 1 when any block exists.
+    pub block_fill_hist: [f64; FILL_BUCKETS],
+}
+
+/// Bucket index for a block fill fraction.
+fn fill_bucket(fill: f64) -> usize {
+    FILL_EDGES.iter().position(|&e| fill < e).unwrap_or(FILL_EDGES.len())
+}
+
+impl MatrixFeatures {
+    /// Extract features in one O(nnz) sweep plus the [`block_map`]
+    /// counting pass (itself O(nnz)) under `cfg`'s grid.
+    pub fn extract(m: &Csr, cfg: PartitionConfig) -> MatrixFeatures {
+        let nnz = m.nnz();
+        let lens = m.row_lengths();
+        let s = Stats::of_usize(&lens);
+        let zeros = lens.iter().filter(|&&l| l == 0).count();
+
+        let mut diag = 0usize;
+        let mut band_sum = 0.0f64;
+        for r in 0..m.rows {
+            let (cols, _) = m.row(r);
+            for &c in cols {
+                let c = c as usize;
+                if c == r {
+                    diag += 1;
+                }
+                band_sum += (c as f64 - r as f64).abs();
+            }
+        }
+        let bandwidth_mean = if nnz > 0 { band_sum / nnz as f64 } else { 0.0 };
+
+        let grid = BlockGrid::new(m.rows, m.cols, cfg);
+        let map = block_map(m, &grid);
+        let block_nnz: Vec<usize> = map.blocks.iter().map(|b| b.nnz).collect();
+        let bs = Stats::of_usize(&block_nnz);
+        let mut hist = [0.0f64; FILL_BUCKETS];
+        for b in &map.blocks {
+            let rows_in = grid.rows_in(b.bi as usize);
+            let (cs, ce) = grid.col_range(b.bj as usize);
+            let cells = (rows_in * (ce - cs)).max(1);
+            hist[fill_bucket(b.nnz as f64 / cells as f64)] += 1.0;
+        }
+        if !map.blocks.is_empty() {
+            for h in &mut hist {
+                *h /= map.blocks.len() as f64;
+            }
+        }
+
+        MatrixFeatures {
+            rows: m.rows,
+            cols: m.cols,
+            nnz,
+            row_mean: s.mean,
+            row_std: s.std,
+            row_max: s.max as usize,
+            row_cv: if s.mean > 0.0 { s.std / s.mean } else { 0.0 },
+            zero_row_frac: zeros as f64 / m.rows.max(1) as f64,
+            diag_frac: if nnz > 0 { diag as f64 / nnz as f64 } else { 0.0 },
+            bandwidth_mean,
+            bandwidth_frac: bandwidth_mean / m.cols.max(1) as f64,
+            nonempty_blocks: map.blocks.len(),
+            block_nnz_cv: if bs.mean > 0.0 { bs.std / bs.mean } else { 0.0 },
+            block_fill_hist: hist,
+        }
+    }
+
+    /// JSON view for the `tune` protocol op and the CLI.
+    pub fn to_json(&self) -> Json {
+        obj(&[
+            ("rows", Json::Num(self.rows as f64)),
+            ("cols", Json::Num(self.cols as f64)),
+            ("nnz", Json::Num(self.nnz as f64)),
+            ("row_mean", Json::Num(self.row_mean)),
+            ("row_std", Json::Num(self.row_std)),
+            ("row_max", Json::Num(self.row_max as f64)),
+            ("row_cv", Json::Num(self.row_cv)),
+            ("zero_row_frac", Json::Num(self.zero_row_frac)),
+            ("diag_frac", Json::Num(self.diag_frac)),
+            ("bandwidth_mean", Json::Num(self.bandwidth_mean)),
+            ("bandwidth_frac", Json::Num(self.bandwidth_frac)),
+            ("nonempty_blocks", Json::Num(self.nonempty_blocks as f64)),
+            ("block_nnz_cv", Json::Num(self.block_nnz_cv)),
+            (
+                "block_fill_hist",
+                Json::Arr(self.block_fill_hist.iter().map(|&h| Json::Num(h)).collect()),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Coo;
+    use crate::gen::random;
+
+    fn cfg() -> PartitionConfig {
+        PartitionConfig::test_small()
+    }
+
+    #[test]
+    fn extraction_is_deterministic() {
+        let m = random::power_law_rows(120, 150, 2.0, 40, 7);
+        let a = MatrixFeatures::extract(&m, cfg());
+        let b = MatrixFeatures::extract(&m, cfg());
+        assert_eq!(a, b, "same matrix must yield bit-identical features");
+    }
+
+    #[test]
+    fn diagonal_matrix_features() {
+        let mut coo = Coo::new(50, 50);
+        for i in 0..50 {
+            coo.push(i, i, 1.0 + i as f64);
+        }
+        let f = MatrixFeatures::extract(&coo.to_csr(), cfg());
+        assert_eq!(f.nnz, 50);
+        assert_eq!(f.diag_frac, 1.0);
+        assert_eq!(f.bandwidth_mean, 0.0);
+        assert_eq!(f.row_cv, 0.0, "uniform single-entry rows");
+        assert_eq!(f.zero_row_frac, 0.0);
+    }
+
+    #[test]
+    fn zero_rows_and_skew_are_measured() {
+        let m = random::with_row_lengths(&[0, 0, 12, 0, 1, 1], 40, 3);
+        let f = MatrixFeatures::extract(&m, cfg());
+        assert_eq!(f.zero_row_frac, 0.5);
+        assert_eq!(f.row_max, 12);
+        assert!(f.row_cv > 1.0, "skewed lengths must show high cv: {}", f.row_cv);
+    }
+
+    #[test]
+    fn block_histogram_sums_to_one() {
+        let m = random::power_law_rows(100, 200, 2.0, 50, 11);
+        let f = MatrixFeatures::extract(&m, cfg());
+        assert!(f.nonempty_blocks > 0);
+        let total: f64 = f.block_fill_hist.iter().sum();
+        assert!((total - 1.0).abs() < 1e-9, "hist sums to {total}");
+    }
+
+    #[test]
+    fn empty_matrix_is_all_zero() {
+        let f = MatrixFeatures::extract(&Csr::empty(8, 8), cfg());
+        assert_eq!(f.nnz, 0);
+        assert_eq!(f.row_cv, 0.0);
+        assert_eq!(f.diag_frac, 0.0);
+        assert_eq!(f.nonempty_blocks, 0);
+        assert_eq!(f.zero_row_frac, 1.0);
+        assert_eq!(f.block_fill_hist.iter().sum::<f64>(), 0.0);
+    }
+
+    #[test]
+    fn fill_buckets_cover_the_range() {
+        assert_eq!(fill_bucket(0.0), 0);
+        assert_eq!(fill_bucket(5e-4), 1);
+        assert_eq!(fill_bucket(5e-3), 2);
+        assert_eq!(fill_bucket(0.05), 3);
+        assert_eq!(fill_bucket(0.3), 4);
+        assert_eq!(fill_bucket(0.9), 5);
+        assert_eq!(fill_bucket(1.0), FILL_BUCKETS - 1);
+    }
+
+    #[test]
+    fn json_view_carries_the_signals() {
+        let m = random::uniform(30, 30, 0.2, 5);
+        let f = MatrixFeatures::extract(&m, cfg());
+        let j = f.to_json();
+        assert_eq!(j.get("nnz").and_then(Json::as_usize), Some(f.nnz));
+        assert_eq!(j.get("row_cv").and_then(Json::as_f64), Some(f.row_cv));
+        assert_eq!(
+            j.get("block_fill_hist").and_then(Json::as_arr).map(|a| a.len()),
+            Some(FILL_BUCKETS)
+        );
+    }
+}

@@ -1,0 +1,286 @@
+//! Matrix autotuning: features → cost model → competitive trials →
+//! cached decision.
+//!
+//! The serving problem the SpMV literature keeps rediscovering is that
+//! no single format or configuration wins across matrices — selection,
+//! not execution, is the production bottleneck. This subsystem decides
+//! *per matrix* which engine (and, for HBP, which partition grid)
+//! should serve it:
+//!
+//! 1. [`features`] — one O(nnz) pass extracts [`MatrixFeatures`]
+//!    (row-length moments, diagonal/bandwidth structure, block density
+//!    histogram from the HBP planner's own counting pass).
+//! 2. [`model`] — a transparent rule/score cost model ranks engine ×
+//!    grid candidates; every rule is a named, unit-testable function.
+//! 3. [`trial`] — the paper's competitive method generalized to engine
+//!    selection: the top-k candidates are timed on real `spmv` calls
+//!    (warmup + median-of-n, fixed deterministic budget) and the
+//!    fastest wins.
+//! 4. [`cache`] — the winner is remembered under the matrix's content
+//!    hash mixed with the tuning context ([`Tuner::cache_key`]), in
+//!    memory and optionally on disk, so a re-registered or
+//!    server-restarted matrix skips straight to its decision.
+//!
+//! [`Tuner::tune`] is the entry point; the coordinator's router calls
+//! it at registration and resolves `EngineKind::Auto` requests to the
+//! tuned decision.
+
+pub mod cache;
+pub mod features;
+pub mod model;
+pub mod trial;
+
+pub use cache::{content_hash, TuneCache};
+pub use features::MatrixFeatures;
+pub use model::{Candidate, ScoredCandidate};
+pub use trial::{build_candidate, TrialConfig, TrialResult, TuneReport};
+
+use crate::coordinator::EngineKind;
+use crate::formats::Csr;
+use crate::partition::PartitionConfig;
+use crate::util::Timer;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// A tuned serving decision: which engine hosts the matrix, under which
+/// partition grid, and the trial time that crowned it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Decision {
+    /// Never [`EngineKind::Auto`] — a decision is what Auto resolves to.
+    pub kind: EngineKind,
+    pub cfg: PartitionConfig,
+    /// The winning median SpMV seconds (from the crowning trial run).
+    pub trial_secs: f64,
+}
+
+/// Everything one [`Tuner::tune`] call learned.
+#[derive(Clone, Debug)]
+pub struct TuneOutcome {
+    /// Cache key: the matrix content hash mixed with the tuning context
+    /// (see [`Tuner::cache_key`]).
+    pub key: u64,
+    /// True when the decision came from the cache — no trials ran.
+    pub cache_hit: bool,
+    pub features: MatrixFeatures,
+    pub decision: Decision,
+    /// The trial record; `None` on a cache hit.
+    pub report: Option<TuneReport>,
+    /// Wall time of the whole tune call (hash + features + trials).
+    pub tune_secs: f64,
+}
+
+/// The autotuner: owns the trial budget and the (optionally persistent)
+/// decision cache. Thread-safe: `tune` takes `&self`.
+pub struct Tuner {
+    /// Base partition config; grid candidates are derived from it.
+    pub base_cfg: PartitionConfig,
+    /// Worker threads used by trial engines (and the decided engine).
+    pub threads: usize,
+    /// Trial budget (top-k, warmup, timed iterations).
+    pub trial: TrialConfig,
+    cache_path: Option<PathBuf>,
+    cache: Mutex<TuneCache>,
+}
+
+impl Tuner {
+    /// In-memory tuner: decisions are remembered for the process
+    /// lifetime only.
+    pub fn new(base_cfg: PartitionConfig, threads: usize) -> Tuner {
+        Tuner {
+            base_cfg,
+            threads: threads.max(1),
+            trial: TrialConfig::default(),
+            cache_path: None,
+            cache: Mutex::new(TuneCache::new()),
+        }
+    }
+
+    /// Persistent tuner: loads `path` (missing file = empty cache) and
+    /// saves after every new decision. A corrupt cache file is
+    /// downgraded to an empty cache with a warning — it costs one
+    /// re-tune and is overwritten by the next save, never a panic and
+    /// never a bogus decision.
+    pub fn with_cache(base_cfg: PartitionConfig, threads: usize, path: PathBuf) -> Tuner {
+        let cache = TuneCache::load(&path).unwrap_or_else(|e| {
+            eprintln!("tune: ignoring corrupt cache {path:?}: {e:#}");
+            TuneCache::new()
+        });
+        Tuner { cache: Mutex::new(cache), cache_path: Some(path), ..Tuner::new(base_cfg, threads) }
+    }
+
+    pub fn cache_path(&self) -> Option<&Path> {
+        self.cache_path.as_deref()
+    }
+
+    /// Cached decisions currently held (memory view).
+    pub fn cached_decisions(&self) -> usize {
+        self.cache.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+
+    /// Cache key: [`content_hash`] of the matrix mixed with the tuning
+    /// context — worker threads and the base partition config. A
+    /// decision is only as good as the context it was measured in
+    /// (CSR may win single-threaded where HBP wins on 8 workers), so a
+    /// decision tuned under one context must never be replayed in
+    /// another; differing contexts simply miss and re-tune.
+    pub fn cache_key(&self, m: &Csr) -> u64 {
+        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = content_hash(m);
+        for v in [
+            self.threads as u64,
+            self.base_cfg.rows_per_block as u64,
+            self.base_cfg.cols_per_block as u64,
+            self.base_cfg.warp as u64,
+        ] {
+            h = (h ^ v).wrapping_mul(FNV_PRIME);
+        }
+        h
+    }
+
+    /// Tune one matrix: compute its cache key, return the cached
+    /// decision if one exists, otherwise rank candidates and run
+    /// competitive trials, remembering (and persisting) the winner.
+    pub fn tune(&self, m: &Csr) -> TuneOutcome {
+        let t = Timer::start();
+        let key = self.cache_key(m);
+        let features = MatrixFeatures::extract(m, self.base_cfg);
+        if let Some(decision) = self.cache.lock().unwrap_or_else(|e| e.into_inner()).get(key) {
+            return TuneOutcome {
+                key,
+                cache_hit: true,
+                features,
+                decision,
+                report: None,
+                tune_secs: t.elapsed_secs(),
+            };
+        }
+        let ranked = model::rank(&features, self.base_cfg);
+        let report = trial::run_trials(m, &ranked, &self.trial, self.threads);
+        let w = report.winner();
+        let decision = Decision { kind: w.kind, cfg: w.cfg, trial_secs: w.median_secs };
+        {
+            let mut cache = self.cache.lock().unwrap_or_else(|e| e.into_inner());
+            cache.put(key, decision);
+            if let Some(path) = &self.cache_path {
+                if let Err(e) = cache.save(path) {
+                    eprintln!("tune: cache save to {path:?} failed: {e:#}");
+                }
+            }
+        }
+        TuneOutcome {
+            key,
+            cache_hit: false,
+            features,
+            decision,
+            report: Some(report),
+            tune_secs: t.elapsed_secs(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::SpmvEngine;
+    use crate::gen::random;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("hbp_tuner_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join("tune.cache")
+    }
+
+    fn quick_tuner(cfg: PartitionConfig) -> Tuner {
+        let mut t = Tuner::new(cfg, 2);
+        t.trial = TrialConfig { top_k: 3, warmup: 1, iters: 2, seed: 5 };
+        t
+    }
+
+    #[test]
+    fn second_tune_of_same_content_is_a_cache_hit() {
+        let m = random::power_law_rows(120, 100, 2.0, 30, 21);
+        let tuner = quick_tuner(PartitionConfig::test_small());
+        let cold = tuner.tune(&m);
+        assert!(!cold.cache_hit);
+        assert!(cold.report.is_some(), "cold tune must run trials");
+        assert_ne!(cold.decision.kind, EngineKind::Auto);
+
+        let warm = tuner.tune(&m.clone());
+        assert!(warm.cache_hit);
+        assert!(warm.report.is_none(), "cache hit must skip trials");
+        assert_eq!(warm.key, cold.key);
+        assert_eq!(warm.decision, cold.decision);
+        assert_eq!(tuner.cached_decisions(), 1);
+    }
+
+    #[test]
+    fn different_content_is_a_miss() {
+        let tuner = quick_tuner(PartitionConfig::test_small());
+        let a = tuner.tune(&random::power_law_rows(60, 60, 2.0, 15, 1));
+        let b = tuner.tune(&random::power_law_rows(60, 60, 2.0, 15, 2));
+        assert!(!a.cache_hit && !b.cache_hit);
+        assert_ne!(a.key, b.key);
+        assert_eq!(tuner.cached_decisions(), 2);
+    }
+
+    #[test]
+    fn decisions_persist_across_tuner_instances() {
+        let path = tmp("persist");
+        let _ = std::fs::remove_file(&path); // stale state from earlier runs
+        let m = random::power_law_rows(100, 90, 2.0, 25, 9);
+        let first = Tuner::with_cache(PartitionConfig::test_small(), 2, path.clone());
+        let cold = first.tune(&m);
+        assert!(!cold.cache_hit);
+
+        // a fresh tuner (= restarted server) loads the saved decision
+        let second = Tuner::with_cache(PartitionConfig::test_small(), 2, path);
+        let warm = second.tune(&m);
+        assert!(warm.cache_hit, "persisted decision must survive a restart");
+        assert_eq!(warm.decision, cold.decision);
+    }
+
+    #[test]
+    fn different_tuning_context_is_a_miss() {
+        let m = random::uniform(30, 30, 0.3, 8);
+        let path = tmp("context");
+        let _ = std::fs::remove_file(&path);
+        let one = Tuner::with_cache(PartitionConfig::test_small(), 1, path.clone());
+        assert!(!one.tune(&m).cache_hit);
+        // same matrix, different thread count: decisions don't transfer
+        let eight = Tuner::with_cache(PartitionConfig::test_small(), 8, path.clone());
+        assert!(!eight.tune(&m).cache_hit, "a 1-thread decision must not serve 8 threads");
+        // same matrix, different base grid: decisions don't transfer
+        let other_grid = Tuner::with_cache(PartitionConfig::default(), 8, path.clone());
+        assert!(!other_grid.tune(&m).cache_hit, "decisions are per base config");
+        // identical context again: hit
+        let eight2 = Tuner::with_cache(PartitionConfig::test_small(), 8, path);
+        assert!(eight2.tune(&m).cache_hit);
+    }
+
+    #[test]
+    fn corrupt_cache_file_degrades_to_a_miss() {
+        let path = tmp("corrupt");
+        std::fs::write(&path, b"not a cache file").unwrap();
+        let m = random::uniform(40, 40, 0.2, 3);
+        let tuner = Tuner::with_cache(PartitionConfig::test_small(), 1, path.clone());
+        let outcome = tuner.tune(&m);
+        assert!(!outcome.cache_hit, "corrupt cache must not fake a hit");
+        // the save after the miss repaired the file
+        assert_eq!(TuneCache::load(&path).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn decision_engine_serves_the_matrix_correctly() {
+        let m = random::power_law_rows(80, 70, 2.0, 20, 13);
+        let tuner = quick_tuner(PartitionConfig::test_small());
+        let outcome = tuner.tune(&m);
+        let engine =
+            build_candidate(&m, outcome.decision.kind, outcome.decision.cfg, tuner.threads);
+        let x = random::vector(70, 4);
+        let mut y = vec![0.0; 80];
+        engine.spmv(&x, &mut y);
+        let mut expect = vec![0.0; 80];
+        m.spmv(&x, &mut expect);
+        assert!(crate::formats::dense::allclose(&y, &expect, 1e-10, 1e-12));
+    }
+}

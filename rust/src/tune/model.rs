@@ -1,0 +1,334 @@
+//! Transparent rule-based cost model: features → ranked engine/grid
+//! candidates.
+//!
+//! The model is deliberately *not* a learned black box: it is a fixed
+//! list of named, unit-testable rules, each mapping a feature pattern to
+//! a score contribution for a specific candidate shape, with the reason
+//! recorded alongside the score. Scores only ever *rank* candidates —
+//! the final winner is crowned by the competitive trials of
+//! [`crate::tune::trial`] (the paper's measure-don't-model method), so a
+//! wrong rule costs at most a wasted trial slot, never a wrong decision.
+
+use super::features::MatrixFeatures;
+use crate::coordinator::EngineKind;
+use crate::partition::PartitionConfig;
+
+/// One engine/grid configuration the model can propose. `cfg` is only
+/// meaningful for the blocked engines; the CSR baseline carries the base
+/// config untouched.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Candidate {
+    pub kind: EngineKind,
+    pub cfg: PartitionConfig,
+}
+
+/// A candidate with its model score and the rules that fired.
+#[derive(Clone, Debug)]
+pub struct ScoredCandidate {
+    pub candidate: Candidate,
+    pub score: f64,
+    pub reasons: Vec<&'static str>,
+}
+
+/// A scoring rule: `Some((score_delta, why))` when it applies to the
+/// candidate under these features.
+pub type Rule = fn(&MatrixFeatures, &Candidate) -> Option<(f64, &'static str)>;
+
+/// Below this nnz the blocked engines' partial/combine overhead is
+/// larger than any layout gain.
+pub const TINY_NNZ: usize = 4096;
+
+/// Row-length CV below which reordering cannot improve warp grouping.
+pub const UNIFORM_CV: f64 = 0.25;
+
+/// Row-length CV above which hash grouping clearly pays.
+pub const SKEWED_CV: f64 = 0.5;
+
+/// Tiny matrices: stream them as CSR.
+pub fn rule_tiny_matrix(f: &MatrixFeatures, c: &Candidate) -> Option<(f64, &'static str)> {
+    (f.nnz < TINY_NNZ && c.kind == EngineKind::Csr)
+        .then_some((2.0, "tiny matrix: blocked partial/combine overhead dominates"))
+}
+
+/// Uniform row lengths: the hash has nothing to balance.
+pub fn rule_uniform_rows(f: &MatrixFeatures, c: &Candidate) -> Option<(f64, &'static str)> {
+    if f.row_cv >= UNIFORM_CV {
+        return None;
+    }
+    match c.kind {
+        EngineKind::Csr => Some((1.0, "uniform row lengths: reordering cannot improve grouping")),
+        EngineKind::Plain2d => {
+            Some((0.5, "uniform row lengths: plain 2D already gets even groups"))
+        }
+        _ => None,
+    }
+}
+
+/// Skewed row lengths: hash grouping balances warps (the paper's case).
+pub fn rule_skewed_rows(f: &MatrixFeatures, c: &Candidate) -> Option<(f64, &'static str)> {
+    if c.kind != EngineKind::Hbp || f.row_cv < SKEWED_CV {
+        return None;
+    }
+    if f.row_cv >= 1.0 {
+        Some((2.0, "highly skewed row lengths: hash grouping balances warps"))
+    } else {
+        Some((1.0, "moderately skewed row lengths: hash grouping helps"))
+    }
+}
+
+/// A heavy tail of ultra-dense rows (power/ground nets, kron hubs).
+pub fn rule_heavy_tail(f: &MatrixFeatures, c: &Candidate) -> Option<(f64, &'static str)> {
+    (c.kind == EngineKind::Hbp && f.row_mean > 0.0 && f.row_max as f64 > 8.0 * f.row_mean)
+        .then_some((0.75, "heavy-tail rows: grouping + competitive schedule absorb hot rows"))
+}
+
+/// Vector wider than one column segment: 2D tiling keeps segments
+/// cache-resident.
+pub fn rule_wide_vector(f: &MatrixFeatures, c: &Candidate) -> Option<(f64, &'static str)> {
+    (matches!(c.kind, EngineKind::Hbp | EngineKind::Plain2d) && f.cols > c.cfg.cols_per_block)
+        .then_some((0.5, "vector wider than one segment: 2D tiling localizes x"))
+}
+
+/// Near-diagonal band: row-streaming CSR is already cache-friendly.
+pub fn rule_near_diagonal(f: &MatrixFeatures, c: &Candidate) -> Option<(f64, &'static str)> {
+    (c.kind == EngineKind::Csr && f.diag_frac > 0.0 && f.bandwidth_frac < 0.02)
+        .then_some((0.75, "near-diagonal band: streaming CSR is cache-friendly"))
+}
+
+/// Enough blocks under this grid to load-balance across workers.
+pub fn rule_grid_occupancy(f: &MatrixFeatures, c: &Candidate) -> Option<(f64, &'static str)> {
+    if c.kind != EngineKind::Hbp {
+        return None;
+    }
+    let blocks =
+        f.rows.div_ceil(c.cfg.rows_per_block).max(1) * f.cols.div_ceil(c.cfg.cols_per_block).max(1);
+    (blocks >= 8).then_some((0.5, "grid yields enough blocks to load-balance"))
+}
+
+/// Mostly-dense blocks: plain 2D row-major streaming suffices.
+pub fn rule_dense_blocks(f: &MatrixFeatures, c: &Candidate) -> Option<(f64, &'static str)> {
+    let dense_frac: f64 = f.block_fill_hist[4] + f.block_fill_hist[5];
+    (c.kind == EngineKind::Plain2d && dense_frac > 0.5)
+        .then_some((0.5, "mostly dense blocks: row-major 2D streaming suffices"))
+}
+
+/// The model's fixed rule list, applied in order.
+pub const RULES: [Rule; 8] = [
+    rule_tiny_matrix,
+    rule_uniform_rows,
+    rule_skewed_rows,
+    rule_heavy_tail,
+    rule_wide_vector,
+    rule_near_diagonal,
+    rule_grid_occupancy,
+    rule_dense_blocks,
+];
+
+/// Score one candidate: sum of every firing rule, with reasons.
+pub fn score(f: &MatrixFeatures, c: &Candidate) -> (f64, Vec<&'static str>) {
+    let mut total = 0.0;
+    let mut reasons = Vec::new();
+    for rule in RULES {
+        if let Some((delta, why)) = rule(f, c) {
+            total += delta;
+            reasons.push(why);
+        }
+    }
+    (total, reasons)
+}
+
+/// Candidate set: the three engines at the base config, plus HBP grid
+/// variants (halved/doubled rows and columns per block, where valid) —
+/// the knob the paper itself ablates (`ablation_block_size`).
+pub fn candidates(base: PartitionConfig) -> Vec<Candidate> {
+    let mut out = vec![
+        Candidate { kind: EngineKind::Hbp, cfg: base },
+        Candidate { kind: EngineKind::Csr, cfg: base },
+        Candidate { kind: EngineKind::Plain2d, cfg: base },
+    ];
+    for rows_per_block in [base.rows_per_block / 2, base.rows_per_block * 2] {
+        let cfg = PartitionConfig { rows_per_block, ..base };
+        if rows_per_block != base.rows_per_block && cfg.validate().is_ok() {
+            out.push(Candidate { kind: EngineKind::Hbp, cfg });
+        }
+    }
+    for cols_per_block in [base.cols_per_block / 2, base.cols_per_block * 2] {
+        let cfg = PartitionConfig { cols_per_block, ..base };
+        if cols_per_block != base.cols_per_block && cfg.validate().is_ok() {
+            out.push(Candidate { kind: EngineKind::Hbp, cfg });
+        }
+    }
+    out
+}
+
+/// Rank the candidate set by model score, descending. The sort is
+/// stable, so ties keep the fixed candidate order — ranking is fully
+/// deterministic for a given feature vector.
+pub fn rank(f: &MatrixFeatures, base: PartitionConfig) -> Vec<ScoredCandidate> {
+    let mut scored: Vec<ScoredCandidate> = candidates(base)
+        .into_iter()
+        .map(|candidate| {
+            let (score, reasons) = score(f, &candidate);
+            ScoredCandidate { candidate, score, reasons }
+        })
+        .collect();
+    scored.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap_or(std::cmp::Ordering::Equal));
+    scored
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::random;
+    use crate::tune::features::FILL_BUCKETS;
+
+    /// Feature vector with neutral defaults; tests override the signal
+    /// under test.
+    fn base_features() -> MatrixFeatures {
+        MatrixFeatures {
+            rows: 10_000,
+            cols: 10_000,
+            nnz: 100_000,
+            row_mean: 10.0,
+            row_std: 3.0,
+            row_max: 30,
+            row_cv: 0.3,
+            zero_row_frac: 0.0,
+            diag_frac: 0.01,
+            bandwidth_mean: 3000.0,
+            bandwidth_frac: 0.3,
+            nonempty_blocks: 40,
+            block_nnz_cv: 0.5,
+            block_fill_hist: [0.0; FILL_BUCKETS],
+        }
+    }
+
+    fn cand(kind: EngineKind) -> Candidate {
+        Candidate { kind, cfg: PartitionConfig::default() }
+    }
+
+    #[test]
+    fn tiny_matrix_rule_prefers_csr() {
+        let mut f = base_features();
+        f.nnz = 100;
+        assert!(rule_tiny_matrix(&f, &cand(EngineKind::Csr)).is_some());
+        assert!(rule_tiny_matrix(&f, &cand(EngineKind::Hbp)).is_none());
+        f.nnz = TINY_NNZ;
+        assert!(rule_tiny_matrix(&f, &cand(EngineKind::Csr)).is_none());
+    }
+
+    #[test]
+    fn uniformity_rules_split_on_cv() {
+        let mut f = base_features();
+        f.row_cv = 0.1;
+        assert!(rule_uniform_rows(&f, &cand(EngineKind::Csr)).is_some());
+        assert!(rule_skewed_rows(&f, &cand(EngineKind::Hbp)).is_none());
+        f.row_cv = 1.5;
+        assert!(rule_uniform_rows(&f, &cand(EngineKind::Csr)).is_none());
+        let (s, _) = rule_skewed_rows(&f, &cand(EngineKind::Hbp)).unwrap();
+        assert_eq!(s, 2.0);
+        f.row_cv = 0.7;
+        let (s, _) = rule_skewed_rows(&f, &cand(EngineKind::Hbp)).unwrap();
+        assert_eq!(s, 1.0);
+    }
+
+    #[test]
+    fn heavy_tail_rule_needs_hot_rows() {
+        let mut f = base_features();
+        f.row_max = 500; // 50x the mean
+        assert!(rule_heavy_tail(&f, &cand(EngineKind::Hbp)).is_some());
+        f.row_max = 20;
+        assert!(rule_heavy_tail(&f, &cand(EngineKind::Hbp)).is_none());
+    }
+
+    #[test]
+    fn near_diagonal_rule_reads_bandwidth() {
+        let mut f = base_features();
+        f.bandwidth_frac = 0.001;
+        f.diag_frac = 0.2;
+        assert!(rule_near_diagonal(&f, &cand(EngineKind::Csr)).is_some());
+        f.bandwidth_frac = 0.3;
+        assert!(rule_near_diagonal(&f, &cand(EngineKind::Csr)).is_none());
+    }
+
+    #[test]
+    fn wide_vector_rule_compares_against_candidate_segment() {
+        let mut f = base_features();
+        f.cols = 100_000;
+        assert!(rule_wide_vector(&f, &cand(EngineKind::Hbp)).is_some());
+        assert!(rule_wide_vector(&f, &cand(EngineKind::Csr)).is_none());
+        f.cols = 1000; // fits one 4096-wide segment
+        assert!(rule_wide_vector(&f, &cand(EngineKind::Hbp)).is_none());
+    }
+
+    #[test]
+    fn grid_occupancy_counts_candidate_blocks() {
+        let mut f = base_features();
+        f.rows = 100;
+        f.cols = 100; // 1x1 grid under the default config
+        assert!(rule_grid_occupancy(&f, &cand(EngineKind::Hbp)).is_none());
+        f.rows = 100_000; // 196 row blocks
+        assert!(rule_grid_occupancy(&f, &cand(EngineKind::Hbp)).is_some());
+    }
+
+    #[test]
+    fn dense_block_rule_reads_the_histogram() {
+        let mut f = base_features();
+        f.block_fill_hist[5] = 0.8;
+        assert!(rule_dense_blocks(&f, &cand(EngineKind::Plain2d)).is_some());
+        assert!(rule_dense_blocks(&f, &cand(EngineKind::Hbp)).is_none());
+    }
+
+    #[test]
+    fn candidate_set_is_valid_and_never_auto() {
+        for base in [PartitionConfig::default(), PartitionConfig::test_small()] {
+            let cands = candidates(base);
+            assert!(cands.len() >= 3);
+            for c in &cands {
+                assert_ne!(c.kind, EngineKind::Auto);
+                c.cfg.validate().unwrap();
+            }
+            // the three engines at base config are always present
+            for kind in [EngineKind::Hbp, EngineKind::Csr, EngineKind::Plain2d] {
+                assert!(cands.iter().any(|c| c.kind == kind && c.cfg == base));
+            }
+        }
+    }
+
+    #[test]
+    fn ranking_is_deterministic_and_sorted() {
+        let m = random::power_law_rows(200, 200, 2.0, 60, 3);
+        let f = MatrixFeatures::extract(&m, PartitionConfig::test_small());
+        let a = rank(&f, PartitionConfig::test_small());
+        let b = rank(&f, PartitionConfig::test_small());
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.candidate, y.candidate);
+            assert_eq!(x.score, y.score);
+        }
+        for w in a.windows(2) {
+            assert!(w[0].score >= w[1].score, "ranking not sorted");
+        }
+    }
+
+    #[test]
+    fn skewed_matrix_ranks_hbp_first() {
+        let mut f = base_features();
+        f.row_cv = 2.0;
+        f.row_max = 5000;
+        let ranked = rank(&f, PartitionConfig::default());
+        assert_eq!(ranked[0].candidate.kind, EngineKind::Hbp);
+        assert!(!ranked[0].reasons.is_empty(), "winning score must carry reasons");
+    }
+
+    #[test]
+    fn tiny_uniform_matrix_ranks_csr_first() {
+        let mut f = base_features();
+        f.nnz = 500;
+        f.row_cv = 0.05;
+        f.rows = 100;
+        f.cols = 100;
+        let ranked = rank(&f, PartitionConfig::default());
+        assert_eq!(ranked[0].candidate.kind, EngineKind::Csr);
+    }
+}

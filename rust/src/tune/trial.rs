@@ -1,0 +1,230 @@
+//! Competitive trials: crown the winner by measurement, not modeling.
+//!
+//! This generalizes the paper's §III-C competitive method from block
+//! scheduling to engine selection: the model's top-k candidates are
+//! each built against the resident matrix and timed on real `spmv`
+//! calls (warmup + median-of-n with a fixed, deterministic iteration
+//! budget), and the fastest median wins. HBP candidate builds go
+//! through [`build_hbp_parallel`], i.e. the process-wide
+//! `util::pool::shared_pool` workers — trials reuse the same warm pools
+//! the serving path fills on.
+//!
+//! Ties break toward the earlier (higher model score) candidate, so a
+//! trial run is deterministic up to the timing measurements themselves.
+
+use super::model::ScoredCandidate;
+use crate::coordinator::EngineKind;
+use crate::exec::{CsrParallel, HbpEngine, SpmvEngine, Spmv2dEngine};
+use crate::formats::Csr;
+use crate::gen::random;
+use crate::partition::PartitionConfig;
+use crate::preprocess::{build_hbp_parallel, HashReorder};
+use crate::util::json::{obj, Json};
+use crate::util::stats::percentile;
+use crate::util::Timer;
+
+/// Trial budget. Fixed counts (not a time budget) keep the trial
+/// deterministic in its *shape*; only the measured durations vary.
+#[derive(Clone, Copy, Debug)]
+pub struct TrialConfig {
+    /// How many of the model's ranked candidates get measured.
+    pub top_k: usize,
+    /// Untimed warmup iterations per candidate.
+    pub warmup: usize,
+    /// Timed iterations per candidate (median is the score).
+    pub iters: usize,
+    /// Seed of the trial input vector.
+    pub seed: u64,
+}
+
+impl Default for TrialConfig {
+    fn default() -> Self {
+        TrialConfig { top_k: 3, warmup: 1, iters: 5, seed: 0x7E57 }
+    }
+}
+
+/// One measured candidate.
+#[derive(Clone, Copy, Debug)]
+pub struct TrialResult {
+    pub kind: EngineKind,
+    pub cfg: PartitionConfig,
+    /// The model score that earned the trial slot.
+    pub model_score: f64,
+    /// Median SpMV seconds over the timed iterations.
+    pub median_secs: f64,
+}
+
+/// The full trial record: every measured candidate (in model-rank
+/// order) and the winner's index.
+#[derive(Clone, Debug)]
+pub struct TuneReport {
+    pub trials: Vec<TrialResult>,
+    pub winner: usize,
+}
+
+impl TuneReport {
+    pub fn winner(&self) -> &TrialResult {
+        &self.trials[self.winner]
+    }
+
+    /// JSON view for the `tune` protocol op and the CLI.
+    pub fn to_json(&self) -> Json {
+        let trials: Vec<Json> = self
+            .trials
+            .iter()
+            .map(|t| {
+                obj(&[
+                    ("engine", Json::Str(t.kind.to_string())),
+                    ("rows_per_block", Json::Num(t.cfg.rows_per_block as f64)),
+                    ("cols_per_block", Json::Num(t.cfg.cols_per_block as f64)),
+                    ("model_score", Json::Num(t.model_score)),
+                    ("median_secs", Json::Num(t.median_secs)),
+                ])
+            })
+            .collect();
+        obj(&[("winner", Json::Num(self.winner as f64)), ("trials", Json::Arr(trials))])
+    }
+}
+
+/// Build the engine a candidate describes. HBP builds run on the shared
+/// worker pools; the CSR/2D baselines clone the matrix as their engines
+/// require. Panics on [`EngineKind::Auto`] — the tuner resolves Auto,
+/// it never builds it.
+pub fn build_candidate(
+    m: &Csr,
+    kind: EngineKind,
+    cfg: PartitionConfig,
+    threads: usize,
+) -> Box<dyn SpmvEngine> {
+    match kind {
+        EngineKind::Hbp => {
+            let hbp = build_hbp_parallel(m, cfg, &HashReorder::default(), threads);
+            Box::new(HbpEngine::new(hbp, threads, 0.25))
+        }
+        EngineKind::Csr => Box::new(CsrParallel::new(m.clone(), threads)),
+        EngineKind::Plain2d => Box::new(Spmv2dEngine::new(m.clone(), cfg, threads)),
+        EngineKind::Auto => panic!("EngineKind::Auto must be resolved before engine construction"),
+    }
+}
+
+/// Time the top-k ranked candidates on real SpMV calls and crown the
+/// fastest median. `ranked` must be non-empty (the model always emits
+/// the three base engines).
+pub fn run_trials(
+    m: &Csr,
+    ranked: &[ScoredCandidate],
+    tc: &TrialConfig,
+    threads: usize,
+) -> TuneReport {
+    assert!(!ranked.is_empty(), "no candidates to trial");
+    let k = tc.top_k.clamp(1, ranked.len());
+    let x = random::vector(m.cols, tc.seed);
+    let mut y = vec![0.0; m.rows];
+    let mut trials = Vec::with_capacity(k);
+    for sc in &ranked[..k] {
+        let engine = build_candidate(m, sc.candidate.kind, sc.candidate.cfg, threads);
+        for _ in 0..tc.warmup {
+            engine.spmv(&x, &mut y);
+        }
+        let mut samples = Vec::with_capacity(tc.iters.max(1));
+        for _ in 0..tc.iters.max(1) {
+            let t = Timer::start();
+            engine.spmv(&x, &mut y);
+            samples.push(t.elapsed_secs());
+        }
+        trials.push(TrialResult {
+            kind: sc.candidate.kind,
+            cfg: sc.candidate.cfg,
+            model_score: sc.score,
+            median_secs: percentile(&samples, 50.0),
+        });
+    }
+    // strict < keeps the first (highest model score) candidate on ties
+    let mut winner = 0;
+    for (i, t) in trials.iter().enumerate() {
+        if t.median_secs < trials[winner].median_secs {
+            winner = i;
+        }
+    }
+    TuneReport { trials, winner }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::dense::allclose;
+    use crate::tune::features::MatrixFeatures;
+    use crate::tune::model;
+
+    #[test]
+    fn trials_cover_top_k_in_rank_order() {
+        let m = random::power_law_rows(150, 120, 2.0, 30, 9);
+        let cfg = PartitionConfig::test_small();
+        let ranked = model::rank(&MatrixFeatures::extract(&m, cfg), cfg);
+        let tc = TrialConfig { top_k: 3, warmup: 1, iters: 3, seed: 1 };
+        let report = run_trials(&m, &ranked, &tc, 2);
+        assert_eq!(report.trials.len(), 3);
+        assert!(report.winner < report.trials.len());
+        for (t, sc) in report.trials.iter().zip(&ranked) {
+            assert_eq!(t.kind, sc.candidate.kind);
+            assert_eq!(t.cfg, sc.candidate.cfg);
+            assert_eq!(t.model_score, sc.score);
+            assert!(t.median_secs >= 0.0);
+        }
+        // the winner is the fastest median
+        for t in &report.trials {
+            assert!(report.winner().median_secs <= t.median_secs);
+        }
+    }
+
+    #[test]
+    fn top_k_clamps_to_candidate_count() {
+        let m = random::uniform(40, 40, 0.2, 3);
+        let cfg = PartitionConfig::test_small();
+        let ranked = model::rank(&MatrixFeatures::extract(&m, cfg), cfg);
+        let tc = TrialConfig { top_k: 99, warmup: 0, iters: 1, seed: 2 };
+        let report = run_trials(&m, &ranked, &tc, 1);
+        assert_eq!(report.trials.len(), ranked.len());
+    }
+
+    #[test]
+    fn every_candidate_engine_computes_the_same_product() {
+        let m = random::power_law_rows(90, 110, 2.0, 25, 17);
+        let x = random::vector(110, 5);
+        let mut expect = vec![0.0; 90];
+        m.spmv(&x, &mut expect);
+        let cfg = PartitionConfig::test_small();
+        for c in model::candidates(cfg) {
+            let engine = build_candidate(&m, c.kind, c.cfg, 2);
+            let mut y = vec![0.0; 90];
+            engine.spmv(&x, &mut y);
+            assert!(
+                allclose(&y, &expect, 1e-10, 1e-12),
+                "{:?} at {}x{} diverged",
+                c.kind,
+                c.cfg.rows_per_block,
+                c.cfg.cols_per_block
+            );
+        }
+    }
+
+    #[test]
+    fn report_json_names_the_winner() {
+        let m = random::uniform(30, 30, 0.3, 7);
+        let cfg = PartitionConfig::test_small();
+        let ranked = model::rank(&MatrixFeatures::extract(&m, cfg), cfg);
+        let report = run_trials(&m, &ranked, &TrialConfig::default(), 1);
+        let j = report.to_json();
+        assert_eq!(j.get("winner").and_then(Json::as_usize), Some(report.winner));
+        let trials = j.get("trials").and_then(Json::as_arr).unwrap();
+        assert_eq!(trials.len(), report.trials.len());
+        assert!(trials[0].get("engine").is_some());
+    }
+
+    #[test]
+    #[should_panic(expected = "Auto must be resolved")]
+    fn building_auto_is_a_bug() {
+        let m = random::uniform(10, 10, 0.3, 1);
+        let _ = build_candidate(&m, EngineKind::Auto, PartitionConfig::test_small(), 1);
+    }
+}

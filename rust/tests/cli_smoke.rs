@@ -112,6 +112,46 @@ fn update_subcommand_repairs_and_verifies() {
 }
 
 #[test]
+fn tune_subcommand_prints_and_second_run_hits_the_cache() {
+    let dir = tmpdir("tune");
+    let cache = dir.join("tune.cache");
+    let cache_str = cache.to_str().unwrap().to_string();
+    let run = || {
+        hbp()
+            .args([
+                "tune",
+                "--matrix",
+                "m1",
+                "--scale",
+                "ci",
+                "--threads",
+                "2",
+                "--iters",
+                "2",
+                "--cache",
+                cache_str.as_str(),
+            ])
+            .output()
+            .expect("spawning hbp tune")
+    };
+
+    let cold = assert_success(&run(), "hbp tune (cold)");
+    assert!(cold.contains("features"), "missing features section: {cold}");
+    assert!(cold.contains("candidates"), "missing candidates section: {cold}");
+    assert!(cold.contains("winner"), "missing winner line: {cold}");
+    assert!(cold.contains("cache miss"), "first run must miss the cache: {cold}");
+    assert!(cache.exists(), "tune must persist its decision to {cache_str}");
+
+    let warm = assert_success(&run(), "hbp tune (warm)");
+    assert!(warm.contains("cache hit"), "second run must hit the cache: {warm}");
+    assert!(
+        warm.contains("no trial run"),
+        "cache hit must skip the trial run: {warm}"
+    );
+    assert!(warm.contains("winner"), "cached run still names the winner: {warm}");
+}
+
+#[test]
 fn help_succeeds_and_unknown_subcommand_fails() {
     let out = hbp().arg("help").output().expect("spawning hbp help");
     let stdout = assert_success(&out, "hbp help");

@@ -346,6 +346,48 @@ fn prop_group_ell_export_reconstructs_spmv() {
 }
 
 #[test]
+fn auto_always_resolves_to_a_buildable_bit_identical_engine() {
+    // The autotuning contract across suite shapes × thread counts:
+    // registering with the default (Auto-capable) router always yields a
+    // concrete, buildable decision, and routing a request as
+    // `EngineKind::Auto` is bit-identical to forcing that same kind —
+    // both land on the same resident engine.
+    use hbp_spmv::coordinator::{EngineKind, Router};
+    use hbp_spmv::gen::{matrix_by_id, Scale};
+    use hbp_spmv::tune::TrialConfig;
+
+    // one id per structural family of the Table-I suite
+    for id in ["m1", "m3", "m4", "m8", "m11"] {
+        let (_, m) = matrix_by_id(id, Scale::Ci).unwrap();
+        for threads in [1usize, 2, 8] {
+            let mut tuner = hbp_spmv::tune::Tuner::new(PartitionConfig::default(), threads);
+            tuner.trial = TrialConfig { top_k: 3, warmup: 1, iters: 2, ..tuner.trial };
+            let mut r = Router::with_tuner(PartitionConfig::default(), threads, tuner);
+            r.register(id, m.clone()).unwrap();
+
+            let p = r.get(id).unwrap();
+            let resolved = p.resolved_kind();
+            assert_ne!(resolved, EngineKind::Auto, "{id}: decision must be concrete");
+            assert!(p.is_built(EngineKind::Auto), "{id}: decided engine must be buildable");
+            drop(p);
+
+            let x = random::vector(m.cols, 17);
+            let auto = r.spmv(id, EngineKind::Auto, &x).unwrap();
+            let forced = r.spmv(id, resolved, &x).unwrap();
+            assert_eq!(auto, forced, "{id} threads={threads}: Auto != forced {resolved:?}");
+
+            // and the tuned engine is actually correct for the matrix
+            let mut expect = vec![0.0; m.rows];
+            m.spmv(&x, &mut expect);
+            assert!(
+                allclose(&auto, &expect, 1e-9, 1e-11),
+                "{id} threads={threads}: tuned engine diverged from CSR oracle"
+            );
+        }
+    }
+}
+
+#[test]
 fn prop_sim_reports_are_positive_and_monotone() {
     check("sim-sanity", 20, |g| {
         let rows = g.usize_in(64, 16 * g.size + 128);

@@ -145,6 +145,53 @@ fn engine_selection_via_protocol() {
 }
 
 #[test]
+fn tune_endpoint_and_auto_engine_over_tcp() {
+    let (_c, addr, rows, cols) = start();
+    let mut client = Client::connect(addr).unwrap();
+
+    let r = client
+        .call(&obj(&[
+            ("op", Json::Str("tune".into())),
+            ("matrix", Json::Str("test".into())),
+        ]))
+        .unwrap();
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+    let engine = r.get("decision").unwrap().req_str("engine").unwrap().to_string();
+    assert!(["hbp", "csr", "2d"].contains(&engine.as_str()), "{engine}");
+    assert!(r.get("features").unwrap().get("nnz").is_some());
+
+    // "auto" requests serve through the decision and agree with forcing it
+    let x = hbp_spmv::gen::random::vector(cols, 23);
+    let mut ys = vec![];
+    for name in ["auto", engine.as_str()] {
+        let resp = client
+            .call(&obj(&[
+                ("op", Json::Str("spmv".into())),
+                ("matrix", Json::Str("test".into())),
+                ("engine", Json::Str(name.into())),
+                ("x", num_arr(&x)),
+            ]))
+            .unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{name}");
+        let y: Vec<f64> = resp
+            .get("y")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .collect();
+        assert_eq!(y.len(), rows);
+        ys.push(y);
+    }
+    assert_eq!(ys[0], ys[1], "auto and forced winner must agree over the wire");
+
+    // registration-time tuning shows up in stats
+    let stats = client.call(&obj(&[("op", Json::Str("stats".into()))])).unwrap();
+    assert!(stats.get("stats").unwrap().req_usize("tunes").unwrap() >= 1);
+}
+
+#[test]
 fn update_over_tcp_mutates_the_hosted_matrix() {
     use hbp_spmv::preprocess::MatrixDelta;
     let (c, addr, _rows, cols) = start();

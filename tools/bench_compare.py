@@ -1,17 +1,21 @@
 #!/usr/bin/env python3
-"""Bench-trajectory gate: diff a fresh BENCH_preprocess.json against the
-committed baseline.
+"""Bench-trajectory gate: diff freshly generated bench JSON against the
+committed baselines.
 
-CI regenerates BENCH_preprocess.json on every run (``make
-bench-preprocess``) and uploads it as an artifact; this script is the
-step in between that actually *reads* the trajectory. It compares every
-per-matrix ``*_secs`` timing field (lower is better) present and
-non-null in BOTH files, computes the geometric mean of the
-current/baseline ratios, and fails the job when that geomean exceeds
-the regression threshold (default +25%).
+CI regenerates ``BENCH_preprocess.json`` (``make bench-preprocess``) and
+``BENCH_autotune.json`` (``make bench-autotune``) on every run and
+uploads them as artifacts; this script is the step in between that
+actually *reads* the trajectory. ``--baseline``/``--current`` may be
+repeated to gate several baseline/current pairs in one invocation (the
+flags pair up positionally). Per pair it compares every per-matrix
+``*_secs`` timing field (lower is better; fields are discovered
+dynamically, so any bench schema works) present and non-null in BOTH
+files, computes the geometric mean of the current/baseline ratios, and
+fails the job when any pair's geomean exceeds the regression threshold
+(default +25%).
 
 Degenerate states exit 0 by design:
-- the committed seed baseline is schema-only (all measurement fields
+- a committed seed baseline that is schema-only (all measurement fields
   null) until the first real-hardware artifact is copied over it;
 - a current file produced without a toolchain is equally null.
 
@@ -19,7 +23,7 @@ Stdlib only — this must run on a bare CI python.
 
 Usage:
   python3 tools/bench_compare.py --baseline OLD.json --current NEW.json \
-      [--threshold 1.25]
+      [--baseline OLD2.json --current NEW2.json ...] [--threshold 1.25]
 """
 
 from __future__ import annotations
@@ -30,7 +34,9 @@ import math
 import os
 import sys
 
-# timing fields compared per matrix entry (all seconds, lower = better)
+# The preprocessing bench's timing schema (kept as documentation and for
+# schema-aware tooling/tests). Comparison does NOT depend on this list:
+# any per-matrix field ending in ``_secs`` is discovered dynamically.
 SECS_FIELDS = (
     "reorder_hbp_secs",
     "reorder_sort2d_secs",
@@ -60,6 +66,15 @@ def geomean(xs):
     return math.exp(sum(math.log(x) for x in xs) / len(xs))
 
 
+def secs_fields(*entries):
+    """Timing fields present in any of the entries (sorted for
+    deterministic output)."""
+    fields = set()
+    for e in entries:
+        fields.update(k for k in e if k.endswith("_secs"))
+    return sorted(fields)
+
+
 def compare(baseline, current):
     """Return (rows, all_ratios): one row per matrix id present in both
     files, each row (id, n_fields, per-matrix geomean ratio, worst field,
@@ -70,7 +85,7 @@ def compare(baseline, current):
         if mid not in cur_m:
             continue
         ratios = {}
-        for field in SECS_FIELDS:
+        for field in secs_fields(base_m[mid], cur_m[mid]):
             b, c = base_m[mid].get(field), cur_m[mid].get(field)
             if isinstance(b, (int, float)) and isinstance(c, (int, float)) and b > 0 and c > 0:
                 ratios[field] = c / b
@@ -84,16 +99,16 @@ def compare(baseline, current):
     return rows, all_ratios
 
 
-def render(rows, all_ratios, threshold):
-    lines = ["## Preprocessing bench trajectory", ""]
+def render(name, rows, all_ratios, threshold):
+    lines = [f"## Bench trajectory: {name}", ""]
     if not all_ratios:
         lines += [
             "No comparable (non-null) timing fields between baseline and "
             "current run — gate skipped.",
             "",
-            "This is expected while the committed `BENCH_preprocess.json` "
-            "is still the schema-only seed; copy a real CI artifact over "
-            "it to start the trajectory.",
+            "This is expected while the committed baseline is still the "
+            "schema-only seed; copy a real CI artifact over it to start "
+            "the trajectory.",
         ]
         return lines, 0
     overall = geomean(all_ratios)
@@ -114,8 +129,18 @@ def render(rows, all_ratios, threshold):
 
 def main(argv):
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--baseline", required=True, help="committed baseline JSON")
-    ap.add_argument("--current", required=True, help="freshly generated JSON")
+    ap.add_argument(
+        "--baseline",
+        action="append",
+        required=True,
+        help="committed baseline JSON (repeatable; pairs with --current positionally)",
+    )
+    ap.add_argument(
+        "--current",
+        action="append",
+        required=True,
+        help="freshly generated JSON (repeatable; pairs with --baseline positionally)",
+    )
     ap.add_argument(
         "--threshold",
         type=float,
@@ -124,17 +149,30 @@ def main(argv):
     )
     args = ap.parse_args(argv)
 
-    try:
-        baseline = load(args.baseline)
-        current = load(args.current)
-    except (OSError, json.JSONDecodeError) as e:
-        print(f"bench_compare: cannot read inputs: {e}", file=sys.stderr)
+    if len(args.baseline) != len(args.current):
+        print(
+            f"bench_compare: {len(args.baseline)} --baseline vs "
+            f"{len(args.current)} --current (must pair up)",
+            file=sys.stderr,
+        )
         return 2
 
-    rows, all_ratios = compare(baseline, current)
-    lines, status = render(rows, all_ratios, args.threshold)
+    status = 0
+    sections = []
+    for base_path, cur_path in zip(args.baseline, args.current):
+        try:
+            baseline = load(base_path)
+            current = load(cur_path)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"bench_compare: cannot read inputs: {e}", file=sys.stderr)
+            return 2
+        name = current.get("bench") or baseline.get("bench") or os.path.basename(cur_path)
+        rows, all_ratios = compare(baseline, current)
+        lines, pair_status = render(name, rows, all_ratios, args.threshold)
+        status = max(status, pair_status)
+        sections.append("\n".join(lines))
 
-    text = "\n".join(lines)
+    text = "\n\n".join(sections)
     print(text)
     summary_path = os.environ.get("GITHUB_STEP_SUMMARY")
     if summary_path:
