@@ -7,13 +7,14 @@
 #   make bench-preprocess — fig7 preprocessing bench at CI scale, JSON datapoint
 #   make bench-autotune — autotuner ablation at CI scale, JSON datapoint
 #   make bench-compare — gate fresh BENCH_preprocess.json + BENCH_autotune.json vs the committed baselines
+#   make check-docs   — verify relative links in README.md + docs/*.md resolve
 #   make artifacts    — AOT-lower the L1/L2 graphs to artifacts/ (HLO text)
 #   make clean        — drop build products
 
 CARGO  ?= cargo
 PYTHON ?= python3
 
-.PHONY: all build test test-python bench-smoke bench-build bench-preprocess bench-autotune bench-compare artifacts artifacts-quick clean
+.PHONY: all build test test-python bench-smoke bench-build bench-preprocess bench-autotune bench-compare check-docs artifacts artifacts-quick clean
 
 all: build
 
@@ -64,6 +65,12 @@ bench-compare:
 		--baseline .bench_baseline_preprocess.json --current BENCH_preprocess.json \
 		--baseline .bench_baseline_autotune.json --current BENCH_autotune.json; \
 	s=$$?; rm -f .bench_baseline_*.json; exit $$s
+
+# Docs link gate: every relative link in README.md and docs/*.md must
+# resolve on disk (tools/check_docs_links.py, stdlib-only; absolute
+# URLs and GitHub-web-relative paths like the CI badge are skipped).
+check-docs:
+	$(PYTHON) tools/check_docs_links.py
 
 # Full AOT artifact set (all L buckets + batch executables).
 artifacts:

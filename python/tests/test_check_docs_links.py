@@ -1,0 +1,93 @@
+"""The docs link checker (tools/check_docs_links.py): pure-stdlib
+module, tested deterministically — no jax/hypothesis involvement."""
+
+import importlib.util
+import os
+
+_TOOL = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__)))),
+    "tools",
+    "check_docs_links.py",
+)
+_spec = importlib.util.spec_from_file_location("check_docs_links", _TOOL)
+check_docs_links = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_docs_links)
+
+_REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+def _write(tmp_path, name, text):
+    p = tmp_path / name
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(text)
+    return str(p)
+
+
+def test_good_relative_links_pass(tmp_path):
+    _write(tmp_path, "docs/OTHER.md", "# other\n")
+    md = _write(tmp_path, "docs/INDEX.md", "[other](OTHER.md) and [up](../README.md)\n")
+    _write(tmp_path, "README.md", "# readme\n")
+    assert check_docs_links.run([md], str(tmp_path)) == 0
+
+
+def test_broken_link_fails_with_location(tmp_path, capsys):
+    md = _write(tmp_path, "docs/INDEX.md", "line one\n[ghost](MISSING.md)\n")
+    assert check_docs_links.run([md], str(tmp_path)) == 1
+    err = capsys.readouterr().err
+    assert "INDEX.md:2" in err
+    assert "MISSING.md" in err
+
+
+def test_anchors_urls_and_root_escapes_are_skipped(tmp_path):
+    md = _write(
+        tmp_path,
+        "docs/INDEX.md",
+        "\n".join(
+            [
+                "[web](https://example.com/x)",
+                "[mail](mailto:a@b.c)",
+                "[anchor](#section)",
+                "[badge](../../actions/workflows/ci.yml)",  # escapes root
+                "[real](OTHER.md#some-heading)",  # anchor stripped, file checked
+            ]
+        ),
+    )
+    _write(tmp_path, "docs/OTHER.md", "# ok\n")
+    assert check_docs_links.run([md], str(tmp_path)) == 0
+
+
+def test_anchor_stripping_still_detects_missing_files(tmp_path):
+    md = _write(tmp_path, "docs/INDEX.md", "[x](GONE.md#anchor)\n")
+    assert check_docs_links.run([md], str(tmp_path)) == 1
+
+
+def test_code_fences_are_ignored(tmp_path):
+    md = _write(
+        tmp_path,
+        "docs/INDEX.md",
+        "```sh\n[not a link](NOPE.md)\n```\nreal text\n",
+    )
+    assert check_docs_links.run([md], str(tmp_path)) == 0
+
+
+def test_directory_argument_expands_to_markdown_files(tmp_path):
+    _write(tmp_path, "docs/A.md", "[b](B.md)\n")
+    _write(tmp_path, "docs/B.md", "[bad](NOWHERE.md)\n")
+    assert check_docs_links.run([str(tmp_path / "docs")], str(tmp_path)) == 1
+
+
+def test_missing_input_file_fails(tmp_path):
+    assert check_docs_links.run([str(tmp_path / "ABSENT.md")], str(tmp_path)) == 1
+
+
+def test_image_links_are_checked(tmp_path):
+    md = _write(tmp_path, "docs/INDEX.md", "![fig](fig.png)\n")
+    assert check_docs_links.run([md], str(tmp_path)) == 1
+    _write(tmp_path, "docs/fig.png", "png-bytes")
+    assert check_docs_links.run([md], str(tmp_path)) == 0
+
+
+def test_the_real_repo_docs_are_clean():
+    """The committed README + docs/ must pass their own gate."""
+    paths = [os.path.join(_REPO, "README.md"), os.path.join(_REPO, "docs")]
+    assert check_docs_links.run(paths, _REPO) == 0

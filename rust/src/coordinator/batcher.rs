@@ -1,18 +1,34 @@
-//! Dynamic request batching.
+//! Dynamic request batching over *resolved* engine decisions.
 //!
 //! Requests queue on a channel; a dispatcher thread drains up to
 //! `max_batch` of them (waiting at most `max_wait` for stragglers),
-//! groups them by matrix, and executes each group — the standard
-//! serving-system batching discipline (vLLM-style), applied to SpMV.
-//! Batching matters here because requests against the same matrix share
-//! the preprocessed HBP structure and its cache residency.
+//! groups them, and executes each group — the standard serving-system
+//! batching discipline (vLLM-style), applied to SpMV. Batching matters
+//! here because requests against the same matrix share the preprocessed
+//! HBP structure and its cache residency.
+//!
+//! Groups are keyed by `(matrix, resolved kind)`, **not** the requested
+//! kind: at admission the dispatcher asks [`Router::resolve`] (a cheap,
+//! non-blocking read of the cached tuned decision) what an `auto`
+//! request will execute on, so an `"engine":"auto"` request and an
+//! explicit request naming the same resolved engine merge into one
+//! group and flush as one SpMV batch. When resolution must be deferred
+//! (unknown matrix, write-locked entry, or a decision staled by an
+//! update), the request is admitted under `Auto` and the *flush* path
+//! re-resolves it via [`Router::resolve_blocking`] — re-tuning never
+//! blocks admission. Per-group provenance (how many requests arrived as
+//! `auto` vs explicit) lands in [`ServiceMetrics`] as `batch_groups`,
+//! `batch_merged_auto`, and `mean_group_size`.
 //!
 //! Matrix **updates** ride the same queue as SpMV requests, so a client
 //! that submits `spmv, update, spmv` observes them in that order: the
 //! dispatcher flushes the SpMV groups accumulated so far before applying
-//! an update, then keeps batching. The update itself goes through
-//! [`Router::update`]'s per-matrix write lock, so it is atomic against
-//! requests from other connections too.
+//! an update, then keeps batching. A pattern-changing delta stales the
+//! matrix's tuned decision, so requests admitted after it defer and
+//! re-resolve on flush — a changed pattern can change the tuned winner
+//! (value-only deltas cannot, and stay on the fresh fast path). The
+//! update itself goes through [`Router::update`]'s per-matrix write
+//! lock, so it is atomic against requests from other connections too.
 
 use super::router::{EngineKind, Router};
 use crate::coordinator::metrics::ServiceMetrics;
@@ -26,7 +42,10 @@ use std::time::{Duration, Instant};
 /// Batcher tuning.
 #[derive(Clone, Copy, Debug)]
 pub struct BatcherConfig {
+    /// Most requests drained into one batch.
     pub max_batch: usize,
+    /// Longest the dispatcher waits for stragglers after the first
+    /// request of a batch arrives.
     pub max_wait: Duration,
 }
 
@@ -36,26 +55,65 @@ impl Default for BatcherConfig {
     }
 }
 
+/// A completed SpMV: the product plus the concrete engine that ran it
+/// (`auto` requests observe what their tuned decision resolved to).
+#[derive(Clone, Debug)]
+pub struct SpmvReply {
+    /// The matrix–vector product.
+    pub y: Vec<f64>,
+    /// The concrete engine kind the request executed on — never
+    /// [`EngineKind::Auto`] on a successful reply.
+    pub resolved: EngineKind,
+}
+
 /// What a queued request asks for.
 pub enum Payload {
+    /// One matrix–vector product.
     Spmv {
+        /// Requested engine kind (`Auto` defers to the tuned decision).
         engine: EngineKind,
+        /// The input vector.
         x: Vec<f64>,
-        reply: mpsc::Sender<Result<Vec<f64>>>,
+        /// Where the product (and the resolved kind) is delivered.
+        reply: mpsc::Sender<Result<SpmvReply>>,
     },
+    /// One matrix delta.
     Update {
+        /// The delta to apply.
         delta: MatrixDelta,
+        /// Where the update report is delivered.
         reply: mpsc::Sender<Result<UpdateReport>>,
     },
 }
 
 /// One queued request.
 pub struct Request {
+    /// Name of the registered matrix the payload targets.
     pub matrix: String,
+    /// What to do with it.
     pub payload: Payload,
 }
 
 /// Handle for submitting requests.
+///
+/// # Example
+///
+/// ```
+/// use hbp_spmv::coordinator::{Batcher, BatcherConfig, EngineKind, Router, ServiceMetrics};
+/// use hbp_spmv::partition::PartitionConfig;
+/// use std::sync::Arc;
+///
+/// let mut router = Router::new(PartitionConfig::test_small(), 1);
+/// router.register("m", hbp_spmv::gen::random::uniform(8, 8, 0.5, 1)).unwrap();
+/// let batcher =
+///     Batcher::start(Arc::new(router), Arc::new(ServiceMetrics::new()), BatcherConfig::default());
+/// let handle = batcher.handle();
+/// // `auto` resolves to the tuned decision before grouping…
+/// let reply = handle.spmv_resolved("m", EngineKind::Auto, vec![1.0; 8]).unwrap();
+/// assert_eq!(reply.y.len(), 8);
+/// // …and the reply reports the concrete engine that ran
+/// assert_ne!(reply.resolved, EngineKind::Auto);
+/// ```
 #[derive(Clone)]
 pub struct BatcherHandle {
     tx: mpsc::Sender<Request>,
@@ -64,6 +122,18 @@ pub struct BatcherHandle {
 impl BatcherHandle {
     /// Submit and wait for the result (client-side synchronous API).
     pub fn spmv(&self, matrix: &str, engine: EngineKind, x: Vec<f64>) -> Result<Vec<f64>> {
+        self.spmv_resolved(matrix, engine, x).map(|r| r.y)
+    }
+
+    /// Like [`BatcherHandle::spmv`], but the reply also names the
+    /// concrete engine the request executed on — how a client observes
+    /// what its `auto` request resolved to (and therefore merged with).
+    pub fn spmv_resolved(
+        &self,
+        matrix: &str,
+        engine: EngineKind,
+        x: Vec<f64>,
+    ) -> Result<SpmvReply> {
         let (reply, rx) = mpsc::channel();
         self.tx
             .send(Request {
@@ -95,12 +165,14 @@ pub struct Batcher {
 }
 
 impl Batcher {
+    /// Start the dispatcher thread.
     pub fn start(router: Arc<Router>, metrics: Arc<ServiceMetrics>, cfg: BatcherConfig) -> Batcher {
         let (tx, rx) = mpsc::channel::<Request>();
         let thread = std::thread::spawn(move || dispatcher(router, metrics, cfg, rx));
         Batcher { handle: BatcherHandle { tx }, thread: Some(thread) }
     }
 
+    /// A new submission handle (cheaply cloneable).
     pub fn handle(&self) -> BatcherHandle {
         self.handle.clone()
     }
@@ -122,9 +194,13 @@ impl Drop for Batcher {
 /// A drained SpMV awaiting group execution.
 struct PendingSpmv {
     matrix: String,
-    engine: EngineKind,
+    /// What the client asked for — kept for provenance accounting.
+    requested: EngineKind,
+    /// The admission-time resolution: a concrete kind, or `Auto` when
+    /// resolution was deferred to flush time.
+    resolved: EngineKind,
     x: Vec<f64>,
-    reply: mpsc::Sender<Result<Vec<f64>>>,
+    reply: mpsc::Sender<Result<SpmvReply>>,
 }
 
 fn dispatcher(
@@ -153,14 +229,26 @@ fn dispatcher(
             }
         }
 
-        // Process in arrival order: SpMVs accumulate and execute as
-        // (matrix, engine) groups; an update flushes what came before
-        // it, then applies, so order is preserved around mutation.
+        // Process in arrival order: SpMVs are admitted with their
+        // resolution (cheap, non-blocking — Auto means deferred) and
+        // accumulate; an update flushes what came before it, then
+        // applies, so order is preserved around mutation. Requests
+        // admitted after the update see its staled decision and defer.
         let mut pending: Vec<PendingSpmv> = Vec::new();
         for r in batch {
             match r.payload {
                 Payload::Spmv { engine, x, reply } => {
-                    pending.push(PendingSpmv { matrix: r.matrix, engine, x, reply });
+                    let resolved = match engine {
+                        EngineKind::Auto => router.resolve(&r.matrix),
+                        explicit => explicit,
+                    };
+                    pending.push(PendingSpmv {
+                        matrix: r.matrix,
+                        requested: engine,
+                        resolved,
+                        x,
+                        reply,
+                    });
                 }
                 Payload::Update { delta, reply } => {
                     flush_spmvs(&router, &metrics, std::mem::take(&mut pending));
@@ -178,45 +266,93 @@ fn dispatcher(
     }
 }
 
-/// Execute a drained run of SpMV requests: group by (matrix, engine),
-/// run same-matrix groups as SpMM (element reuse across the batch),
-/// fall back to per-request on validation errors.
-fn flush_spmvs(router: &Router, metrics: &ServiceMetrics, batch: Vec<PendingSpmv>) {
+/// Execute a drained run of SpMV requests: finish deferred resolutions
+/// (one blocking re-resolve per matrix — this is where a staled
+/// decision re-tunes), group by `(matrix, resolved kind)`, run
+/// same-group requests as SpMM (element reuse across the batch), fall
+/// back to per-request on validation errors.
+fn flush_spmvs(router: &Router, metrics: &ServiceMetrics, mut batch: Vec<PendingSpmv>) {
+    if batch.is_empty() {
+        return;
+    }
+    let mut deferred: BTreeMap<String, EngineKind> = BTreeMap::new();
+    for r in batch.iter_mut() {
+        if r.resolved == EngineKind::Auto {
+            let kind = match deferred.get(&r.matrix).copied() {
+                Some(k) => k,
+                None => {
+                    let k = match router.resolve_blocking(&r.matrix) {
+                        Ok((kind, outcome)) => {
+                            if let Some(o) = &outcome {
+                                metrics.record_tune(o);
+                            }
+                            kind
+                        }
+                        // unregistered matrix: stay Auto, the error
+                        // surfaces on the execution path below
+                        Err(_) => EngineKind::Auto,
+                    };
+                    deferred.insert(r.matrix.clone(), k);
+                    k
+                }
+            };
+            r.resolved = kind;
+        }
+    }
+
     let mut groups: BTreeMap<(String, String), Vec<PendingSpmv>> = BTreeMap::new();
     for r in batch {
         groups
-            .entry((r.matrix.clone(), format!("{:?}", r.engine)))
+            .entry((r.matrix.clone(), r.resolved.to_string()))
             .or_default()
             .push(r);
     }
-    for ((_, _), reqs) in groups {
+    for ((matrix, _), reqs) in groups {
+        // provenance counts only groups that target a hosted matrix —
+        // an unknown-matrix group executes nothing and would skew the
+        // merge evidence the resolved-batching metrics exist to give
+        if router.get(&matrix).is_ok() {
+            let auto_arrivals = reqs.iter().filter(|r| r.requested == EngineKind::Auto).count();
+            metrics.record_group(reqs.len(), auto_arrivals, reqs.len() - auto_arrivals);
+        }
+        let engine = reqs[0].resolved;
         if reqs.len() > 1 {
-            let matrix = reqs[0].matrix.clone();
-            let engine = reqs[0].engine;
             let dims_ok = router
                 .get(&matrix)
                 .map(|m| reqs.iter().all(|r| r.x.len() == m.cols))
                 .unwrap_or(false);
             if dims_ok {
                 let t = crate::util::Timer::start();
-                let xs: Vec<Vec<f64>> = reqs.iter().map(|r| r.x.clone()).collect();
+                // the inputs move into the batch call (no per-request
+                // clone on the hot path), so a batch failure answers
+                // every caller directly instead of falling back
+                let (replies, xs): (Vec<_>, Vec<_>) =
+                    reqs.into_iter().map(|r| (r.reply, r.x)).unzip();
                 match router.spmm(&matrix, engine, xs) {
                     Ok(ys) => {
-                        let secs = t.elapsed_secs() / reqs.len() as f64;
+                        let secs = t.elapsed_secs() / replies.len() as f64;
                         let nnz = router.get(&matrix).map(|m| m.nnz).unwrap_or(0);
-                        for (req, y) in reqs.into_iter().zip(ys) {
+                        for (reply, y) in replies.into_iter().zip(ys) {
                             metrics.record_request(secs, nnz);
-                            let _ = req.reply.send(Ok(y));
+                            let _ = reply.send(Ok(SpmvReply { y, resolved: engine }));
                         }
-                        continue;
                     }
-                    Err(_) => { /* fall through to per-request path */ }
+                    // unreachable in practice: the matrix exists and
+                    // dims were pre-validated above
+                    Err(e) => {
+                        let msg = format!("{e:#}");
+                        for reply in replies {
+                            metrics.record_error();
+                            let _ = reply.send(Err(anyhow::anyhow!("batched spmv: {msg}")));
+                        }
+                    }
                 }
+                continue;
             }
         }
         for req in reqs {
             let t = crate::util::Timer::start();
-            let result = router.spmv(&req.matrix, req.engine, &req.x);
+            let result = router.spmv(&req.matrix, engine, &req.x);
             match &result {
                 Ok(_) => {
                     let nnz = router.get(&req.matrix).map(|m| m.nnz).unwrap_or(0);
@@ -224,7 +360,7 @@ fn flush_spmvs(router: &Router, metrics: &ServiceMetrics, batch: Vec<PendingSpmv
                 }
                 Err(_) => metrics.record_error(),
             }
-            let _ = req.reply.send(result);
+            let _ = req.reply.send(result.map(|y| SpmvReply { y, resolved: engine }));
         }
     }
 }
@@ -239,6 +375,33 @@ mod tests {
         let mut router = Router::new(PartitionConfig::test_small(), 2);
         router.register("m", random::power_law_rows(60, 50, 2.0, 15, 3)).unwrap();
         (Arc::new(router), Arc::new(ServiceMetrics::new()))
+    }
+
+    /// Config that reliably drains back-to-back submissions into one
+    /// batch: a long straggler window, so the second submission lands
+    /// before the first flushes.
+    fn merge_cfg() -> BatcherConfig {
+        BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(500) }
+    }
+
+    /// Enqueue an SpMV without blocking on its reply — the tests' way
+    /// of getting two requests into ONE dispatcher batch
+    /// deterministically (two sequential sends are microseconds apart,
+    /// far inside `merge_cfg`'s straggler window; spawning threads that
+    /// each block on a reply would race dispatcher wakeups instead).
+    fn send_spmv(
+        h: &BatcherHandle,
+        matrix: &str,
+        engine: EngineKind,
+        x: Vec<f64>,
+    ) -> mpsc::Receiver<Result<SpmvReply>> {
+        let (reply, rx) = mpsc::channel();
+        h.tx.send(Request {
+            matrix: matrix.to_string(),
+            payload: Payload::Spmv { engine, x, reply },
+        })
+        .unwrap();
+        rx
     }
 
     #[test]
@@ -260,7 +423,11 @@ mod tests {
         });
         assert_eq!(results.len(), 16);
         assert!(results.iter().all(|y| y.len() == rows));
-        assert_eq!(metrics.snapshot().requests, 16);
+        let snap = metrics.snapshot();
+        assert_eq!(snap.requests, 16);
+        assert!(snap.batch_groups >= 1, "flushes must be counted as groups");
+        assert!(snap.mean_group_size >= 1.0);
+        assert_eq!(snap.batch_merged_auto, 0, "all-explicit traffic merges nothing");
     }
 
     #[test]
@@ -269,7 +436,94 @@ mod tests {
         let batcher = Batcher::start(router, metrics.clone(), BatcherConfig::default());
         let err = batcher.handle().spmv("nope", EngineKind::Csr, vec![0.0; 50]);
         assert!(err.is_err());
-        assert_eq!(metrics.snapshot().errors, 1);
+        let snap = metrics.snapshot();
+        assert_eq!(snap.errors, 1);
+        assert_eq!(snap.batch_groups, 0, "unknown-matrix groups execute nothing — not counted");
+    }
+
+    #[test]
+    fn auto_and_explicit_resolving_identically_flush_as_one_group() {
+        let (router, metrics) = setup();
+        let p = router.get("m").unwrap();
+        let (cols, decided) = (p.cols, p.resolved_kind());
+        drop(p);
+        let batcher = Batcher::start(router.clone(), metrics.clone(), merge_cfg());
+        let h = batcher.handle();
+        let rx_auto = send_spmv(&h, "m", EngineKind::Auto, random::vector(cols, 1));
+        let rx_explicit = send_spmv(&h, "m", decided, random::vector(cols, 2));
+        let auto_reply = rx_auto.recv().unwrap().unwrap();
+        let explicit_reply = rx_explicit.recv().unwrap().unwrap();
+        assert_eq!(auto_reply.resolved, decided, "auto reports the tuned decision");
+        assert_eq!(explicit_reply.resolved, decided);
+        let snap = metrics.snapshot();
+        assert_eq!(snap.requests, 2);
+        assert_eq!(snap.batch_groups, 1, "identical resolution must merge into ONE group");
+        assert_eq!(snap.batch_merged_auto, 1, "the auto arrival is a counted merge");
+        assert!((snap.mean_group_size - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auto_and_explicit_resolving_differently_stay_separate_groups() {
+        let (router, metrics) = setup();
+        let p = router.get("m").unwrap();
+        let (cols, decided) = (p.cols, p.resolved_kind());
+        drop(p);
+        // an explicit kind that is NOT the tuned decision
+        let other = if decided == EngineKind::Csr { EngineKind::Hbp } else { EngineKind::Csr };
+        let batcher = Batcher::start(router.clone(), metrics.clone(), merge_cfg());
+        let h = batcher.handle();
+        let rx_auto = send_spmv(&h, "m", EngineKind::Auto, random::vector(cols, 3));
+        let rx_other = send_spmv(&h, "m", other, random::vector(cols, 4));
+        rx_auto.recv().unwrap().unwrap();
+        rx_other.recv().unwrap().unwrap();
+        let snap = metrics.snapshot();
+        assert_eq!(snap.requests, 2);
+        assert_eq!(snap.batch_groups, 2, "different resolutions must not merge");
+        assert_eq!(snap.batch_merged_auto, 0);
+        assert!((snap.mean_group_size - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pattern_changing_update_stales_and_auto_reresolves_on_flush() {
+        let (router, metrics) = setup();
+        let m_src = random::power_law_rows(60, 50, 2.0, 15, 3);
+        let cols = router.get("m").unwrap().cols;
+        let batcher = Batcher::start(router.clone(), metrics.clone(), BatcherConfig::default());
+        let h = batcher.handle();
+
+        // rewrite one row's columns (same nonzero count, new pattern) —
+        // the kind of delta that can actually move the tuned winner
+        let row = (0..60).find(|&i| m_src.row_nnz(i) >= 1).unwrap();
+        let (old_cols, vals) = m_src.row(row);
+        let unused = (0..50u32).find(|c| old_cols.binary_search(c).is_err()).unwrap();
+        let mut new_cols = old_cols.to_vec();
+        new_cols[0] = unused;
+        new_cols.sort_unstable();
+        let delta = MatrixDelta::new().replace_row(row, new_cols, vals.to_vec());
+        h.update("m", delta.clone()).unwrap();
+        assert!(
+            router.get("m").unwrap().decision_is_stale(),
+            "a pattern-changing delta stales the decision"
+        );
+
+        // the next auto request defers at admission and re-resolves on
+        // flush — and still serves the mutated matrix exactly
+        let x = random::vector(cols, 8);
+        let reply = h.spmv_resolved("m", EngineKind::Auto, x.clone()).unwrap();
+        assert_ne!(reply.resolved, EngineKind::Auto);
+        let mut mutated = m_src.clone();
+        crate::preprocess::apply_to_csr(&mut mutated, &delta).unwrap();
+        let mut expect = vec![0.0; 60];
+        mutated.spmv(&x, &mut expect);
+        assert!(
+            crate::formats::dense::allclose(&reply.y, &expect, 1e-10, 1e-12),
+            "re-resolved request must serve post-delta values"
+        );
+
+        assert!(!router.get("m").unwrap().decision_is_stale(), "flush re-resolve un-stales");
+        let snap = metrics.snapshot();
+        assert_eq!(snap.tunes, 1, "the flush-time re-tune is recorded");
+        assert_eq!(router.resolve("m"), reply.resolved, "admission resolution is concrete again");
     }
 
     #[test]

@@ -1,4 +1,10 @@
-//! Service metrics: request counts, latency histogram, throughput.
+//! Service metrics: request counts, latency histogram, throughput,
+//! update/tune/batching counters.
+//!
+//! Everything here is observable through the protocol's `stats` op and
+//! `hbp serve --batch-stats`; the batching counters
+//! (`batch_groups`, `batch_merged_auto`, `mean_group_size`) are the
+//! evidence that resolved grouping merges `auto` and explicit traffic.
 
 use crate::util::stats::{Histogram, Welford};
 use std::sync::Mutex;
@@ -22,6 +28,10 @@ struct Inner {
     tune_cache_hits: u64,
     tune_trials: u64,
     tune_secs: Welford,
+    // resolved batching (grouping by tuned decision, not requested kind)
+    batch_groups: u64,
+    batch_merged_auto: u64,
+    group_size: Welford,
 }
 
 /// Thread-safe service metrics.
@@ -36,6 +46,7 @@ impl Default for ServiceMetrics {
 }
 
 impl ServiceMetrics {
+    /// Fresh, all-zero metrics; the uptime clock starts now.
     pub fn new() -> Self {
         ServiceMetrics {
             inner: Mutex::new(Inner {
@@ -55,10 +66,15 @@ impl ServiceMetrics {
                 tune_cache_hits: 0,
                 tune_trials: 0,
                 tune_secs: Welford::new(),
+                batch_groups: 0,
+                batch_merged_auto: 0,
+                group_size: Welford::new(),
             }),
         }
     }
 
+    /// Record one answered SpMV request: its latency and the nonzeros
+    /// it processed (feeds the GFLOPS estimate).
     pub fn record_request(&self, latency_secs: f64, nnz: usize) {
         let mut m = self.inner.lock().unwrap();
         m.requests += 1;
@@ -67,8 +83,24 @@ impl ServiceMetrics {
         m.nnz_processed += nnz as f64;
     }
 
+    /// Record one failed request (SpMV or update).
     pub fn record_error(&self) {
         self.inner.lock().unwrap().errors += 1;
+    }
+
+    /// Record one flushed SpMV batch group: its size and how many of
+    /// its requests arrived as `auto` vs an explicit engine kind. An
+    /// `auto` arrival counts toward `batch_merged_auto` only when the
+    /// group also holds explicit requests — those are exactly the
+    /// merges that resolving *before* grouping made possible (under
+    /// requested-kind grouping they would have flushed separately).
+    pub fn record_group(&self, size: usize, auto_requests: usize, explicit_requests: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.batch_groups += 1;
+        m.group_size.push(size as f64);
+        if auto_requests > 0 && explicit_requests > 0 {
+            m.batch_merged_auto += auto_requests as u64;
+        }
     }
 
     /// Record one applied matrix delta: its latency and how much of the
@@ -118,6 +150,9 @@ impl ServiceMetrics {
             tune_cache_hits: m.tune_cache_hits,
             tune_trials: m.tune_trials,
             mean_tune_secs: m.tune_secs.mean(),
+            batch_groups: m.batch_groups,
+            batch_merged_auto: m.batch_merged_auto,
+            mean_group_size: m.group_size.mean(),
         }
     }
 }
@@ -125,30 +160,52 @@ impl ServiceMetrics {
 /// A point-in-time metrics snapshot.
 #[derive(Clone, Copy, Debug)]
 pub struct MetricsSnapshot {
+    /// SpMV requests answered successfully.
     pub requests: u64,
+    /// Failed requests (SpMV or update).
     pub errors: u64,
+    /// Mean per-request latency in seconds.
     pub mean_latency_secs: f64,
+    /// Median per-request latency (histogram estimate).
     pub p50_latency_secs: f64,
+    /// 99th-percentile per-request latency (histogram estimate).
     pub p99_latency_secs: f64,
+    /// Successful requests per wall-clock second since startup.
     pub requests_per_sec: f64,
+    /// `2 * nnz` per second across all answered requests, in GFLOPS.
     pub gflops: f64,
+    /// Matrix deltas applied.
     pub updates: u64,
+    /// Updates that fell back to a full HBP rebuild (pattern change).
     pub full_rebuilds: u64,
     /// Cumulative blocks re-filled across all updates.
     pub update_blocks_touched: u64,
     /// Cumulative pre-update block counts across all updates.
     pub update_blocks_total: u64,
+    /// Mean seconds per applied delta.
     pub mean_update_secs: f64,
-    /// Tuner invocations recorded (one per registration).
+    /// Tuner invocations recorded (registrations + post-update
+    /// re-resolves).
     pub tunes: u64,
     /// How many of those were content-hash cache hits (no trial run).
     pub tune_cache_hits: u64,
     /// Cumulative candidates measured by competitive trials.
     pub tune_trials: u64,
+    /// Mean seconds per tuner invocation.
     pub mean_tune_secs: f64,
+    /// SpMV batch groups flushed against hosted matrices (grouped by
+    /// *resolved* engine kind; unknown-matrix groups execute nothing
+    /// and are not counted).
+    pub batch_groups: u64,
+    /// `auto` arrivals that shared a flushed group with explicit
+    /// requests — merges that only resolved grouping makes possible.
+    pub batch_merged_auto: u64,
+    /// Mean requests per flushed group.
+    pub mean_group_size: f64,
 }
 
 impl MetricsSnapshot {
+    /// JSON view served by the protocol's `stats` op.
     pub fn to_json(&self) -> crate::util::json::Json {
         use crate::util::json::{obj, Json};
         obj(&[
@@ -168,6 +225,9 @@ impl MetricsSnapshot {
             ("tune_cache_hits", Json::Num(self.tune_cache_hits as f64)),
             ("tune_trials", Json::Num(self.tune_trials as f64)),
             ("mean_tune_secs", Json::Num(self.mean_tune_secs)),
+            ("batch_groups", Json::Num(self.batch_groups as f64)),
+            ("batch_merged_auto", Json::Num(self.batch_merged_auto as f64)),
+            ("mean_group_size", Json::Num(self.mean_group_size)),
         ])
     }
 }
@@ -240,6 +300,24 @@ mod tests {
         let j = s.to_json();
         assert_eq!(j.get("tunes").and_then(|v| v.as_usize()), Some(2));
         assert_eq!(j.get("tune_cache_hits").and_then(|v| v.as_usize()), Some(1));
+    }
+
+    #[test]
+    fn records_batch_groups_and_auto_merges() {
+        let m = ServiceMetrics::new();
+        // mixed group: 2 auto + 1 explicit → both autos count as merged
+        m.record_group(3, 2, 1);
+        // pure groups: nothing to merge, whatever the arrival kind
+        m.record_group(4, 4, 0);
+        m.record_group(1, 0, 1);
+        let s = m.snapshot();
+        assert_eq!(s.batch_groups, 3);
+        assert_eq!(s.batch_merged_auto, 2);
+        assert!((s.mean_group_size - (3.0 + 4.0 + 1.0) / 3.0).abs() < 1e-12);
+        let j = s.to_json();
+        assert_eq!(j.get("batch_groups").and_then(|v| v.as_usize()), Some(3));
+        assert_eq!(j.get("batch_merged_auto").and_then(|v| v.as_usize()), Some(2));
+        assert!(j.get("mean_group_size").is_some());
     }
 
     #[test]

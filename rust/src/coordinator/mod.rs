@@ -17,13 +17,23 @@
 //! short-circuited by a content-hash cache), builds only the decided
 //! engine, and serves `EngineKind::Auto` requests through that
 //! decision; the `tune` request kind reports the stored record.
+//!
+//! Batching is **tuning-aware**: the batcher resolves `Auto` through
+//! the router's cached decision *before* grouping, so `auto` and
+//! explicit requests naming the same resolved engine flush as one SpMV
+//! batch ([`batcher`] has the details; `batch_groups`,
+//! `batch_merged_auto`, and `mean_group_size` in [`metrics`] are the
+//! observable evidence). See `docs/ARCHITECTURE.md` for the layer map
+//! and `docs/PROTOCOL.md` for the wire spec.
+
+#![warn(missing_docs)]
 
 pub mod metrics;
 pub mod router;
 pub mod batcher;
 pub mod server;
 
-pub use batcher::{Batcher, BatcherConfig};
+pub use batcher::{Batcher, BatcherConfig, BatcherHandle, SpmvReply};
 pub use metrics::ServiceMetrics;
 pub use router::{EngineKind, Router};
 pub use server::{serve, Coordinator};

@@ -10,7 +10,19 @@
 //! resident HBP is rebuilt in updatable form, which trials don't need).
 //!
 //! `EngineKind::Auto` requests resolve to the tuned decision per
-//! matrix; explicit kinds still force a specific engine.
+//! matrix; explicit kinds still force a specific engine. The batcher
+//! consults that decision *before* grouping via [`Router::resolve`] — a
+//! cheap, non-blocking read of the cached decision (no engine is built,
+//! no trial runs) — so an `auto` request and an explicit request naming
+//! the same resolved engine land in one batch group. A
+//! **pattern-changing** update marks the decision **stale** (a changed
+//! sparsity pattern can change the tuned winner; value-only deltas
+//! cannot — features and SpMV timings are functions of the pattern, not
+//! the values): `resolve` then defers by returning `Auto`, and the
+//! flush path calls [`Router::resolve_blocking`], which re-tunes under
+//! the matrix's write lock, un-stales the decision, and drops a
+//! resident engine built under a superseded grid so the crowned
+//! (engine, grid) pair is what `Auto` traffic actually executes on.
 //!
 //! Each entry sits behind its own `RwLock`: SpMV traffic takes shared
 //! read locks, and a [`Router::update`] takes the write lock for just
@@ -32,9 +44,13 @@ use std::sync::{OnceLock, RwLock, RwLockReadGuard};
 /// tuned decision.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum EngineKind {
+    /// The paper's hash-based-partition engine.
     Hbp,
+    /// The row-parallel CSR baseline.
     Csr,
+    /// The plain 2D-partitioned baseline (no hash reorder).
     Plain2d,
+    /// Defer to the per-matrix tuned decision.
     Auto,
 }
 
@@ -68,25 +84,38 @@ impl std::fmt::Display for EngineKind {
 /// A registered matrix: tuned decision, retained source, and lazily
 /// built engines.
 pub struct PreparedMatrix {
+    /// Registration name (the protocol's `matrix` field).
     pub name: String,
+    /// Row count of the hosted matrix.
     pub rows: usize,
+    /// Column count of the hosted matrix.
     pub cols: usize,
+    /// Nonzero count of the hosted matrix.
     pub nnz: usize,
     /// Build time of the decided engine (the registration cost).
     pub preprocess_secs: f64,
     /// Deltas applied since registration.
     pub updates_applied: u64,
-    /// What the tuner learned at registration (decision, features,
-    /// trial record, cache hit) — served by the `tune` protocol op.
+    /// What the tuner learned at registration — or at the most recent
+    /// post-update re-tune (decision, features, trial record, cache
+    /// hit) — served by the `tune` protocol op.
     pub tune: TuneOutcome,
+    /// Set by a pattern-changing update: the tuned decision was
+    /// measured on a different sparsity pattern, so `Auto` resolution
+    /// defers until [`Router::resolve_blocking`] re-tunes. Value-only
+    /// deltas never set this — they cannot move the winner.
+    decision_stale: bool,
     base_cfg: PartitionConfig,
     threads: usize,
     /// Source CSR, kept in lock-step with every built engine so a
     /// lazily built engine always starts from the current values.
     m: Csr,
-    hbp: OnceLock<HbpEngine>,
+    /// Blocked-engine slots carry the partition grid they were built
+    /// with, so a re-tune can tell a superseded grid from the crowned
+    /// one; CSR ignores the grid and carries no pairing.
+    hbp: OnceLock<(PartitionConfig, HbpEngine)>,
     csr: OnceLock<CsrParallel>,
-    plain2d: OnceLock<Spmv2dEngine>,
+    plain2d: OnceLock<(PartitionConfig, Spmv2dEngine)>,
 }
 
 impl PreparedMatrix {
@@ -103,6 +132,45 @@ impl PreparedMatrix {
         self.resolve(EngineKind::Auto)
     }
 
+    /// Whether the tuned decision predates a pattern-changing delta. A
+    /// stale decision still serves *correct* values (engines are
+    /// repaired in place) — it just may no longer be the fastest, so
+    /// batch grouping defers instead of trusting it. Value-only deltas
+    /// never stale: matrix features and SpMV trial timings depend on
+    /// the sparsity pattern alone, so the measured winner stands.
+    pub fn decision_is_stale(&self) -> bool {
+        self.decision_stale
+    }
+
+    /// Adopt a flush-path re-tune: store the outcome, un-stale, and
+    /// drop the resident engine of the newly decided kind **only when
+    /// it was built under a different grid** than the one the trials
+    /// crowned (the slots record their build grid precisely for this
+    /// comparison — rebuilding an identical engine would be pure
+    /// waste). The next request then rebuilds with the crowned grid,
+    /// so what the trials measured is what `Auto` traffic executes on.
+    /// Other kinds keep their engines (an explicit request is
+    /// grid-agnostic in meaning), and CSR ignores the grid entirely.
+    fn adopt_tune(&mut self, outcome: TuneOutcome) {
+        let new = outcome.decision;
+        self.tune = outcome;
+        self.decision_stale = false;
+        match new.kind {
+            EngineKind::Hbp => {
+                if self.hbp.get().is_some_and(|(cfg, _)| *cfg != new.cfg) {
+                    self.hbp = OnceLock::new();
+                }
+            }
+            EngineKind::Plain2d => {
+                if self.plain2d.get().is_some_and(|(cfg, _)| *cfg != new.cfg) {
+                    self.plain2d = OnceLock::new();
+                }
+            }
+            EngineKind::Csr => {} // CSR ignores the partition grid
+            EngineKind::Auto => unreachable!("decisions are concrete"),
+        }
+    }
+
     /// Partition config an engine of `kind` is built with: the tuned
     /// grid when this kind *is* the decision, the base config otherwise.
     fn cfg_for(&self, kind: EngineKind) -> PartitionConfig {
@@ -116,21 +184,30 @@ impl PreparedMatrix {
     /// The engine serving `kind`, built on first use.
     pub fn engine(&self, kind: EngineKind) -> &dyn SpmvEngine {
         match self.resolve(kind) {
-            EngineKind::Hbp => self.hbp.get_or_init(|| {
-                HbpEngine::new_updatable(
-                    self.m.clone(),
-                    self.cfg_for(EngineKind::Hbp),
-                    Box::new(HashReorder::default()),
-                    self.threads,
-                    0.25,
-                )
-            }),
+            EngineKind::Hbp => {
+                let (_, engine) = self.hbp.get_or_init(|| {
+                    let cfg = self.cfg_for(EngineKind::Hbp);
+                    let engine = HbpEngine::new_updatable(
+                        self.m.clone(),
+                        cfg,
+                        Box::new(HashReorder::default()),
+                        self.threads,
+                        0.25,
+                    );
+                    (cfg, engine)
+                });
+                engine
+            }
             EngineKind::Csr => {
                 self.csr.get_or_init(|| CsrParallel::new(self.m.clone(), self.threads))
             }
-            EngineKind::Plain2d => self.plain2d.get_or_init(|| {
-                Spmv2dEngine::new(self.m.clone(), self.cfg_for(EngineKind::Plain2d), self.threads)
-            }),
+            EngineKind::Plain2d => {
+                let (_, engine) = self.plain2d.get_or_init(|| {
+                    let cfg = self.cfg_for(EngineKind::Plain2d);
+                    (cfg, Spmv2dEngine::new(self.m.clone(), cfg, self.threads))
+                });
+                engine
+            }
             EngineKind::Auto => unreachable!("resolve() never returns Auto"),
         }
     }
@@ -179,20 +256,27 @@ impl PreparedMatrix {
         if let Some(csr) = self.csr.get_mut() {
             csr.update(delta).expect("csr engine diverged from source");
         }
-        if let Some(plain2d) = self.plain2d.get_mut() {
+        if let Some((_, plain2d)) = self.plain2d.get_mut() {
             report = plain2d.update(delta).expect("2d engine diverged from source");
         }
-        if let Some(hbp) = self.hbp.get_mut() {
+        if let Some((_, hbp)) = self.hbp.get_mut() {
             report = hbp.update(delta).expect("hbp engine diverged from source");
         }
         self.updates_applied += 1;
+        // only a changed sparsity pattern can move the tuned winner:
+        // features and trial timings are pattern-functions, so value
+        // edits leave the measured decision valid (no re-tune, no
+        // trial run on the serving path for the common delta kinds)
+        self.decision_stale |= change.pattern_changed;
         Ok(report)
     }
 }
 
 /// The matrix registry.
 pub struct Router {
+    /// Worker threads the engines (and trials) run on.
     pub threads: usize,
+    /// Base partition config; the tuner derives grid candidates from it.
     pub cfg: PartitionConfig,
     tuner: Tuner,
     matrices: BTreeMap<String, RwLock<PreparedMatrix>>,
@@ -212,6 +296,7 @@ impl Router {
         Router { threads: threads.max(1), cfg, tuner, matrices: BTreeMap::new() }
     }
 
+    /// The tuner this router registers matrices through.
     pub fn tuner(&self) -> &Tuner {
         &self.tuner
     }
@@ -230,6 +315,7 @@ impl Router {
             preprocess_secs: 0.0,
             updates_applied: 0,
             tune,
+            decision_stale: false,
             base_cfg: self.cfg,
             threads: self.threads,
             m,
@@ -255,8 +341,72 @@ impl Router {
         Ok(lock.read().unwrap_or_else(|e| e.into_inner()))
     }
 
+    /// Registered matrix names, in sorted order.
     pub fn names(&self) -> Vec<&str> {
         self.matrices.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Cheap, non-blocking decision lookup for batch grouping: the
+    /// concrete engine kind the matrix's `Auto` requests resolve to,
+    /// or [`EngineKind::Auto`] when resolution must be deferred — the
+    /// matrix is unknown, its entry is write-locked (an update is in
+    /// flight), or its decision is stale. Never builds an engine and
+    /// never runs a trial, so the batcher can call it on every enqueue.
+    ///
+    /// # Example
+    ///
+    /// ```
+    /// use hbp_spmv::coordinator::{EngineKind, Router};
+    /// use hbp_spmv::partition::PartitionConfig;
+    ///
+    /// let mut router = Router::new(PartitionConfig::test_small(), 1);
+    /// router.register("m", hbp_spmv::gen::random::uniform(8, 8, 0.5, 1)).unwrap();
+    /// // registration tuned the matrix, so resolution is concrete…
+    /// assert_ne!(router.resolve("m"), EngineKind::Auto);
+    /// // …and an unknown matrix defers (the error surfaces at execution)
+    /// assert_eq!(router.resolve("ghost"), EngineKind::Auto);
+    /// ```
+    pub fn resolve(&self, matrix: &str) -> EngineKind {
+        let Some(lock) = self.matrices.get(matrix) else {
+            return EngineKind::Auto;
+        };
+        match lock.try_read() {
+            Ok(p) if !p.decision_is_stale() => p.resolved_kind(),
+            Ok(_) => EngineKind::Auto,
+            Err(std::sync::TryLockError::Poisoned(e)) => {
+                let p = e.into_inner();
+                if p.decision_is_stale() { EngineKind::Auto } else { p.resolved_kind() }
+            }
+            Err(std::sync::TryLockError::WouldBlock) => EngineKind::Auto,
+        }
+    }
+
+    /// Resolve a deferred decision, re-tuning if a pattern-changing
+    /// delta staled it: the fresh path is a shared read, the stale path
+    /// takes the matrix's write lock, re-runs the tuner on the
+    /// *current* content, and adopts the outcome (dropping a resident
+    /// engine whose grid the new decision superseded). Returns the
+    /// concrete kind plus the re-tune outcome when one ran, so the
+    /// caller can record it in the service metrics.
+    pub fn resolve_blocking(&self, matrix: &str) -> Result<(EngineKind, Option<TuneOutcome>)> {
+        let lock = self
+            .matrices
+            .get(matrix)
+            .with_context(|| format!("matrix {matrix:?} not registered"))?;
+        {
+            let p = lock.read().unwrap_or_else(|e| e.into_inner());
+            if !p.decision_is_stale() {
+                return Ok((p.resolved_kind(), None));
+            }
+        }
+        let mut p = lock.write().unwrap_or_else(|e| e.into_inner());
+        if !p.decision_is_stale() {
+            // another flush re-resolved while we waited for the lock
+            return Ok((p.resolved_kind(), None));
+        }
+        let outcome = self.tuner.tune(&p.m);
+        p.adopt_tune(outcome.clone());
+        Ok((p.resolved_kind(), Some(outcome)))
     }
 
     /// Apply a delta to a hosted matrix. Exclusive: waits for in-flight
@@ -403,6 +553,79 @@ mod tests {
         r.register("b", random::uniform(5, 5, 0.5, 2)).unwrap();
         assert_eq!(r.names(), vec!["a", "b"]);
         assert!(r.get("a").unwrap().preprocess_secs >= 0.0);
+    }
+
+    /// A delta that rewrites one row's columns (same nonzero count,
+    /// different pattern) — the kind of change that CAN move the tuned
+    /// winner.
+    fn pattern_changing_delta(m: &Csr) -> MatrixDelta {
+        let row = (0..m.rows).find(|&i| m.row_nnz(i) >= 1).unwrap();
+        let (cols, vals) = m.row(row);
+        let unused = (0..m.cols as u32).find(|c| cols.binary_search(c).is_err()).unwrap();
+        let mut new_cols = cols.to_vec();
+        new_cols[0] = unused;
+        new_cols.sort_unstable();
+        MatrixDelta::new().replace_row(row, new_cols, vals.to_vec())
+    }
+
+    #[test]
+    fn resolve_is_concrete_when_fresh_and_defers_when_stale() {
+        let m = random::power_law_rows(70, 60, 2.0, 15, 23);
+        let r = router_with("t", m.clone());
+        let decided = r.get("t").unwrap().resolved_kind();
+        assert_eq!(r.resolve("t"), decided, "fresh decision resolves concretely");
+        assert_eq!(r.resolve("ghost"), EngineKind::Auto, "unknown matrix defers");
+
+        let delta = pattern_changing_delta(&m);
+        r.update("t", &delta).unwrap();
+        assert!(r.get("t").unwrap().decision_is_stale(), "pattern change stales");
+        assert_eq!(r.resolve("t"), EngineKind::Auto, "stale decision defers");
+
+        // blocking resolution re-tunes the changed content and un-stales
+        let (kind, outcome) = r.resolve_blocking("t").unwrap();
+        assert_ne!(kind, EngineKind::Auto);
+        let outcome = outcome.expect("stale decision must re-tune");
+        assert!(!outcome.cache_hit, "changed content must re-measure");
+        assert!(!r.get("t").unwrap().decision_is_stale());
+        assert_eq!(r.resolve("t"), kind, "resolution is concrete again");
+        // a second blocking resolve is the fresh fast path
+        let (again, none) = r.resolve_blocking("t").unwrap();
+        assert_eq!(again, kind);
+        assert!(none.is_none(), "fresh decision must not re-tune");
+
+        // whatever the re-tune decided (possibly dropping a resident
+        // engine built under a superseded grid), Auto serves the
+        // mutated matrix exactly
+        let mut mutated = m.clone();
+        apply_to_csr(&mut mutated, &delta).unwrap();
+        let x = random::vector(60, 17);
+        let mut expect = vec![0.0; 70];
+        mutated.spmv(&x, &mut expect);
+        let y = r.spmv("t", EngineKind::Auto, &x).unwrap();
+        assert!(allclose(&y, &expect, 1e-10, 1e-12), "re-tuned Auto serves post-delta values");
+    }
+
+    #[test]
+    fn value_only_deltas_keep_the_decision_fresh() {
+        let m = random::power_law_rows(60, 50, 2.0, 12, 29);
+        let r = router_with("t", m.clone());
+        let before = r.get("t").unwrap().tune.decision;
+        let row = (0..60).find(|&i| m.row_nnz(i) >= 1).unwrap();
+        // values move, pattern doesn't: the measured winner still stands,
+        // so the serving path must not pay a re-tune for this
+        let delta = MatrixDelta::new().scale_row(row, 2.0).zero_row(59.min(row + 1));
+        r.update("t", &delta).unwrap();
+        assert!(!r.get("t").unwrap().decision_is_stale(), "value edits must not stale");
+        assert_eq!(r.resolve("t"), before.kind, "resolution stays concrete");
+        let (kind, outcome) = r.resolve_blocking("t").unwrap();
+        assert_eq!(kind, before.kind);
+        assert!(outcome.is_none(), "no re-tune for a value-only delta");
+    }
+
+    #[test]
+    fn resolve_blocking_errors_on_unknown_matrix() {
+        let r = router_with("t", random::uniform(10, 10, 0.4, 6));
+        assert!(r.resolve_blocking("ghost").is_err());
     }
 
     #[test]

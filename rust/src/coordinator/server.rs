@@ -5,7 +5,7 @@
 //!
 //! ```text
 //! -> {"op":"spmv", "matrix":"m1", "x":[...], "engine":"hbp"}
-//! <- {"ok":true, "y":[...]}
+//! <- {"ok":true, "y":[...], "resolved":"hbp"}
 //! -> {"op":"update", "matrix":"m1", "ops":[{"kind":"scale_row","row":3,"factor":0.5}, ...]}
 //! <- {"ok":true, "rows_touched":1, "blocks_touched":2, "blocks_total":40, "full_rebuild":false}
 //! -> {"op":"list"}
@@ -17,8 +17,15 @@
 //!     "features":{...}, "trials":{...}}
 //! ```
 //!
+//! The normative spec — every op, every field, with examples executed
+//! verbatim by `rust/tests/protocol_doc.rs` — lives in
+//! `docs/PROTOCOL.md`.
+//!
 //! `spmv` accepts `"engine":"auto"` (resolved to the matrix's tuned
-//! decision); the default stays `"hbp"`.
+//! decision); the default stays `"hbp"`. Every successful `spmv`
+//! response carries `"resolved"`: the concrete engine the request
+//! executed on, so a client can observe what its `auto` request merged
+//! with in the batcher.
 //!
 //! Update op kinds mirror [`DeltaOp`]:
 //! `{"kind":"set","row":R,"col":C,"value":V}`,
@@ -26,7 +33,7 @@
 //! `{"kind":"zero_row","row":R}`, and
 //! `{"kind":"replace_row","row":R,"cols":[...],"values":[...]}`.
 
-use super::batcher::{Batcher, BatcherConfig, BatcherHandle};
+use super::batcher::{Batcher, BatcherConfig, BatcherHandle, SpmvReply};
 use super::metrics::ServiceMetrics;
 use super::router::{EngineKind, Router};
 use crate::preprocess::{DeltaOp, MatrixDelta, UpdateReport};
@@ -38,7 +45,9 @@ use std::sync::Arc;
 
 /// The in-process coordinator: router + batcher + metrics.
 pub struct Coordinator {
+    /// The matrix registry requests route through.
     pub router: Arc<Router>,
+    /// Service counters (requests, updates, tunes, batch groups).
     pub metrics: Arc<ServiceMetrics>,
     // field order matters: `handle` must drop BEFORE `batcher` (fields
     // drop in declaration order) or Batcher::drop joins a dispatcher
@@ -48,6 +57,8 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
+    /// Wrap a registered router in the batching pipeline, recording
+    /// each registration's tune outcome in fresh metrics.
     pub fn new(router: Router, cfg: BatcherConfig) -> Coordinator {
         let router = Arc::new(router);
         let metrics = Arc::new(ServiceMetrics::new());
@@ -66,12 +77,25 @@ impl Coordinator {
         self.handle.spmv(matrix, engine, x)
     }
 
+    /// Synchronous SpMV that also reports the concrete engine the
+    /// request resolved to (what the protocol's `resolved` field
+    /// carries).
+    pub fn spmv_resolved(
+        &self,
+        matrix: &str,
+        engine: EngineKind,
+        x: Vec<f64>,
+    ) -> Result<SpmvReply> {
+        self.handle.spmv_resolved(matrix, engine, x)
+    }
+
     /// Synchronous matrix update through the batching pipeline (ordered
     /// with SpMV submissions on the same queue).
     pub fn update(&self, matrix: &str, delta: MatrixDelta) -> Result<UpdateReport> {
         self.handle.update(matrix, delta)
     }
 
+    /// A submission handle onto this coordinator's batcher.
     pub fn handle(&self) -> BatcherHandle {
         self.batcher.handle()
     }
@@ -101,10 +125,11 @@ impl Coordinator {
                     .iter()
                     .map(|v| v.as_f64().context("non-numeric x entry"))
                     .collect::<Result<_>>()?;
-                let y = self.spmv(matrix, engine, x)?;
+                let reply = self.spmv_resolved(matrix, engine, x)?;
                 Ok(obj(&[
                     ("ok", Json::Bool(true)),
-                    ("y", crate::util::json::num_arr(&y)),
+                    ("y", crate::util::json::num_arr(&reply.y)),
+                    ("resolved", Json::Str(reply.resolved.to_string())),
                 ]))
             }
             "update" => {
@@ -352,11 +377,13 @@ pub struct Client {
 }
 
 impl Client {
+    /// Connect to a serving coordinator.
     pub fn connect(addr: impl std::net::ToSocketAddrs) -> Result<Client> {
         let stream = TcpStream::connect(addr)?;
         Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
     }
 
+    /// Send one request object and read one response line.
     pub fn call(&mut self, req: &Json) -> Result<Json> {
         self.writer.write_all(req.to_string().as_bytes())?;
         self.writer.write_all(b"\n")?;
@@ -365,6 +392,8 @@ impl Client {
         Json::parse(line.trim())
     }
 
+    /// SpMV against a hosted matrix (default engine; the response's
+    /// `resolved` field is available through [`Client::call`]).
     pub fn spmv(&mut self, matrix: &str, x: &[f64]) -> Result<Vec<f64>> {
         let req = obj(&[
             ("op", Json::Str("spmv".into())),
@@ -432,6 +461,8 @@ mod tests {
         let resp = c.handle_json(&req.to_string());
         assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
         assert_eq!(resp.get("y").unwrap().as_arr().unwrap().len(), 40);
+        // the default engine is explicit hbp, so it resolves to itself
+        assert_eq!(resp.get("resolved").and_then(Json::as_str), Some("hbp"));
 
         let stats = c.handle_json(r#"{"op":"stats"}"#);
         assert!(stats.get("stats").unwrap().req_usize("requests").unwrap() >= 1);
@@ -522,11 +553,13 @@ mod tests {
         let stats = c.handle_json(r#"{"op":"stats"}"#);
         assert_eq!(stats.get("stats").unwrap().req_usize("tunes").unwrap(), 1);
 
-        // "auto" routes to the decision and matches forcing that kind
+        // "auto" routes to the decision and matches forcing that kind;
+        // the reply names the concrete engine it resolved to
         let x: Vec<f64> = (0..30).map(|i| (i as f64) / 29.0).collect();
-        let auto = c.spmv("t", EngineKind::Auto, x.clone()).unwrap();
+        let auto = c.spmv_resolved("t", EngineKind::Auto, x.clone()).unwrap();
+        assert_eq!(auto.resolved.to_string(), engine, "reply reports the tuned decision");
         let forced = c.spmv("t", engine.parse().unwrap(), x).unwrap();
-        assert_eq!(auto, forced, "auto and forced winner must be bit-identical");
+        assert_eq!(auto.y, forced, "auto and forced winner must be bit-identical");
 
         let unknown = c.handle_json(r#"{"op":"tune","matrix":"ghost"}"#);
         assert_eq!(unknown.get("ok"), Some(&Json::Bool(false)));

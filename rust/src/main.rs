@@ -8,7 +8,8 @@
 //! - `spmv`       — run SpMV with a chosen engine, verify vs CSR, report GFLOPS
 //! - `tune`       — autotune: features, ranked candidates, trial winner
 //! - `sim`        — run the GPU cost model (Orin / RTX 4090)
-//! - `serve`      — start the TCP serving coordinator
+//! - `serve`      — start the TCP serving coordinator (`--batch-stats`
+//!   periodically prints the resolved-batching counters)
 //!
 //! Matrices are named either by suite id (`m1`..`m14`, Table I) or by a
 //! path to a `.mtx` / `.bin` file. The tuning cache defaults to
@@ -34,7 +35,7 @@ use hbp_spmv::util::Stats;
 fn main() {
     let argv: Vec<String> = std::env::args().collect();
     let cmd = argv.get(1).map(String::as_str).unwrap_or("help");
-    let args = Args::from_env(2, &["verify", "all", "parallel", "no-cache"]);
+    let args = Args::from_env(2, &["verify", "all", "parallel", "no-cache", "batch-stats"]);
     let result = match cmd {
         "gen" => cmd_gen(&args),
         "info" => cmd_info(&args),
@@ -74,7 +75,8 @@ SUBCOMMANDS
   tune       --matrix <id|path> [--scale ci] [--threads N] [--top-k 3] [--iters 5]
              [--cache path] [--no-cache]
   sim        --matrix <id|path> [--device orin|rtx4090]
-  serve      --addr 127.0.0.1:7700 --matrices m1,m3 [--scale ci] [--cache path] [--no-cache]"
+  serve      --addr 127.0.0.1:7700 --matrices m1,m3 [--scale ci] [--cache path] [--no-cache]
+             [--batch-stats]"
     );
 }
 
@@ -509,5 +511,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
     }
     let coordinator = std::sync::Arc::new(Coordinator::new(router, BatcherConfig::default()));
+    if args.flag("batch-stats") {
+        // periodic observability for the resolved-batching path: how
+        // many groups flushed, how many auto arrivals merged with
+        // explicit traffic, and the mean group size. Prints only when
+        // the group count moved, so an idle server stays quiet.
+        let metrics = coordinator.metrics.clone();
+        std::thread::spawn(move || {
+            let mut last_groups = 0u64;
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(10));
+                let s = metrics.snapshot();
+                if s.batch_groups != last_groups {
+                    last_groups = s.batch_groups;
+                    eprintln!(
+                        "batch stats: batch_groups={} batch_merged_auto={} mean_group_size={:.2}",
+                        s.batch_groups, s.batch_merged_auto, s.mean_group_size
+                    );
+                }
+            }
+        });
+    }
     hbp_spmv::coordinator::serve(coordinator, &addr)
 }

@@ -90,12 +90,29 @@ fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
 
 /// In-memory map of content hash → tuned decision, with binary
 /// load/save.
+///
+/// # Example
+///
+/// ```
+/// use hbp_spmv::coordinator::EngineKind;
+/// use hbp_spmv::partition::PartitionConfig;
+/// use hbp_spmv::tune::{Decision, TuneCache};
+///
+/// let mut cache = TuneCache::new();
+/// let decision =
+///     Decision { kind: EngineKind::Csr, cfg: PartitionConfig::test_small(), trial_secs: 1e-6 };
+/// cache.put(42, decision);
+/// assert_eq!(cache.get(42).map(|d| d.kind), Some(EngineKind::Csr));
+/// assert_eq!(cache.get(7), None, "unknown key is a miss");
+/// // `save`/`load` round-trip this map through the HBPTUNE1 binary format
+/// ```
 #[derive(Clone, Debug, Default)]
 pub struct TuneCache {
     entries: BTreeMap<u64, Decision>,
 }
 
 impl TuneCache {
+    /// An empty cache.
     pub fn new() -> TuneCache {
         TuneCache::default()
     }
@@ -156,19 +173,23 @@ impl TuneCache {
         Ok(())
     }
 
+    /// The decision stored under `key`, if any.
     pub fn get(&self, key: u64) -> Option<Decision> {
         self.entries.get(&key).copied()
     }
 
+    /// Store (or overwrite) a decision under `key`.
     pub fn put(&mut self, key: u64, decision: Decision) {
         assert_ne!(decision.kind, EngineKind::Auto, "Auto decisions are never cached");
         self.entries.insert(key, decision);
     }
 
+    /// Number of cached decisions.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// True when no decisions are cached.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }

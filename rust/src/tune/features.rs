@@ -27,12 +27,17 @@ pub const FILL_BUCKETS: usize = FILL_EDGES.len() + 1;
 /// One-pass structural summary of a CSR matrix under a partition grid.
 #[derive(Clone, Debug, PartialEq)]
 pub struct MatrixFeatures {
+    /// Row count.
     pub rows: usize,
+    /// Column count.
     pub cols: usize,
+    /// Nonzero count.
     pub nnz: usize,
-    /// Row nonzero-count moments — the hash reorder's input statistics.
+    /// Mean row nonzero count — the hash reorder's input statistic.
     pub row_mean: f64,
+    /// Standard deviation of row nonzero counts.
     pub row_std: f64,
+    /// Largest row nonzero count.
     pub row_max: usize,
     /// Coefficient of variation `row_std / row_mean` (0 for empty
     /// matrices) — the single strongest "does reordering pay?" signal.

@@ -22,8 +22,11 @@
 //!    server-restarted matrix skips straight to its decision.
 //!
 //! [`Tuner::tune`] is the entry point; the coordinator's router calls
-//! it at registration and resolves `EngineKind::Auto` requests to the
-//! tuned decision.
+//! it at registration (and again from `Router::resolve_blocking` when
+//! an applied delta stales a decision) and resolves `EngineKind::Auto`
+//! requests to the tuned decision.
+
+#![warn(missing_docs)]
 
 pub mod cache;
 pub mod features;
@@ -48,6 +51,7 @@ use std::sync::Mutex;
 pub struct Decision {
     /// Never [`EngineKind::Auto`] — a decision is what Auto resolves to.
     pub kind: EngineKind,
+    /// Partition grid the winning engine was measured with.
     pub cfg: PartitionConfig,
     /// The winning median SpMV seconds (from the crowning trial run).
     pub trial_secs: f64,
@@ -61,7 +65,9 @@ pub struct TuneOutcome {
     pub key: u64,
     /// True when the decision came from the cache — no trials ran.
     pub cache_hit: bool,
+    /// The structural features extracted for the model's ranking.
     pub features: MatrixFeatures,
+    /// The crowned (or replayed) serving decision.
     pub decision: Decision,
     /// The trial record; `None` on a cache hit.
     pub report: Option<TuneReport>,
@@ -108,6 +114,8 @@ impl Tuner {
         Tuner { cache: Mutex::new(cache), cache_path: Some(path), ..Tuner::new(base_cfg, threads) }
     }
 
+    /// Where decisions persist, if this tuner was built with a cache
+    /// file.
     pub fn cache_path(&self) -> Option<&Path> {
         self.cache_path.as_deref()
     }

@@ -18,15 +18,20 @@ use crate::partition::PartitionConfig;
 /// config untouched.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Candidate {
+    /// Engine the candidate runs on (never `Auto`).
     pub kind: EngineKind,
+    /// Partition grid the candidate is built with.
     pub cfg: PartitionConfig,
 }
 
 /// A candidate with its model score and the rules that fired.
 #[derive(Clone, Debug)]
 pub struct ScoredCandidate {
+    /// The engine/grid configuration that was scored.
     pub candidate: Candidate,
+    /// Sum of every firing rule's contribution.
     pub score: f64,
+    /// Why each firing rule contributed.
     pub reasons: Vec<&'static str>,
 }
 

@@ -46,7 +46,9 @@ impl Default for TrialConfig {
 /// One measured candidate.
 #[derive(Clone, Copy, Debug)]
 pub struct TrialResult {
+    /// Engine the candidate ran on.
     pub kind: EngineKind,
+    /// Partition grid the candidate was built with.
     pub cfg: PartitionConfig,
     /// The model score that earned the trial slot.
     pub model_score: f64,
@@ -58,11 +60,14 @@ pub struct TrialResult {
 /// order) and the winner's index.
 #[derive(Clone, Debug)]
 pub struct TuneReport {
+    /// Every measured candidate, in model-rank order.
     pub trials: Vec<TrialResult>,
+    /// Index of the fastest median in `trials`.
     pub winner: usize,
 }
 
 impl TuneReport {
+    /// The crowned candidate.
     pub fn winner(&self) -> &TrialResult {
         &self.trials[self.winner]
     }

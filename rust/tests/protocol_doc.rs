@@ -1,0 +1,185 @@
+//! Executes every protocol example in `docs/PROTOCOL.md` against a
+//! real server, so the documented wire format cannot drift from the
+//! implementation.
+//!
+//! Contract (stated at the top of PROTOCOL.md): inside ```jsonl fences,
+//! `->` lines are sent verbatim over TCP and the following `<-` line is
+//! checked structurally against the live response — exact key sets on
+//! objects (both directions: an undocumented server field fails, and so
+//! does a documented-but-absent one), exact booleans, numeric values
+//! illustrative, and `"<placeholder>"` strings matching any string.
+//! Examples run top to bottom on one connection against the 8×8 `demo`
+//! matrix this test registers, so later examples see earlier mutations.
+
+use hbp_spmv::coordinator::server::{serve_background, Client};
+use hbp_spmv::coordinator::{BatcherConfig, Coordinator, Router};
+use hbp_spmv::formats::{Coo, Csr};
+use hbp_spmv::partition::PartitionConfig;
+use hbp_spmv::util::json::Json;
+use std::sync::Arc;
+
+/// The matrix PROTOCOL.md's examples are written against: 8×8,
+/// 16 nonzeros — `(i,i) = i+1`, `(i,i+1) = 0.5`, plus `(7,0) = 0.25`.
+fn demo_matrix() -> Csr {
+    let mut coo = Coo::new(8, 8);
+    for i in 0..8 {
+        coo.push(i, i, (i + 1) as f64);
+    }
+    for i in 0..7 {
+        coo.push(i, i + 1, 0.5);
+    }
+    coo.push(7, 0, 0.25);
+    coo.to_csr()
+}
+
+/// `(doc line number of the request, request line, response line)` for
+/// every `->`/`<-` pair inside a ```jsonl fence.
+fn extract_examples(doc: &str) -> Vec<(usize, String, String)> {
+    let mut out = Vec::new();
+    let mut in_jsonl = false;
+    let mut pending: Option<(usize, String)> = None;
+    for (i, line) in doc.lines().enumerate() {
+        let trimmed = line.trim();
+        if trimmed.starts_with("```") {
+            assert!(
+                pending.is_none(),
+                "PROTOCOL.md line {}: request without a response before fence close",
+                i + 1
+            );
+            in_jsonl = trimmed == "```jsonl";
+            continue;
+        }
+        if !in_jsonl {
+            continue;
+        }
+        if let Some(req) = trimmed.strip_prefix("-> ") {
+            assert!(
+                pending.is_none(),
+                "PROTOCOL.md line {}: two requests in a row without a response",
+                i + 1
+            );
+            pending = Some((i + 1, req.to_string()));
+        } else if let Some(resp) = trimmed.strip_prefix("<- ") {
+            let (line_no, req) = pending.take().unwrap_or_else(|| {
+                panic!("PROTOCOL.md line {}: response without a request", i + 1)
+            });
+            out.push((line_no, req, resp.to_string()));
+        } else if !trimmed.is_empty() {
+            panic!("PROTOCOL.md line {}: jsonl lines must start with -> or <-", i + 1);
+        }
+    }
+    out
+}
+
+/// A documented string of the form `"<...>"` matches any actual string.
+fn is_placeholder(s: &str) -> bool {
+    s.starts_with('<') && s.ends_with('>')
+}
+
+/// Structural match of the documented response against the live one;
+/// mismatches are collected with their JSON path for the panic message.
+fn matches(doc: &Json, actual: &Json, path: &str, errors: &mut Vec<String>) {
+    match (doc, actual) {
+        (Json::Null, Json::Null) => {}
+        (Json::Bool(d), Json::Bool(a)) => {
+            if d != a {
+                errors.push(format!("{path}: documented {d}, server said {a}"));
+            }
+        }
+        (Json::Num(_), Json::Num(_)) => {} // numeric values are illustrative
+        (Json::Str(d), Json::Str(a)) => {
+            if !is_placeholder(d) && d != a {
+                errors.push(format!("{path}: documented {d:?}, server said {a:?}"));
+            }
+        }
+        (Json::Arr(d), Json::Arr(a)) => {
+            if let Some(d0) = d.first() {
+                match a.first() {
+                    Some(a0) => matches(d0, a0, &format!("{path}[0]"), errors),
+                    None => errors.push(format!("{path}: documented non-empty, server sent []")),
+                }
+            }
+        }
+        (Json::Obj(d), Json::Obj(a)) => {
+            for key in d.keys() {
+                if !a.contains_key(key) {
+                    errors.push(format!("{path}: documented key {key:?} missing from response"));
+                }
+            }
+            for key in a.keys() {
+                if !d.contains_key(key) {
+                    errors.push(format!("{path}: response key {key:?} is undocumented"));
+                }
+            }
+            for (key, dv) in d {
+                if let Some(av) = a.get(key) {
+                    matches(dv, av, &format!("{path}.{key}"), errors);
+                }
+            }
+        }
+        (d, a) => errors.push(format!("{path}: documented {d}, server sent {a} (type mismatch)")),
+    }
+}
+
+#[test]
+fn protocol_doc_examples_round_trip_through_a_live_server() {
+    let doc_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../docs/PROTOCOL.md");
+    let doc = std::fs::read_to_string(doc_path)
+        .unwrap_or_else(|e| panic!("reading {doc_path}: {e}"));
+    let examples = extract_examples(&doc);
+    assert!(
+        examples.len() >= 8,
+        "PROTOCOL.md documents only {} examples — every op needs one",
+        examples.len()
+    );
+    // every op must be exercised, plus the error shape
+    let ops_documented: Vec<String> = examples
+        .iter()
+        .filter_map(|(_, req, _)| {
+            let parsed = Json::parse(req).ok()?;
+            Some(parsed.get("op")?.as_str()?.to_string())
+        })
+        .collect();
+    for op in ["spmv", "list", "tune", "update", "stats"] {
+        assert!(
+            ops_documented.iter().any(|o| o == op),
+            "PROTOCOL.md has no executed example for op {op:?}"
+        );
+    }
+    assert!(
+        examples.iter().any(|(_, _, resp)| resp.contains("\"ok\":false")),
+        "PROTOCOL.md must document the error shape"
+    );
+
+    let mut router = Router::new(PartitionConfig::test_small(), 2);
+    router.register("demo", demo_matrix()).unwrap();
+    let coordinator = Arc::new(Coordinator::new(router, BatcherConfig::default()));
+    let addr = serve_background(coordinator).unwrap();
+    let mut client = Client::connect(addr).unwrap();
+
+    for (line_no, req, want) in examples {
+        let req_json = Json::parse(&req)
+            .unwrap_or_else(|e| panic!("PROTOCOL.md:{line_no}: request is not valid JSON: {e:#}"));
+        let want_json = Json::parse(&want)
+            .unwrap_or_else(|e| panic!("PROTOCOL.md:{line_no}: response is not valid JSON: {e:#}"));
+        let got = client
+            .call(&req_json)
+            .unwrap_or_else(|e| panic!("PROTOCOL.md:{line_no}: server call failed: {e:#}"));
+        let mut errors = Vec::new();
+        matches(&want_json, &got, "response", &mut errors);
+        assert!(
+            errors.is_empty(),
+            "PROTOCOL.md:{line_no}: documented example diverges from the live server\n  \
+             request:  {req}\n  response: {got}\n  - {}",
+            errors.join("\n  - ")
+        );
+    }
+}
+
+#[test]
+fn placeholder_convention_is_what_the_doc_promises() {
+    assert!(is_placeholder("<engine>"));
+    assert!(is_placeholder("<content-hash>"));
+    assert!(!is_placeholder("hbp"));
+    assert!(!is_placeholder("<unclosed"));
+}

@@ -110,6 +110,46 @@ fn concurrent_clients_are_isolated() {
 }
 
 #[test]
+fn spmv_responses_report_the_resolved_engine() {
+    let (c, addr, _rows, cols) = start();
+    let mut client = Client::connect(addr).unwrap();
+    let x = hbp_spmv::gen::random::vector(cols, 77);
+
+    // explicit kinds resolve to themselves
+    for engine in ["hbp", "csr", "2d"] {
+        let r = client
+            .call(&obj(&[
+                ("op", Json::Str("spmv".into())),
+                ("matrix", Json::Str("test".into())),
+                ("engine", Json::Str(engine.into())),
+                ("x", num_arr(&x)),
+            ]))
+            .unwrap();
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{engine}");
+        assert_eq!(r.get("resolved").and_then(Json::as_str), Some(engine));
+    }
+
+    // "auto" reports the tuned decision — the same concrete kind the
+    // in-process API resolves to
+    let decided = c.router.resolve("test");
+    assert_ne!(decided, hbp_spmv::coordinator::EngineKind::Auto);
+    let r = client
+        .call(&obj(&[
+            ("op", Json::Str("spmv".into())),
+            ("matrix", Json::Str("test".into())),
+            ("engine", Json::Str("auto".into())),
+            ("x", num_arr(&x)),
+        ]))
+        .unwrap();
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+    assert_eq!(
+        r.get("resolved").and_then(Json::as_str),
+        Some(decided.to_string().as_str()),
+        "auto must report what it merged as"
+    );
+}
+
+#[test]
 fn engine_selection_via_protocol() {
     let (_c, addr, rows, cols) = start();
     let mut client = Client::connect(addr).unwrap();

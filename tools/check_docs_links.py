@@ -1,0 +1,147 @@
+#!/usr/bin/env python3
+"""Verify that relative markdown links in the repo's docs resolve.
+
+CI runs this (``make check-docs``) over ``README.md`` and ``docs/*.md``
+so the architecture book cannot accumulate dead cross-references as the
+tree moves. Per file it extracts every inline markdown link/image
+target, skips what cannot be checked locally, and fails listing each
+broken link with its file and line.
+
+Checked:   relative targets (``docs/PROTOCOL.md``, ``../README.md``,
+           ``rust/tests/protocol_doc.rs``), with any ``#anchor`` suffix
+           stripped before the existence test.
+Skipped:   absolute URLs (``http(s)://``, ``mailto:``, any scheme),
+           pure in-page anchors (``#section``), and targets that
+           resolve outside the repository root — GitHub-web-relative
+           links such as the CI badge's ``../../actions/...`` have no
+           on-disk counterpart to test.
+Ignored:   fenced code blocks, so protocol examples and shell snippets
+           cannot produce false link syntax.
+
+Stdlib only — this must run on a bare CI python.
+
+Usage:
+  python3 tools/check_docs_links.py [FILE_OR_DIR ...]
+  # no arguments: README.md + docs/ relative to the repo root
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+
+# inline links and images: [text](target) / ![alt](target); the target
+# ends at the first whitespace (an optional "title" follows) or ')'
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+
+SCHEME_RE = re.compile(r"^[a-zA-Z][a-zA-Z0-9+.-]*:")
+
+
+def iter_links(text):
+    """Yield ``(line_number, target)`` for every inline link outside
+    fenced code blocks."""
+    in_fence = False
+    for lineno, line in enumerate(text.splitlines(), start=1):
+        if line.lstrip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in LINK_RE.finditer(line):
+            yield lineno, m.group(1)
+
+
+def classify(target, md_dir, root):
+    """Return ``("skip", reason)`` or ``("check", resolved_path)``."""
+    if SCHEME_RE.match(target):
+        return "skip", "absolute URL"
+    if target.startswith("#"):
+        return "skip", "in-page anchor"
+    path = target.split("#", 1)[0]
+    if not path:
+        return "skip", "empty target"
+    resolved = os.path.normpath(os.path.join(md_dir, path))
+    rel = os.path.relpath(resolved, root)
+    if rel.startswith(".."):
+        # e.g. the CI badge's GitHub-web-relative ../../actions/... —
+        # nothing on disk to verify
+        return "skip", "escapes the repository root"
+    return "check", resolved
+
+
+def check_file(md_path, root):
+    """Return a list of ``(line_number, target)`` broken links."""
+    with open(md_path, encoding="utf-8") as f:
+        text = f.read()
+    broken = []
+    md_dir = os.path.dirname(os.path.abspath(md_path))
+    for lineno, target in iter_links(text):
+        kind, resolved = classify(target, md_dir, root)
+        if kind == "check" and not os.path.exists(resolved):
+            broken.append((lineno, target))
+    return broken
+
+
+def collect_markdown(paths):
+    """Expand files/dirs into a sorted list of markdown files."""
+    out = []
+    for p in paths:
+        if os.path.isdir(p):
+            for name in sorted(os.listdir(p)):
+                if name.endswith(".md"):
+                    out.append(os.path.join(p, name))
+        else:
+            out.append(p)
+    return out
+
+
+def run(paths, root):
+    """Check every file; print findings; return the exit code."""
+    files = collect_markdown(paths)
+    if not files:
+        print("check_docs_links: no markdown files to check", file=sys.stderr)
+        return 1
+    failures = 0
+    for md in files:
+        if not os.path.exists(md):
+            print(f"check_docs_links: {md}: no such file", file=sys.stderr)
+            failures += 1
+            continue
+        for lineno, target in check_file(md, root):
+            print(f"{md}:{lineno}: broken link -> {target}", file=sys.stderr)
+            failures += 1
+    checked = len(files)
+    if failures:
+        print(f"check_docs_links: {failures} broken link(s) across {checked} file(s)",
+              file=sys.stderr)
+        return 1
+    print(f"check_docs_links: OK ({checked} file(s))")
+    return 0
+
+
+def main(argv=None):
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument(
+        "paths",
+        nargs="*",
+        help="markdown files or directories (default: README.md and docs/)",
+    )
+    parser.add_argument(
+        "--root",
+        default=None,
+        help="repository root for escape detection (default: this script's parent dir)",
+    )
+    args = parser.parse_args(argv)
+    root = os.path.abspath(
+        args.root
+        if args.root
+        else os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    )
+    paths = args.paths or [os.path.join(root, "README.md"), os.path.join(root, "docs")]
+    return run(paths, root)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
