@@ -6,7 +6,8 @@
 #   make bench-smoke  — compile + fast-run all paper-figure benches at CI scale
 #   make bench-preprocess — fig7 preprocessing bench at CI scale, JSON datapoint
 #   make bench-autotune — autotuner ablation at CI scale, JSON datapoint
-#   make bench-compare — gate fresh BENCH_preprocess.json + BENCH_autotune.json vs the committed baselines
+#   make bench-spmm   — fused-SpMM-vs-looped-SpMV ablation at CI scale, JSON datapoint
+#   make bench-compare — gate fresh BENCH_preprocess.json + BENCH_autotune.json + BENCH_spmm.json vs the committed baselines
 #   make check-docs   — verify relative links in README.md + docs/*.md resolve
 #   make artifacts    — AOT-lower the L1/L2 graphs to artifacts/ (HLO text)
 #   make clean        — drop build products
@@ -14,7 +15,7 @@
 CARGO  ?= cargo
 PYTHON ?= python3
 
-.PHONY: all build test test-python bench-smoke bench-build bench-preprocess bench-autotune bench-compare check-docs artifacts artifacts-quick clean
+.PHONY: all build test test-python bench-smoke bench-build bench-preprocess bench-autotune bench-spmm bench-compare check-docs artifacts artifacts-quick clean
 
 all: build
 
@@ -52,18 +53,28 @@ bench-autotune:
 	HBP_BENCH_FAST=1 HBP_BENCH_SCALE=ci HBP_BENCH_JSON=$(CURDIR)/BENCH_autotune.json \
 		$(CARGO) bench --bench ablation_autotune
 
+# Fused-SpMM perf datapoint: fused spmm vs looped spmv on the HBP
+# engine across k in {2,4,8,32} at CI scale, JSON to BENCH_spmm.json
+# (same committed-baseline + per-PR-artifact scheme as
+# bench-preprocess; schema in README).
+bench-spmm:
+	HBP_BENCH_FAST=1 HBP_BENCH_SCALE=ci HBP_BENCH_JSON=$(CURDIR)/BENCH_spmm.json \
+		$(CARGO) bench --bench ablation_spmm
+
 # Bench-trajectory gate: compare the freshly generated working-tree
-# bench JSONs against the committed (HEAD) baselines, both pairs in one
-# invocation. Fails on a >25% geomean regression over comparable
+# bench JSONs against the committed (HEAD) baselines, all three pairs
+# in one invocation. Fails on a >25% geomean regression over comparable
 # non-null timing fields; no-op while a committed seed is still
 # all-null. Writes per-matrix tables to $GITHUB_STEP_SUMMARY when CI
 # sets it.
 bench-compare:
 	git show HEAD:BENCH_preprocess.json > .bench_baseline_preprocess.json && \
 	git show HEAD:BENCH_autotune.json > .bench_baseline_autotune.json && \
+	git show HEAD:BENCH_spmm.json > .bench_baseline_spmm.json && \
 	$(PYTHON) tools/bench_compare.py \
 		--baseline .bench_baseline_preprocess.json --current BENCH_preprocess.json \
-		--baseline .bench_baseline_autotune.json --current BENCH_autotune.json; \
+		--baseline .bench_baseline_autotune.json --current BENCH_autotune.json \
+		--baseline .bench_baseline_spmm.json --current BENCH_spmm.json; \
 	s=$$?; rm -f .bench_baseline_*.json; exit $$s
 
 # Docs link gate: every relative link in README.md and docs/*.md must

@@ -56,6 +56,49 @@ def test_all_null_seed_baseline_passes(tmp_path, monkeypatch):
     assert _run(tmp_path, baseline, current, monkeypatch=monkeypatch) == 0
 
 
+def test_all_null_seed_baseline_warns_visibly(tmp_path, monkeypatch, capsys):
+    # a schema-only seed passes, but loudly: the section must carry an
+    # explicit not-armed WARNING on stdout AND in the step summary
+    baseline = _doc([_entry("m1"), _entry("m2")])
+    current = _doc([_entry("m1", build_serial_secs=0.5)])
+    summary = tmp_path / "summary.md"
+    assert (
+        _run(tmp_path, baseline, current, summary=str(summary), monkeypatch=monkeypatch) == 0
+    )
+    out = capsys.readouterr().out
+    assert "WARNING" in out and "NOT armed" in out
+    text = summary.read_text()
+    assert "WARNING" in text and "NOT armed" in text
+
+
+def test_armed_baseline_with_no_overlap_does_not_warn_not_armed(tmp_path, monkeypatch, capsys):
+    # baseline HAS measurements; the current run just produced none that
+    # overlap — this is the generic skip, not the seed warning
+    baseline = _doc([_entry("m1", build_serial_secs=1.0)])
+    current = _doc([_entry("m1")])
+    assert _run(tmp_path, baseline, current, monkeypatch=monkeypatch) == 0
+    out = capsys.readouterr().out
+    assert "NOT armed" not in out
+    assert "gate skipped" in out
+
+
+def test_baseline_armed_helper():
+    assert not bench_compare.baseline_armed(_doc([_entry("m1"), _entry("m2")]))
+    assert bench_compare.baseline_armed(_doc([_entry("m1", build_serial_secs=0.1)]))
+    # zero or negative timings don't arm (a 0.0 baseline can't gate ratios)
+    assert not bench_compare.baseline_armed(_doc([_entry("m1", build_serial_secs=0.0)]))
+    assert not bench_compare.baseline_armed({})
+
+
+def test_armed_pair_with_comparison_emits_no_warning(tmp_path, monkeypatch, capsys):
+    baseline = _doc([_entry("m1", build_serial_secs=1.0)])
+    current = _doc([_entry("m1", build_serial_secs=1.1)])
+    assert _run(tmp_path, baseline, current, monkeypatch=monkeypatch) == 0
+    out = capsys.readouterr().out
+    assert "WARNING" not in out
+    assert "Overall geomean" in out
+
+
 def test_within_threshold_passes(tmp_path, monkeypatch):
     baseline = _doc([_entry("m1", build_serial_secs=1.0, reorder_hbp_secs=0.1)])
     current = _doc([_entry("m1", build_serial_secs=1.2, reorder_hbp_secs=0.11)])

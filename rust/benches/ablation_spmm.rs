@@ -1,0 +1,137 @@
+//! Fused-SpMM ablation: what does fusing a batch of k vectors into one
+//! engine pass buy over k independent SpMV calls?
+//!
+//! For every suite matrix the HBP engine runs both sides of the
+//! coordinator's batching decision: **looped** (k × `spmv`, each call
+//! re-streaming every matrix element) vs **fused** (`spmm`, each element
+//! loaded once per tile of [`SPMM_TILE`] vectors and applied to the
+//! whole tile). k sweeps {2, 4, 8, 32}: below the tile cap, exactly at
+//! it, and well past it (32 → four tile passes).
+//!
+//! With `HBP_BENCH_JSON=<path>` the per-matrix timings are written as a
+//! JSON datapoint (`make bench-spmm` → `BENCH_spmm.json`, gated by
+//! `make bench-compare` next to the preprocessing and autotune
+//! trajectories; schema in README "Benchmarks").
+
+#[path = "common/mod.rs"]
+mod common;
+
+use hbp_spmv::exec::{HbpEngine, SpmvEngine, SPMM_TILE};
+use hbp_spmv::gen::random;
+use hbp_spmv::partition::PartitionConfig;
+use hbp_spmv::preprocess::{build_hbp_parallel, HashReorder};
+use hbp_spmv::util::bench::{banner, Table};
+use hbp_spmv::util::json::{num_arr, obj, Json};
+use hbp_spmv::util::timer::fmt_duration;
+use hbp_spmv::util::Timer;
+
+const KS: [usize; 4] = [2, 4, 8, 32];
+
+/// Best-of-`iters` wall time of one invocation of `f`.
+fn best_of(iters: usize, mut f: impl FnMut()) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..iters {
+        let t = Timer::start();
+        f();
+        best = best.min(t.elapsed_secs());
+    }
+    best
+}
+
+fn main() {
+    let threads = common::threads();
+    let cfg = PartitionConfig::default();
+    let fast = std::env::var("HBP_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let iters = if fast { 3 } else { 7 };
+    let json_path = std::env::var("HBP_BENCH_JSON").ok();
+    banner(
+        "SpMM",
+        &format!(
+            "Fused spmm vs looped spmv on the HBP engine over the Table-I suite \
+             (scale={}, {threads} threads, tile cap {SPMM_TILE}): one pass over the \
+             block schedule serves the whole tile",
+            common::scale_name(common::bench_scale()),
+        ),
+    );
+
+    let mut t = Table::new(&[
+        "id", "k=2 looped", "k=2 fused", "k=8 looped", "k=8 fused", "k=32 fused", "k=8 speedup",
+    ]);
+    let mut matrices = vec![];
+    for id in common::ALL_IDS {
+        let (meta, m) = common::load(id);
+        let hbp = build_hbp_parallel(&m, cfg, &HashReorder::default(), threads);
+        let eng = HbpEngine::new(hbp, threads, 0.25);
+        let mut fields: Vec<(String, Json)> = vec![];
+        let mut shown = [0.0f64; 5]; // k2 looped/fused, k8 looped/fused, k32 fused
+        for k in KS {
+            let xs: Vec<Vec<f64>> = (0..k).map(|i| random::vector(m.cols, i as u64)).collect();
+            let mut ys: Vec<Vec<f64>> = vec![vec![0.0; m.rows]; k];
+            // warmup both paths, then best-of timing
+            for (x, y) in xs.iter().zip(ys.iter_mut()) {
+                eng.spmv(x, y);
+            }
+            let looped = best_of(iters, || {
+                for (x, y) in xs.iter().zip(ys.iter_mut()) {
+                    eng.spmv(x, y);
+                }
+            });
+            eng.spmm(&xs, &mut ys);
+            let fused = best_of(iters, || eng.spmm(&xs, &mut ys));
+            fields.push((format!("looped_k{k}_secs"), Json::Num(looped)));
+            fields.push((format!("fused_k{k}_secs"), Json::Num(fused)));
+            match k {
+                2 => (shown[0], shown[1]) = (looped, fused),
+                8 => (shown[2], shown[3]) = (looped, fused),
+                32 => shown[4] = fused,
+                _ => {}
+            }
+        }
+        // looped/fused at the tile-cap width: >1 means fusing won
+        let speedup_k8 = shown[2] / shown[3].max(1e-12);
+        t.row(&[
+            meta.id.into(),
+            fmt_duration(shown[0]),
+            fmt_duration(shown[1]),
+            fmt_duration(shown[2]),
+            fmt_duration(shown[3]),
+            fmt_duration(shown[4]),
+            format!("{speedup_k8:.2}x"),
+        ]);
+
+        if json_path.is_some() {
+            let mut pairs: Vec<(&str, Json)> = vec![
+                ("id", Json::Str(meta.id.to_string())),
+                ("rows", Json::Num(m.rows as f64)),
+                ("cols", Json::Num(m.cols as f64)),
+                ("nnz", Json::Num(m.nnz() as f64)),
+                ("speedup_k8", Json::Num(speedup_k8)),
+            ];
+            for (k, v) in &fields {
+                pairs.push((k.as_str(), v.clone()));
+            }
+            matrices.push(obj(&pairs));
+        }
+    }
+    t.print();
+    println!(
+        "\nspeedup = looped/fused at k=8 (the tile cap); k=32 exercises the \
+         multi-pass path (4 tiles)"
+    );
+
+    if let Some(path) = json_path {
+        let doc = obj(&[
+            ("bench", Json::Str("spmm".to_string())),
+            ("ks", num_arr(&KS.map(|k| k as f64))),
+            (
+                "scale",
+                Json::Str(common::scale_name(common::bench_scale()).to_string()),
+            ),
+            ("threads", Json::Num(threads as f64)),
+            ("matrices", Json::Arr(matrices)),
+        ]);
+        std::fs::write(&path, format!("{doc}\n"))
+            .unwrap_or_else(|e| panic!("writing HBP_BENCH_JSON={path}: {e}"));
+        println!("\nwrote spmm datapoint to {path}");
+    }
+}

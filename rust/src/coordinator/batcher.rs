@@ -269,8 +269,10 @@ fn dispatcher(
 /// Execute a drained run of SpMV requests: finish deferred resolutions
 /// (one blocking re-resolve per matrix — this is where a staled
 /// decision re-tunes), group by `(matrix, resolved kind)`, run
-/// same-group requests as SpMM (element reuse across the batch), fall
-/// back to per-request on validation errors.
+/// same-group requests as one fused SpMM (element reuse across the
+/// batch; `spmm_fused_vectors` / `mean_spmm_width` record the widths).
+/// A mis-sized request is answered with its own error and never demotes
+/// the rest of its group to the looped path.
 fn flush_spmvs(router: &Router, metrics: &ServiceMetrics, mut batch: Vec<PendingSpmv>) {
     if batch.is_empty() {
         return;
@@ -311,55 +313,66 @@ fn flush_spmvs(router: &Router, metrics: &ServiceMetrics, mut batch: Vec<Pending
         // provenance counts only groups that target a hosted matrix —
         // an unknown-matrix group executes nothing and would skew the
         // merge evidence the resolved-batching metrics exist to give
-        if router.get(&matrix).is_ok() {
+        let cols = router.get(&matrix).ok().map(|m| m.cols);
+        if cols.is_some() {
             let auto_arrivals = reqs.iter().filter(|r| r.requested == EngineKind::Auto).count();
             metrics.record_group(reqs.len(), auto_arrivals, reqs.len() - auto_arrivals);
         }
         let engine = reqs[0].resolved;
-        if reqs.len() > 1 {
-            let dims_ok = router
-                .get(&matrix)
-                .map(|m| reqs.iter().all(|r| r.x.len() == m.cols))
-                .unwrap_or(false);
-            if dims_ok {
-                let t = crate::util::Timer::start();
-                // the inputs move into the batch call (no per-request
-                // clone on the hot path), so a batch failure answers
-                // every caller directly instead of falling back
-                let (replies, xs): (Vec<_>, Vec<_>) =
-                    reqs.into_iter().map(|r| (r.reply, r.x)).unzip();
-                match router.spmm(&matrix, engine, xs) {
-                    Ok(ys) => {
-                        let secs = t.elapsed_secs() / replies.len() as f64;
-                        let nnz = router.get(&matrix).map(|m| m.nnz).unwrap_or(0);
-                        for (reply, y) in replies.into_iter().zip(ys) {
-                            metrics.record_request(secs, nnz);
-                            let _ = reply.send(Ok(SpmvReply { y, resolved: engine }));
-                        }
-                    }
-                    // unreachable in practice: the matrix exists and
-                    // dims were pre-validated above
-                    Err(e) => {
-                        let msg = format!("{e:#}");
-                        for reply in replies {
-                            metrics.record_error();
-                            let _ = reply.send(Err(anyhow::anyhow!("batched spmv: {msg}")));
-                        }
+        // a mis-sized input must not poison the flush: only the bad
+        // request falls to the per-request path (answering with its own
+        // dimension error) while the well-formed rest still fuses
+        let (good, bad): (Vec<PendingSpmv>, Vec<PendingSpmv>) = match cols {
+            Some(cols) => reqs.into_iter().partition(|r| r.x.len() == cols),
+            None => (Vec::new(), reqs), // unknown matrix: all error below
+        };
+        if good.len() > 1 {
+            let t = crate::util::Timer::start();
+            // the inputs move into the batch call (no per-request
+            // clone on the hot path), so a batch failure answers
+            // every caller directly instead of falling back
+            let (replies, xs): (Vec<_>, Vec<_>) =
+                good.into_iter().map(|r| (r.reply, r.x)).unzip();
+            match router.spmm(&matrix, engine, xs) {
+                Ok(ys) => {
+                    metrics.record_spmm(replies.len());
+                    let secs = t.elapsed_secs() / replies.len() as f64;
+                    let nnz = router.get(&matrix).map(|m| m.nnz).unwrap_or(0);
+                    for (reply, y) in replies.into_iter().zip(ys) {
+                        metrics.record_request(secs, nnz);
+                        let _ = reply.send(Ok(SpmvReply { y, resolved: engine }));
                     }
                 }
-                continue;
+                // unreachable in practice: the matrix exists and
+                // dims were pre-validated above
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    for reply in replies {
+                        metrics.record_error();
+                        let _ = reply.send(Err(anyhow::anyhow!("batched spmv: {msg}")));
+                    }
+                }
+            }
+        } else {
+            for req in good {
+                let t = crate::util::Timer::start();
+                let result = router.spmv(&req.matrix, engine, &req.x);
+                match &result {
+                    Ok(_) => {
+                        let nnz = router.get(&req.matrix).map(|m| m.nnz).unwrap_or(0);
+                        metrics.record_request(t.elapsed_secs(), nnz);
+                    }
+                    Err(_) => metrics.record_error(),
+                }
+                let _ = req.reply.send(result.map(|y| SpmvReply { y, resolved: engine }));
             }
         }
-        for req in reqs {
-            let t = crate::util::Timer::start();
+        for req in bad {
+            // Router::spmv re-validates and produces the canonical
+            // dimension (or unknown-matrix) error for this request —
+            // by construction it cannot succeed here
             let result = router.spmv(&req.matrix, engine, &req.x);
-            match &result {
-                Ok(_) => {
-                    let nnz = router.get(&req.matrix).map(|m| m.nnz).unwrap_or(0);
-                    metrics.record_request(t.elapsed_secs(), nnz);
-                }
-                Err(_) => metrics.record_error(),
-            }
+            metrics.record_error();
             let _ = req.reply.send(result.map(|y| SpmvReply { y, resolved: engine }));
         }
     }
@@ -481,6 +494,50 @@ mod tests {
         assert_eq!(snap.batch_groups, 2, "different resolutions must not merge");
         assert_eq!(snap.batch_merged_auto, 0);
         assert!((snap.mean_group_size - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fused_group_records_spmm_width() {
+        let (router, metrics) = setup();
+        let cols = router.get("m").unwrap().cols;
+        let batcher = Batcher::start(router.clone(), metrics.clone(), merge_cfg());
+        let h = batcher.handle();
+        let rxs: Vec<_> = (0..3)
+            .map(|i| send_spmv(&h, "m", EngineKind::Hbp, random::vector(cols, i)))
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        let snap = metrics.snapshot();
+        assert_eq!(snap.requests, 3);
+        assert_eq!(snap.batch_groups, 1);
+        assert_eq!(snap.spmm_fused_vectors, 3, "the whole group took the fused path");
+        assert!((snap.mean_spmm_width - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mis_sized_request_errors_alone_without_demoting_the_group() {
+        let (router, metrics) = setup();
+        let cols = router.get("m").unwrap().cols;
+        let batcher = Batcher::start(router.clone(), metrics.clone(), merge_cfg());
+        let h = batcher.handle();
+        // two well-formed requests + one with a short vector, same group
+        let rx_a = send_spmv(&h, "m", EngineKind::Hbp, random::vector(cols, 1));
+        let rx_bad = send_spmv(&h, "m", EngineKind::Hbp, random::vector(cols - 1, 2));
+        let rx_b = send_spmv(&h, "m", EngineKind::Hbp, random::vector(cols, 3));
+        let a = rx_a.recv().unwrap();
+        let bad = rx_bad.recv().unwrap();
+        let b = rx_b.recv().unwrap();
+        assert!(a.is_ok() && b.is_ok(), "well-formed requests must still be answered");
+        let err = format!("{:#}", bad.unwrap_err());
+        assert!(err.contains("cols"), "dimension error must name the mismatch: {err}");
+        let snap = metrics.snapshot();
+        assert_eq!(snap.requests, 2);
+        assert_eq!(snap.errors, 1);
+        assert_eq!(
+            snap.spmm_fused_vectors, 2,
+            "the two good requests must still fuse instead of falling back"
+        );
     }
 
     #[test]

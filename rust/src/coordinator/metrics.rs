@@ -32,6 +32,9 @@ struct Inner {
     batch_groups: u64,
     batch_merged_auto: u64,
     group_size: Welford,
+    // fused SpMM (multi-vector groups executed in one engine pass)
+    spmm_fused_vectors: u64,
+    spmm_width: Welford,
 }
 
 /// Thread-safe service metrics.
@@ -69,6 +72,8 @@ impl ServiceMetrics {
                 batch_groups: 0,
                 batch_merged_auto: 0,
                 group_size: Welford::new(),
+                spmm_fused_vectors: 0,
+                spmm_width: Welford::new(),
             }),
         }
     }
@@ -101,6 +106,16 @@ impl ServiceMetrics {
         if auto_requests > 0 && explicit_requests > 0 {
             m.batch_merged_auto += auto_requests as u64;
         }
+    }
+
+    /// Record one fused SpMM execution: `width` vectors answered by a
+    /// single engine pass (the group sizes that actually took the fused
+    /// path, as opposed to `mean_group_size` which counts every flushed
+    /// group including singletons and fallbacks).
+    pub fn record_spmm(&self, width: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.spmm_fused_vectors += width as u64;
+        m.spmm_width.push(width as f64);
     }
 
     /// Record one applied matrix delta: its latency and how much of the
@@ -153,6 +168,8 @@ impl ServiceMetrics {
             batch_groups: m.batch_groups,
             batch_merged_auto: m.batch_merged_auto,
             mean_group_size: m.group_size.mean(),
+            spmm_fused_vectors: m.spmm_fused_vectors,
+            mean_spmm_width: m.spmm_width.mean(),
         }
     }
 }
@@ -202,6 +219,11 @@ pub struct MetricsSnapshot {
     pub batch_merged_auto: u64,
     /// Mean requests per flushed group.
     pub mean_group_size: f64,
+    /// Vectors answered by fused multi-vector SpMM passes (each matrix
+    /// traversal amortized across the whole group).
+    pub spmm_fused_vectors: u64,
+    /// Mean vectors per fused SpMM execution.
+    pub mean_spmm_width: f64,
 }
 
 impl MetricsSnapshot {
@@ -228,6 +250,8 @@ impl MetricsSnapshot {
             ("batch_groups", Json::Num(self.batch_groups as f64)),
             ("batch_merged_auto", Json::Num(self.batch_merged_auto as f64)),
             ("mean_group_size", Json::Num(self.mean_group_size)),
+            ("spmm_fused_vectors", Json::Num(self.spmm_fused_vectors as f64)),
+            ("mean_spmm_width", Json::Num(self.mean_spmm_width)),
         ])
     }
 }
@@ -318,6 +342,19 @@ mod tests {
         assert_eq!(j.get("batch_groups").and_then(|v| v.as_usize()), Some(3));
         assert_eq!(j.get("batch_merged_auto").and_then(|v| v.as_usize()), Some(2));
         assert!(j.get("mean_group_size").is_some());
+    }
+
+    #[test]
+    fn records_fused_spmm_widths() {
+        let m = ServiceMetrics::new();
+        m.record_spmm(4);
+        m.record_spmm(2);
+        let s = m.snapshot();
+        assert_eq!(s.spmm_fused_vectors, 6);
+        assert!((s.mean_spmm_width - 3.0).abs() < 1e-12);
+        let j = s.to_json();
+        assert_eq!(j.get("spmm_fused_vectors").and_then(|v| v.as_usize()), Some(6));
+        assert!(j.get("mean_spmm_width").is_some());
     }
 
     #[test]

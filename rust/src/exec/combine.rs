@@ -87,6 +87,112 @@ pub fn combine_on_pool(
     pool.run_generation(|w, _| combine_worker(hbp, &by_bi, partials, &shared, w, threads));
 }
 
+/// Tile (fused SpMM) variant of [`combine_on_pool`]: one traversal of
+/// the block list reduces a whole tile of `ys.len()` output vectors.
+///
+/// `partials` is the column-major partials tile written by the fused
+/// block kernels: block `b`'s contribution to vector `v` at local row
+/// `r` lives at `partials[(b.slot_start + r) * tile + v]`. Running the
+/// combine once per tile (not once per vector) amortizes the row-block
+/// bookkeeping and the partials stream across the batch.
+pub fn combine_tile_on_pool(
+    hbp: &Hbp,
+    partials: &[f64],
+    ys: &mut [Vec<f64>],
+    pool: &crate::util::pool::WorkerPool,
+) {
+    let tile = ys.len();
+    for y in ys.iter_mut() {
+        assert_eq!(y.len(), hbp.rows);
+        y.fill(0.0);
+    }
+    if hbp.blocks.is_empty() || tile == 0 {
+        return;
+    }
+    let by_bi = blocks_by_row_block(hbp);
+    let threads = pool.workers;
+    let shareds: Vec<SharedMut<'_, f64>> =
+        ys.iter_mut().map(|y| SharedMut::new(&mut y[..])).collect();
+    pool.run_generation(|w, _| {
+        for bi in (w..by_bi.len()).step_by(threads) {
+            if by_bi[bi].is_empty() {
+                continue;
+            }
+            let (rs, re) = hbp.grid.row_range(bi);
+            // SAFETY: row-block ranges are disjoint across workers, and
+            // the `shareds` point at distinct output vectors.
+            let mut outs: Vec<&mut [f64]> =
+                shareds.iter().map(|s| unsafe { s.slice_mut(rs, re - rs) }).collect();
+            for &bidx in &by_bi[bi] {
+                let b: &HbpBlock = &hbp.blocks[bidx];
+                let part = &partials[b.slot_start * tile..(b.slot_start + b.nrows) * tile];
+                for r in 0..b.nrows {
+                    let row = &part[r * tile..(r + 1) * tile];
+                    for (out, p) in outs.iter_mut().zip(row) {
+                        out[r] += p;
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Tile variant of [`combine_sparse_on_pool`]: the per-block active-row
+/// lists of a [`CombineIndex`] drive one reduction over the whole tile.
+pub fn combine_sparse_tile_on_pool(
+    hbp: &Hbp,
+    index: &CombineIndex,
+    partials: &[f64],
+    ys: &mut [Vec<f64>],
+    pool: &crate::util::pool::WorkerPool,
+) {
+    let tile = ys.len();
+    for y in ys.iter_mut() {
+        assert_eq!(y.len(), hbp.rows);
+        y.fill(0.0);
+    }
+    if hbp.blocks.is_empty() || tile == 0 {
+        return;
+    }
+    let threads = pool.workers;
+    let shareds: Vec<SharedMut<'_, f64>> =
+        ys.iter_mut().map(|y| SharedMut::new(&mut y[..])).collect();
+    pool.run_generation(|w, _| {
+        for bi in (w..index.by_bi.len()).step_by(threads) {
+            if index.by_bi[bi].is_empty() {
+                continue;
+            }
+            let (rs, re) = hbp.grid.row_range(bi);
+            // SAFETY: as in `combine_tile_on_pool`.
+            let mut outs: Vec<&mut [f64]> =
+                shareds.iter().map(|s| unsafe { s.slice_mut(rs, re - rs) }).collect();
+            for &bidx in &index.by_bi[bi] {
+                let b: &HbpBlock = &hbp.blocks[bidx];
+                let part = &partials[b.slot_start * tile..(b.slot_start + b.nrows) * tile];
+                match &index.active[bidx] {
+                    Some(rows) => {
+                        for &orig in rows {
+                            let r = orig as usize;
+                            let row = &part[r * tile..(r + 1) * tile];
+                            for (out, p) in outs.iter_mut().zip(row) {
+                                out[r] += p;
+                            }
+                        }
+                    }
+                    None => {
+                        for r in 0..b.nrows {
+                            let row = &part[r * tile..(r + 1) * tile];
+                            for (out, p) in outs.iter_mut().zip(row) {
+                                out[r] += p;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
 /// Precomputed sparsity index for [`combine_sparse_on_pool`]: per block,
 /// the local rows that have at least one nonzero in that block. The
 /// paper's Discussion observes that "the generated intermediate vectors
@@ -248,6 +354,62 @@ mod tests {
         // and in the real engine (partials written by Alg 3, inactive
         // slots are exact 0.0) dense == sparse — checked in hbp.rs tests
         let _ = dense;
+    }
+
+    #[test]
+    fn tile_combine_matches_per_vector_combine() {
+        let m = random::power_law_rows(120, 100, 2.0, 25, 6);
+        let hbp = build_hbp(&m, PartitionConfig::test_small());
+        let total_slots: usize = hbp.blocks.iter().map(|b| b.nrows).sum();
+        let tile = 3;
+        // column-major tile: vector v's partial at slot s is (s*7+v)%11
+        let tiled: Vec<f64> =
+            (0..total_slots * tile).map(|i| ((i / tile) * 7 + i % tile) as f64 % 11.0).collect();
+        let pool = crate::util::pool::WorkerPool::new(2);
+        let mut ys = vec![vec![9.0; 120]; tile];
+        combine_tile_on_pool(&hbp, &tiled, &mut ys, &pool);
+        for v in 0..tile {
+            let partials: Vec<f64> = (0..total_slots).map(|s| tiled[s * tile + v]).collect();
+            let mut expect = vec![0.0; 120];
+            combine(&hbp, &partials, &mut expect, 2);
+            assert!(allclose(&ys[v], &expect, 1e-12, 1e-12), "vector {v}");
+        }
+    }
+
+    #[test]
+    fn sparse_tile_combine_matches_dense_tile_on_written_partials() {
+        // zero-row-heavy matrix so the sparse path activates; zero-row
+        // slots hold exact 0.0 (as the fused kernels write them), so
+        // dense and sparse tile combines must agree everywhere
+        let mut lens = vec![0usize; 200];
+        for i in (0..200).step_by(7) {
+            lens[i] = 5;
+        }
+        let m = random::with_row_lengths(&lens, 120, 11);
+        let hbp = build_hbp(&m, PartitionConfig::test_small());
+        let idx = CombineIndex::build(&hbp);
+        assert!(idx.sparse_fraction() > 0.5, "sparse path not taken");
+        let total_slots: usize = hbp.blocks.iter().map(|b| b.nrows).sum();
+        let tile = 4;
+        let mut tiled = vec![0.0; total_slots * tile];
+        for (bidx, b) in hbp.blocks.iter().enumerate() {
+            for s in 0..b.nrows {
+                if hbp.zero_row[b.slot_start + s] != -1 {
+                    let orig = hbp.output_hash[b.slot_start + s] as usize;
+                    for v in 0..tile {
+                        tiled[(b.slot_start + orig) * tile + v] = (bidx + s * tile + v) as f64;
+                    }
+                }
+            }
+        }
+        let pool = crate::util::pool::WorkerPool::new(3);
+        let mut dense = vec![vec![0.0; 200]; tile];
+        let mut sparse = vec![vec![0.0; 200]; tile];
+        combine_tile_on_pool(&hbp, &tiled, &mut dense, &pool);
+        combine_sparse_tile_on_pool(&hbp, &idx, &tiled, &mut sparse, &pool);
+        for v in 0..tile {
+            assert!(allclose(&sparse[v], &dense[v], 1e-12, 1e-12), "vector {v}");
+        }
     }
 
     #[test]

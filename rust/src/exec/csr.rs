@@ -131,15 +131,11 @@ impl SpmvEngine for CsrParallel {
     /// and applied to the whole batch (k-way reuse of the expensive
     /// stream) — the win the coordinator's same-matrix batching buys.
     fn spmm(&self, xs: &[Vec<f64>], ys: &mut [Vec<f64>]) {
-        assert_eq!(xs.len(), ys.len());
+        super::engine::check_spmm_dims("csr", self.m.rows, self.m.cols, xs, ys);
         if xs.is_empty() {
             return;
         }
         let k = xs.len();
-        for (i, x) in xs.iter().enumerate() {
-            assert_eq!(x.len(), self.m.cols, "xs[{i}] length");
-            assert_eq!(ys[i].len(), self.m.rows, "ys[{i}] length");
-        }
         // collect raw output pointers; each worker writes disjoint rows
         let y_ptrs: Vec<crate::util::sync::SharedMut<f64>> = ys
             .iter_mut()

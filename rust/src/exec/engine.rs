@@ -19,6 +19,30 @@ impl PhaseTimes {
     }
 }
 
+/// Tile-width cap for fused SpMM: a batch of `k > SPMM_TILE` vectors is
+/// split into passes of at most this many, so per-lane accumulator
+/// scratch stays on the stack and the per-pass x-tile stays
+/// cache-resident (the CPU analog of the GPU shared-memory budget).
+pub const SPMM_TILE: usize = 8;
+
+/// Validate a batch up front with a precise panic message. Every
+/// `spmm` implementation calls this first: without it a mis-sized `ys`
+/// row faults deep inside a kernel (an opaque out-of-bounds index), and
+/// a mis-sized `xs` row can silently read the wrong element.
+pub fn check_spmm_dims(name: &str, rows: usize, cols: usize, xs: &[Vec<f64>], ys: &[Vec<f64>]) {
+    assert_eq!(
+        xs.len(),
+        ys.len(),
+        "{name} spmm: {} input vectors but {} outputs",
+        xs.len(),
+        ys.len()
+    );
+    for (i, (x, y)) in xs.iter().zip(ys).enumerate() {
+        assert_eq!(x.len(), cols, "{name} spmm: xs[{i}] length {} != cols {cols}", x.len());
+        assert_eq!(y.len(), rows, "{name} spmm: ys[{i}] length {} != rows {rows}", y.len());
+    }
+}
+
 /// A sparse matrix-vector multiplication engine.
 pub trait SpmvEngine: Sync {
     /// Engine name for bench tables ("csr", "2d", "hbp", ...).
@@ -41,7 +65,7 @@ pub trait SpmvEngine: Sync {
     /// loop that reuses each matrix element across the batch — this is
     /// what makes the coordinator's same-matrix batching pay off.
     fn spmm(&self, xs: &[Vec<f64>], ys: &mut [Vec<f64>]) {
-        assert_eq!(xs.len(), ys.len());
+        check_spmm_dims(self.name(), self.rows(), self.cols(), xs, ys);
         for (x, y) in xs.iter().zip(ys.iter_mut()) {
             self.spmv(x, y);
         }
@@ -70,5 +94,23 @@ mod tests {
     fn phase_times_total() {
         let p = PhaseTimes { spmv: 1.5, combine: 0.5 };
         assert!((p.total() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn check_spmm_dims_accepts_well_formed_batches() {
+        check_spmm_dims("t", 3, 2, &[vec![0.0; 2]], &[vec![0.0; 3]]);
+        check_spmm_dims("t", 3, 2, &[], &[]);
+    }
+
+    #[test]
+    #[should_panic(expected = "ys[0] length")]
+    fn check_spmm_dims_rejects_short_output_row() {
+        check_spmm_dims("t", 3, 2, &[vec![0.0; 2]], &[vec![0.0; 1]]);
+    }
+
+    #[test]
+    #[should_panic(expected = "xs[1] length")]
+    fn check_spmm_dims_rejects_short_input_row() {
+        check_spmm_dims("t", 3, 2, &[vec![0.0; 2], vec![0.0; 9]], &[vec![0.0; 3]; 2]);
     }
 }

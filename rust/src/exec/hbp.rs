@@ -8,9 +8,12 @@
 //! partial vector at the *pre-hash* row (`output_hash[slot]`); the
 //! combine phase then reduces partials across column blocks.
 
-use super::combine::{combine_on_pool, combine_sparse_on_pool, CombineIndex};
-use super::engine::{PhaseTimes, SpmvEngine};
-use super::scheduler::{mixed_schedule, MixedSchedule, WorkerStats};
+use super::combine::{
+    combine_on_pool, combine_sparse_on_pool, combine_sparse_tile_on_pool, combine_tile_on_pool,
+    CombineIndex,
+};
+use super::engine::{check_spmm_dims, PhaseTimes, SpmvEngine, SPMM_TILE};
+use super::scheduler::{absorb_stats, mixed_schedule, MixedSchedule, WorkerStats};
 use crate::formats::Csr;
 use crate::partition::{block_map, BlockMap, PartitionConfig};
 use crate::preprocess::{build_hbp_updatable, Hbp, HbpBlock, MatrixDelta, Reorder, UpdateReport};
@@ -203,6 +206,78 @@ impl HbpEngine {
         Self::block_spmv(hbp, b, x, out)
     }
 
+    /// Fused multi-vector variant of [`Self::block_spmv`]: one linear
+    /// walk of the block's elements computes a whole tile of products.
+    ///
+    /// Each element's `(col, data, add_sign)` triple is loaded once and
+    /// applied to every vector in the tile — the k-way reuse of the
+    /// expensive stream that same-matrix batching buys. `out` is the
+    /// block's **column-major partials tile**: vector `v`'s partial for
+    /// local row `r` lands at `out[r * tile + v]`, so the per-round
+    /// inner loop writes contiguously. The x-tile (`tile` block-column
+    /// segments of the inputs) is what stays cache-resident per pass —
+    /// the reason callers cap `tile` at [`SPMM_TILE`].
+    #[inline]
+    pub(crate) fn block_spmm(hbp: &Hbp, b: &HbpBlock, xs: &[&[f64]], out: &mut [f64]) {
+        let tile = xs.len();
+        debug_assert!(tile >= 1 && tile <= SPMM_TILE, "tile {tile} exceeds cap");
+        let warp = hbp.grid.cfg.warp;
+        let (cs, _) = hbp.grid.col_range(b.bj as usize);
+        // the cache-resident x-tile: this block-column's segment of
+        // every vector in the pass
+        let mut x_seg: [&[f64]; SPMM_TILE] = [&[]; SPMM_TILE];
+        for (seg, x) in x_seg.iter_mut().zip(xs) {
+            *seg = &x[cs..];
+        }
+        // lane accumulators (tile-strided) + live list, reused per group
+        let mut acc = [0.0f64; 64 * SPMM_TILE];
+        let mut live: [u16; 64] = [0; 64];
+        debug_assert!(warp <= 64, "warp larger than lane scratch");
+        for g in 0..b.ngroups {
+            let slot_lo = g * warp;
+            let slot_hi = ((g + 1) * warp).min(b.nrows);
+            let mut j = hbp.begin_ptr[b.group_start + g];
+
+            let mut n_live = 0usize;
+            for s in slot_lo..slot_hi {
+                let orig = hbp.output_hash[b.slot_start + s] as usize;
+                if hbp.zero_row[b.slot_start + s] == -1 {
+                    out[orig * tile..(orig + 1) * tile].fill(0.0); // Algorithm 3 line 5
+                } else {
+                    live[n_live] = s as u16;
+                    acc[n_live * tile..(n_live + 1) * tile].fill(0.0);
+                    n_live += 1;
+                }
+            }
+
+            // round-by-round linear walk as in block_spmv, with the
+            // element's (data, col) amortized over the whole tile
+            while n_live > 0 {
+                let mut w = 0usize;
+                for r in 0..n_live {
+                    let a = hbp.data[j];
+                    let c = hbp.col[j] as usize;
+                    let last = hbp.add_sign[j] == -1;
+                    j += 1;
+                    if last {
+                        let s = live[r] as usize;
+                        let orig = hbp.output_hash[b.slot_start + s] as usize;
+                        for v in 0..tile {
+                            out[orig * tile + v] = acc[r * tile + v] + a * x_seg[v][c];
+                        }
+                    } else {
+                        for v in 0..tile {
+                            acc[w * tile + v] = acc[r * tile + v] + a * x_seg[v][c];
+                        }
+                        live[w] = live[r];
+                        w += 1;
+                    }
+                }
+                n_live = w;
+            }
+        }
+    }
+
     /// Run the SpMV phase only, returning per-worker stats (used by the
     /// competitive-fraction ablation and the Fig. 9 breakdown).
     pub fn spmv_partials(&self, x: &[f64], partials: &mut [f64]) -> Vec<WorkerStats> {
@@ -217,6 +292,54 @@ impl HbpEngine {
             let out = unsafe { shared.slice_mut(b.slot_start, b.nrows) };
             Self::block_spmv(hbp, b, x, out);
         })
+    }
+
+    /// Run the fused SpMM phase for one tile pass (`xs.len() <=
+    /// SPMM_TILE` vectors), writing the column-major partials tile.
+    /// Same mixed schedule and per-worker stats as [`Self::spmv_partials`],
+    /// one schedule traversal for the whole tile.
+    pub fn spmm_partials(&self, xs: &[&[f64]], partials: &mut [f64]) -> Vec<WorkerStats> {
+        let tile = xs.len();
+        assert!((1..=SPMM_TILE).contains(&tile), "tile {tile} out of range");
+        assert_eq!(partials.len(), self.total_slots * tile);
+        let hbp = &self.hbp;
+        let shared = SharedMut::new(partials);
+        self.pool.run_mixed(&self.schedule, |bidx| {
+            let b = &hbp.blocks[bidx];
+            // SAFETY: each block owns the disjoint tile-strided slot
+            // range; the scheduler guarantees exactly-once execution.
+            let out = unsafe { shared.slice_mut(b.slot_start * tile, b.nrows * tile) };
+            Self::block_spmm(hbp, b, xs, out);
+        })
+    }
+
+    /// Fused SpMM over the whole batch: `k` is split into passes of at
+    /// most [`SPMM_TILE`] vectors; each pass makes one traversal of the
+    /// block schedule and one tile combine. Returns per-worker stats
+    /// accumulated across the passes (the batch-level analog of
+    /// [`Self::spmv_partials`]'s per-call stats).
+    pub fn spmm_tiled(&self, xs: &[Vec<f64>], ys: &mut [Vec<f64>]) -> Vec<WorkerStats> {
+        check_spmm_dims("hbp", self.hbp.rows, self.hbp.cols, xs, ys);
+        let mut totals: Vec<WorkerStats> = Vec::new();
+        let mut partials = self.partials.lock().unwrap();
+        let mut lo = 0;
+        while lo < xs.len() {
+            let hi = (lo + SPMM_TILE).min(xs.len());
+            let tile = hi - lo;
+            partials.resize(self.total_slots * tile, 0.0);
+            let x_tile: Vec<&[f64]> = xs[lo..hi].iter().map(|x| x.as_slice()).collect();
+            let pass = self.spmm_partials(&x_tile, &mut partials[..self.total_slots * tile]);
+            absorb_stats(&mut totals, &pass);
+            let y_tile = &mut ys[lo..hi];
+            match &self.combine_index {
+                Some(idx) => {
+                    combine_sparse_tile_on_pool(&self.hbp, idx, &partials, y_tile, &self.pool)
+                }
+                None => combine_tile_on_pool(&self.hbp, &partials, y_tile, &self.pool),
+            }
+            lo = hi;
+        }
+        totals
     }
 
     pub fn total_slots(&self) -> usize {
@@ -252,6 +375,20 @@ impl SpmvEngine for HbpEngine {
             None => combine_on_pool(&self.hbp, &partials, y, &self.pool),
         }
         PhaseTimes { spmv: spmv_secs, combine: t.elapsed_secs() }
+    }
+
+    /// Fused SpMM: one pass over the block schedule per tile of at most
+    /// [`SPMM_TILE`] vectors (see [`HbpEngine::spmm_tiled`]).
+    fn spmm(&self, xs: &[Vec<f64>], ys: &mut [Vec<f64>]) {
+        check_spmm_dims("hbp", self.hbp.rows, self.hbp.cols, xs, ys);
+        if xs.len() < 2 {
+            // a single vector gains nothing from the tile machinery
+            for (x, y) in xs.iter().zip(ys.iter_mut()) {
+                self.spmv(x, y);
+            }
+            return;
+        }
+        self.spmm_tiled(xs, ys);
     }
 
     fn update(&mut self, delta: &MatrixDelta) -> anyhow::Result<UpdateReport> {
@@ -426,6 +563,57 @@ mod tests {
         let hbp = build_hbp(&m, PartitionConfig::test_small());
         let mut eng = HbpEngine::new(hbp, 2, 0.25);
         assert!(eng.update(&MatrixDelta::new().zero_row(0)).is_err());
+    }
+
+    #[test]
+    fn fused_spmm_matches_repeated_spmv_across_tile_boundary() {
+        let m = random::power_law_rows(180, 140, 2.0, 35, 29);
+        let hbp = build_hbp(&m, PartitionConfig::test_small());
+        let eng = HbpEngine::new(hbp, 3, 0.25);
+        // k straddles the tile cap so the multi-pass path runs
+        let k = SPMM_TILE + 2;
+        let xs: Vec<Vec<f64>> = (0..k).map(|i| random::vector(140, i as u64)).collect();
+        let mut ys: Vec<Vec<f64>> = vec![vec![0.0; 180]; k];
+        eng.spmm(&xs, &mut ys);
+        for (x, y) in xs.iter().zip(&ys) {
+            let mut expect = vec![0.0; 180];
+            eng.spmv(x, &mut expect);
+            assert!(allclose(y, &expect, 1e-12, 1e-12));
+        }
+    }
+
+    #[test]
+    fn spmm_tiled_stats_cover_every_block_once_per_pass() {
+        let m = random::power_law_rows(150, 150, 2.0, 30, 31);
+        let hbp = build_hbp(&m, PartitionConfig::test_small());
+        let blocks = hbp.blocks.len();
+        let eng = HbpEngine::new(hbp, 4, 0.25);
+        let k = 2 * SPMM_TILE + 3; // three passes
+        let xs: Vec<Vec<f64>> = (0..k).map(|i| random::vector(150, i as u64)).collect();
+        let mut ys: Vec<Vec<f64>> = vec![vec![0.0; 150]; k];
+        let stats = eng.spmm_tiled(&xs, &mut ys);
+        assert_eq!(stats.len(), 4);
+        let done: usize = stats.iter().map(|w| w.fixed_done + w.competitive_done).sum();
+        assert_eq!(done, 3 * blocks, "each pass must execute every block exactly once");
+    }
+
+    #[test]
+    fn fused_spmm_sparse_and_dense_combine_agree() {
+        // zero-row-heavy matrix: the sparse tile combine activates
+        let mut lens = vec![0usize; 300];
+        for i in (0..300).step_by(5) {
+            lens[i] = 8;
+        }
+        let m = random::with_row_lengths(&lens, 200, 23);
+        let cfg = PartitionConfig::test_small();
+        let sparse_eng = HbpEngine::new(build_hbp(&m, cfg), 3, 0.25);
+        let dense_eng = HbpEngine::new(build_hbp(&m, cfg), 3, 0.25).with_dense_combine();
+        let xs: Vec<Vec<f64>> = (0..4).map(|i| random::vector(200, i)).collect();
+        let mut ys = vec![vec![0.0; 300]; 4];
+        let mut yd = vec![vec![0.0; 300]; 4];
+        sparse_eng.spmm(&xs, &mut ys);
+        dense_eng.spmm(&xs, &mut yd);
+        assert_eq!(ys, yd, "sparse tile combine diverged from dense");
     }
 
     #[test]

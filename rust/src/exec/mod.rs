@@ -24,9 +24,9 @@ pub mod combine;
 pub mod scheduler;
 pub mod nnz_split;
 
-pub use engine::{PhaseTimes, SpmvEngine};
+pub use engine::{check_spmm_dims, PhaseTimes, SpmvEngine, SPMM_TILE};
 pub use csr::{CsrParallel, CsrSerial};
 pub use hbp::HbpEngine;
 pub use nnz_split::NnzSplitEngine;
-pub use scheduler::{mixed_schedule, run_mixed, MixedSchedule, WorkerStats};
+pub use scheduler::{absorb_stats, mixed_schedule, run_mixed, MixedSchedule, WorkerStats};
 pub use spmv2d::Spmv2dEngine;

@@ -13,7 +13,7 @@
 //! (block-static), HBP (hash-grouped + competitive), nnz-split
 //! (perfectly nnz-balanced, but with none of HBP's locality control).
 
-use super::engine::{PhaseTimes, SpmvEngine};
+use super::engine::{check_spmm_dims, PhaseTimes, SpmvEngine, SPMM_TILE};
 use crate::formats::Csr;
 use crate::util::pool::WorkerPool;
 use crate::util::sync::SharedMut;
@@ -22,6 +22,11 @@ use std::sync::Mutex;
 
 /// Per-worker boundary contribution: `(row, partial_sum)`.
 type Boundary = (usize, f64);
+
+/// Boundary contribution of a fused tile pass: `(row, per-vector
+/// partial sums)` — only the first `tile` entries of the array are
+/// meaningful.
+type TileBoundary = (usize, [f64; SPMM_TILE]);
 
 /// Nonzero-split SpMV engine.
 pub struct NnzSplitEngine {
@@ -137,6 +142,91 @@ impl SpmvEngine for NnzSplitEngine {
         }
         PhaseTimes { spmv: t.elapsed_secs(), combine: 0.0 }
     }
+
+    /// Fused SpMM: per tile of at most [`SPMM_TILE`] vectors, one walk
+    /// of each worker's nonzero range computes the whole tile's sums —
+    /// each `(data, col)` pair is loaded once per pass instead of once
+    /// per vector. Boundary rows carry per-vector partials into the
+    /// serial fix-up, which also runs once per tile.
+    fn spmm(&self, xs: &[Vec<f64>], ys: &mut [Vec<f64>]) {
+        check_spmm_dims("nnz-split", self.m.rows, self.m.cols, xs, ys);
+        if xs.len() < 2 {
+            for (x, y) in xs.iter().zip(ys.iter_mut()) {
+                self.spmv(x, y);
+            }
+            return;
+        }
+        for y in ys.iter_mut() {
+            y.fill(0.0);
+        }
+        let mut t_lo = 0;
+        while t_lo < xs.len() {
+            let t_hi = (t_lo + SPMM_TILE).min(xs.len());
+            let tile = t_hi - t_lo;
+            let x_tile = &xs[t_lo..t_hi];
+            let mut bounds: Vec<(Option<TileBoundary>, Option<TileBoundary>)> =
+                vec![(None, None); self.threads];
+            {
+                let y_ptrs: Vec<SharedMut<'_, f64>> = ys[t_lo..t_hi]
+                    .iter_mut()
+                    .map(|y| SharedMut::new(&mut y[..]))
+                    .collect();
+                let shared_b = SharedMut::new(&mut bounds[..]);
+                let m = &self.m;
+                self.pool.run_generation(|w, _| {
+                    let (lo, hi) = (self.splits[w], self.splits[w + 1]);
+                    if lo >= hi {
+                        return;
+                    }
+                    let mut first: Option<TileBoundary> = None;
+                    let mut last: Option<TileBoundary> = None;
+                    let mut r = self.first_row[w];
+                    let mut k = lo;
+                    while k < hi {
+                        while m.ptr[r + 1] <= k {
+                            r += 1;
+                        }
+                        let row_end = m.ptr[r + 1].min(hi);
+                        let mut sums = [0.0f64; SPMM_TILE];
+                        for j in k..row_end {
+                            let a = m.data[j];
+                            let c = m.col[j] as usize;
+                            for (s, x) in sums[..tile].iter_mut().zip(x_tile) {
+                                *s += a * x[c];
+                            }
+                        }
+                        let starts_before = m.ptr[r] < lo;
+                        let ends_after = m.ptr[r + 1] > hi;
+                        if starts_before {
+                            first = Some((r, sums));
+                        } else if ends_after {
+                            last = Some((r, sums));
+                        } else {
+                            // SAFETY: only this worker owns rows entirely
+                            // inside its nnz range; the y_ptrs point at
+                            // distinct output vectors.
+                            for (v, yp) in y_ptrs.iter().enumerate() {
+                                unsafe { yp.write(r, sums[v]) };
+                            }
+                        }
+                        k = row_end;
+                        r += 1;
+                    }
+                    // SAFETY: slot w is only touched by worker w.
+                    unsafe { shared_b.write(w, (first, last)) };
+                });
+            }
+            // serial fix-up once per tile: merge boundary partials
+            for &(first, last) in bounds.iter() {
+                for (row, sums) in [first, last].into_iter().flatten() {
+                    for (v, &s) in sums[..tile].iter().enumerate() {
+                        ys[t_lo + v][row] += s;
+                    }
+                }
+            }
+            t_lo = t_hi;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -194,6 +284,26 @@ mod tests {
         let mut y = vec![9.0; 10];
         eng.spmv(&vec![1.0; 10], &mut y);
         assert_eq!(y, vec![0.0; 10]);
+    }
+
+    #[test]
+    fn fused_spmm_matches_repeated_spmv() {
+        // monster row included: boundary rows carry tile partials
+        let mut lens = vec![2usize; 80];
+        lens[30] = 2000;
+        let m = random::with_row_lengths(&lens, 300, 5);
+        for threads in [1, 4, 9] {
+            let eng = NnzSplitEngine::new(m.clone(), threads);
+            let k = SPMM_TILE + 2;
+            let xs: Vec<Vec<f64>> = (0..k).map(|i| random::vector(300, i as u64)).collect();
+            let mut ys: Vec<Vec<f64>> = vec![vec![0.0; 80]; k];
+            eng.spmm(&xs, &mut ys);
+            for (x, y) in xs.iter().zip(&ys) {
+                let mut expect = vec![0.0; 80];
+                eng.spmv(x, &mut expect);
+                assert!(allclose(y, &expect, 1e-12, 1e-12), "threads={threads}");
+            }
+        }
     }
 
     #[test]

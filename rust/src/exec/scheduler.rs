@@ -31,6 +31,30 @@ pub struct WorkerStats {
     pub busy_secs: f64,
 }
 
+impl WorkerStats {
+    /// Fold another generation's counters into this one. A fused SpMM
+    /// runs the block schedule once per tile pass (`k` split by the
+    /// tile cap), so per-worker totals over the whole batch are the sum
+    /// of the per-pass stats.
+    pub fn absorb(&mut self, other: &WorkerStats) {
+        self.fixed_done += other.fixed_done;
+        self.competitive_done += other.competitive_done;
+        self.busy_secs += other.busy_secs;
+    }
+}
+
+/// Accumulate one tile pass's per-worker stats into the batch totals
+/// (element-wise per worker; `totals` is sized on first use).
+pub fn absorb_stats(totals: &mut Vec<WorkerStats>, pass: &[WorkerStats]) {
+    if totals.is_empty() {
+        totals.resize(pass.len(), WorkerStats::default());
+    }
+    assert_eq!(totals.len(), pass.len(), "worker count changed between tile passes");
+    for (t, p) in totals.iter_mut().zip(pass) {
+        t.absorb(p);
+    }
+}
+
 /// Build the schedule: `competitive_frac` of the items (rounded) form the
 /// tail; the prefix is chunked evenly (±1) across `workers` preserving
 /// order.
@@ -169,6 +193,23 @@ mod tests {
         let s = mixed_schedule(0, 3, 0.5);
         let stats = run_mixed(&s, |_| panic!("no items"));
         assert_eq!(stats.len(), 3);
+    }
+
+    #[test]
+    fn stats_absorb_sums_tile_passes() {
+        let s = mixed_schedule(40, 4, 0.25);
+        let mut totals = Vec::new();
+        for _ in 0..3 {
+            let pass = run_mixed(&s, |_| {});
+            absorb_stats(&mut totals, &pass);
+        }
+        assert_eq!(totals.len(), 4);
+        let done: usize = totals.iter().map(|w| w.fixed_done + w.competitive_done).sum();
+        assert_eq!(done, 3 * 40);
+        // fixed quotas are static: each worker's fixed_done is 3x its chunk
+        for (w, &(lo, hi)) in totals.iter().zip(&s.fixed) {
+            assert_eq!(w.fixed_done, 3 * (hi - lo));
+        }
     }
 
     #[test]

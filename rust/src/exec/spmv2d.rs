@@ -6,7 +6,7 @@
 //! layout), and purely static block assignment (no competitive tail).
 //! The deltas HBP adds are thus isolated one by one for the benches.
 
-use super::engine::{PhaseTimes, SpmvEngine};
+use super::engine::{check_spmm_dims, PhaseTimes, SpmvEngine, SPMM_TILE};
 use crate::formats::Csr;
 use crate::partition::{block_views, BlockGrid, BlockView, PartitionConfig};
 use crate::preprocess::{build_hbp_with, Hbp, IdentityReorder};
@@ -100,6 +100,59 @@ impl SpmvEngine for Spmv2dEngine {
         PhaseTimes { spmv: spmv_secs, combine: t.elapsed_secs() }
     }
 
+    /// Fused SpMM: the batch is split into tiles of at most
+    /// [`SPMM_TILE`] vectors; per tile, one static round-robin pass over
+    /// the block views streams each nonzero's `(data, col)` once and
+    /// applies it to the whole tile, writing a column-major partials
+    /// tile that a single tile combine then reduces.
+    fn spmm(&self, xs: &[Vec<f64>], ys: &mut [Vec<f64>]) {
+        check_spmm_dims("2d", self.m.rows, self.m.cols, xs, ys);
+        if xs.len() < 2 {
+            for (x, y) in xs.iter().zip(ys.iter_mut()) {
+                self.spmv(x, y);
+            }
+            return;
+        }
+        let mut partials = self.partials.lock().unwrap();
+        let mut t_lo = 0;
+        while t_lo < xs.len() {
+            let t_hi = (t_lo + SPMM_TILE).min(xs.len());
+            let tile = t_hi - t_lo;
+            partials.resize(self.total_slots * tile, 0.0);
+            {
+                let shared = SharedMut::new(&mut partials[..]);
+                let views = &self.views;
+                let m = &self.m;
+                let shell = &self.shell;
+                let x_tile = &xs[t_lo..t_hi];
+                self.pool.run_generation(|w, _| {
+                    for (v, b) in views.iter().zip(&shell.blocks).skip(w).step_by(self.threads) {
+                        // SAFETY: disjoint per-block tile-strided ranges.
+                        let out = unsafe { shared.slice_mut(b.slot_start * tile, b.nrows * tile) };
+                        for (local, &(lo, hi)) in v.row_ranges.iter().enumerate() {
+                            let row_out = &mut out[local * tile..(local + 1) * tile];
+                            row_out.fill(0.0);
+                            for k in lo..hi {
+                                let a = m.data[k];
+                                let c = m.col[k] as usize;
+                                for (o, x) in row_out.iter_mut().zip(x_tile) {
+                                    *o += a * x[c];
+                                }
+                            }
+                        }
+                    }
+                });
+            }
+            super::combine::combine_tile_on_pool(
+                &self.shell,
+                &partials,
+                &mut ys[t_lo..t_hi],
+                &self.pool,
+            );
+            t_lo = t_hi;
+        }
+    }
+
     /// Value-level update in place: the block views hold index *ranges*
     /// into the parent arrays, so mutated values are picked up with no
     /// repair at all. Only a pattern change (columns moving between
@@ -172,6 +225,24 @@ mod tests {
         let mut y = vec![1.0; 8];
         eng.spmv(&vec![1.0; 8], &mut y);
         assert_eq!(y, vec![0.0; 8]);
+    }
+
+    #[test]
+    fn fused_spmm_matches_repeated_spmv() {
+        let m = random::power_law_rows(160, 130, 2.0, 30, 21);
+        for threads in [1, 4] {
+            let eng = Spmv2dEngine::new(m.clone(), PartitionConfig::test_small(), threads);
+            // k straddles the tile cap so the multi-pass path runs
+            let k = SPMM_TILE + 3;
+            let xs: Vec<Vec<f64>> = (0..k).map(|i| random::vector(130, i as u64)).collect();
+            let mut ys: Vec<Vec<f64>> = vec![vec![0.0; 160]; k];
+            eng.spmm(&xs, &mut ys);
+            for (x, y) in xs.iter().zip(&ys) {
+                let mut expect = vec![0.0; 160];
+                eng.spmv(x, &mut expect);
+                assert!(allclose(y, &expect, 1e-12, 1e-12), "threads={threads}");
+            }
+        }
     }
 
     #[test]

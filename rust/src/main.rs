@@ -71,7 +71,8 @@ SUBCOMMANDS
   info       --matrix <id|path> [--scale ci] [--threads N]
   preprocess --matrix <id|path> [--scale ci] [--threads N]
   update     --matrix <id|path> [--scale ci] [--frac 0.01] [--iters 3] [--threads N]
-  spmv       --matrix <id|path> [--engine auto|hbp|csr|2d|nnz-split] [--iters 10] [--verify]
+  spmv       --matrix <id|path> [--engine auto|hbp|csr|2d|nnz-split] [--iters 10]
+             [--batch k] [--verify]
   tune       --matrix <id|path> [--scale ci] [--threads N] [--top-k 3] [--iters 5]
              [--cache path] [--no-cache]
   sim        --matrix <id|path> [--device orin|rtx4090]
@@ -330,6 +331,42 @@ fn cmd_spmv(args: &Args) -> Result<()> {
         }
         other => bail!("unknown engine {other:?}"),
     };
+
+    let batch = args.usize_or("batch", 1);
+    if batch >= 2 {
+        // fused SpMM: one engine call serves all k vectors, streaming
+        // each matrix element once per tile instead of once per vector
+        let xs: Vec<Vec<f64>> = (0..batch)
+            .map(|i| hbp_spmv::gen::random::vector(m.cols, 42 + i as u64))
+            .collect();
+        let mut ys: Vec<Vec<f64>> = vec![vec![0.0; m.rows]; batch];
+        engine.spmm(&xs, &mut ys); // warmup
+        let t = hbp_spmv::util::Timer::start();
+        for _ in 0..iters {
+            engine.spmm(&xs, &mut ys);
+        }
+        let secs = t.elapsed_secs() / iters as f64;
+        println!(
+            "{name} engine={} threads={nthreads} batch={batch}: {} / iter ({} / vector), {:.3} GFLOPS",
+            engine.name(),
+            fmt_duration(secs),
+            fmt_duration(secs / batch as f64),
+            batch as f64 * engine.gflops(secs)
+        );
+        if args.flag("verify") {
+            let mut expect = vec![0.0; m.rows];
+            for (i, (x, y)) in xs.iter().zip(&ys).enumerate() {
+                expect.fill(0.0);
+                m.spmv(x, &mut expect);
+                if !hbp_spmv::formats::dense::allclose(y, &expect, 1e-9, 1e-11) {
+                    println!("verify vs serial CSR: MISMATCH (vector {i})");
+                    bail!("verification failed");
+                }
+            }
+            println!("verify vs serial CSR: OK ({batch} vectors)");
+        }
+        return Ok(());
+    }
 
     let x = hbp_spmv::gen::random::vector(m.cols, 42);
     let mut y = vec![0.0; m.rows];

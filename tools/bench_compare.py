@@ -2,10 +2,10 @@
 """Bench-trajectory gate: diff freshly generated bench JSON against the
 committed baselines.
 
-CI regenerates ``BENCH_preprocess.json`` (``make bench-preprocess``) and
-``BENCH_autotune.json`` (``make bench-autotune``) on every run and
-uploads them as artifacts; this script is the step in between that
-actually *reads* the trajectory. ``--baseline``/``--current`` may be
+CI regenerates ``BENCH_preprocess.json`` (``make bench-preprocess``),
+``BENCH_autotune.json`` (``make bench-autotune``) and ``BENCH_spmm.json``
+(``make bench-spmm``) on every run and uploads them as artifacts; this
+script is the step in between that actually *reads* the trajectory. ``--baseline``/``--current`` may be
 repeated to gate several baseline/current pairs in one invocation (the
 flags pair up positionally). Per pair it compares every per-matrix
 ``*_secs`` timing field (lower is better; fields are discovered
@@ -16,7 +16,9 @@ fails the job when any pair's geomean exceeds the regression threshold
 
 Degenerate states exit 0 by design:
 - a committed seed baseline that is schema-only (all measurement fields
-  null) until the first real-hardware artifact is copied over it;
+  null) until the first real-hardware artifact is copied over it — but a
+  visible WARNING line is emitted (stdout + ``$GITHUB_STEP_SUMMARY``) so
+  an un-armed gate can't masquerade as a passing one;
 - a current file produced without a toolchain is equally null.
 
 Stdlib only — this must run on a bare CI python.
@@ -99,17 +101,38 @@ def compare(baseline, current):
     return rows, all_ratios
 
 
-def render(name, rows, all_ratios, threshold):
+def baseline_armed(doc):
+    """Whether the baseline carries any real measurement: at least one
+    per-matrix ``*_secs`` field that is a positive number. A schema-only
+    seed (every timing field null) is NOT armed — the gate passes
+    vacuously until a real artifact is committed over it."""
+    for entry in doc.get("matrices") or []:
+        for k, v in entry.items():
+            if k.endswith("_secs") and isinstance(v, (int, float)) and v > 0:
+                return True
+    return False
+
+
+def render(name, rows, all_ratios, threshold, armed=True):
     lines = [f"## Bench trajectory: {name}", ""]
     if not all_ratios:
-        lines += [
-            "No comparable (non-null) timing fields between baseline and "
-            "current run — gate skipped.",
-            "",
-            "This is expected while the committed baseline is still the "
-            "schema-only seed; copy a real CI artifact over it to start "
-            "the trajectory.",
-        ]
+        if not armed:
+            lines += [
+                "⚠️ **WARNING: committed baseline is still the all-null "
+                "schema-only seed — the regression gate for this bench is "
+                "NOT armed.**",
+                "",
+                "Copy a real CI artifact (the uploaded bench JSON) over the "
+                "committed baseline to start the trajectory.",
+            ]
+        else:
+            lines += [
+                "No comparable (non-null) timing fields between baseline and "
+                "current run — gate skipped.",
+                "",
+                "The baseline has measurements but the current run produced "
+                "none that overlap (toolchain missing, or the schema moved).",
+            ]
         return lines, 0
     overall = geomean(all_ratios)
     lines += [
@@ -168,7 +191,9 @@ def main(argv):
             return 2
         name = current.get("bench") or baseline.get("bench") or os.path.basename(cur_path)
         rows, all_ratios = compare(baseline, current)
-        lines, pair_status = render(name, rows, all_ratios, args.threshold)
+        lines, pair_status = render(
+            name, rows, all_ratios, args.threshold, armed=baseline_armed(baseline)
+        )
         status = max(status, pair_status)
         sections.append("\n".join(lines))
 
