@@ -9,13 +9,14 @@
 #   make bench-spmm   — fused-SpMM-vs-looped-SpMV ablation at CI scale, JSON datapoint
 #   make bench-compare — gate fresh BENCH_preprocess.json + BENCH_autotune.json + BENCH_spmm.json vs the committed baselines
 #   make check-docs   — verify relative links in README.md + docs/*.md resolve
+#   make check-no-unwrap — fail on .unwrap() in the coordinator's non-test code
 #   make artifacts    — AOT-lower the L1/L2 graphs to artifacts/ (HLO text)
 #   make clean        — drop build products
 
 CARGO  ?= cargo
 PYTHON ?= python3
 
-.PHONY: all build test test-python bench-smoke bench-build bench-preprocess bench-autotune bench-spmm bench-compare check-docs artifacts artifacts-quick clean
+.PHONY: all build test test-python bench-smoke bench-build bench-preprocess bench-autotune bench-spmm bench-compare check-docs check-no-unwrap artifacts artifacts-quick clean
 
 all: build
 
@@ -82,6 +83,12 @@ bench-compare:
 # URLs and GitHub-web-relative paths like the CI badge are skipped).
 check-docs:
 	$(PYTHON) tools/check_docs_links.py
+
+# Serving-path panic gate: no bare .unwrap() in the coordinator's
+# non-test code (tools/check_no_unwrap.py, stdlib-only — the
+# toolchain-free twin of the tree's clippy::unwrap_used lint).
+check-no-unwrap:
+	$(PYTHON) tools/check_no_unwrap.py
 
 # Full AOT artifact set (all L buckets + batch executables).
 artifacts:

@@ -1,0 +1,116 @@
+"""The serving-path unwrap gate (tools/check_no_unwrap.py): pure-stdlib
+module, tested deterministically — no jax/hypothesis involvement."""
+
+import importlib.util
+import os
+
+_TOOL = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__)))),
+    "tools",
+    "check_no_unwrap.py",
+)
+_spec = importlib.util.spec_from_file_location("check_no_unwrap", _TOOL)
+check_no_unwrap = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_no_unwrap)
+
+_REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+def _write(tmp_path, name, text):
+    p = tmp_path / name
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(text)
+    return str(p)
+
+
+def test_bare_unwrap_fails_with_location(tmp_path, capsys):
+    rs = _write(
+        tmp_path,
+        "src/bad.rs",
+        'fn f() {\n    let x = maybe().unwrap();\n    use_it(x);\n}\n',
+    )
+    assert check_no_unwrap.run([rs], str(tmp_path)) == 1
+    err = capsys.readouterr().err
+    assert "bad.rs:2" in err
+    assert ".unwrap()" in err
+
+
+def test_recovering_variants_pass(tmp_path):
+    rs = _write(
+        tmp_path,
+        "src/good.rs",
+        "\n".join(
+            [
+                "fn f() {",
+                "    let a = lock().unwrap_or_else(|e| e.into_inner());",
+                "    let b = opt.unwrap_or(0);",
+                "    let c = opt.unwrap_or_default();",
+                "}",
+            ]
+        ),
+    )
+    assert check_no_unwrap.run([rs], str(tmp_path)) == 0
+
+
+def test_comments_do_not_trip_the_gate(tmp_path):
+    rs = _write(
+        tmp_path,
+        "src/commented.rs",
+        "\n".join(
+            [
+                "// the old code called .unwrap() here",
+                "/// doc: never .unwrap() on the serving path",
+                "fn f() { g(); } // was g().unwrap()",
+            ]
+        ),
+    )
+    assert check_no_unwrap.run([rs], str(tmp_path)) == 0
+
+
+def test_test_modules_may_unwrap(tmp_path):
+    rs = _write(
+        tmp_path,
+        "src/tested.rs",
+        "\n".join(
+            [
+                "fn f() -> Option<u32> { None }",
+                "#[cfg(test)]",
+                "mod tests {",
+                "    #[test]",
+                "    fn t() { assert_eq!(super::f().unwrap(), 1); }",
+                "}",
+            ]
+        ),
+    )
+    assert check_no_unwrap.run([rs], str(tmp_path)) == 0
+
+
+def test_unwrap_before_test_module_still_fails(tmp_path):
+    rs = _write(
+        tmp_path,
+        "src/mixed.rs",
+        "\n".join(
+            [
+                "fn f() { g().unwrap(); }",
+                "#[cfg(test)]",
+                "mod tests {}",
+            ]
+        ),
+    )
+    assert check_no_unwrap.run([rs], str(tmp_path)) == 1
+
+
+def test_directory_argument_expands_to_rust_files(tmp_path):
+    _write(tmp_path, "src/a.rs", "fn a() {}\n")
+    _write(tmp_path, "src/b.rs", "fn b() { c().unwrap(); }\n")
+    assert check_no_unwrap.run([str(tmp_path / "src")], str(tmp_path)) == 1
+
+
+def test_missing_input_file_fails(tmp_path):
+    assert check_no_unwrap.run([str(tmp_path / "ABSENT.rs")], str(tmp_path)) == 1
+
+
+def test_the_real_coordinator_is_clean():
+    """The committed coordinator tree must pass its own gate."""
+    paths = [os.path.join(_REPO, "rust", "src", "coordinator")]
+    assert check_no_unwrap.run(paths, _REPO) == 0

@@ -29,12 +29,28 @@
 //! (value-only deltas cannot, and stay on the fresh fast path). The
 //! update itself goes through [`Router::update`]'s per-matrix write
 //! lock, so it is atomic against requests from other connections too.
+//!
+//! The queue is **bounded** (`max_queue`): when it fills, new arrivals
+//! are shed at admission with a typed `overloaded` error carrying a
+//! `retry_after_ms` back-off hint, instead of blocking the submitting
+//! thread. Requests may carry a **deadline** (per-request `deadline_ms`
+//! or the config's `default_deadline`), checked at admission and again
+//! at flush — stale work is dropped with `deadline_exceeded`, not
+//! executed. Engine execution and delta application run under
+//! `catch_unwind`: a panicking engine answers its requests with typed
+//! `internal` errors and the dispatcher keeps serving (the router's
+//! locks all recover from poisoning). Sheds, drops, and recovered
+//! panics land in [`ServiceMetrics`] (`shed`, `deadline_drops`,
+//! `panics_recovered`).
 
+use super::error::ServiceError;
 use super::router::{EngineKind, Router};
 use crate::coordinator::metrics::ServiceMetrics;
 use crate::preprocess::{MatrixDelta, UpdateReport};
+use crate::sim::faults;
 use anyhow::Result;
 use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -47,11 +63,28 @@ pub struct BatcherConfig {
     /// Longest the dispatcher waits for stragglers after the first
     /// request of a batch arrives.
     pub max_wait: Duration,
+    /// Admission-control bound: most requests queued ahead of the
+    /// dispatcher. A full queue sheds new arrivals with an `overloaded`
+    /// reply instead of blocking the submitting connection thread.
+    pub max_queue: usize,
+    /// Deadline applied to SpMV requests that name no `deadline_ms` of
+    /// their own (`None`: such requests never expire). Updates carry no
+    /// deadline — silently dropping a mutation would change state
+    /// semantics.
+    pub default_deadline: Option<Duration>,
+    /// Back-off hint (milliseconds) carried in `overloaded` replies.
+    pub retry_after_ms: u64,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        BatcherConfig { max_batch: 32, max_wait: Duration::from_millis(2) }
+        BatcherConfig {
+            max_batch: 32,
+            max_wait: Duration::from_millis(2),
+            max_queue: 1024,
+            default_deadline: None,
+            retry_after_ms: 50,
+        }
     }
 }
 
@@ -90,6 +123,9 @@ pub enum Payload {
 pub struct Request {
     /// Name of the registered matrix the payload targets.
     pub matrix: String,
+    /// Absolute expiry: work not *started* by this point is dropped
+    /// with a `deadline_exceeded` reply (`None`: never expires).
+    pub deadline: Option<Instant>,
     /// What to do with it.
     pub payload: Payload,
 }
@@ -116,7 +152,11 @@ pub struct Request {
 /// ```
 #[derive(Clone)]
 pub struct BatcherHandle {
-    tx: mpsc::Sender<Request>,
+    tx: mpsc::SyncSender<Request>,
+    metrics: Arc<ServiceMetrics>,
+    max_queue: usize,
+    default_deadline: Option<Duration>,
+    retry_after_ms: u64,
 }
 
 impl BatcherHandle {
@@ -134,27 +174,98 @@ impl BatcherHandle {
         engine: EngineKind,
         x: Vec<f64>,
     ) -> Result<SpmvReply> {
-        let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Request {
-                matrix: matrix.to_string(),
-                payload: Payload::Spmv { engine, x, reply },
-            })
-            .map_err(|_| anyhow::anyhow!("batcher shut down"))?;
+        self.spmv_deadline(matrix, engine, x, None)
+    }
+
+    /// [`BatcherHandle::spmv_resolved`] with an explicit per-request
+    /// deadline budget in milliseconds (`None` falls back to the
+    /// config's `default_deadline`). An already-expired budget (`0`) is
+    /// rejected at admission; a budget that runs out while the request
+    /// is queued drops it at flush — either way the typed error is
+    /// `deadline_exceeded` and the work never executes.
+    pub fn spmv_deadline(
+        &self,
+        matrix: &str,
+        engine: EngineKind,
+        x: Vec<f64>,
+        deadline_ms: Option<u64>,
+    ) -> Result<SpmvReply> {
+        let rx = self.submit_spmv(matrix, engine, x, deadline_ms)?;
         rx.recv().map_err(|_| anyhow::anyhow!("batcher dropped request"))?
     }
 
+    /// Enqueue an SpMV without blocking on its reply, returning the
+    /// channel the reply will arrive on. Admission control happens
+    /// here: a full queue sheds with `overloaded` (+`retry_after_ms`),
+    /// an expired deadline rejects with `deadline_exceeded`. This is
+    /// the primitive the synchronous calls wrap, public so load tests
+    /// and the fault harness can stuff the queue deterministically.
+    pub fn submit_spmv(
+        &self,
+        matrix: &str,
+        engine: EngineKind,
+        x: Vec<f64>,
+        deadline_ms: Option<u64>,
+    ) -> Result<mpsc::Receiver<Result<SpmvReply>>> {
+        let deadline = self.admission_deadline(deadline_ms)?;
+        let (reply, rx) = mpsc::channel();
+        self.try_send(Request {
+            matrix: matrix.to_string(),
+            deadline,
+            payload: Payload::Spmv { engine, x, reply },
+        })?;
+        Ok(rx)
+    }
+
     /// Submit a matrix delta and wait for its report. Ordered with this
-    /// handle's SpMV submissions.
+    /// handle's SpMV submissions. Updates are subject to admission
+    /// control (a full queue sheds them) but carry no deadline: once
+    /// admitted, a mutation is applied, never silently dropped.
     pub fn update(&self, matrix: &str, delta: MatrixDelta) -> Result<UpdateReport> {
         let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Request {
-                matrix: matrix.to_string(),
-                payload: Payload::Update { delta, reply },
-            })
-            .map_err(|_| anyhow::anyhow!("batcher shut down"))?;
+        self.try_send(Request {
+            matrix: matrix.to_string(),
+            deadline: None,
+            payload: Payload::Update { delta, reply },
+        })?;
         rx.recv().map_err(|_| anyhow::anyhow!("batcher dropped request"))?
+    }
+
+    /// Resolve the effective deadline for a new request; reject (and
+    /// count) budgets that are already spent.
+    fn admission_deadline(&self, deadline_ms: Option<u64>) -> Result<Option<Instant>> {
+        let now = Instant::now();
+        let deadline = match deadline_ms {
+            Some(ms) => Some(now + Duration::from_millis(ms)),
+            None => self.default_deadline.map(|d| now + d),
+        };
+        if let Some(d) = deadline {
+            if d <= now {
+                self.metrics.record_deadline_drop();
+                return Err(anyhow::Error::new(ServiceError::deadline_exceeded(
+                    "deadline expired at admission",
+                )));
+            }
+        }
+        Ok(deadline)
+    }
+
+    /// Non-blocking enqueue: shed (typed, counted) instead of blocking
+    /// when the bounded queue is full.
+    fn try_send(&self, request: Request) -> Result<()> {
+        match self.tx.try_send(request) {
+            Ok(()) => Ok(()),
+            Err(mpsc::TrySendError::Full(_)) => {
+                self.metrics.record_shed();
+                Err(anyhow::Error::new(ServiceError::overloaded(
+                    format!("queue full ({} requests queued)", self.max_queue),
+                    self.retry_after_ms,
+                )))
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => {
+                Err(anyhow::anyhow!("batcher shut down"))
+            }
+        }
     }
 }
 
@@ -167,9 +278,17 @@ pub struct Batcher {
 impl Batcher {
     /// Start the dispatcher thread.
     pub fn start(router: Arc<Router>, metrics: Arc<ServiceMetrics>, cfg: BatcherConfig) -> Batcher {
-        let (tx, rx) = mpsc::channel::<Request>();
+        let max_queue = cfg.max_queue.max(1);
+        let (tx, rx) = mpsc::sync_channel::<Request>(max_queue);
+        let handle = BatcherHandle {
+            tx,
+            metrics: metrics.clone(),
+            max_queue,
+            default_deadline: cfg.default_deadline,
+            retry_after_ms: cfg.retry_after_ms,
+        };
         let thread = std::thread::spawn(move || dispatcher(router, metrics, cfg, rx));
-        Batcher { handle: BatcherHandle { tx }, thread: Some(thread) }
+        Batcher { handle, thread: Some(thread) }
     }
 
     /// A new submission handle (cheaply cloneable).
@@ -184,7 +303,7 @@ impl Drop for Batcher {
         // disconnects once all external handles are gone, then join.
         // NOTE: if external handles still exist the join waits for them —
         // drop handles before the Batcher.
-        self.handle = BatcherHandle { tx: mpsc::channel().0 };
+        self.handle.tx = mpsc::sync_channel(1).0;
         if let Some(t) = self.thread.take() {
             let _ = t.join();
         }
@@ -199,6 +318,8 @@ struct PendingSpmv {
     /// The admission-time resolution: a concrete kind, or `Auto` when
     /// resolution was deferred to flush time.
     resolved: EngineKind,
+    /// Carried from [`Request::deadline`]; re-checked at flush.
+    deadline: Option<Instant>,
     x: Vec<f64>,
     reply: mpsc::Sender<Result<SpmvReply>>,
 }
@@ -246,6 +367,7 @@ fn dispatcher(
                         matrix: r.matrix,
                         requested: engine,
                         resolved,
+                        deadline: r.deadline,
                         x,
                         reply,
                     });
@@ -253,7 +375,22 @@ fn dispatcher(
                 Payload::Update { delta, reply } => {
                     flush_spmvs(&router, &metrics, std::mem::take(&mut pending));
                     let t = crate::util::Timer::start();
-                    let result = router.update(&r.matrix, &delta);
+                    // a panicking delta application must not kill the
+                    // dispatcher: the router's locks recover from
+                    // poisoning, so convert the panic into a typed
+                    // per-request error and keep serving
+                    let result =
+                        catch_unwind(AssertUnwindSafe(|| router.update(&r.matrix, &delta)));
+                    let result = match result {
+                        Ok(res) => res,
+                        Err(p) => {
+                            metrics.record_panic_recovered();
+                            Err(anyhow::Error::new(ServiceError::internal(format!(
+                                "update panicked (recovered): {}",
+                                super::error::panic_message(p)
+                            ))))
+                        }
+                    };
                     match &result {
                         Ok(report) => metrics.record_update(t.elapsed_secs(), report),
                         Err(_) => metrics.record_error(),
@@ -272,7 +409,11 @@ fn dispatcher(
 /// same-group requests as one fused SpMM (element reuse across the
 /// batch; `spmm_fused_vectors` / `mean_spmm_width` record the widths).
 /// A mis-sized request is answered with its own error and never demotes
-/// the rest of its group to the looped path.
+/// the rest of its group to the looped path. Per group, requests whose
+/// deadline expired while queued are dropped before execution, and the
+/// engine call itself runs under `catch_unwind` so a panic answers the
+/// group with typed `internal` errors instead of killing the
+/// dispatcher.
 fn flush_spmvs(router: &Router, metrics: &ServiceMetrics, mut batch: Vec<PendingSpmv>) {
     if batch.is_empty() {
         return;
@@ -310,6 +451,28 @@ fn flush_spmvs(router: &Router, metrics: &ServiceMetrics, mut batch: Vec<Pending
             .push(r);
     }
     for ((matrix, _), reqs) in groups {
+        // fault probe: an armed slow-flush stalls here, upstream of the
+        // deadline check, so tests can expire a deadline mid-queue
+        // deterministically
+        faults::slow_flush(&matrix);
+        // flush-time deadline check: time spent queued counts against
+        // the request's budget — stale work is dropped, not executed
+        let now = Instant::now();
+        let is_live = |r: &PendingSpmv| match r.deadline {
+            None => true,
+            Some(d) => d > now,
+        };
+        let (reqs, expired): (Vec<PendingSpmv>, Vec<PendingSpmv>) =
+            reqs.into_iter().partition(is_live);
+        for req in expired {
+            metrics.record_deadline_drop();
+            let _ = req.reply.send(Err(anyhow::Error::new(
+                ServiceError::deadline_exceeded("deadline expired while queued"),
+            )));
+        }
+        if reqs.is_empty() {
+            continue;
+        }
         // provenance counts only groups that target a hosted matrix —
         // an unknown-matrix group executes nothing and would skew the
         // merge evidence the resolved-batching metrics exist to give
@@ -333,8 +496,15 @@ fn flush_spmvs(router: &Router, metrics: &ServiceMetrics, mut batch: Vec<Pending
             // every caller directly instead of falling back
             let (replies, xs): (Vec<_>, Vec<_>) =
                 good.into_iter().map(|r| (r.reply, r.x)).unzip();
-            match router.spmm(&matrix, engine, xs) {
-                Ok(ys) => {
+            // panic isolation: a panicking engine answers every caller
+            // with a typed `internal` error instead of unwinding the
+            // dispatcher (which would orphan every queued request)
+            let result = catch_unwind(AssertUnwindSafe(|| {
+                faults::spmv_probe(&matrix);
+                router.spmm(&matrix, engine, xs)
+            }));
+            match result {
+                Ok(Ok(ys)) => {
                     metrics.record_spmm(replies.len());
                     let secs = t.elapsed_secs() / replies.len() as f64;
                     let nnz = router.get(&matrix).map(|m| m.nnz).unwrap_or(0);
@@ -343,20 +513,46 @@ fn flush_spmvs(router: &Router, metrics: &ServiceMetrics, mut batch: Vec<Pending
                         let _ = reply.send(Ok(SpmvReply { y, resolved: engine }));
                     }
                 }
-                // unreachable in practice: the matrix exists and
-                // dims were pre-validated above
-                Err(e) => {
+                // unreachable in practice: the matrix exists and dims
+                // were pre-validated above — so a failure here is the
+                // service's fault, not the request's
+                Ok(Err(e)) => {
                     let msg = format!("{e:#}");
                     for reply in replies {
                         metrics.record_error();
-                        let _ = reply.send(Err(anyhow::anyhow!("batched spmv: {msg}")));
+                        let _ = reply.send(Err(anyhow::Error::new(ServiceError::internal(
+                            format!("batched spmv: {msg}"),
+                        ))));
+                    }
+                }
+                Err(p) => {
+                    metrics.record_panic_recovered();
+                    let msg = super::error::panic_message(p);
+                    for reply in replies {
+                        metrics.record_error();
+                        let _ = reply.send(Err(anyhow::Error::new(ServiceError::internal(
+                            format!("engine panicked (recovered): {msg}"),
+                        ))));
                     }
                 }
             }
         } else {
             for req in good {
                 let t = crate::util::Timer::start();
-                let result = router.spmv(&req.matrix, engine, &req.x);
+                let result = catch_unwind(AssertUnwindSafe(|| {
+                    faults::spmv_probe(&req.matrix);
+                    router.spmv(&req.matrix, engine, &req.x)
+                }));
+                let result = match result {
+                    Ok(res) => res,
+                    Err(p) => {
+                        metrics.record_panic_recovered();
+                        Err(anyhow::Error::new(ServiceError::internal(format!(
+                            "engine panicked (recovered): {}",
+                            super::error::panic_message(p)
+                        ))))
+                    }
+                };
                 match &result {
                     Ok(_) => {
                         let nnz = router.get(&req.matrix).map(|m| m.nnz).unwrap_or(0);
@@ -379,22 +575,37 @@ fn flush_spmvs(router: &Router, metrics: &ServiceMetrics, mut batch: Vec<Pending
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
+    use crate::coordinator::error::ErrorCode;
     use crate::gen::random;
     use crate::partition::PartitionConfig;
+    use crate::sim::faults::Fault;
+
+    /// Register one 60×50 matrix under `name`. Fault-injection tests
+    /// pick unique names because the fault registry is process-global
+    /// and keyed by matrix name — arming `"m"` would leak probes into
+    /// the other tests running concurrently in this binary.
+    fn setup_named(name: &str) -> (Arc<Router>, Arc<ServiceMetrics>) {
+        let mut router = Router::new(PartitionConfig::test_small(), 2);
+        router.register(name, random::power_law_rows(60, 50, 2.0, 15, 3)).unwrap();
+        (Arc::new(router), Arc::new(ServiceMetrics::new()))
+    }
 
     fn setup() -> (Arc<Router>, Arc<ServiceMetrics>) {
-        let mut router = Router::new(PartitionConfig::test_small(), 2);
-        router.register("m", random::power_law_rows(60, 50, 2.0, 15, 3)).unwrap();
-        (Arc::new(router), Arc::new(ServiceMetrics::new()))
+        setup_named("m")
     }
 
     /// Config that reliably drains back-to-back submissions into one
     /// batch: a long straggler window, so the second submission lands
     /// before the first flushes.
     fn merge_cfg() -> BatcherConfig {
-        BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(500) }
+        BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(500),
+            ..Default::default()
+        }
     }
 
     /// Enqueue an SpMV without blocking on its reply — the tests' way
@@ -408,13 +619,7 @@ mod tests {
         engine: EngineKind,
         x: Vec<f64>,
     ) -> mpsc::Receiver<Result<SpmvReply>> {
-        let (reply, rx) = mpsc::channel();
-        h.tx.send(Request {
-            matrix: matrix.to_string(),
-            payload: Payload::Spmv { engine, x, reply },
-        })
-        .unwrap();
-        rx
+        h.submit_spmv(matrix, engine, x, None).unwrap()
     }
 
     #[test]
@@ -609,6 +814,123 @@ mod tests {
         assert_eq!(snap.updates, 1);
         assert_eq!(snap.errors, 1);
         assert!(snap.mean_update_secs >= 0.0);
+    }
+
+    #[test]
+    fn full_queue_sheds_with_typed_retry_hint() {
+        let (router, metrics) = setup_named("fb_shed");
+        let cols = router.get("fb_shed").unwrap().cols;
+        let cfg = BatcherConfig {
+            max_batch: 1,
+            max_wait: Duration::ZERO,
+            max_queue: 2,
+            retry_after_ms: 7,
+            ..Default::default()
+        };
+        // stall every flush so the 2-slot queue actually fills
+        crate::sim::faults::arm("fb_shed", Fault::SlowFlush { millis: 150 });
+        let batcher = Batcher::start(router, metrics.clone(), cfg);
+        let h = batcher.handle();
+        let mut rxs = Vec::new();
+        let mut sheds = 0_u64;
+        for i in 0..20 {
+            match h.submit_spmv("fb_shed", EngineKind::Hbp, random::vector(cols, i), None) {
+                Ok(rx) => rxs.push(rx),
+                Err(e) => {
+                    let se = e.downcast_ref::<ServiceError>().expect("typed shed error");
+                    assert_eq!(se.code, ErrorCode::Overloaded);
+                    assert_eq!(se.retry_after_ms, Some(7));
+                    sheds += 1;
+                }
+            }
+        }
+        crate::sim::faults::disarm("fb_shed");
+        assert!(sheds > 0, "20 rapid submissions against a 2-slot queue must shed");
+        // every ADMITTED request is still answered once flushes unblock
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(20)).unwrap().unwrap();
+        }
+        assert_eq!(metrics.snapshot().shed, sheds);
+    }
+
+    #[test]
+    fn zero_deadline_rejected_at_admission() {
+        let (router, metrics) = setup();
+        let batcher = Batcher::start(router, metrics.clone(), BatcherConfig::default());
+        let err = batcher
+            .handle()
+            .spmv_deadline("m", EngineKind::Hbp, vec![0.0; 50], Some(0))
+            .unwrap_err();
+        let se = err.downcast_ref::<ServiceError>().expect("typed deadline error");
+        assert_eq!(se.code, ErrorCode::DeadlineExceeded);
+        let snap = metrics.snapshot();
+        assert_eq!(snap.deadline_drops, 1);
+        assert_eq!(snap.requests, 0, "expired work never executes");
+    }
+
+    #[test]
+    fn deadline_expires_while_queued() {
+        let (router, metrics) = setup_named("fb_deadline");
+        let cols = router.get("fb_deadline").unwrap().cols;
+        // every flush sleeps 120ms before the deadline check, so a
+        // 30ms budget reliably expires while its request waits
+        crate::sim::faults::arm("fb_deadline", Fault::SlowFlush { millis: 120 });
+        let cfg = BatcherConfig { max_batch: 1, max_wait: Duration::ZERO, ..Default::default() };
+        let batcher = Batcher::start(router, metrics.clone(), cfg);
+        let h = batcher.handle();
+        let rx_a =
+            h.submit_spmv("fb_deadline", EngineKind::Hbp, random::vector(cols, 1), None).unwrap();
+        let rx_b = h
+            .submit_spmv("fb_deadline", EngineKind::Hbp, random::vector(cols, 2), Some(30))
+            .unwrap();
+        let a = rx_a.recv_timeout(Duration::from_secs(20)).unwrap();
+        let b = rx_b.recv_timeout(Duration::from_secs(20)).unwrap();
+        crate::sim::faults::disarm("fb_deadline");
+        assert!(a.is_ok(), "the undeadlined request is served");
+        let e = b.unwrap_err();
+        let se = e.downcast_ref::<ServiceError>().expect("typed deadline error");
+        assert_eq!(se.code, ErrorCode::DeadlineExceeded);
+        let snap = metrics.snapshot();
+        assert_eq!(snap.deadline_drops, 1);
+        assert_eq!(snap.requests, 1, "only the live request executed");
+    }
+
+    #[test]
+    fn engine_panic_recovered_and_matrix_keeps_serving() {
+        let (router, metrics) = setup_named("fb_panic");
+        let cols = router.get("fb_panic").unwrap().cols;
+        let batcher = Batcher::start(router, metrics.clone(), BatcherConfig::default());
+        let h = batcher.handle();
+        crate::sim::faults::arm("fb_panic", Fault::PanicOnSpmv { nth: 1 });
+        let err = h.spmv("fb_panic", EngineKind::Hbp, random::vector(cols, 1)).unwrap_err();
+        let se = err.downcast_ref::<ServiceError>().expect("typed internal error");
+        assert_eq!(se.code, ErrorCode::Internal);
+        // the one-shot fault disarmed itself; the SAME matrix entry
+        // serves the very next request — no poisoned lock, no wedge
+        let y = h.spmv("fb_panic", EngineKind::Hbp, random::vector(cols, 2)).unwrap();
+        assert_eq!(y.len(), 60);
+        let snap = metrics.snapshot();
+        assert_eq!(snap.panics_recovered, 1);
+        assert_eq!(snap.errors, 1);
+        assert_eq!(snap.requests, 1);
+    }
+
+    #[test]
+    fn pool_worker_panic_recovered() {
+        let (router, metrics) = setup_named("fb_worker");
+        let cols = router.get("fb_worker").unwrap().cols;
+        let batcher = Batcher::start(router, metrics.clone(), BatcherConfig::default());
+        let h = batcher.handle();
+        // the probe panics inside a shared-pool worker; the pool
+        // contains it, re-raises on the dispatcher, and the batcher's
+        // catch_unwind converts it into a typed reply
+        crate::sim::faults::arm("fb_worker", Fault::PanicInWorker { nth: 1 });
+        let err = h.spmv("fb_worker", EngineKind::Hbp, random::vector(cols, 1)).unwrap_err();
+        let se = err.downcast_ref::<ServiceError>().expect("typed internal error");
+        assert_eq!(se.code, ErrorCode::Internal);
+        let y = h.spmv("fb_worker", EngineKind::Hbp, random::vector(cols, 2)).unwrap();
+        assert_eq!(y.len(), 60);
+        assert_eq!(metrics.snapshot().panics_recovered, 1);
     }
 
     #[test]

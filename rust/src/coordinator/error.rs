@@ -1,0 +1,252 @@
+//! The protocol's stable error taxonomy.
+//!
+//! Every `{"ok":false}` reply carries a machine-readable `"code"`
+//! alongside the human-readable `"error"` message, so clients can
+//! branch on *why* a request failed (retry an `overloaded` shed, fix a
+//! `bad_request`, re-register after `unknown_matrix`) without parsing
+//! prose. Inside the coordinator the code travels as a [`ServiceError`]
+//! payload on `anyhow::Error` — it survives any number of
+//! `.context(..)` layers and is recovered at the serialization boundary
+//! by [`error_reply`] via `downcast_ref`. Errors without a tagged
+//! payload default to [`ErrorCode::BadRequest`]: on the request path an
+//! untagged error is a validation failure (parse error, unknown op,
+//! dimension mismatch, invalid delta); anything the *service* caused is
+//! tagged [`ErrorCode::Internal`] explicitly where it is caught.
+
+use crate::util::json::{obj, Json};
+use std::fmt;
+
+/// Machine-readable failure categories carried in the `"code"` field.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// The request itself is malformed: parse error, unknown op,
+    /// missing field, dimension mismatch, invalid delta, over-long line.
+    BadRequest,
+    /// The named matrix is not registered with the router.
+    UnknownMatrix,
+    /// Admission control shed the request (queue full or connection
+    /// limit reached); the reply carries `retry_after_ms`.
+    Overloaded,
+    /// The request's deadline passed before (or while) it was served.
+    DeadlineExceeded,
+    /// The service failed on a well-formed request — typically a
+    /// recovered panic in an engine or pool worker.
+    Internal,
+}
+
+impl ErrorCode {
+    /// The wire spelling (`"bad_request"`, `"overloaded"`, ...).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::UnknownMatrix => "unknown_matrix",
+            ErrorCode::Overloaded => "overloaded",
+            ErrorCode::DeadlineExceeded => "deadline_exceeded",
+            ErrorCode::Internal => "internal",
+        }
+    }
+
+    /// Parse the wire spelling back (client side).
+    pub fn parse(s: &str) -> Option<ErrorCode> {
+        match s {
+            "bad_request" => Some(ErrorCode::BadRequest),
+            "unknown_matrix" => Some(ErrorCode::UnknownMatrix),
+            "overloaded" => Some(ErrorCode::Overloaded),
+            "deadline_exceeded" => Some(ErrorCode::DeadlineExceeded),
+            "internal" => Some(ErrorCode::Internal),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for ErrorCode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// A typed service failure: an [`ErrorCode`], a message, and (for
+/// `overloaded` sheds) a client back-off hint.
+///
+/// Implements `std::error::Error`, so `?` and `anyhow::Error::new` keep
+/// the value downcastable wherever the error surfaces — the server
+/// boundary ([`error_reply`]) and the [`Client`](super::server::Client)
+/// both recover it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServiceError {
+    /// Stable protocol code.
+    pub code: ErrorCode,
+    /// Human-readable message (the reply's `"error"` field text).
+    pub message: String,
+    /// How long the client should back off before retrying, present on
+    /// [`ErrorCode::Overloaded`] replies.
+    pub retry_after_ms: Option<u64>,
+}
+
+impl ServiceError {
+    /// A typed error with no retry hint.
+    pub fn new(code: ErrorCode, message: impl Into<String>) -> ServiceError {
+        ServiceError { code, message: message.into(), retry_after_ms: None }
+    }
+
+    /// `bad_request` — the caller sent something malformed.
+    pub fn bad_request(message: impl Into<String>) -> ServiceError {
+        ServiceError::new(ErrorCode::BadRequest, message)
+    }
+
+    /// `unknown_matrix` — message matches the router's historical text.
+    pub fn unknown_matrix(name: &str) -> ServiceError {
+        ServiceError::new(ErrorCode::UnknownMatrix, format!("matrix {name:?} not registered"))
+    }
+
+    /// `overloaded` — shed by admission control; retry after the hint.
+    pub fn overloaded(message: impl Into<String>, retry_after_ms: u64) -> ServiceError {
+        ServiceError {
+            code: ErrorCode::Overloaded,
+            message: message.into(),
+            retry_after_ms: Some(retry_after_ms),
+        }
+    }
+
+    /// `deadline_exceeded` — the work was dropped, not executed.
+    pub fn deadline_exceeded(message: impl Into<String>) -> ServiceError {
+        ServiceError::new(ErrorCode::DeadlineExceeded, message)
+    }
+
+    /// `internal` — the service, not the request, is at fault.
+    pub fn internal(message: impl Into<String>) -> ServiceError {
+        ServiceError::new(ErrorCode::Internal, message)
+    }
+
+    /// Client side: rebuild the typed error from an `{"ok":false}` reply.
+    pub fn from_reply(resp: &Json) -> Option<ServiceError> {
+        let code = ErrorCode::parse(resp.get("code")?.as_str()?)?;
+        let message = resp
+            .get("error")
+            .and_then(Json::as_str)
+            .unwrap_or("server error")
+            .to_string();
+        let retry_after_ms =
+            resp.get("retry_after_ms").and_then(Json::as_f64).map(|n| n as u64);
+        Some(ServiceError { code, message, retry_after_ms })
+    }
+}
+
+impl fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.message)
+    }
+}
+
+impl std::error::Error for ServiceError {}
+
+/// Serialize an error into the protocol's failure reply:
+/// `{"ok":false,"code":...,"error":...}` plus `retry_after_ms` when the
+/// shed carries a back-off hint. The code comes from the
+/// [`ServiceError`] payload if one is attached, else `bad_request`.
+pub fn error_reply(e: &anyhow::Error) -> Json {
+    let (code, retry) = match e.downcast_ref::<ServiceError>() {
+        Some(se) => (se.code, se.retry_after_ms),
+        None => (ErrorCode::BadRequest, None),
+    };
+    let mut fields = vec![
+        ("ok", Json::Bool(false)),
+        ("code", Json::Str(code.as_str().to_string())),
+        ("error", Json::Str(format!("{e:#}"))),
+    ];
+    if let Some(ms) = retry {
+        fields.push(("retry_after_ms", Json::Num(ms as f64)));
+    }
+    obj(&fields)
+}
+
+/// Client side: turn an `{"ok":false}` reply into an `anyhow::Error`
+/// that downcasts to [`ServiceError`] (when the reply carries a valid
+/// code — older or foreign servers fall back to an untyped message).
+pub fn reply_error(resp: &Json) -> anyhow::Error {
+    match ServiceError::from_reply(resp) {
+        Some(se) => anyhow::Error::new(se),
+        None => anyhow::anyhow!("server error: {resp}"),
+    }
+}
+
+/// Render a `catch_unwind` payload as text (panics carry `&str` or
+/// `String` in practice; anything else gets a placeholder).
+pub fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_round_trip_the_wire_spelling() {
+        for code in [
+            ErrorCode::BadRequest,
+            ErrorCode::UnknownMatrix,
+            ErrorCode::Overloaded,
+            ErrorCode::DeadlineExceeded,
+            ErrorCode::Internal,
+        ] {
+            assert_eq!(ErrorCode::parse(code.as_str()), Some(code));
+        }
+        assert_eq!(ErrorCode::parse("nope"), None);
+    }
+
+    #[test]
+    fn error_reply_carries_code_and_retry_hint() {
+        let e = anyhow::Error::new(ServiceError::overloaded("queue full", 25));
+        let r = error_reply(&e);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(r.get("code").unwrap().as_str(), Some("overloaded"));
+        assert_eq!(r.get("retry_after_ms").unwrap().as_f64(), Some(25.0));
+
+        // untagged errors default to bad_request, with no retry hint
+        let e = anyhow::anyhow!("missing field");
+        let r = error_reply(&e);
+        assert_eq!(r.get("code").unwrap().as_str(), Some("bad_request"));
+        assert!(r.get("retry_after_ms").is_none());
+    }
+
+    #[test]
+    fn code_survives_context_layers() {
+        let e = anyhow::Error::new(ServiceError::unknown_matrix("ghost"))
+            .context("handling spmv");
+        let r = error_reply(&e);
+        assert_eq!(r.get("code").unwrap().as_str(), Some("unknown_matrix"));
+        let msg = r.get("error").unwrap().as_str().unwrap();
+        assert!(msg.contains("handling spmv") && msg.contains("ghost"));
+    }
+
+    #[test]
+    fn client_reply_round_trip() {
+        let e = anyhow::Error::new(ServiceError::overloaded("queue full", 50));
+        let resp = error_reply(&e);
+        let back = reply_error(&resp);
+        let se = back.downcast_ref::<ServiceError>().unwrap();
+        assert_eq!(se.code, ErrorCode::Overloaded);
+        assert_eq!(se.retry_after_ms, Some(50));
+
+        // replies without a code still become a printable error
+        let legacy = Json::parse(r#"{"ok":false,"error":"old server"}"#).unwrap();
+        assert!(format!("{:#}", reply_error(&legacy)).contains("old server"));
+    }
+
+    #[test]
+    fn panic_messages_render() {
+        let p: Box<dyn std::any::Any + Send> = Box::new("boom");
+        assert_eq!(panic_message(p), "boom");
+        let p: Box<dyn std::any::Any + Send> = Box::new(format!("boom {}", 2));
+        assert_eq!(panic_message(p), "boom 2");
+        let p: Box<dyn std::any::Any + Send> = Box::new(17_u32);
+        assert_eq!(panic_message(p), "non-string panic payload");
+    }
+}

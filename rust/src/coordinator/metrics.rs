@@ -7,7 +7,7 @@
 //! evidence that resolved grouping merges `auto` and explicit traffic.
 
 use crate::util::stats::{Histogram, Welford};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard};
 use std::time::Instant;
 
 struct Inner {
@@ -35,6 +35,11 @@ struct Inner {
     // fused SpMM (multi-vector groups executed in one engine pass)
     spmm_fused_vectors: u64,
     spmm_width: Welford,
+    // fault tolerance (degradations that kept the service up)
+    shed: u64,
+    deadline_drops: u64,
+    panics_recovered: u64,
+    accept_errors: u64,
 }
 
 /// Thread-safe service metrics.
@@ -74,14 +79,26 @@ impl ServiceMetrics {
                 group_size: Welford::new(),
                 spmm_fused_vectors: 0,
                 spmm_width: Welford::new(),
+                shed: 0,
+                deadline_drops: 0,
+                panics_recovered: 0,
+                accept_errors: 0,
             }),
         }
+    }
+
+    /// Poison-recovering lock: a panic while a recorder held the mutex
+    /// (all recorders are short straight-line sections, but the batcher
+    /// records from inside `catch_unwind` scopes) must not wedge every
+    /// later `stats` call — counters stay valid, so take the guard back.
+    fn lock(&self) -> MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
     }
 
     /// Record one answered SpMV request: its latency and the nonzeros
     /// it processed (feeds the GFLOPS estimate).
     pub fn record_request(&self, latency_secs: f64, nnz: usize) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.lock();
         m.requests += 1;
         m.latency.record(latency_secs);
         m.latency_stats.push(latency_secs);
@@ -90,7 +107,33 @@ impl ServiceMetrics {
 
     /// Record one failed request (SpMV or update).
     pub fn record_error(&self) {
-        self.inner.lock().unwrap().errors += 1;
+        self.lock().errors += 1;
+    }
+
+    /// Record one request shed by admission control (bounded queue full
+    /// or connection limit reached). Shed work never executed, so it
+    /// does not count toward `errors`.
+    pub fn record_shed(&self) {
+        self.lock().shed += 1;
+    }
+
+    /// Record one request dropped because its deadline passed (at
+    /// admission or at flush). Dropped work never executed, so it does
+    /// not count toward `errors`.
+    pub fn record_deadline_drop(&self) {
+        self.lock().deadline_drops += 1;
+    }
+
+    /// Record one panic caught and converted into per-request
+    /// `internal` errors (engine execution, pool worker, or handler).
+    pub fn record_panic_recovered(&self) {
+        self.lock().panics_recovered += 1;
+    }
+
+    /// Record one transient accept-loop error that was logged and
+    /// survived instead of killing the listener.
+    pub fn record_accept_error(&self) {
+        self.lock().accept_errors += 1;
     }
 
     /// Record one flushed SpMV batch group: its size and how many of
@@ -100,7 +143,7 @@ impl ServiceMetrics {
     /// merges that resolving *before* grouping made possible (under
     /// requested-kind grouping they would have flushed separately).
     pub fn record_group(&self, size: usize, auto_requests: usize, explicit_requests: usize) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.lock();
         m.batch_groups += 1;
         m.group_size.push(size as f64);
         if auto_requests > 0 && explicit_requests > 0 {
@@ -113,7 +156,7 @@ impl ServiceMetrics {
     /// path, as opposed to `mean_group_size` which counts every flushed
     /// group including singletons and fallbacks).
     pub fn record_spmm(&self, width: usize) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.lock();
         m.spmm_fused_vectors += width as u64;
         m.spmm_width.push(width as f64);
     }
@@ -122,7 +165,7 @@ impl ServiceMetrics {
     /// HBP it had to re-fill (the blocks-touched vs blocks-total ratio
     /// is the incremental path's whole value proposition).
     pub fn record_update(&self, secs: f64, report: &crate::preprocess::UpdateReport) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.lock();
         m.updates += 1;
         if report.full_rebuild {
             m.full_rebuilds += 1;
@@ -135,7 +178,7 @@ impl ServiceMetrics {
     /// Record one tuner outcome: whether the cache short-circuited it,
     /// how many candidates were trialed, and the end-to-end tune cost.
     pub fn record_tune(&self, outcome: &crate::tune::TuneOutcome) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.lock();
         m.tunes += 1;
         if outcome.cache_hit {
             m.tune_cache_hits += 1;
@@ -146,7 +189,7 @@ impl ServiceMetrics {
 
     /// Snapshot for the `stats` endpoint.
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let m = self.inner.lock().unwrap();
+        let m = self.lock();
         let elapsed = m.started.elapsed().as_secs_f64();
         MetricsSnapshot {
             requests: m.requests,
@@ -170,6 +213,10 @@ impl ServiceMetrics {
             mean_group_size: m.group_size.mean(),
             spmm_fused_vectors: m.spmm_fused_vectors,
             mean_spmm_width: m.spmm_width.mean(),
+            shed: m.shed,
+            deadline_drops: m.deadline_drops,
+            panics_recovered: m.panics_recovered,
+            accept_errors: m.accept_errors,
         }
     }
 }
@@ -224,6 +271,19 @@ pub struct MetricsSnapshot {
     pub spmm_fused_vectors: u64,
     /// Mean vectors per fused SpMM execution.
     pub mean_spmm_width: f64,
+    /// Requests shed by admission control (bounded queue full or
+    /// connection limit); shed work never executed, so it is not in
+    /// `errors`.
+    pub shed: u64,
+    /// Requests dropped because their deadline passed at admission or
+    /// at flush; likewise not in `errors`.
+    pub deadline_drops: u64,
+    /// Panics caught (engine, pool worker, or handler) and converted
+    /// into per-request `internal` errors instead of a dead service.
+    pub panics_recovered: u64,
+    /// Transient accept-loop errors survived without dropping the
+    /// listener.
+    pub accept_errors: u64,
 }
 
 impl MetricsSnapshot {
@@ -252,13 +312,53 @@ impl MetricsSnapshot {
             ("mean_group_size", Json::Num(self.mean_group_size)),
             ("spmm_fused_vectors", Json::Num(self.spmm_fused_vectors as f64)),
             ("mean_spmm_width", Json::Num(self.mean_spmm_width)),
+            ("shed", Json::Num(self.shed as f64)),
+            ("deadline_drops", Json::Num(self.deadline_drops as f64)),
+            ("panics_recovered", Json::Num(self.panics_recovered as f64)),
+            ("accept_errors", Json::Num(self.accept_errors as f64)),
         ])
     }
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn records_fault_tolerance_counters() {
+        let m = ServiceMetrics::new();
+        m.record_shed();
+        m.record_shed();
+        m.record_deadline_drop();
+        m.record_panic_recovered();
+        m.record_accept_error();
+        let s = m.snapshot();
+        assert_eq!(s.shed, 2);
+        assert_eq!(s.deadline_drops, 1);
+        assert_eq!(s.panics_recovered, 1);
+        assert_eq!(s.accept_errors, 1);
+        assert_eq!(s.errors, 0, "sheds and drops are not execution errors");
+        let j = s.to_json();
+        assert_eq!(j.get("shed").and_then(|v| v.as_usize()), Some(2));
+        assert_eq!(j.get("deadline_drops").and_then(|v| v.as_usize()), Some(1));
+        assert_eq!(j.get("panics_recovered").and_then(|v| v.as_usize()), Some(1));
+        assert_eq!(j.get("accept_errors").and_then(|v| v.as_usize()), Some(1));
+    }
+
+    #[test]
+    fn survives_a_panic_while_recording() {
+        let m = std::sync::Arc::new(ServiceMetrics::new());
+        let m2 = m.clone();
+        // poison the mutex by panicking while a guard is held
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+            let _guard = m2.lock();
+            panic!("injected");
+        }));
+        // recording and snapshotting still work afterwards
+        m.record_request(1e-6, 10);
+        assert_eq!(m.snapshot().requests, 1);
+    }
 
     #[test]
     fn records_and_snapshots() {

@@ -25,15 +25,34 @@
 //! `batch_merged_auto`, and `mean_group_size` in [`metrics`] are the
 //! observable evidence). See `docs/ARCHITECTURE.md` for the layer map
 //! and `docs/PROTOCOL.md` for the wire spec.
+//!
+//! The service is **fault tolerant** by construction: admission control
+//! sheds work the bounded queue cannot hold (`overloaded` +
+//! `retry_after_ms`), per-request deadlines drop work nobody is waiting
+//! for (`deadline_exceeded`), engine/worker panics are isolated to the
+//! failing request (`internal`), and the TCP front survives accept
+//! errors, stalled clients, and oversized lines ([`server`]). Every
+//! degradation is a typed [`error::ErrorCode`] on the wire and a counter
+//! in [`metrics`]; `docs/ARCHITECTURE.md` has the failure-modes matrix.
+//!
+//! `unwrap()` is banned in this tree (`clippy::unwrap_used`, enforced in
+//! CI along with `tools/check_no_unwrap.py`): on the serving path a
+//! panic is an outage, so every lock acquisition recovers from poison
+//! and every fallible path returns a typed error instead.
 
 #![warn(missing_docs)]
+#![warn(clippy::unwrap_used)]
 
+pub mod error;
 pub mod metrics;
 pub mod router;
 pub mod batcher;
 pub mod server;
 
 pub use batcher::{Batcher, BatcherConfig, BatcherHandle, SpmvReply};
+pub use error::{ErrorCode, ServiceError};
 pub use metrics::ServiceMetrics;
 pub use router::{EngineKind, Router};
-pub use server::{serve, Coordinator};
+pub use server::{
+    serve, serve_background_with, serve_with, Coordinator, ServerConfig, ServerHandle,
+};

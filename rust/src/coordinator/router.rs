@@ -36,7 +36,7 @@ use crate::formats::Csr;
 use crate::partition::PartitionConfig;
 use crate::preprocess::{apply_to_csr, HashReorder, MatrixDelta, UpdateReport};
 use crate::tune::{TuneOutcome, Tuner};
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 use std::collections::BTreeMap;
 use std::sync::{OnceLock, RwLock, RwLockReadGuard};
 
@@ -337,7 +337,7 @@ impl Router {
         let lock = self
             .matrices
             .get(name)
-            .with_context(|| format!("matrix {name:?} not registered"))?;
+            .ok_or_else(|| anyhow::Error::new(super::error::ServiceError::unknown_matrix(name)))?;
         Ok(lock.read().unwrap_or_else(|e| e.into_inner()))
     }
 
@@ -392,7 +392,7 @@ impl Router {
         let lock = self
             .matrices
             .get(matrix)
-            .with_context(|| format!("matrix {matrix:?} not registered"))?;
+            .ok_or_else(|| anyhow::Error::new(super::error::ServiceError::unknown_matrix(matrix)))?;
         {
             let p = lock.read().unwrap_or_else(|e| e.into_inner());
             if !p.decision_is_stale() {
@@ -415,7 +415,7 @@ impl Router {
         let lock = self
             .matrices
             .get(name)
-            .with_context(|| format!("matrix {name:?} not registered"))?;
+            .ok_or_else(|| anyhow::Error::new(super::error::ServiceError::unknown_matrix(name)))?;
         lock.write().unwrap_or_else(|e| e.into_inner()).update(delta)
     }
 
@@ -452,6 +452,7 @@ impl Router {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::formats::dense::allclose;

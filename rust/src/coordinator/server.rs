@@ -4,7 +4,7 @@
 //! Protocol (one JSON object per line):
 //!
 //! ```text
-//! -> {"op":"spmv", "matrix":"m1", "x":[...], "engine":"hbp"}
+//! -> {"op":"spmv", "matrix":"m1", "x":[...], "engine":"hbp", "deadline_ms":250}
 //! <- {"ok":true, "y":[...], "resolved":"hbp"}
 //! -> {"op":"update", "matrix":"m1", "ops":[{"kind":"scale_row","row":3,"factor":0.5}, ...]}
 //! <- {"ok":true, "rows_touched":1, "blocks_touched":2, "blocks_total":40, "full_rebuild":false}
@@ -17,6 +17,11 @@
 //!     "features":{...}, "trials":{...}}
 //! ```
 //!
+//! Failure replies are typed: `{"ok":false, "code":..., "error":...}`
+//! with `code` drawn from the stable taxonomy in [`super::error`]
+//! (`bad_request`, `unknown_matrix`, `overloaded`, `deadline_exceeded`,
+//! `internal`); `overloaded` sheds also carry `retry_after_ms`.
+//!
 //! The normative spec — every op, every field, with examples executed
 //! verbatim by `rust/tests/protocol_doc.rs` — lives in
 //! `docs/PROTOCOL.md`.
@@ -25,7 +30,16 @@
 //! decision); the default stays `"hbp"`. Every successful `spmv`
 //! response carries `"resolved"`: the concrete engine the request
 //! executed on, so a client can observe what its `auto` request merged
-//! with in the batcher.
+//! with in the batcher. An optional `deadline_ms` bounds how long the
+//! request may wait in the batcher's queue before it is dropped with
+//! `deadline_exceeded` instead of executed.
+//!
+//! The TCP front degrades instead of dying ([`ServerConfig`]): accept
+//! errors are counted and survived, a connection cap sheds with one
+//! `overloaded` line, over-long request lines get `bad_request` and a
+//! disconnect, stalled clients are timed out, and request handling is
+//! panic-isolated per request. [`ServerHandle::shutdown`] stops the
+//! accept loop and drains in-flight connections.
 //!
 //! Update op kinds mirror [`DeltaOp`]:
 //! `{"kind":"set","row":R,"col":C,"value":V}`,
@@ -34,14 +48,18 @@
 //! `{"kind":"replace_row","row":R,"cols":[...],"values":[...]}`.
 
 use super::batcher::{Batcher, BatcherConfig, BatcherHandle, SpmvReply};
+use super::error::{error_reply, panic_message, reply_error, ServiceError};
 use super::metrics::ServiceMetrics;
 use super::router::{EngineKind, Router};
 use crate::preprocess::{DeltaOp, MatrixDelta, UpdateReport};
 use crate::util::json::{obj, Json};
 use anyhow::{bail, Context, Result};
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 /// The in-process coordinator: router + batcher + metrics.
 pub struct Coordinator {
@@ -89,6 +107,19 @@ impl Coordinator {
         self.handle.spmv_resolved(matrix, engine, x)
     }
 
+    /// [`Coordinator::spmv_resolved`] with an optional queueing deadline
+    /// (milliseconds from now); a request still queued when its deadline
+    /// passes is dropped with `deadline_exceeded` instead of executed.
+    pub fn spmv_deadline(
+        &self,
+        matrix: &str,
+        engine: EngineKind,
+        x: Vec<f64>,
+        deadline_ms: Option<u64>,
+    ) -> Result<SpmvReply> {
+        self.handle.spmv_deadline(matrix, engine, x, deadline_ms)
+    }
+
     /// Synchronous matrix update through the batching pipeline (ordered
     /// with SpMV submissions on the same queue).
     pub fn update(&self, matrix: &str, delta: MatrixDelta) -> Result<UpdateReport> {
@@ -100,14 +131,24 @@ impl Coordinator {
         self.batcher.handle()
     }
 
-    /// Process one protocol request (shared by TCP and tests).
+    /// Process one protocol request (shared by TCP and tests). Never
+    /// panics: failures become `{"ok":false,"code":...,"error":...}`
+    /// replies, and a panic escaping the handler (the batcher already
+    /// isolates engine panics; this catches everything else) is
+    /// recovered into an `internal` reply so one poisoned request
+    /// cannot take its connection thread down.
     pub fn handle_json(&self, line: &str) -> Json {
-        match self.try_handle(line) {
-            Ok(v) => v,
-            Err(e) => obj(&[
-                ("ok", Json::Bool(false)),
-                ("error", Json::Str(format!("{e:#}"))),
-            ]),
+        match catch_unwind(AssertUnwindSafe(|| self.try_handle(line))) {
+            Ok(Ok(v)) => v,
+            Ok(Err(e)) => error_reply(&e),
+            Err(p) => {
+                self.metrics.record_panic_recovered();
+                self.metrics.record_error();
+                error_reply(&anyhow::Error::new(ServiceError::internal(format!(
+                    "request handling panicked (recovered): {}",
+                    panic_message(p)
+                ))))
+            }
         }
     }
 
@@ -125,7 +166,18 @@ impl Coordinator {
                     .iter()
                     .map(|v| v.as_f64().context("non-numeric x entry"))
                     .collect::<Result<_>>()?;
-                let reply = self.spmv_resolved(matrix, engine, x)?;
+                let deadline_ms = match req.get("deadline_ms") {
+                    None => None,
+                    Some(v) => {
+                        let n = v.as_f64().context("non-numeric \"deadline_ms\"")?;
+                        anyhow::ensure!(
+                            n.fract() == 0.0 && (0.0..=9.007_199_254_740_992e15).contains(&n),
+                            "deadline_ms must be a non-negative integer, got {n}"
+                        );
+                        Some(n as u64)
+                    }
+                };
+                let reply = self.spmv_deadline(matrix, engine, x, deadline_ms)?;
                 Ok(obj(&[
                     ("ok", Json::Bool(true)),
                     ("y", crate::util::json::num_arr(&reply.y)),
@@ -143,15 +195,15 @@ impl Coordinator {
                     .router
                     .names()
                     .into_iter()
-                    .map(|n| {
-                        let m = self.router.get(n).unwrap();
-                        obj(&[
+                    .filter_map(|n| {
+                        let m = self.router.get(n).ok()?;
+                        Some(obj(&[
                             ("name", Json::Str(n.to_string())),
                             ("rows", Json::Num(m.rows as f64)),
                             ("cols", Json::Num(m.cols as f64)),
                             ("nnz", Json::Num(m.nnz as f64)),
                             ("preprocess_secs", Json::Num(m.preprocess_secs)),
-                        ])
+                        ]))
                     })
                     .collect();
                 Ok(obj(&[("ok", Json::Bool(true)), ("matrices", Json::Arr(matrices))]))
@@ -317,49 +369,266 @@ fn report_json(report: &UpdateReport) -> Json {
     ])
 }
 
-/// Serve the coordinator over TCP until the process exits. Binds to
-/// `addr` (e.g. `"127.0.0.1:7700"`); one thread per connection.
-pub fn serve(coordinator: Arc<Coordinator>, addr: &str) -> Result<()> {
-    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
-    eprintln!("hbp-spmv serving on {}", listener.local_addr()?);
-    for stream in listener.incoming() {
-        let stream = stream?;
-        let c = coordinator.clone();
-        std::thread::spawn(move || {
-            let _ = handle_conn(c, stream);
-        });
+/// Tunables for the TCP front's self-protection. Everything here exists
+/// so a misbehaving *client* degrades its own service, not the server:
+/// the connection cap bounds thread count, the read timeout unsticks
+/// threads pinned by stalled clients, and the line cap bounds per-request
+/// memory.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    /// Maximum simultaneous connections; accepts beyond this get one
+    /// `overloaded` reply line (with `retry_after_ms`) and are closed.
+    pub max_conns: usize,
+    /// Per-connection read timeout: a client silent this long
+    /// mid-request is disconnected. `None` waits forever.
+    pub read_timeout: Option<Duration>,
+    /// Longest accepted request line in bytes. A longer line gets a
+    /// `bad_request` reply and a disconnect — the remainder of the line
+    /// was never read, so the stream cannot be resynchronized.
+    pub max_line_bytes: usize,
+    /// How long [`ServerHandle::shutdown`] waits for in-flight
+    /// connections to finish before returning anyway.
+    pub shutdown_grace: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig {
+            max_conns: 256,
+            read_timeout: Some(Duration::from_secs(60)),
+            max_line_bytes: 8 * 1024 * 1024,
+            shutdown_grace: Duration::from_secs(2),
+        }
     }
+}
+
+/// Back-off hint on connection-limit sheds (the batcher's queue sheds
+/// carry the configurable `BatcherConfig::retry_after_ms` instead).
+const CONN_RETRY_AFTER_MS: u64 = 50;
+
+/// A running TCP server: its bound address plus shutdown control.
+/// Dropping the handle also shuts the server down.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// The address the listener actually bound (resolves `:0` ports).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Graceful shutdown: stop accepting, then give in-flight
+    /// connections up to `shutdown_grace` to finish.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    /// Block until the accept loop exits (i.e. until something else
+    /// triggers shutdown) — what the foreground `serve` does.
+    pub fn wait(mut self) {
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+
+    fn stop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // poke the blocking accept() so the loop observes the flag
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Serve the coordinator over TCP in a background accept thread,
+/// returning the [`ServerHandle`] that controls it.
+pub fn serve_with(
+    coordinator: Arc<Coordinator>,
+    addr: &str,
+    cfg: ServerConfig,
+) -> Result<ServerHandle> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    let addr = listener.local_addr()?;
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let accept_thread = {
+        let shutdown = shutdown.clone();
+        std::thread::Builder::new()
+            .name("hbp-accept".into())
+            .spawn(move || accept_loop(coordinator, listener, cfg, shutdown))
+            .context("spawning accept thread")?
+    };
+    Ok(ServerHandle { addr, shutdown, accept_thread: Some(accept_thread) })
+}
+
+/// Serve the coordinator over TCP in the foreground (what `hbp serve`
+/// runs). Returns only after shutdown is triggered elsewhere — in
+/// practice, when the process exits.
+pub fn serve(coordinator: Arc<Coordinator>, addr: &str, cfg: ServerConfig) -> Result<()> {
+    let handle = serve_with(coordinator, addr, cfg)?;
+    eprintln!("hbp-spmv serving on {}", handle.addr());
+    handle.wait();
     Ok(())
 }
 
 /// Serve on an ephemeral port, returning the bound address (tests/e2e).
-pub fn serve_background(coordinator: Arc<Coordinator>) -> Result<std::net::SocketAddr> {
-    let listener = TcpListener::bind("127.0.0.1:0")?;
-    let addr = listener.local_addr()?;
-    std::thread::spawn(move || {
-        for stream in listener.incoming() {
-            match stream {
-                Ok(s) => {
-                    let c = coordinator.clone();
-                    std::thread::spawn(move || {
-                        let _ = handle_conn(c, s);
-                    });
-                }
-                Err(_) => break,
-            }
-        }
-    });
+/// The server runs until process exit; use [`serve_with`] (or
+/// [`serve_background_with`]) when the caller needs shutdown control.
+pub fn serve_background(coordinator: Arc<Coordinator>) -> Result<SocketAddr> {
+    let handle = serve_background_with(coordinator, ServerConfig::default())?;
+    let addr = handle.addr();
+    // intentionally leak the handle: its Drop would stop the server
+    std::mem::forget(handle);
     Ok(addr)
 }
 
-fn handle_conn(c: Arc<Coordinator>, stream: TcpStream) -> Result<()> {
+/// [`serve_background`] with explicit config and shutdown control.
+pub fn serve_background_with(
+    coordinator: Arc<Coordinator>,
+    cfg: ServerConfig,
+) -> Result<ServerHandle> {
+    serve_with(coordinator, "127.0.0.1:0", cfg)
+}
+
+fn accept_loop(
+    c: Arc<Coordinator>,
+    listener: TcpListener,
+    cfg: ServerConfig,
+    shutdown: Arc<AtomicBool>,
+) {
+    let conns = Arc::new(AtomicUsize::new(0));
+    loop {
+        let stream = match listener.accept() {
+            Ok((s, _)) => s,
+            Err(e) => {
+                if shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                // a transient accept failure (ECONNABORTED, EMFILE, ...)
+                // must not kill the server: count it, log it, go on
+                c.metrics.record_accept_error();
+                eprintln!("hbp-spmv: accept error (continuing): {e}");
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+        };
+        if shutdown.load(Ordering::SeqCst) {
+            break; // usually the shutdown poke connection itself
+        }
+        if conns.load(Ordering::SeqCst) >= cfg.max_conns {
+            c.metrics.record_shed();
+            refuse_conn(stream, cfg.max_conns);
+            continue;
+        }
+        conns.fetch_add(1, Ordering::SeqCst);
+        let conn_c = c.clone();
+        let conn_counter = conns.clone();
+        let conn_shutdown = shutdown.clone();
+        let spawned = std::thread::Builder::new().name("hbp-conn".into()).spawn(move || {
+            let _ = handle_conn(conn_c, stream, cfg, conn_shutdown);
+            conn_counter.fetch_sub(1, Ordering::SeqCst);
+        });
+        if spawned.is_err() {
+            conns.fetch_sub(1, Ordering::SeqCst);
+            c.metrics.record_accept_error();
+        }
+    }
+    // drain: bounded wait for in-flight connections, then a final
+    // metrics snapshot so a shutdown always leaves a service record
+    let t = std::time::Instant::now();
+    while conns.load(Ordering::SeqCst) > 0 && t.elapsed() < cfg.shutdown_grace {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let s = c.metrics.snapshot();
+    eprintln!(
+        "hbp-spmv: shutdown — {} requests, {} errors, {} shed, {} deadline drops, \
+         {} panics recovered, {} accept errors",
+        s.requests, s.errors, s.shed, s.deadline_drops, s.panics_recovered, s.accept_errors
+    );
+}
+
+/// Over the connection cap: one `overloaded` line, then close.
+fn refuse_conn(stream: TcpStream, max_conns: usize) {
+    let e = anyhow::Error::new(ServiceError::overloaded(
+        format!("connection limit reached ({max_conns} open)"),
+        CONN_RETRY_AFTER_MS,
+    ));
+    let mut writer = stream;
+    let _ = writer.write_all(error_reply(&e).to_string().as_bytes());
+    let _ = writer.write_all(b"\n");
+}
+
+enum ReadOutcome {
+    Line,
+    Eof,
+    TooLong,
+}
+
+/// `read_line` with a byte cap: reads at most `cap + 1` bytes, so an
+/// oversized line is detected without buffering it — seeing `cap + 1`
+/// bytes before the newline means the line is over the cap.
+fn read_capped_line(
+    reader: &mut BufReader<TcpStream>,
+    line: &mut String,
+    cap: usize,
+) -> std::io::Result<ReadOutcome> {
+    let mut limited = std::io::Read::take(&mut *reader, cap as u64 + 1);
+    let n = limited.read_line(line)?;
+    if n == 0 {
+        Ok(ReadOutcome::Eof)
+    } else if n > cap {
+        Ok(ReadOutcome::TooLong)
+    } else {
+        Ok(ReadOutcome::Line)
+    }
+}
+
+fn handle_conn(
+    c: Arc<Coordinator>,
+    stream: TcpStream,
+    cfg: ServerConfig,
+    shutdown: Arc<AtomicBool>,
+) -> Result<()> {
+    stream.set_read_timeout(cfg.read_timeout)?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
     let mut line = String::new();
     loop {
+        if shutdown.load(Ordering::SeqCst) {
+            return Ok(());
+        }
         line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            return Ok(()); // client closed
+        match read_capped_line(&mut reader, &mut line, cfg.max_line_bytes) {
+            Ok(ReadOutcome::Eof) => return Ok(()), // client closed
+            Ok(ReadOutcome::Line) => {}
+            Ok(ReadOutcome::TooLong) => {
+                c.metrics.record_error();
+                let e = anyhow::Error::new(ServiceError::bad_request(format!(
+                    "request line exceeds {} bytes",
+                    cfg.max_line_bytes
+                )));
+                let _ = writer.write_all(error_reply(&e).to_string().as_bytes());
+                let _ = writer.write_all(b"\n");
+                return Ok(()); // cannot resync past the unread remainder
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                return Ok(()); // stalled client: reclaim the thread
+            }
+            Err(e) => return Err(e.into()),
         }
         if line.trim().is_empty() {
             continue;
@@ -401,10 +670,11 @@ impl Client {
             ("x", crate::util::json::num_arr(x)),
         ]);
         let resp = self.call(&req)?;
-        anyhow::ensure!(
-            resp.get("ok") == Some(&Json::Bool(true)),
-            "server error: {resp}"
-        );
+        if resp.get("ok") != Some(&Json::Bool(true)) {
+            // typed: the returned error downcasts to ServiceError when
+            // the reply carried a valid code
+            return Err(reply_error(&resp));
+        }
         resp.get("y")
             .and_then(Json::as_arr)
             .context("missing y")?
@@ -421,10 +691,9 @@ impl Client {
             ("ops", delta_to_json(delta)),
         ]);
         let resp = self.call(&req)?;
-        anyhow::ensure!(
-            resp.get("ok") == Some(&Json::Bool(true)),
-            "server error: {resp}"
-        );
+        if resp.get("ok") != Some(&Json::Bool(true)) {
+            return Err(reply_error(&resp));
+        }
         Ok(UpdateReport {
             rows_touched: resp.req_usize("rows_touched")?,
             blocks_touched: resp.req_usize("blocks_touched")?,
@@ -435,10 +704,15 @@ impl Client {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::gen::random;
     use crate::partition::PartitionConfig;
+
+    fn code_of(resp: &Json) -> &str {
+        resp.get("code").and_then(Json::as_str).unwrap_or("<no code>")
+    }
 
     fn coordinator() -> Coordinator {
         let mut router = Router::new(PartitionConfig::test_small(), 2);
@@ -570,9 +844,44 @@ mod tests {
         let c = coordinator();
         let bad = c.handle_json("not json");
         assert_eq!(bad.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(code_of(&bad), "bad_request");
         let unknown = c.handle_json(r#"{"op":"nope"}"#);
         assert_eq!(unknown.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(code_of(&unknown), "bad_request");
         let missing = c.handle_json(r#"{"op":"spmv","matrix":"zzz","x":[1]}"#);
         assert_eq!(missing.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(code_of(&missing), "unknown_matrix");
+        let ghost_tune = c.handle_json(r#"{"op":"tune","matrix":"ghost"}"#);
+        assert_eq!(code_of(&ghost_tune), "unknown_matrix");
+    }
+
+    #[test]
+    fn json_api_deadline_field() {
+        let c = coordinator();
+        let x_json: String =
+            format!("[{}]", (0..30).map(|_| "0.1").collect::<Vec<_>>().join(","));
+
+        // a zero deadline is already expired at admission
+        let r = c.handle_json(&format!(
+            r#"{{"op":"spmv","matrix":"t","x":{x_json},"deadline_ms":0}}"#
+        ));
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)), "{r}");
+        assert_eq!(code_of(&r), "deadline_exceeded");
+
+        // malformed deadlines are rejected before admission
+        for bad in [
+            format!(r#"{{"op":"spmv","matrix":"t","x":{x_json},"deadline_ms":-5}}"#),
+            format!(r#"{{"op":"spmv","matrix":"t","x":{x_json},"deadline_ms":1.5}}"#),
+        ] {
+            let r = c.handle_json(&bad);
+            assert_eq!(r.get("ok"), Some(&Json::Bool(false)), "{bad}");
+            assert_eq!(code_of(&r), "bad_request");
+        }
+
+        // a generous deadline serves normally
+        let r = c.handle_json(&format!(
+            r#"{{"op":"spmv","matrix":"t","x":{x_json},"deadline_ms":60000}}"#
+        ));
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
     }
 }

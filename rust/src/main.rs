@@ -9,7 +9,10 @@
 //! - `tune`       — autotune: features, ranked candidates, trial winner
 //! - `sim`        — run the GPU cost model (Orin / RTX 4090)
 //! - `serve`      — start the TCP serving coordinator (`--batch-stats`
-//!   periodically prints the resolved-batching counters)
+//!   periodically prints the resolved-batching counters; `--max-queue`,
+//!   `--deadline-ms`, and `--max-conns` bound admission; the
+//!   `HBP_FAULTS` env var arms fault-injection probes for degradation
+//!   rehearsal)
 //!
 //! Matrices are named either by suite id (`m1`..`m14`, Table I) or by a
 //! path to a `.mtx` / `.bin` file. The tuning cache defaults to
@@ -77,7 +80,7 @@ SUBCOMMANDS
              [--cache path] [--no-cache]
   sim        --matrix <id|path> [--device orin|rtx4090]
   serve      --addr 127.0.0.1:7700 --matrices m1,m3 [--scale ci] [--cache path] [--no-cache]
-             [--batch-stats]"
+             [--batch-stats] [--max-queue N] [--deadline-ms MS] [--max-conns N]"
     );
 }
 
@@ -525,6 +528,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.str_or("addr", "127.0.0.1:7700").to_string();
     let names = args.str_or("matrices", "m1,m3");
 
+    // fault-tolerance knobs: bounded admission, a default deadline for
+    // requests that do not carry their own, and a connection cap
+    let bdef = BatcherConfig::default();
+    let bcfg = BatcherConfig {
+        max_queue: args.usize_or("max-queue", bdef.max_queue),
+        default_deadline: match args.get("deadline-ms") {
+            Some(ms) => Some(std::time::Duration::from_millis(
+                ms.parse().context("--deadline-ms expects milliseconds")?,
+            )),
+            None => bdef.default_deadline,
+        },
+        ..bdef
+    };
+    let sdef = hbp_spmv::coordinator::ServerConfig::default();
+    let scfg = hbp_spmv::coordinator::ServerConfig {
+        max_conns: args.usize_or("max-conns", sdef.max_conns),
+        ..sdef
+    };
+
     let cfg = PartitionConfig::default();
     let mut router = if args.flag("no-cache") {
         Router::new(cfg, nthreads)
@@ -547,7 +569,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
             fmt_duration(p.preprocess_secs)
         );
     }
-    let coordinator = std::sync::Arc::new(Coordinator::new(router, BatcherConfig::default()));
+    let armed = hbp_spmv::sim::faults::arm_from_env();
+    if armed > 0 {
+        eprintln!("warning: {armed} fault(s) armed via HBP_FAULTS — degradation rehearsal mode");
+    }
+    let coordinator = std::sync::Arc::new(Coordinator::new(router, bcfg));
     if args.flag("batch-stats") {
         // periodic observability for the resolved-batching path: how
         // many groups flushed, how many auto arrivals merged with
@@ -569,5 +595,5 @@ fn cmd_serve(args: &Args) -> Result<()> {
             }
         });
     }
-    hbp_spmv::coordinator::serve(coordinator, &addr)
+    hbp_spmv::coordinator::serve(coordinator, &addr, scfg)
 }

@@ -1,0 +1,292 @@
+//! Fault-injection probes for the serving stack.
+//!
+//! The fault-tolerance layer (bounded admission, deadlines, panic
+//! isolation — see `coordinator::batcher` and `coordinator::server`)
+//! claims the service *degrades instead of dying*. This module makes
+//! those claims testable: probes compiled into the dispatcher's flush
+//! path fire only when a fault is **armed** for a specific matrix name,
+//! so integration tests (and `hbp serve` via the `HBP_FAULTS` env var)
+//! can stage a worker panic, a stalled flush, or an overload and assert
+//! the structured degradation the protocol promises.
+//!
+//! Design constraints:
+//!
+//! - **Disarmed cost is one relaxed atomic load** per probe — the hot
+//!   path pays nothing measurable for being testable.
+//! - **Keyed by matrix name.** The registry is process-global (tests in
+//!   one binary share it), so probes are scoped to the matrix they were
+//!   armed for; tests arm uniquely-named matrices and cannot trip each
+//!   other.
+//! - **Panic probes are one-shot**: they disarm themselves when they
+//!   fire, mirroring a transient fault — which is exactly what the
+//!   "next request on the same matrix succeeds" recovery tests need.
+//! - This module deliberately knows nothing about coordinator types
+//!   (probes take `&str` matrix names), keeping the dependency
+//!   direction `coordinator → sim` only.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::Duration;
+
+/// An injectable fault, armed per matrix name via [`arm`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// Panic on the dispatcher's execution path at the `nth` SpMV/SpMM
+    /// probe against the matrix (1-based). One-shot: disarms on firing.
+    PanicOnSpmv {
+        /// Which probe hit fires the panic (1 = the next one).
+        nth: u64,
+    },
+    /// Panic *inside a shared-pool worker* at the `nth` probe — drives
+    /// the full containment chain: worker `catch_unwind` → generation
+    /// re-raise on the submitter → batcher `catch_unwind` → typed
+    /// `internal` reply. One-shot: disarms on firing.
+    PanicInWorker {
+        /// Which probe hit fires the panic (1 = the next one).
+        nth: u64,
+    },
+    /// Sleep `millis` at each batch flush touching the matrix, upstream
+    /// of the deadline check — lets tests fill the bounded queue or
+    /// expire a deadline mid-queue deterministically. Stays armed until
+    /// [`disarm`].
+    SlowFlush {
+        /// Sleep per flush, in milliseconds.
+        millis: u64,
+    },
+}
+
+struct Armed {
+    fault: Fault,
+    hits: u64,
+}
+
+/// Fast path: is *anything* armed at all? Keeps disarmed probes at one
+/// relaxed load instead of a mutex acquisition.
+static ANY_ARMED: AtomicBool = AtomicBool::new(false);
+
+fn registry() -> MutexGuard<'static, BTreeMap<String, Armed>> {
+    static REGISTRY: OnceLock<Mutex<BTreeMap<String, Armed>>> = OnceLock::new();
+    REGISTRY
+        .get_or_init(|| Mutex::new(BTreeMap::new()))
+        .lock()
+        // a probe panicking on purpose must not wedge the registry
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+/// Arm `fault` for the matrix name (replacing any previous arming).
+pub fn arm(matrix: &str, fault: Fault) {
+    let mut reg = registry();
+    reg.insert(matrix.to_string(), Armed { fault, hits: 0 });
+    ANY_ARMED.store(true, Ordering::Relaxed);
+}
+
+/// Disarm whatever is armed for the matrix name (no-op if nothing is).
+pub fn disarm(matrix: &str) {
+    let mut reg = registry();
+    reg.remove(matrix);
+    if reg.is_empty() {
+        ANY_ARMED.store(false, Ordering::Relaxed);
+    }
+}
+
+/// Disarm everything (serve-loop hygiene, not used by tests — tests
+/// disarm their own matrix names to stay isolated).
+pub fn disarm_all() {
+    let mut reg = registry();
+    reg.clear();
+    ANY_ARMED.store(false, Ordering::Relaxed);
+}
+
+/// Arm faults from the `HBP_FAULTS` env var (used by `hbp serve` so an
+/// operator can rehearse degradation against a live server). Format:
+/// comma-separated `kind=matrix:n` entries, e.g.
+/// `panic_spmv=m1:3,slow_flush=m2:50,panic_worker=m1:1` — `n` is the
+/// 1-based hit for the panic kinds and milliseconds for `slow_flush`.
+/// Returns how many faults were armed; malformed entries are skipped.
+pub fn arm_from_env() -> usize {
+    match std::env::var("HBP_FAULTS") {
+        Ok(spec) => {
+            let faults = parse_faults(&spec);
+            let n = faults.len();
+            for (matrix, fault) in faults {
+                arm(&matrix, fault);
+            }
+            n
+        }
+        Err(_) => 0,
+    }
+}
+
+/// Parse an `HBP_FAULTS` spec (pure, testable part of [`arm_from_env`]).
+pub fn parse_faults(spec: &str) -> Vec<(String, Fault)> {
+    let mut out = Vec::new();
+    for entry in spec.split(',') {
+        let entry = entry.trim();
+        if entry.is_empty() {
+            continue;
+        }
+        let Some((kind, rest)) = entry.split_once('=') else { continue };
+        let Some((matrix, n)) = rest.rsplit_once(':') else { continue };
+        let Ok(n) = n.parse::<u64>() else { continue };
+        let fault = match kind.trim() {
+            "panic_spmv" => Fault::PanicOnSpmv { nth: n.max(1) },
+            "panic_worker" => Fault::PanicInWorker { nth: n.max(1) },
+            "slow_flush" => Fault::SlowFlush { millis: n },
+            _ => continue,
+        };
+        out.push((matrix.trim().to_string(), fault));
+    }
+    out
+}
+
+/// Execution-path probe, called by the batcher inside its
+/// `catch_unwind` scope just before the engine runs. Counts hits for
+/// the matrix; on the armed `nth` hit it panics (directly, or inside a
+/// shared-pool worker for [`Fault::PanicInWorker`]), disarming itself
+/// first so the matrix's next request demonstrates recovery.
+pub fn spmv_probe(matrix: &str) {
+    if !ANY_ARMED.load(Ordering::Relaxed) {
+        return;
+    }
+    // decide + disarm under the lock, fire AFTER releasing it: the
+    // intentional panic must not leave the registry lock poisoned
+    let fire = {
+        let mut reg = registry();
+        let Some(armed) = reg.get_mut(matrix) else { return };
+        match armed.fault {
+            Fault::PanicOnSpmv { nth } | Fault::PanicInWorker { nth } => {
+                armed.hits += 1;
+                if armed.hits >= nth {
+                    let fault = armed.fault;
+                    reg.remove(matrix);
+                    if reg.is_empty() {
+                        ANY_ARMED.store(false, Ordering::Relaxed);
+                    }
+                    Some(fault)
+                } else {
+                    None
+                }
+            }
+            Fault::SlowFlush { .. } => None,
+        }
+    };
+    match fire {
+        Some(Fault::PanicOnSpmv { .. }) => {
+            panic!("fault injection: panic_spmv armed for {matrix:?}")
+        }
+        Some(Fault::PanicInWorker { .. }) => {
+            // panic in worker 0; the pool contains it and the
+            // generation re-raises on this (the submitting) thread
+            crate::util::pool::shared_pool(2).run_generation(|w, _| {
+                if w == 0 {
+                    panic!("fault injection: panic_worker armed");
+                }
+            });
+        }
+        _ => {}
+    }
+}
+
+/// Flush-path probe, called once per batch group before the deadline
+/// check; sleeps while a [`Fault::SlowFlush`] is armed for the matrix.
+pub fn slow_flush(matrix: &str) {
+    if !ANY_ARMED.load(Ordering::Relaxed) {
+        return;
+    }
+    let millis = {
+        let reg = registry();
+        match reg.get(matrix) {
+            Some(Armed { fault: Fault::SlowFlush { millis }, .. }) => Some(*millis),
+            _ => None,
+        }
+    };
+    if let Some(ms) = millis {
+        std::thread::sleep(Duration::from_millis(ms));
+    }
+}
+
+/// Build a syntactically valid `spmv` request line padded with input
+/// values until it is at least `min_len` bytes — the "oversized
+/// request" client fault for exercising the server's line cap.
+pub fn oversized_request(matrix: &str, min_len: usize) -> String {
+    let mut s = format!("{{\"op\":\"spmv\",\"matrix\":{matrix:?},\"x\":[");
+    while s.len() < min_len {
+        s.push_str("0.0,");
+    }
+    s.push_str("0.0]}");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disarmed_probes_are_noops() {
+        // names no test ever arms
+        spmv_probe("faults_never_armed");
+        slow_flush("faults_never_armed");
+    }
+
+    #[test]
+    fn panic_probe_fires_on_nth_hit_and_disarms() {
+        arm("faults_nth", Fault::PanicOnSpmv { nth: 3 });
+        spmv_probe("faults_nth"); // 1
+        spmv_probe("faults_nth"); // 2
+        let p = std::panic::catch_unwind(|| spmv_probe("faults_nth")); // 3: fires
+        assert!(p.is_err(), "third probe must panic");
+        // one-shot: the fault disarmed itself
+        spmv_probe("faults_nth");
+    }
+
+    #[test]
+    fn slow_flush_sleeps_only_while_armed() {
+        arm("faults_slow", Fault::SlowFlush { millis: 30 });
+        let t = std::time::Instant::now();
+        slow_flush("faults_slow");
+        assert!(t.elapsed() >= Duration::from_millis(25));
+        disarm("faults_slow");
+        let t = std::time::Instant::now();
+        slow_flush("faults_slow");
+        assert!(t.elapsed() < Duration::from_millis(25));
+    }
+
+    #[test]
+    fn worker_panic_reraises_on_submitter() {
+        arm("faults_worker", Fault::PanicInWorker { nth: 1 });
+        let p = std::panic::catch_unwind(|| spmv_probe("faults_worker"));
+        assert!(p.is_err(), "the pool re-raises the contained worker panic");
+        // pool and registry both survive
+        spmv_probe("faults_worker");
+    }
+
+    #[test]
+    fn parses_env_spec() {
+        let faults = parse_faults("panic_spmv=m1:3, slow_flush=m2:50,panic_worker=m1:1");
+        assert_eq!(
+            faults,
+            vec![
+                ("m1".to_string(), Fault::PanicOnSpmv { nth: 3 }),
+                ("m2".to_string(), Fault::SlowFlush { millis: 50 }),
+                ("m1".to_string(), Fault::PanicInWorker { nth: 1 }),
+            ]
+        );
+        // malformed entries are skipped; the rightmost colon splits, so
+        // matrix names containing colons still parse
+        assert_eq!(parse_faults("bogus,panic_spmv=x,slow_flush=a:b:c"), Vec::new());
+        assert_eq!(
+            parse_faults("slow_flush=a:b:5"),
+            vec![("a:b".to_string(), Fault::SlowFlush { millis: 5 })]
+        );
+        assert_eq!(parse_faults(""), Vec::new());
+    }
+
+    #[test]
+    fn oversized_request_is_valid_json_of_requested_size() {
+        let line = oversized_request("demo", 4096);
+        assert!(line.len() >= 4096);
+        let parsed = crate::util::json::Json::parse(&line).expect("stays valid JSON");
+        assert_eq!(parsed.get("op").and_then(|v| v.as_str()), Some("spmv"));
+    }
+}

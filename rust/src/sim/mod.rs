@@ -27,6 +27,7 @@
 //! [`device::DeviceConfig`] with sources in comments.
 
 pub mod device;
+pub mod faults;
 pub mod memory;
 pub mod simt;
 pub mod kernels;

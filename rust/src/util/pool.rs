@@ -80,7 +80,7 @@ impl WorkerPool {
         // self-resetting, so there is nothing inconsistent to inherit.
         let _submit = self.submit.lock().unwrap_or_else(|e| e.into_inner());
         let gen = {
-            let mut job = self.shared.job.lock().unwrap();
+            let mut job = self.shared.job.lock().unwrap_or_else(|e| e.into_inner());
             job.0 += 1;
             let local: &(dyn Fn(usize, &mut WorkerStats) + Sync) = &work;
             // SAFETY: we erase the closure's lifetime to the pointer's
@@ -93,9 +93,9 @@ impl WorkerPool {
             self.shared.job_cv.notify_all();
             job.0
         };
-        let mut done = self.shared.done.lock().unwrap();
+        let mut done = self.shared.done.lock().unwrap_or_else(|e| e.into_inner());
         while !(done.0 == gen && done.1 == self.workers) {
-            done = self.shared.done_cv.wait(done).unwrap();
+            done = self.shared.done_cv.wait(done).unwrap_or_else(|e| e.into_inner());
         }
         let (stats, panics) = (done.2.clone(), done.3);
         drop(done);
@@ -143,7 +143,7 @@ impl WorkerPool {
 pub fn shared_pool(workers: usize) -> Arc<WorkerPool> {
     static POOLS: OnceLock<Mutex<Vec<Arc<WorkerPool>>>> = OnceLock::new();
     let registry = POOLS.get_or_init(|| Mutex::new(Vec::new()));
-    let mut pools = registry.lock().unwrap();
+    let mut pools = registry.lock().unwrap_or_else(|e| e.into_inner());
     if let Some(p) = pools.iter().find(|p| p.workers == workers) {
         return Arc::clone(p);
     }
@@ -167,7 +167,7 @@ fn worker_loop(w: usize, shared: Arc<Shared>) {
     loop {
         // wait for a new generation (or shutdown)
         let job_ptr = {
-            let mut job = shared.job.lock().unwrap();
+            let mut job = shared.job.lock().unwrap_or_else(|e| e.into_inner());
             loop {
                 if shared.shutdown.load(Ordering::SeqCst) {
                     return;
@@ -176,7 +176,7 @@ fn worker_loop(w: usize, shared: Arc<Shared>) {
                     seen_gen = job.0;
                     break job.1.as_ref().map(|j| j.work);
                 }
-                job = shared.job_cv.wait(job).unwrap();
+                job = shared.job_cv.wait(job).unwrap_or_else(|e| e.into_inner());
             }
         };
         let mut stats = WorkerStats::default();
@@ -194,7 +194,7 @@ fn worker_loop(w: usize, shared: Arc<Shared>) {
             panicked = result.is_err();
         }
         // report completion
-        let mut done = shared.done.lock().unwrap();
+        let mut done = shared.done.lock().unwrap_or_else(|e| e.into_inner());
         if done.0 != seen_gen {
             done.0 = seen_gen;
             done.1 = 0;

@@ -1,0 +1,281 @@
+//! Fault-tolerance acceptance suite: every staged fault must degrade
+//! into a typed protocol reply (or a shed) while the server keeps
+//! serving — no hang, no dead accept loop, no poisoned lock.
+//!
+//! Faults are staged with `hbp_spmv::sim::faults` probes. The registry
+//! is process-global and keyed by matrix name, so every test here
+//! registers (and arms) a uniquely named matrix to stay isolated from
+//! the other tests in this binary.
+
+use hbp_spmv::coordinator::server::Client;
+use hbp_spmv::coordinator::{
+    serve_background_with, BatcherConfig, Coordinator, Router, ServerConfig, ServerHandle,
+};
+use hbp_spmv::partition::PartitionConfig;
+use hbp_spmv::sim::faults::{self, Fault};
+use hbp_spmv::util::json::{num_arr, obj, Json};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// One coordinator + TCP server hosting a single uniquely named matrix.
+fn start(
+    matrix: &str,
+    bcfg: BatcherConfig,
+    scfg: ServerConfig,
+) -> (Arc<Coordinator>, ServerHandle, usize) {
+    let mut router = Router::new(PartitionConfig::test_small(), 2);
+    let m = hbp_spmv::gen::random::power_law_rows(60, 50, 2.0, 15, 3);
+    let cols = m.cols;
+    router.register(matrix, m).unwrap();
+    let c = Arc::new(Coordinator::new(router, bcfg));
+    let handle = serve_background_with(c.clone(), scfg).unwrap();
+    (c, handle, cols)
+}
+
+fn spmv_req(matrix: &str, x: &[f64]) -> Json {
+    obj(&[
+        ("op", Json::Str("spmv".into())),
+        ("matrix", Json::Str(matrix.into())),
+        ("x", num_arr(x)),
+    ])
+}
+
+fn spmv_deadline_req(matrix: &str, x: &[f64], deadline_ms: f64) -> Json {
+    obj(&[
+        ("op", Json::Str("spmv".into())),
+        ("matrix", Json::Str(matrix.into())),
+        ("x", num_arr(x)),
+        ("deadline_ms", Json::Num(deadline_ms)),
+    ])
+}
+
+fn code_of(resp: &Json) -> &str {
+    resp.get("code").and_then(Json::as_str).unwrap_or("<no code>")
+}
+
+#[test]
+fn worker_panic_is_one_typed_error_not_an_outage() {
+    let (c, handle, cols) =
+        start("ft_worker", BatcherConfig::default(), ServerConfig::default());
+    let mut client = Client::connect(handle.addr()).unwrap();
+    let x = vec![0.25; cols];
+
+    // a panic inside a shared-pool worker travels the whole containment
+    // chain (worker catch_unwind -> generation re-raise -> batcher
+    // catch_unwind) and surfaces as `internal` on this request only
+    faults::arm("ft_worker", Fault::PanicInWorker { nth: 1 });
+    let r = client.call(&spmv_req("ft_worker", &x)).unwrap();
+    assert_eq!(r.get("ok"), Some(&Json::Bool(false)), "{r}");
+    assert_eq!(code_of(&r), "internal", "{r}");
+
+    // same connection, same matrix: the very next request succeeds
+    let r = client.call(&spmv_req("ft_worker", &x)).unwrap();
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+
+    // the engine-path panic behaves identically
+    faults::arm("ft_worker", Fault::PanicOnSpmv { nth: 1 });
+    let r = client.call(&spmv_req("ft_worker", &x)).unwrap();
+    assert_eq!(code_of(&r), "internal", "{r}");
+    let r = client.call(&spmv_req("ft_worker", &x)).unwrap();
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+
+    // recoveries are observable, and the stats op exposes every
+    // fault-tolerance counter the protocol documents
+    let stats = client.call(&obj(&[("op", Json::Str("stats".into()))])).unwrap();
+    let s = stats.get("stats").unwrap();
+    assert_eq!(s.req_usize("panics_recovered").unwrap(), 2);
+    for key in ["shed", "deadline_drops", "panics_recovered", "accept_errors"] {
+        assert!(s.get(key).is_some(), "stats must expose {key:?}");
+    }
+    assert_eq!(c.metrics.snapshot().panics_recovered, 2);
+}
+
+#[test]
+fn full_queue_sheds_with_overloaded_and_retry_hint() {
+    let bcfg = BatcherConfig {
+        max_batch: 1,
+        max_wait: Duration::ZERO,
+        max_queue: 1,
+        retry_after_ms: 9,
+        ..BatcherConfig::default()
+    };
+    let (c, handle, cols) = start("ft_shed", bcfg, ServerConfig::default());
+    // each flush against this matrix stalls, so concurrent arrivals
+    // pile onto the 1-deep queue and most of them must shed
+    faults::arm("ft_shed", Fault::SlowFlush { millis: 150 });
+
+    let n = 10;
+    let barrier = Arc::new(std::sync::Barrier::new(n));
+    let addr = handle.addr();
+    let results: Vec<Json> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n)
+            .map(|_| {
+                let barrier = barrier.clone();
+                s.spawn(move || {
+                    let mut client = Client::connect(addr).unwrap();
+                    let x = vec![0.5; cols];
+                    barrier.wait();
+                    client.call(&spmv_req("ft_shed", &x)).unwrap()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|t| t.join().unwrap()).collect()
+    });
+    faults::disarm("ft_shed");
+
+    let oks = results.iter().filter(|r| r.get("ok") == Some(&Json::Bool(true))).count();
+    let sheds: Vec<&Json> =
+        results.iter().filter(|r| code_of(r) == "overloaded").collect();
+    assert!(oks >= 1, "someone must be served");
+    assert!(!sheds.is_empty(), "a 1-deep queue under 10 concurrent requests must shed");
+    assert_eq!(oks + sheds.len(), n, "every request ends served or shed: {results:?}");
+    for shed in &sheds {
+        assert_eq!(
+            shed.get("retry_after_ms").and_then(Json::as_f64),
+            Some(9.0),
+            "sheds must carry the configured back-off hint: {shed}"
+        );
+    }
+    assert_eq!(c.metrics.snapshot().shed, sheds.len() as u64);
+}
+
+#[test]
+fn deadlines_drop_instead_of_serving_stale() {
+    let bcfg =
+        BatcherConfig { max_batch: 1, max_wait: Duration::ZERO, ..BatcherConfig::default() };
+    let (c, handle, cols) = start("ft_deadline", bcfg, ServerConfig::default());
+    let x = vec![0.5; cols];
+
+    // an already-expired deadline is rejected at admission
+    let mut client = Client::connect(handle.addr()).unwrap();
+    let r = client.call(&spmv_deadline_req("ft_deadline", &x, 0.0)).unwrap();
+    assert_eq!(code_of(&r), "deadline_exceeded", "{r}");
+
+    // a deadline that expires while queued behind a slow flush is
+    // dropped at flush time, after the slow request was served
+    faults::arm("ft_deadline", Fault::SlowFlush { millis: 120 });
+    let addr = handle.addr();
+    let slow = std::thread::spawn({
+        let x = x.clone();
+        move || {
+            let mut client = Client::connect(addr).unwrap();
+            client.call(&spmv_req("ft_deadline", &x)).unwrap()
+        }
+    });
+    std::thread::sleep(Duration::from_millis(30)); // let the slow flush start
+    let r = client.call(&spmv_deadline_req("ft_deadline", &x, 30.0)).unwrap();
+    faults::disarm("ft_deadline");
+    assert_eq!(code_of(&r), "deadline_exceeded", "{r}");
+    let slow = slow.join().unwrap();
+    assert_eq!(slow.get("ok"), Some(&Json::Bool(true)), "{slow}");
+    assert_eq!(c.metrics.snapshot().deadline_drops, 2);
+}
+
+#[test]
+fn oversized_line_gets_bad_request_then_disconnect() {
+    let scfg = ServerConfig { max_line_bytes: 4096, ..ServerConfig::default() };
+    let (c, handle, cols) = start("ft_big", BatcherConfig::default(), scfg);
+
+    let stream = TcpStream::connect(handle.addr()).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let line = faults::oversized_request("ft_big", 8192);
+    writer.write_all(line.as_bytes()).unwrap();
+    writer.write_all(b"\n").unwrap();
+
+    let mut reply = String::new();
+    reader.read_line(&mut reply).unwrap();
+    let r = Json::parse(reply.trim()).unwrap();
+    assert_eq!(code_of(&r), "bad_request", "{r}");
+    assert!(r.req_str("error").unwrap().contains("4096"), "{r}");
+    // the stream cannot be resynchronized, so the server hangs up (the
+    // unread remainder may surface as a reset rather than a clean EOF)
+    let mut rest = Vec::new();
+    assert_eq!(reader.read_to_end(&mut rest).unwrap_or(0), 0, "server must disconnect");
+
+    // ...and keeps serving everyone else
+    let mut client = Client::connect(handle.addr()).unwrap();
+    assert!(client.spmv("ft_big", &vec![0.5; cols]).is_ok());
+    assert!(c.metrics.snapshot().errors >= 1);
+}
+
+#[test]
+fn stalled_client_is_timed_out_not_a_pinned_thread() {
+    let scfg = ServerConfig {
+        read_timeout: Some(Duration::from_millis(100)),
+        ..ServerConfig::default()
+    };
+    let (_c, handle, cols) = start("ft_stall", BatcherConfig::default(), scfg);
+
+    // write half a request, then stall; the server must drop us
+    let stream = TcpStream::connect(handle.addr()).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    writer.write_all(b"{\"op\":\"sp").unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut rest = Vec::new();
+    assert_eq!(
+        reader.read_to_end(&mut rest).unwrap(),
+        0,
+        "server must close the stalled connection"
+    );
+
+    // the freed thread is back to serving real clients
+    let mut client = Client::connect(handle.addr()).unwrap();
+    assert!(client.spmv("ft_stall", &vec![0.5; cols]).is_ok());
+}
+
+#[test]
+fn connection_limit_sheds_with_one_overloaded_line() {
+    let scfg = ServerConfig { max_conns: 1, ..ServerConfig::default() };
+    let (c, handle, cols) = start("ft_conns", BatcherConfig::default(), scfg);
+
+    // occupy the single slot with a served round-trip (guarantees the
+    // connection's thread is up before we try the second connection)
+    let mut first = Client::connect(handle.addr()).unwrap();
+    assert!(first.spmv("ft_conns", &vec![0.5; cols]).is_ok());
+
+    let stream = TcpStream::connect(handle.addr()).unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut reply = String::new();
+    reader.read_line(&mut reply).unwrap();
+    let r = Json::parse(reply.trim()).unwrap();
+    assert_eq!(code_of(&r), "overloaded", "{r}");
+    assert!(r.get("retry_after_ms").and_then(Json::as_f64).is_some(), "{r}");
+    let mut rest = Vec::new();
+    assert_eq!(reader.read_to_end(&mut rest).unwrap(), 0, "refused conns are closed");
+
+    // the occupant is unaffected
+    assert!(first.spmv("ft_conns", &vec![0.5; cols]).is_ok());
+    assert_eq!(c.metrics.snapshot().shed, 1);
+}
+
+#[test]
+fn shutdown_stops_accepting_after_draining() {
+    let (_c, handle, cols) = start("ft_down", BatcherConfig::default(), ServerConfig::default());
+    let addr = handle.addr();
+    let mut client = Client::connect(addr).unwrap();
+    assert!(client.spmv("ft_down", &vec![0.5; cols]).is_ok());
+
+    handle.shutdown();
+
+    // the listener is gone: new connections are refused, or (if the OS
+    // briefly keeps the port queued) served nothing and closed
+    match TcpStream::connect(addr) {
+        Err(_) => {}
+        Ok(stream) => {
+            stream.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+            let mut writer = stream.try_clone().unwrap();
+            let _ = writer.write_all(b"{\"op\":\"stats\"}\n");
+            let mut reader = BufReader::new(stream);
+            let mut buf = Vec::new();
+            assert_eq!(
+                reader.read_to_end(&mut buf).unwrap_or(0),
+                0,
+                "a post-shutdown connection must not be served"
+            );
+        }
+    }
+}

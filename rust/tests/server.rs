@@ -57,11 +57,12 @@ fn protocol_errors_do_not_kill_connection() {
     let (_c, addr, _rows, cols) = start();
     let mut client = Client::connect(addr).unwrap();
 
-    // bad JSON
+    // bad JSON — typed as bad_request
     let r = client.call(&Json::Str("not an object".into())).unwrap();
     assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+    assert_eq!(r.get("code").and_then(Json::as_str), Some("bad_request"));
 
-    // unknown matrix
+    // unknown matrix — typed as unknown_matrix
     let r = client
         .call(&obj(&[
             ("op", Json::Str("spmv".into())),
@@ -70,9 +71,10 @@ fn protocol_errors_do_not_kill_connection() {
         ]))
         .unwrap();
     assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+    assert_eq!(r.get("code").and_then(Json::as_str), Some("unknown_matrix"));
     assert!(r.req_str("error").unwrap().contains("ghost"));
 
-    // wrong dimension
+    // wrong dimension — the request is at fault, not the service
     let r = client
         .call(&obj(&[
             ("op", Json::Str("spmv".into())),
@@ -81,6 +83,7 @@ fn protocol_errors_do_not_kill_connection() {
         ]))
         .unwrap();
     assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+    assert_eq!(r.get("code").and_then(Json::as_str), Some("bad_request"));
 
     // connection still alive after three errors
     let x = vec![0.1; cols];

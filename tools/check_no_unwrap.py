@@ -1,0 +1,123 @@
+#!/usr/bin/env python3
+"""Fail on ``.unwrap()`` in the coordinator's non-test Rust code.
+
+The serving path treats a panic as an outage: every lock acquisition
+recovers from poison and every fallible path returns a typed protocol
+error (see ``rust/src/coordinator/error.rs``). Clippy already enforces
+``clippy::unwrap_used`` for the same tree, but only when a Rust
+toolchain is present — this stdlib-only checker keeps the gate cheap,
+toolchain-free, and runnable anywhere CI (or a contributor) has python.
+
+Checked:   every ``.unwrap()`` call in ``rust/src/coordinator/*.rs``
+           outside test code.
+Skipped:   comment lines (``//`` and doc comments) and trailing ``//``
+           comments; everything from the first ``#[cfg(test)]`` line to
+           the end of the file (the tree keeps its test modules last,
+           and tests may unwrap freely).
+Not flagged: ``unwrap_or``, ``unwrap_or_else``, ``unwrap_or_default``
+           — the pattern requires the exact ``.unwrap()`` call.
+
+Stdlib only — this must run on a bare CI python.
+
+Usage:
+  python3 tools/check_no_unwrap.py [FILE_OR_DIR ...]
+  # no arguments: rust/src/coordinator/ relative to the repo root
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+
+UNWRAP_RE = re.compile(r"\.unwrap\(\)")
+CFG_TEST_RE = re.compile(r"^\s*#\[cfg\(test\)\]")
+
+
+def strip_comment(line):
+    """Drop a trailing ``//`` comment (good enough without a full lexer:
+    the tree's string literals do not embed ``//``)."""
+    idx = line.find("//")
+    return line if idx < 0 else line[:idx]
+
+
+def iter_violations(text):
+    """Yield ``(line_number, stripped_line)`` for each non-test, non-
+    comment ``.unwrap()`` call."""
+    for lineno, line in enumerate(text.splitlines(), start=1):
+        if CFG_TEST_RE.match(line):
+            # test modules sit at the end of each file; everything from
+            # here on may unwrap freely
+            return
+        if line.lstrip().startswith("//"):
+            continue
+        if UNWRAP_RE.search(strip_comment(line)):
+            yield lineno, line.strip()
+
+
+def collect_rust(paths):
+    """Expand files/dirs into a sorted list of Rust sources."""
+    out = []
+    for p in paths:
+        if os.path.isdir(p):
+            for name in sorted(os.listdir(p)):
+                if name.endswith(".rs"):
+                    out.append(os.path.join(p, name))
+        else:
+            out.append(p)
+    return out
+
+
+def run(paths, root):
+    """Check every file; print findings; return the exit code."""
+    files = collect_rust(paths)
+    if not files:
+        print("check_no_unwrap: no rust files to check", file=sys.stderr)
+        return 1
+    failures = 0
+    for rs in files:
+        if not os.path.exists(rs):
+            print(f"check_no_unwrap: {rs}: no such file", file=sys.stderr)
+            failures += 1
+            continue
+        with open(rs, encoding="utf-8") as f:
+            text = f.read()
+        for lineno, line in iter_violations(text):
+            rel = os.path.relpath(rs, root)
+            print(f"{rel}:{lineno}: .unwrap() on the serving path -> {line}",
+                  file=sys.stderr)
+            failures += 1
+    checked = len(files)
+    if failures:
+        print(f"check_no_unwrap: {failures} violation(s) across {checked} file(s)",
+              file=sys.stderr)
+        return 1
+    print(f"check_no_unwrap: OK ({checked} file(s))")
+    return 0
+
+
+def main(argv=None):
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument(
+        "paths",
+        nargs="*",
+        help="rust files or directories (default: rust/src/coordinator/)",
+    )
+    parser.add_argument(
+        "--root",
+        default=None,
+        help="repository root for relative paths (default: this script's parent dir)",
+    )
+    args = parser.parse_args(argv)
+    root = os.path.abspath(
+        args.root
+        if args.root
+        else os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    )
+    paths = args.paths or [os.path.join(root, "rust", "src", "coordinator")]
+    return run(paths, root)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,16 +9,23 @@
 //!
 //! - `{e}` prints the outermost message,
 //! - `{e:#}` prints the whole context chain joined by `": "`,
-//! - `?` converts any `std::error::Error + Send + Sync + 'static`.
+//! - `?` converts any `std::error::Error + Send + Sync + 'static`,
+//! - [`Error::new`] preserves the concrete error value so
+//!   [`Error::downcast_ref`] can recover it through any number of
+//!   `.context(..)` layers (the subset of anyhow's downcasting the
+//!   coordinator's error taxonomy relies on).
 //!
 //! If a cargo registry becomes available, swapping this path dependency for
 //! the real crate is a one-line change in `rust/Cargo.toml`.
 
+use std::any::Any;
 use std::fmt;
 
-/// An error carrying a chain of context messages (outermost first).
+/// An error carrying a chain of context messages (outermost first) and,
+/// when built from a concrete error value, that value for downcasting.
 pub struct Error {
     chain: Vec<String>,
+    payload: Option<Box<dyn Any + Send + Sync>>,
 }
 
 /// `Result<T, anyhow::Error>` — the crate-wide alias.
@@ -27,10 +34,16 @@ pub type Result<T, E = Error> = std::result::Result<T, E>;
 impl Error {
     /// Create an error from a printable message.
     pub fn msg<M: fmt::Display>(message: M) -> Error {
-        Error { chain: vec![message.to_string()] }
+        Error { chain: vec![message.to_string()], payload: None }
     }
 
-    /// Wrap the error in an outer context message.
+    /// Capture a concrete error value, keeping it for [`Error::downcast_ref`].
+    pub fn new<E: std::error::Error + Send + Sync + 'static>(error: E) -> Error {
+        let chain = Error::from_std(&error).chain;
+        Error { chain, payload: Some(Box::new(error)) }
+    }
+
+    /// Wrap the error in an outer context message (the payload survives).
     pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
         self.chain.insert(0, context.to_string());
         self
@@ -44,7 +57,7 @@ impl Error {
             chain.push(s.to_string());
             source = s.source();
         }
-        Error { chain }
+        Error { chain, payload: None }
     }
 
     /// The context chain, outermost message first.
@@ -55,6 +68,14 @@ impl Error {
     /// The root (innermost) message.
     pub fn root_cause(&self) -> &str {
         self.chain.last().map(String::as_str).unwrap_or("")
+    }
+
+    /// The concrete error this was built from via [`Error::new`] (or `?` on
+    /// a typed error), if it was an `E`. Context layers do not hide it.
+    pub fn downcast_ref<E: fmt::Display + fmt::Debug + Send + Sync + 'static>(
+        &self,
+    ) -> Option<&E> {
+        self.payload.as_ref()?.downcast_ref::<E>()
     }
 }
 
@@ -85,7 +106,7 @@ impl fmt::Debug for Error {
 // the blanket `From` below coherent (the same trick the real crate uses).
 impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
     fn from(error: E) -> Error {
-        Error::from_std(&error)
+        Error::new(error)
     }
 }
 
@@ -98,7 +119,7 @@ mod private {
 
     impl<E: std::error::Error + Send + Sync + 'static> IntoError for E {
         fn into_error(self) -> super::Error {
-            super::Error::from_std(&self)
+            super::Error::new(self)
         }
     }
 
@@ -236,6 +257,38 @@ mod tests {
         assert!(check(5).is_ok());
         assert!(format!("{}", check(0).unwrap_err()).contains("Condition failed"));
         assert_eq!(format!("{}", check(12).unwrap_err()), "x too big: 12");
+    }
+
+    #[derive(Debug, PartialEq)]
+    struct Typed(u32);
+
+    impl fmt::Display for Typed {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            write!(f, "typed error {}", self.0)
+        }
+    }
+
+    impl std::error::Error for Typed {}
+
+    #[test]
+    fn downcast_survives_context_and_question_mark() {
+        fn inner() -> Result<()> {
+            Err(Typed(7))?;
+            Ok(())
+        }
+        let e = inner().context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: typed error 7");
+        assert_eq!(e.downcast_ref::<Typed>(), Some(&Typed(7)));
+        assert!(e.downcast_ref::<std::io::Error>().is_none());
+
+        let e = Error::new(Typed(3)).context("a").context("b");
+        assert_eq!(e.downcast_ref::<Typed>(), Some(&Typed(3)));
+    }
+
+    #[test]
+    fn message_errors_downcast_to_nothing() {
+        let e = anyhow!("plain {}", 1);
+        assert!(e.downcast_ref::<Typed>().is_none());
     }
 
     #[test]
