@@ -10,13 +10,14 @@
 #   make bench-compare — gate fresh BENCH_preprocess.json + BENCH_autotune.json + BENCH_spmm.json vs the committed baselines
 #   make check-docs   — verify relative links in README.md + docs/*.md resolve
 #   make check-no-unwrap — fail on .unwrap() in the coordinator's non-test code
+#   make check-protocol — execute every docs/PROTOCOL.md example against a live server
 #   make artifacts    — AOT-lower the L1/L2 graphs to artifacts/ (HLO text)
 #   make clean        — drop build products
 
 CARGO  ?= cargo
 PYTHON ?= python3
 
-.PHONY: all build test test-python bench-smoke bench-build bench-preprocess bench-autotune bench-spmm bench-compare check-docs check-no-unwrap artifacts artifacts-quick clean
+.PHONY: all build test test-python bench-smoke bench-build bench-preprocess bench-autotune bench-spmm bench-compare check-docs check-no-unwrap check-protocol artifacts artifacts-quick clean
 
 all: build
 
@@ -83,6 +84,13 @@ bench-compare:
 # URLs and GitHub-web-relative paths like the CI badge are skipped).
 check-docs:
 	$(PYTHON) tools/check_docs_links.py
+
+# Wire-spec gate: run only rust/tests/protocol_doc.rs, which sends
+# every `->` line in docs/PROTOCOL.md verbatim to a live server and
+# structurally checks the `<-` lines against the real replies —
+# the fast way to ask "did I break the documented protocol?".
+check-protocol:
+	$(CARGO) test -q --test protocol_doc
 
 # Serving-path panic gate: no bare .unwrap() in the coordinator's
 # non-test code (tools/check_no_unwrap.py, stdlib-only — the

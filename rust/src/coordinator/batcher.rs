@@ -42,6 +42,12 @@
 //! locks all recover from poisoning). Sheds, drops, and recovered
 //! panics land in [`ServiceMetrics`] (`shed`, `deadline_drops`,
 //! `panics_recovered`).
+//!
+//! Teardown is typed too: once [`Batcher::begin_shutdown`] runs (the
+//! `Drop` impl calls it before severing the channel), every further
+//! send through any handle is refused with a `shutting_down`
+//! [`ServiceError`] — a sender racing the teardown never sees a bare
+//! channel-disconnect error.
 
 use super::error::ServiceError;
 use super::router::{EngineKind, Router};
@@ -51,6 +57,7 @@ use crate::sim::faults;
 use anyhow::Result;
 use std::collections::BTreeMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -157,6 +164,11 @@ pub struct BatcherHandle {
     max_queue: usize,
     default_deadline: Option<Duration>,
     retry_after_ms: u64,
+    /// Set by [`Batcher::begin_shutdown`] (and by `Batcher`'s `Drop`,
+    /// before it severs the channel), so a sender racing a teardown
+    /// gets a typed `shutting_down` refusal instead of a bare
+    /// disconnect error.
+    shutting_down: Arc<AtomicBool>,
 }
 
 impl BatcherHandle {
@@ -191,7 +203,7 @@ impl BatcherHandle {
         deadline_ms: Option<u64>,
     ) -> Result<SpmvReply> {
         let rx = self.submit_spmv(matrix, engine, x, deadline_ms)?;
-        rx.recv().map_err(|_| anyhow::anyhow!("batcher dropped request"))?
+        rx.recv().map_err(|_| self.dropped_error())?
     }
 
     /// Enqueue an SpMV without blocking on its reply, returning the
@@ -228,7 +240,16 @@ impl BatcherHandle {
             deadline: None,
             payload: Payload::Update { delta, reply },
         })?;
-        rx.recv().map_err(|_| anyhow::anyhow!("batcher dropped request"))?
+        rx.recv().map_err(|_| self.dropped_error())?
+    }
+
+    /// The typed error for a reply channel that died before answering:
+    /// the dispatcher only drops reply senders on teardown, so the
+    /// caller sees `shutting_down` rather than a bare channel error.
+    fn dropped_error(&self) -> anyhow::Error {
+        anyhow::Error::new(ServiceError::shutting_down(
+            "batcher shut down before answering the request",
+        ))
     }
 
     /// Resolve the effective deadline for a new request; reject (and
@@ -251,8 +272,15 @@ impl BatcherHandle {
     }
 
     /// Non-blocking enqueue: shed (typed, counted) instead of blocking
-    /// when the bounded queue is full.
+    /// when the bounded queue is full, and refuse (typed) once the
+    /// batcher has begun shutting down — a racing sender must never see
+    /// a bare channel-disconnect error.
     fn try_send(&self, request: Request) -> Result<()> {
+        if self.shutting_down.load(Ordering::SeqCst) {
+            return Err(anyhow::Error::new(ServiceError::shutting_down(
+                "batcher is shutting down; request refused",
+            )));
+        }
         match self.tx.try_send(request) {
             Ok(()) => Ok(()),
             Err(mpsc::TrySendError::Full(_)) => {
@@ -262,9 +290,12 @@ impl BatcherHandle {
                     self.retry_after_ms,
                 )))
             }
-            Err(mpsc::TrySendError::Disconnected(_)) => {
-                Err(anyhow::anyhow!("batcher shut down"))
-            }
+            // the flag is set before the Drop severs the channel, but a
+            // sender that read the flag just before it flipped can still
+            // observe the disconnect — give it the same typed refusal
+            Err(mpsc::TrySendError::Disconnected(_)) => Err(anyhow::Error::new(
+                ServiceError::shutting_down("batcher is shutting down; request refused"),
+            )),
         }
     }
 }
@@ -286,6 +317,7 @@ impl Batcher {
             max_queue,
             default_deadline: cfg.default_deadline,
             retry_after_ms: cfg.retry_after_ms,
+            shutting_down: Arc::new(AtomicBool::new(false)),
         };
         let thread = std::thread::spawn(move || dispatcher(router, metrics, cfg, rx));
         Batcher { handle, thread: Some(thread) }
@@ -295,14 +327,27 @@ impl Batcher {
     pub fn handle(&self) -> BatcherHandle {
         self.handle.clone()
     }
+
+    /// Stop admitting work: every subsequent send through any handle
+    /// (cloned before or after this call) gets a typed `shutting_down`
+    /// refusal. Requests already queued are still drained and answered.
+    /// Idempotent; `Drop` calls it too, so tests can stage the
+    /// teardown race deterministically.
+    pub fn begin_shutdown(&self) {
+        self.handle.shutting_down.store(true, Ordering::SeqCst);
+    }
 }
 
 impl Drop for Batcher {
     fn drop(&mut self) {
-        // Replace our own sender with a dummy so the dispatcher's receiver
-        // disconnects once all external handles are gone, then join.
+        // Flip the refusal flag BEFORE severing the channel: a sender
+        // racing this drop gets a typed `shutting_down` error instead of
+        // a confusing disconnect. Then replace our own sender with a
+        // dummy so the dispatcher's receiver disconnects once all
+        // external handles are gone, and join.
         // NOTE: if external handles still exist the join waits for them —
         // drop handles before the Batcher.
+        self.begin_shutdown();
         self.handle.tx = mpsc::sync_channel(1).0;
         if let Some(t) = self.thread.take() {
             let _ = t.join();
@@ -931,6 +976,45 @@ mod tests {
         let y = h.spmv("fb_worker", EngineKind::Hbp, random::vector(cols, 2)).unwrap();
         assert_eq!(y.len(), 60);
         assert_eq!(metrics.snapshot().panics_recovered, 1);
+    }
+
+    #[test]
+    fn post_shutdown_sends_are_typed_refusals_not_disconnects() {
+        let (router, metrics) = setup();
+        let cols = router.get("m").unwrap().cols;
+        let batcher = Batcher::start(router, metrics.clone(), BatcherConfig::default());
+        let h = batcher.handle();
+        // before shutdown: served normally
+        assert!(h.spmv("m", EngineKind::Hbp, random::vector(cols, 1)).is_ok());
+
+        batcher.begin_shutdown();
+        // every submission path now gets the typed shutting_down code —
+        // spmv, the non-blocking submit primitive, and update alike
+        let err = h.spmv("m", EngineKind::Hbp, random::vector(cols, 2)).unwrap_err();
+        let se = err.downcast_ref::<ServiceError>().expect("typed shutdown error");
+        assert_eq!(se.code, ErrorCode::ShuttingDown);
+        assert!(se.retry_after_ms.is_none(), "shutdown is not a back-off-and-retry");
+        let err = h.submit_spmv("m", EngineKind::Hbp, random::vector(cols, 3), None).unwrap_err();
+        let se = err.downcast_ref::<ServiceError>().expect("typed shutdown error");
+        assert_eq!(se.code, ErrorCode::ShuttingDown);
+        let err = h.update("m", MatrixDelta::new().scale_row(0, 2.0)).unwrap_err();
+        let se = err.downcast_ref::<ServiceError>().expect("typed shutdown error");
+        assert_eq!(se.code, ErrorCode::ShuttingDown);
+        // handles cloned after the fact refuse identically (the flag is
+        // shared, not copied)
+        let late = batcher.handle();
+        let err = late.spmv("m", EngineKind::Hbp, random::vector(cols, 4)).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<ServiceError>().expect("typed").code,
+            ErrorCode::ShuttingDown
+        );
+        // refusals are not sheds and not execution errors
+        let snap = metrics.snapshot();
+        assert_eq!(snap.shed, 0);
+        assert_eq!(snap.errors, 0);
+        assert_eq!(snap.requests, 1, "only the pre-shutdown request executed");
+        drop(h);
+        drop(late);
     }
 
     #[test]

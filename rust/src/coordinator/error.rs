@@ -29,6 +29,9 @@ pub enum ErrorCode {
     Overloaded,
     /// The request's deadline passed before (or while) it was served.
     DeadlineExceeded,
+    /// The service is tearing down and no longer admits work; unlike
+    /// `overloaded` there is no point retrying against this instance.
+    ShuttingDown,
     /// The service failed on a well-formed request — typically a
     /// recovered panic in an engine or pool worker.
     Internal,
@@ -42,6 +45,7 @@ impl ErrorCode {
             ErrorCode::UnknownMatrix => "unknown_matrix",
             ErrorCode::Overloaded => "overloaded",
             ErrorCode::DeadlineExceeded => "deadline_exceeded",
+            ErrorCode::ShuttingDown => "shutting_down",
             ErrorCode::Internal => "internal",
         }
     }
@@ -53,6 +57,7 @@ impl ErrorCode {
             "unknown_matrix" => Some(ErrorCode::UnknownMatrix),
             "overloaded" => Some(ErrorCode::Overloaded),
             "deadline_exceeded" => Some(ErrorCode::DeadlineExceeded),
+            "shutting_down" => Some(ErrorCode::ShuttingDown),
             "internal" => Some(ErrorCode::Internal),
             _ => None,
         }
@@ -111,6 +116,12 @@ impl ServiceError {
     /// `deadline_exceeded` — the work was dropped, not executed.
     pub fn deadline_exceeded(message: impl Into<String>) -> ServiceError {
         ServiceError::new(ErrorCode::DeadlineExceeded, message)
+    }
+
+    /// `shutting_down` — the service is tearing down; the request was
+    /// refused, never executed.
+    pub fn shutting_down(message: impl Into<String>) -> ServiceError {
+        ServiceError::new(ErrorCode::ShuttingDown, message)
     }
 
     /// `internal` — the service, not the request, is at fault.
@@ -194,6 +205,7 @@ mod tests {
             ErrorCode::UnknownMatrix,
             ErrorCode::Overloaded,
             ErrorCode::DeadlineExceeded,
+            ErrorCode::ShuttingDown,
             ErrorCode::Internal,
         ] {
             assert_eq!(ErrorCode::parse(code.as_str()), Some(code));

@@ -5,9 +5,15 @@
 //! `hbp serve --batch-stats`; the batching counters
 //! (`batch_groups`, `batch_merged_auto`, `mean_group_size`) are the
 //! evidence that resolved grouping merges `auto` and explicit traffic.
+//!
+//! Metrics compose into a one-level tree for the sharded serving front:
+//! [`ServiceMetrics::shard_of`] creates per-shard metrics that forward
+//! every recording to a shared parent, so the global totals the `stats`
+//! op reports equal the sum of the per-shard counters *by construction*
+//! (the `shards` breakdown in the same reply is each shard's own view).
 
 use crate::util::stats::{Histogram, Welford};
-use std::sync::{Mutex, MutexGuard};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::Instant;
 
 struct Inner {
@@ -42,9 +48,12 @@ struct Inner {
     accept_errors: u64,
 }
 
-/// Thread-safe service metrics.
+/// Thread-safe service metrics, optionally rolling up into a parent.
 pub struct ServiceMetrics {
     inner: Mutex<Inner>,
+    /// When set (per-shard metrics), every recording is applied to the
+    /// parent too — one level only, which is all the coordinator builds.
+    parent: Option<Arc<ServiceMetrics>>,
 }
 
 impl Default for ServiceMetrics {
@@ -56,7 +65,21 @@ impl Default for ServiceMetrics {
 impl ServiceMetrics {
     /// Fresh, all-zero metrics; the uptime clock starts now.
     pub fn new() -> Self {
+        Self::build(None)
+    }
+
+    /// Fresh per-shard metrics that forward every recording to
+    /// `parent`, so the parent's totals are the sum of its shards by
+    /// construction. One level only: passing an already-parented
+    /// metrics as `parent` would double-count nothing here (forwarding
+    /// is not chained), so the coordinator always hands in the root.
+    pub fn shard_of(parent: Arc<ServiceMetrics>) -> Self {
+        Self::build(Some(parent))
+    }
+
+    fn build(parent: Option<Arc<ServiceMetrics>>) -> Self {
         ServiceMetrics {
+            parent,
             inner: Mutex::new(Inner {
                 requests: 0,
                 errors: 0,
@@ -95,45 +118,57 @@ impl ServiceMetrics {
         self.inner.lock().unwrap_or_else(|e| e.into_inner())
     }
 
+    /// Apply one recording to this metrics object and (for per-shard
+    /// metrics) to the parent. The two locks are taken one after the
+    /// other, never nested, so shards cannot deadlock against each
+    /// other or against a concurrent `snapshot` on the root.
+    fn record(&self, f: impl Fn(&mut Inner)) {
+        f(&mut self.lock());
+        if let Some(p) = &self.parent {
+            f(&mut p.lock());
+        }
+    }
+
     /// Record one answered SpMV request: its latency and the nonzeros
     /// it processed (feeds the GFLOPS estimate).
     pub fn record_request(&self, latency_secs: f64, nnz: usize) {
-        let mut m = self.lock();
-        m.requests += 1;
-        m.latency.record(latency_secs);
-        m.latency_stats.push(latency_secs);
-        m.nnz_processed += nnz as f64;
+        self.record(|m| {
+            m.requests += 1;
+            m.latency.record(latency_secs);
+            m.latency_stats.push(latency_secs);
+            m.nnz_processed += nnz as f64;
+        });
     }
 
     /// Record one failed request (SpMV or update).
     pub fn record_error(&self) {
-        self.lock().errors += 1;
+        self.record(|m| m.errors += 1);
     }
 
     /// Record one request shed by admission control (bounded queue full
     /// or connection limit reached). Shed work never executed, so it
     /// does not count toward `errors`.
     pub fn record_shed(&self) {
-        self.lock().shed += 1;
+        self.record(|m| m.shed += 1);
     }
 
     /// Record one request dropped because its deadline passed (at
     /// admission or at flush). Dropped work never executed, so it does
     /// not count toward `errors`.
     pub fn record_deadline_drop(&self) {
-        self.lock().deadline_drops += 1;
+        self.record(|m| m.deadline_drops += 1);
     }
 
     /// Record one panic caught and converted into per-request
     /// `internal` errors (engine execution, pool worker, or handler).
     pub fn record_panic_recovered(&self) {
-        self.lock().panics_recovered += 1;
+        self.record(|m| m.panics_recovered += 1);
     }
 
     /// Record one transient accept-loop error that was logged and
     /// survived instead of killing the listener.
     pub fn record_accept_error(&self) {
-        self.lock().accept_errors += 1;
+        self.record(|m| m.accept_errors += 1);
     }
 
     /// Record one flushed SpMV batch group: its size and how many of
@@ -143,12 +178,13 @@ impl ServiceMetrics {
     /// merges that resolving *before* grouping made possible (under
     /// requested-kind grouping they would have flushed separately).
     pub fn record_group(&self, size: usize, auto_requests: usize, explicit_requests: usize) {
-        let mut m = self.lock();
-        m.batch_groups += 1;
-        m.group_size.push(size as f64);
-        if auto_requests > 0 && explicit_requests > 0 {
-            m.batch_merged_auto += auto_requests as u64;
-        }
+        self.record(|m| {
+            m.batch_groups += 1;
+            m.group_size.push(size as f64);
+            if auto_requests > 0 && explicit_requests > 0 {
+                m.batch_merged_auto += auto_requests as u64;
+            }
+        });
     }
 
     /// Record one fused SpMM execution: `width` vectors answered by a
@@ -156,35 +192,38 @@ impl ServiceMetrics {
     /// path, as opposed to `mean_group_size` which counts every flushed
     /// group including singletons and fallbacks).
     pub fn record_spmm(&self, width: usize) {
-        let mut m = self.lock();
-        m.spmm_fused_vectors += width as u64;
-        m.spmm_width.push(width as f64);
+        self.record(|m| {
+            m.spmm_fused_vectors += width as u64;
+            m.spmm_width.push(width as f64);
+        });
     }
 
     /// Record one applied matrix delta: its latency and how much of the
     /// HBP it had to re-fill (the blocks-touched vs blocks-total ratio
     /// is the incremental path's whole value proposition).
     pub fn record_update(&self, secs: f64, report: &crate::preprocess::UpdateReport) {
-        let mut m = self.lock();
-        m.updates += 1;
-        if report.full_rebuild {
-            m.full_rebuilds += 1;
-        }
-        m.update_blocks_touched += report.blocks_touched as u64;
-        m.update_blocks_total += report.blocks_total as u64;
-        m.update_secs.push(secs);
+        self.record(|m| {
+            m.updates += 1;
+            if report.full_rebuild {
+                m.full_rebuilds += 1;
+            }
+            m.update_blocks_touched += report.blocks_touched as u64;
+            m.update_blocks_total += report.blocks_total as u64;
+            m.update_secs.push(secs);
+        });
     }
 
     /// Record one tuner outcome: whether the cache short-circuited it,
     /// how many candidates were trialed, and the end-to-end tune cost.
     pub fn record_tune(&self, outcome: &crate::tune::TuneOutcome) {
-        let mut m = self.lock();
-        m.tunes += 1;
-        if outcome.cache_hit {
-            m.tune_cache_hits += 1;
-        }
-        m.tune_trials += outcome.report.as_ref().map(|r| r.trials.len()).unwrap_or(0) as u64;
-        m.tune_secs.push(outcome.tune_secs);
+        self.record(|m| {
+            m.tunes += 1;
+            if outcome.cache_hit {
+                m.tune_cache_hits += 1;
+            }
+            m.tune_trials += outcome.report.as_ref().map(|r| r.trials.len()).unwrap_or(0) as u64;
+            m.tune_secs.push(outcome.tune_secs);
+        });
     }
 
     /// Snapshot for the `stats` endpoint.
@@ -318,6 +357,23 @@ impl MetricsSnapshot {
             ("accept_errors", Json::Num(self.accept_errors as f64)),
         ])
     }
+
+    /// Compact per-shard view for the `stats` reply's `shards` array.
+    /// Lists only the counters recorded exclusively through shard
+    /// metrics (never directly on the root), so summing any of these
+    /// fields across the breakdown reproduces the global total.
+    pub fn shard_json(&self, shard: usize) -> crate::util::json::Json {
+        use crate::util::json::{obj, Json};
+        obj(&[
+            ("shard", Json::Num(shard as f64)),
+            ("requests", Json::Num(self.requests as f64)),
+            ("errors", Json::Num(self.errors as f64)),
+            ("shed", Json::Num(self.shed as f64)),
+            ("deadline_drops", Json::Num(self.deadline_drops as f64)),
+            ("panics_recovered", Json::Num(self.panics_recovered as f64)),
+            ("batch_groups", Json::Num(self.batch_groups as f64)),
+        ])
+    }
 }
 
 #[cfg(test)]
@@ -344,6 +400,54 @@ mod tests {
         assert_eq!(j.get("deadline_drops").and_then(|v| v.as_usize()), Some(1));
         assert_eq!(j.get("panics_recovered").and_then(|v| v.as_usize()), Some(1));
         assert_eq!(j.get("accept_errors").and_then(|v| v.as_usize()), Some(1));
+    }
+
+    #[test]
+    fn shard_metrics_roll_up_into_the_parent() {
+        let root = std::sync::Arc::new(ServiceMetrics::new());
+        let shards: Vec<ServiceMetrics> =
+            (0..3).map(|_| ServiceMetrics::shard_of(root.clone())).collect();
+        shards[0].record_request(1e-5, 100);
+        shards[0].record_request(2e-5, 100);
+        shards[1].record_error();
+        shards[1].record_shed();
+        shards[2].record_deadline_drop();
+        shards[2].record_panic_recovered();
+        shards[2].record_group(2, 1, 1);
+        shards[2].record_spmm(2);
+
+        // every shard recording is visible in the parent totals...
+        let s = root.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.shed, 1);
+        assert_eq!(s.deadline_drops, 1);
+        assert_eq!(s.panics_recovered, 1);
+        assert_eq!(s.batch_groups, 1);
+        assert_eq!(s.batch_merged_auto, 1);
+        assert_eq!(s.spmm_fused_vectors, 2);
+        // ...and derived means aggregate over the union of shards
+        assert!((s.mean_latency_secs - 1.5e-5).abs() < 1e-12);
+
+        // each shard keeps its own view; sums reproduce the totals
+        let per: Vec<MetricsSnapshot> = shards.iter().map(|m| m.snapshot()).collect();
+        assert_eq!(per.iter().map(|p| p.requests).sum::<u64>(), s.requests);
+        assert_eq!(per.iter().map(|p| p.errors).sum::<u64>(), s.errors);
+        assert_eq!(per.iter().map(|p| p.shed).sum::<u64>(), s.shed);
+        assert_eq!(per[0].requests, 2);
+        assert_eq!(per[1].requests, 0);
+
+        // recordings on the root do NOT propagate down
+        root.record_accept_error();
+        assert_eq!(shards[0].snapshot().accept_errors, 0);
+
+        // the shard json view carries exactly the roll-up counters
+        let j = per[2].shard_json(2);
+        assert_eq!(j.get("shard").and_then(|v| v.as_usize()), Some(2));
+        assert_eq!(j.get("deadline_drops").and_then(|v| v.as_usize()), Some(1));
+        assert_eq!(j.get("panics_recovered").and_then(|v| v.as_usize()), Some(1));
+        assert_eq!(j.get("batch_groups").and_then(|v| v.as_usize()), Some(1));
+        assert!(j.get("accept_errors").is_none(), "front-level counters stay global");
     }
 
     #[test]

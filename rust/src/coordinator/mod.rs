@@ -26,6 +26,16 @@
 //! observable evidence). See `docs/ARCHITECTURE.md` for the layer map
 //! and `docs/PROTOCOL.md` for the wire spec.
 //!
+//! The front is **sharded and pipelined** ([`server`]): the
+//! coordinator runs N independent batcher shards over the shared
+//! router, connections are assigned round-robin at accept time, and
+//! the wire protocol's opaque request-`id` envelope lets one
+//! connection keep many `spmv` requests in flight with out-of-order
+//! replies (`{"op":"hello"}` advertises `proto`/`features` for
+//! feature-detection). Per-shard counters roll up into the global
+//! [`metrics`] totals by construction; `stats` exposes the `shards`
+//! breakdown.
+//!
 //! The service is **fault tolerant** by construction: admission control
 //! sheds work the bounded queue cannot hold (`overloaded` +
 //! `retry_after_ms`), per-request deadlines drop work nobody is waiting
@@ -54,5 +64,6 @@ pub use error::{ErrorCode, ServiceError};
 pub use metrics::ServiceMetrics;
 pub use router::{EngineKind, Router};
 pub use server::{
-    serve, serve_background_with, serve_with, Coordinator, ServerConfig, ServerHandle,
+    serve, serve_background_with, serve_with, Client, Connection, Coordinator, ServerConfig,
+    ServerHandle, SpmvBuilder, SpmvTicket, PROTO_FEATURES, PROTO_VERSION,
 };

@@ -1,9 +1,11 @@
 //! The serving front: in-process [`Coordinator`] API + line-delimited
-//! JSON over TCP.
+//! JSON over TCP, sharded across N independent batchers.
 //!
 //! Protocol (one JSON object per line):
 //!
 //! ```text
+//! -> {"op":"hello"}
+//! <- {"ok":true, "proto":1, "features":["pipelining", ...], "shards":1}
 //! -> {"op":"spmv", "matrix":"m1", "x":[...], "engine":"hbp", "deadline_ms":250}
 //! <- {"ok":true, "y":[...], "resolved":"hbp"}
 //! -> {"op":"update", "matrix":"m1", "ops":[{"kind":"scale_row","row":3,"factor":0.5}, ...]}
@@ -11,20 +13,40 @@
 //! -> {"op":"list"}
 //! <- {"ok":true, "matrices":[{"name":"m1","rows":...,"cols":...,"nnz":...}]}
 //! -> {"op":"stats"}
-//! <- {"ok":true, "stats":{...}}
+//! <- {"ok":true, "stats":{..., "shards":[{"shard":0,...}]}}
 //! -> {"op":"tune", "matrix":"m1"}
 //! <- {"ok":true, "cache_hit":false, "decision":{"engine":"hbp",...},
 //!     "features":{...}, "trials":{...}}
 //! ```
 //!
+//! **Request ids.** Every request may carry an opaque `"id"` (any JSON
+//! value); the reply echoes it verbatim. An id-tagged `spmv` is
+//! *pipelined*: the connection thread submits it and reads the next
+//! request without waiting, so replies may come back out of order and
+//! the client demuxes by id ([`Connection`] does). Requests *without*
+//! an id keep the original strict in-order semantics — they act as a
+//! barrier, draining every in-flight pipelined reply first — so
+//! pre-envelope clients (and all the existing `docs/PROTOCOL.md`
+//! examples) behave exactly as before.
+//!
+//! **Sharding.** The coordinator runs `N ≥ 1` shards, each a private
+//! [`Batcher`] (own bounded queue, own admission control, own panic
+//! isolation) over the *shared* [`Router`] and tune cache. Connections
+//! are assigned round-robin at accept time, so one shard's stall or
+//! shed leaves the other shards' pipelines untouched. Per-shard
+//! counters roll up into the global totals by construction
+//! ([`ServiceMetrics::shard_of`]); the `stats` reply exposes the
+//! breakdown under `"shards"`.
+//!
 //! Failure replies are typed: `{"ok":false, "code":..., "error":...}`
 //! with `code` drawn from the stable taxonomy in [`super::error`]
 //! (`bad_request`, `unknown_matrix`, `overloaded`, `deadline_exceeded`,
-//! `internal`); `overloaded` sheds also carry `retry_after_ms`.
+//! `shutting_down`, `internal`); `overloaded` sheds also carry
+//! `retry_after_ms`.
 //!
 //! The normative spec — every op, every field, with examples executed
 //! verbatim by `rust/tests/protocol_doc.rs` — lives in
-//! `docs/PROTOCOL.md`.
+//! `docs/PROTOCOL.md`, including the `hello` compatibility policy.
 //!
 //! `spmv` accepts `"engine":"auto"` (resolved to the matrix's tuned
 //! decision); the default stays `"hbp"`. Every successful `spmv`
@@ -36,10 +58,12 @@
 //!
 //! The TCP front degrades instead of dying ([`ServerConfig`]): accept
 //! errors are counted and survived, a connection cap sheds with one
-//! `overloaded` line, over-long request lines get `bad_request` and a
-//! disconnect, stalled clients are timed out, and request handling is
-//! panic-isolated per request. [`ServerHandle::shutdown`] stops the
-//! accept loop and drains in-flight connections.
+//! `overloaded` line, a per-connection pipeline cap
+//! ([`ServerConfig::max_pipeline`]) sheds the same way, over-long
+//! request lines get `bad_request` and a disconnect, stalled clients
+//! are timed out, and request handling is panic-isolated per request.
+//! [`ServerHandle::shutdown`] stops the accept loop and drains
+//! in-flight connections.
 //!
 //! Update op kinds mirror [`DeltaOp`]:
 //! `{"kind":"set","row":R,"col":C,"value":V}`,
@@ -49,50 +73,101 @@
 
 use super::batcher::{Batcher, BatcherConfig, BatcherHandle, SpmvReply};
 use super::error::{error_reply, panic_message, reply_error, ServiceError};
-use super::metrics::ServiceMetrics;
+use super::metrics::{MetricsSnapshot, ServiceMetrics};
 use super::router::{EngineKind, Router};
 use crate::preprocess::{DeltaOp, MatrixDelta, UpdateReport};
-use crate::util::json::{obj, Json};
+use crate::util::json::{num_arr, obj, Json};
 use anyhow::{bail, Context, Result};
+use std::collections::{HashMap, HashSet};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{mpsc, Arc};
 use std::time::Duration;
 
-/// The in-process coordinator: router + batcher + metrics.
+/// Wire-protocol version the `hello` op reports. Version 1 is the
+/// request-id envelope: ids echo verbatim, id-tagged `spmv` pipelines.
+pub const PROTO_VERSION: u64 = 1;
+
+/// Feature tags the `hello` op advertises, for client feature-detection.
+/// `"pipelining"` stays first — the executed protocol-doc examples
+/// check the array's first element.
+pub const PROTO_FEATURES: [&str; 5] =
+    ["pipelining", "deadline_ms", "spmm_fuse", "auto_engine", "incremental_update"];
+
+/// The in-process coordinator: shared router + N sharded batchers +
+/// rolled-up metrics.
 pub struct Coordinator {
-    /// The matrix registry requests route through.
+    /// The matrix registry requests route through (shared by all shards).
     pub router: Arc<Router>,
-    /// Service counters (requests, updates, tunes, batch groups).
+    /// Global service counters — every shard's recordings roll up here,
+    /// so totals always equal the sum over shards plus front-level
+    /// events (accept errors, register-time tunes).
     pub metrics: Arc<ServiceMetrics>,
-    // field order matters: `handle` must drop BEFORE `batcher` (fields
-    // drop in declaration order) or Batcher::drop joins a dispatcher
-    // that still sees a live sender and never exits.
-    handle: BatcherHandle,
-    batcher: Batcher,
+    /// Per-shard counters (each a [`ServiceMetrics::shard_of`] child of
+    /// `metrics`), indexed by shard id.
+    shard_metrics: Vec<Arc<ServiceMetrics>>,
+    // field order matters: `handles` must drop BEFORE `batchers`
+    // (fields drop in declaration order) or Batcher::drop joins a
+    // dispatcher that still sees a live sender and never exits.
+    handles: Vec<BatcherHandle>,
+    batchers: Vec<Batcher>,
+    /// Round-robin cursor for shard assignment of in-process calls.
+    rr: AtomicUsize,
 }
 
 impl Coordinator {
-    /// Wrap a registered router in the batching pipeline, recording
-    /// each registration's tune outcome in fresh metrics.
+    /// Wrap a registered router in a single-shard batching pipeline,
+    /// recording each registration's tune outcome in fresh metrics.
     pub fn new(router: Router, cfg: BatcherConfig) -> Coordinator {
+        Coordinator::with_shards(router, cfg, 1)
+    }
+
+    /// [`Coordinator::new`] with `shards` independent batchers (clamped
+    /// to at least 1). All shards share the router and tune cache; each
+    /// gets its own bounded queue, dispatcher, and rolled-up metrics.
+    pub fn with_shards(router: Router, cfg: BatcherConfig, shards: usize) -> Coordinator {
         let router = Arc::new(router);
         let metrics = Arc::new(ServiceMetrics::new());
         // registration happens before the router is shared, so every
         // tune outcome the registry holds is recorded here exactly once
+        // — on the root: tuning is front-level work, not shard work
         for name in router.names() {
             metrics.record_tune(&router.get(name).expect("registered matrix").tune);
         }
-        let batcher = Batcher::start(router.clone(), metrics.clone(), cfg);
-        let handle = batcher.handle();
-        Coordinator { router, metrics, handle, batcher }
+        let mut shard_metrics = Vec::new();
+        let mut batchers = Vec::new();
+        let mut handles = Vec::new();
+        for _ in 0..shards.max(1) {
+            let m = Arc::new(ServiceMetrics::shard_of(metrics.clone()));
+            let b = Batcher::start(router.clone(), m.clone(), cfg);
+            handles.push(b.handle());
+            shard_metrics.push(m);
+            batchers.push(b);
+        }
+        Coordinator { router, metrics, shard_metrics, handles, batchers, rr: AtomicUsize::new(0) }
     }
 
-    /// Synchronous SpMV through the batching pipeline.
+    /// How many shards this coordinator runs.
+    pub fn shards(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Round-robin shard assignment for in-process calls.
+    fn next_shard(&self) -> usize {
+        self.rr.fetch_add(1, Ordering::Relaxed) % self.handles.len()
+    }
+
+    /// Per-shard metric snapshots, indexed by shard id.
+    pub fn shard_snapshots(&self) -> Vec<MetricsSnapshot> {
+        self.shard_metrics.iter().map(|m| m.snapshot()).collect()
+    }
+
+    /// Synchronous SpMV through the batching pipeline (round-robin
+    /// across shards).
     pub fn spmv(&self, matrix: &str, engine: EngineKind, x: Vec<f64>) -> Result<Vec<f64>> {
-        self.handle.spmv(matrix, engine, x)
+        self.handles[self.next_shard()].spmv(matrix, engine, x)
     }
 
     /// Synchronous SpMV that also reports the concrete engine the
@@ -104,7 +179,7 @@ impl Coordinator {
         engine: EngineKind,
         x: Vec<f64>,
     ) -> Result<SpmvReply> {
-        self.handle.spmv_resolved(matrix, engine, x)
+        self.handles[self.next_shard()].spmv_resolved(matrix, engine, x)
     }
 
     /// [`Coordinator::spmv_resolved`] with an optional queueing deadline
@@ -117,33 +192,63 @@ impl Coordinator {
         x: Vec<f64>,
         deadline_ms: Option<u64>,
     ) -> Result<SpmvReply> {
-        self.handle.spmv_deadline(matrix, engine, x, deadline_ms)
+        self.handles[self.next_shard()].spmv_deadline(matrix, engine, x, deadline_ms)
     }
 
     /// Synchronous matrix update through the batching pipeline (ordered
-    /// with SpMV submissions on the same queue).
+    /// with SpMV submissions on the same shard's queue).
     pub fn update(&self, matrix: &str, delta: MatrixDelta) -> Result<UpdateReport> {
-        self.handle.update(matrix, delta)
+        self.handles[self.next_shard()].update(matrix, delta)
     }
 
-    /// A submission handle onto this coordinator's batcher.
+    /// A submission handle onto one of this coordinator's batchers
+    /// (round-robin; use [`Coordinator::shard_handle`] to pick).
     pub fn handle(&self) -> BatcherHandle {
-        self.batcher.handle()
+        self.shard_handle(self.next_shard())
     }
 
-    /// Process one protocol request (shared by TCP and tests). Never
-    /// panics: failures become `{"ok":false,"code":...,"error":...}`
-    /// replies, and a panic escaping the handler (the batcher already
-    /// isolates engine panics; this catches everything else) is
-    /// recovered into an `internal` reply so one poisoned request
-    /// cannot take its connection thread down.
+    /// The submission handle of a specific shard (index taken modulo
+    /// the shard count).
+    pub fn shard_handle(&self, shard: usize) -> BatcherHandle {
+        self.batchers[shard % self.batchers.len()].handle()
+    }
+
+    /// Process one protocol request on a round-robin shard (shared by
+    /// TCP and tests). Never panics: failures become
+    /// `{"ok":false,"code":...,"error":...}` replies. The request's
+    /// `"id"`, if any, is echoed on the reply verbatim.
     pub fn handle_json(&self, line: &str) -> Json {
-        match catch_unwind(AssertUnwindSafe(|| self.try_handle(line))) {
+        self.handle_json_on(self.next_shard(), line)
+    }
+
+    /// [`Coordinator::handle_json`] pinned to a shard — what a TCP
+    /// connection (which keeps its accept-time shard for its lifetime)
+    /// runs. A line that does not parse gets a `bad_request` reply with
+    /// no id (there is no trustworthy envelope to echo from).
+    pub fn handle_json_on(&self, shard: usize, line: &str) -> Json {
+        let req = match Json::parse(line).context("parsing request JSON") {
+            Ok(req) => req,
+            Err(e) => return error_reply(&e),
+        };
+        let id = req.get("id").cloned();
+        attach_id(self.handle_request(shard, &req), id)
+    }
+
+    /// Process one parsed request on a shard. Panic-isolated (the
+    /// batcher already isolates engine panics; this catches everything
+    /// else) so one poisoned request cannot take its connection thread
+    /// down; a recovered panic is an `internal` reply counted against
+    /// the shard it ran on. Does NOT attach the id — callers that own
+    /// the envelope do ([`Coordinator::handle_json_on`], the pipelined
+    /// connection loop).
+    pub fn handle_request(&self, shard: usize, req: &Json) -> Json {
+        let shard = shard % self.handles.len();
+        match catch_unwind(AssertUnwindSafe(|| self.try_handle(shard, req))) {
             Ok(Ok(v)) => v,
             Ok(Err(e)) => error_reply(&e),
             Err(p) => {
-                self.metrics.record_panic_recovered();
-                self.metrics.record_error();
+                self.shard_metrics[shard].record_panic_recovered();
+                self.shard_metrics[shard].record_error();
                 error_reply(&anyhow::Error::new(ServiceError::internal(format!(
                     "request handling panicked (recovered): {}",
                     panic_message(p)
@@ -152,42 +257,27 @@ impl Coordinator {
         }
     }
 
-    fn try_handle(&self, line: &str) -> Result<Json> {
-        let req = Json::parse(line).context("parsing request JSON")?;
+    fn try_handle(&self, shard: usize, req: &Json) -> Result<Json> {
         match req.req_str("op")? {
+            "hello" => Ok(obj(&[
+                ("ok", Json::Bool(true)),
+                ("proto", Json::Num(PROTO_VERSION as f64)),
+                (
+                    "features",
+                    Json::Arr(PROTO_FEATURES.iter().map(|f| Json::Str((*f).to_string())).collect()),
+                ),
+                ("shards", Json::Num(self.shards() as f64)),
+            ])),
             "spmv" => {
-                let matrix = req.req_str("matrix")?;
-                let engine: EngineKind =
-                    req.get("engine").and_then(Json::as_str).unwrap_or("hbp").parse()?;
-                let x: Vec<f64> = req
-                    .get("x")
-                    .and_then(Json::as_arr)
-                    .context("missing array field \"x\"")?
-                    .iter()
-                    .map(|v| v.as_f64().context("non-numeric x entry"))
-                    .collect::<Result<_>>()?;
-                let deadline_ms = match req.get("deadline_ms") {
-                    None => None,
-                    Some(v) => {
-                        let n = v.as_f64().context("non-numeric \"deadline_ms\"")?;
-                        anyhow::ensure!(
-                            n.fract() == 0.0 && (0.0..=9.007_199_254_740_992e15).contains(&n),
-                            "deadline_ms must be a non-negative integer, got {n}"
-                        );
-                        Some(n as u64)
-                    }
-                };
-                let reply = self.spmv_deadline(matrix, engine, x, deadline_ms)?;
-                Ok(obj(&[
-                    ("ok", Json::Bool(true)),
-                    ("y", crate::util::json::num_arr(&reply.y)),
-                    ("resolved", Json::Str(reply.resolved.to_string())),
-                ]))
+                let p = parse_spmv(req)?;
+                let reply =
+                    self.handles[shard].spmv_deadline(&p.matrix, p.engine, p.x, p.deadline_ms)?;
+                Ok(spmv_reply_json(&reply))
             }
             "update" => {
                 let matrix = req.req_str("matrix")?;
-                let delta = delta_from_json(&req)?;
-                let report = self.update(matrix, delta)?;
+                let delta = delta_from_json(req)?;
+                let report = self.handles[shard].update(matrix, delta)?;
                 Ok(report_json(&report))
             }
             "list" => {
@@ -208,10 +298,19 @@ impl Coordinator {
                     .collect();
                 Ok(obj(&[("ok", Json::Bool(true)), ("matrices", Json::Arr(matrices))]))
             }
-            "stats" => Ok(obj(&[
-                ("ok", Json::Bool(true)),
-                ("stats", self.metrics.snapshot().to_json()),
-            ])),
+            "stats" => {
+                let mut stats = self.metrics.snapshot().to_json();
+                let shards: Vec<Json> = self
+                    .shard_metrics
+                    .iter()
+                    .enumerate()
+                    .map(|(i, m)| m.snapshot().shard_json(i))
+                    .collect();
+                if let Json::Obj(map) = &mut stats {
+                    map.insert("shards".to_string(), Json::Arr(shards));
+                }
+                Ok(obj(&[("ok", Json::Bool(true)), ("stats", stats)]))
+            }
             "tune" => {
                 let matrix = req.req_str("matrix")?;
                 let m = self.router.get(matrix)?;
@@ -220,6 +319,62 @@ impl Coordinator {
             other => anyhow::bail!("unknown op {other:?}"),
         }
     }
+}
+
+/// A validated `spmv` request body (everything but the envelope).
+struct SpmvParams {
+    matrix: String,
+    engine: EngineKind,
+    x: Vec<f64>,
+    deadline_ms: Option<u64>,
+}
+
+/// Validate an `spmv` request's fields — shared by the inline
+/// (un-id'd) path and the pipelined path, so both reject malformed
+/// requests with identical `bad_request` messages.
+fn parse_spmv(req: &Json) -> Result<SpmvParams> {
+    let matrix = req.req_str("matrix")?.to_string();
+    let engine: EngineKind =
+        req.get("engine").and_then(Json::as_str).unwrap_or("hbp").parse()?;
+    let x: Vec<f64> = req
+        .get("x")
+        .and_then(Json::as_arr)
+        .context("missing array field \"x\"")?
+        .iter()
+        .map(|v| v.as_f64().context("non-numeric x entry"))
+        .collect::<Result<_>>()?;
+    let deadline_ms = match req.get("deadline_ms") {
+        None => None,
+        Some(v) => {
+            let n = v.as_f64().context("non-numeric \"deadline_ms\"")?;
+            anyhow::ensure!(
+                n.fract() == 0.0 && (0.0..=9.007_199_254_740_992e15).contains(&n),
+                "deadline_ms must be a non-negative integer, got {n}"
+            );
+            Some(n as u64)
+        }
+    };
+    Ok(SpmvParams { matrix, engine, x, deadline_ms })
+}
+
+/// Serialize a successful SpMV result into the protocol reply.
+fn spmv_reply_json(reply: &SpmvReply) -> Json {
+    obj(&[
+        ("ok", Json::Bool(true)),
+        ("y", num_arr(&reply.y)),
+        ("resolved", Json::Str(reply.resolved.to_string())),
+    ])
+}
+
+/// Echo the request's opaque `"id"` onto a reply object, verbatim —
+/// any JSON value (string, number, even null) round-trips untouched.
+fn attach_id(mut reply: Json, id: Option<Json>) -> Json {
+    if let Some(id) = id {
+        if let Json::Obj(map) = &mut reply {
+            map.insert("id".to_string(), id);
+        }
+    }
+    reply
 }
 
 /// Strict index parse for update ops: `Json::as_usize` is a saturating
@@ -324,7 +479,7 @@ fn delta_to_json(delta: &MatrixDelta) -> Json {
                     "cols",
                     Json::Arr(cols.iter().map(|&c| Json::Num(c as f64)).collect()),
                 ),
-                ("values", crate::util::json::num_arr(values)),
+                ("values", num_arr(values)),
             ]),
         })
         .collect();
@@ -372,8 +527,8 @@ fn report_json(report: &UpdateReport) -> Json {
 /// Tunables for the TCP front's self-protection. Everything here exists
 /// so a misbehaving *client* degrades its own service, not the server:
 /// the connection cap bounds thread count, the read timeout unsticks
-/// threads pinned by stalled clients, and the line cap bounds per-request
-/// memory.
+/// threads pinned by stalled clients, the line cap bounds per-request
+/// memory, and the pipeline cap bounds per-connection waiter threads.
 #[derive(Clone, Copy, Debug)]
 pub struct ServerConfig {
     /// Maximum simultaneous connections; accepts beyond this get one
@@ -389,6 +544,10 @@ pub struct ServerConfig {
     /// How long [`ServerHandle::shutdown`] waits for in-flight
     /// connections to finish before returning anyway.
     pub shutdown_grace: Duration,
+    /// Most id-tagged `spmv` requests one connection may have in flight;
+    /// beyond this the request is shed with `overloaded` (id echoed) —
+    /// the pipelined analogue of the batcher's bounded queue.
+    pub max_pipeline: usize,
 }
 
 impl Default for ServerConfig {
@@ -398,12 +557,14 @@ impl Default for ServerConfig {
             read_timeout: Some(Duration::from_secs(60)),
             max_line_bytes: 8 * 1024 * 1024,
             shutdown_grace: Duration::from_secs(2),
+            max_pipeline: 128,
         }
     }
 }
 
-/// Back-off hint on connection-limit sheds (the batcher's queue sheds
-/// carry the configurable `BatcherConfig::retry_after_ms` instead).
+/// Back-off hint on connection-limit and pipeline-limit sheds (the
+/// batcher's queue sheds carry the configurable
+/// `BatcherConfig::retry_after_ms` instead).
 const CONN_RETRY_AFTER_MS: u64 = 50;
 
 /// A running TCP server: its bound address plus shutdown control.
@@ -506,6 +667,11 @@ fn accept_loop(
     shutdown: Arc<AtomicBool>,
 ) {
     let conns = Arc::new(AtomicUsize::new(0));
+    let nshards = c.shards();
+    // the accept loop is single-threaded, so a plain counter assigns
+    // connections to shards round-robin: connection k -> shard k % N,
+    // fixed for the connection's lifetime
+    let mut conn_seq: usize = 0;
     loop {
         let stream = match listener.accept() {
             Ok((s, _)) => s,
@@ -524,8 +690,12 @@ fn accept_loop(
         if shutdown.load(Ordering::SeqCst) {
             break; // usually the shutdown poke connection itself
         }
+        let shard = conn_seq % nshards;
+        conn_seq += 1;
         if conns.load(Ordering::SeqCst) >= cfg.max_conns {
-            c.metrics.record_shed();
+            // charged to the shard the connection would have landed on,
+            // so the rolled-up totals still cover every shed
+            c.shard_metrics[shard].record_shed();
             refuse_conn(stream, cfg.max_conns);
             continue;
         }
@@ -534,7 +704,7 @@ fn accept_loop(
         let conn_counter = conns.clone();
         let conn_shutdown = shutdown.clone();
         let spawned = std::thread::Builder::new().name("hbp-conn".into()).spawn(move || {
-            let _ = handle_conn(conn_c, stream, cfg, conn_shutdown);
+            let _ = handle_conn(conn_c, stream, shard, cfg, conn_shutdown);
             conn_counter.fetch_sub(1, Ordering::SeqCst);
         });
         if spawned.is_err() {
@@ -592,32 +762,86 @@ fn read_capped_line(
     }
 }
 
+/// Everything the per-connection loop needs, bundled so the loop and
+/// its pipelined-dispatch helper share one signature.
+struct ConnCtx<'a> {
+    c: &'a Coordinator,
+    shard: usize,
+    cfg: ServerConfig,
+    shutdown: &'a AtomicBool,
+    /// Sender half of the connection's reply outbox (the writer thread
+    /// owns the receiving half and the socket's write half).
+    out_tx: &'a mpsc::Sender<String>,
+    /// Id-tagged spmv requests submitted but not yet answered.
+    inflight: &'a Arc<AtomicUsize>,
+    /// Live reply-waiter threads; un-id'd requests join them (barrier).
+    waiters: &'a mut Vec<std::thread::JoinHandle<()>>,
+}
+
+/// One TCP connection. A single writer thread owns the write half and
+/// drains a reply outbox, so the reader loop and any number of
+/// pipelined reply waiters can emit lines without interleaving bytes.
 fn handle_conn(
     c: Arc<Coordinator>,
     stream: TcpStream,
+    shard: usize,
     cfg: ServerConfig,
     shutdown: Arc<AtomicBool>,
 ) -> Result<()> {
     stream.set_read_timeout(cfg.read_timeout)?;
     let mut reader = BufReader::new(stream.try_clone()?);
-    let mut writer = stream;
+    let (out_tx, out_rx) = mpsc::channel::<String>();
+    let writer = std::thread::Builder::new()
+        .name("hbp-conn-writer".into())
+        .spawn(move || {
+            let mut w = stream;
+            // runs until every sender (reader loop + waiters) is gone
+            while let Ok(reply) = out_rx.recv() {
+                if w.write_all(reply.as_bytes()).is_err() || w.write_all(b"\n").is_err() {
+                    break; // client gone; senders' failed sends are ignored
+                }
+            }
+        })
+        .context("spawning connection writer")?;
+    let inflight = Arc::new(AtomicUsize::new(0));
+    let mut waiters = Vec::new();
+    let res = conn_loop(
+        &mut ConnCtx {
+            c: &c,
+            shard,
+            cfg,
+            shutdown: &shutdown,
+            out_tx: &out_tx,
+            inflight: &inflight,
+            waiters: &mut waiters,
+        },
+        &mut reader,
+    );
+    // teardown order matters: waiters hold outbox senders, so join them
+    // first, then drop ours so the writer's recv loop ends, then join it
+    join_waiters(&mut waiters);
+    drop(out_tx);
+    let _ = writer.join();
+    res
+}
+
+fn conn_loop(ctx: &mut ConnCtx<'_>, reader: &mut BufReader<TcpStream>) -> Result<()> {
     let mut line = String::new();
     loop {
-        if shutdown.load(Ordering::SeqCst) {
+        if ctx.shutdown.load(Ordering::SeqCst) {
             return Ok(());
         }
         line.clear();
-        match read_capped_line(&mut reader, &mut line, cfg.max_line_bytes) {
+        match read_capped_line(reader, &mut line, ctx.cfg.max_line_bytes) {
             Ok(ReadOutcome::Eof) => return Ok(()), // client closed
             Ok(ReadOutcome::Line) => {}
             Ok(ReadOutcome::TooLong) => {
-                c.metrics.record_error();
+                ctx.c.shard_metrics[ctx.shard].record_error();
                 let e = anyhow::Error::new(ServiceError::bad_request(format!(
                     "request line exceeds {} bytes",
-                    cfg.max_line_bytes
+                    ctx.cfg.max_line_bytes
                 )));
-                let _ = writer.write_all(error_reply(&e).to_string().as_bytes());
-                let _ = writer.write_all(b"\n");
+                let _ = ctx.out_tx.send(error_reply(&e).to_string());
                 return Ok(()); // cannot resync past the unread remainder
             }
             Err(e)
@@ -630,57 +854,212 @@ fn handle_conn(
             }
             Err(e) => return Err(e.into()),
         }
-        if line.trim().is_empty() {
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
             continue;
         }
-        let resp = c.handle_json(line.trim());
-        writer.write_all(resp.to_string().as_bytes())?;
-        writer.write_all(b"\n")?;
+        match Json::parse(trimmed).context("parsing request JSON") {
+            Err(e) => {
+                // unparseable: there is no trustworthy id to echo, so
+                // treat it as an un-id'd (ordered) request
+                join_waiters(ctx.waiters);
+                let _ = ctx.out_tx.send(error_reply(&e).to_string());
+            }
+            Ok(req) => match req.get("id").cloned() {
+                Some(id) => handle_tagged(ctx, &req, id),
+                None => {
+                    // un-id'd requests keep strict in-order semantics:
+                    // drain every pipelined reply first (their outbox
+                    // lines are queued before ours), then run inline
+                    join_waiters(ctx.waiters);
+                    let reply = ctx.c.handle_request(ctx.shard, &req);
+                    let _ = ctx.out_tx.send(reply.to_string());
+                }
+            },
+        }
+        // reap finished waiters so the vec tracks only live pipelines
+        ctx.waiters.retain(|h| !h.is_finished());
     }
 }
 
-/// A tiny blocking client for the protocol (examples + tests).
-pub struct Client {
+/// Dispatch one id-tagged request. Tagged `spmv` pipelines: submit to
+/// the shard's batcher, hand the reply receiver to a waiter thread, and
+/// return to the read loop immediately. Every other tagged op answers
+/// inline (still without blocking on outstanding spmv replies — tagged
+/// replies may reorder freely).
+fn handle_tagged(ctx: &mut ConnCtx<'_>, req: &Json, id: Json) {
+    if req.get("op").and_then(Json::as_str) != Some("spmv") {
+        let reply = attach_id(ctx.c.handle_request(ctx.shard, req), Some(id));
+        let _ = ctx.out_tx.send(reply.to_string());
+        return;
+    }
+    if ctx.inflight.load(Ordering::SeqCst) >= ctx.cfg.max_pipeline {
+        ctx.c.shard_metrics[ctx.shard].record_shed();
+        let e = anyhow::Error::new(ServiceError::overloaded(
+            format!("pipeline limit reached ({} in flight)", ctx.cfg.max_pipeline),
+            CONN_RETRY_AFTER_MS,
+        ));
+        let _ = ctx.out_tx.send(attach_id(error_reply(&e), Some(id)).to_string());
+        return;
+    }
+    let params = match parse_spmv(req) {
+        Ok(p) => p,
+        Err(e) => {
+            let _ = ctx.out_tx.send(attach_id(error_reply(&e), Some(id)).to_string());
+            return;
+        }
+    };
+    let rx = match ctx.c.handles[ctx.shard].submit_spmv(
+        &params.matrix,
+        params.engine,
+        params.x,
+        params.deadline_ms,
+    ) {
+        Ok(rx) => rx,
+        Err(e) => {
+            // admission refusal (overloaded / shutting_down): answered
+            // immediately; the batcher already recorded the shed
+            let _ = ctx.out_tx.send(attach_id(error_reply(&e), Some(id)).to_string());
+            return;
+        }
+    };
+    ctx.inflight.fetch_add(1, Ordering::SeqCst);
+    let out = ctx.out_tx.clone();
+    let inflight = ctx.inflight.clone();
+    let id_on_fail = id.clone();
+    let spawned = std::thread::Builder::new().name("hbp-conn-waiter".into()).spawn(move || {
+        let result = match rx.recv() {
+            Ok(r) => r,
+            // the reply channel dying without an answer means the
+            // batcher tore down mid-request
+            Err(_) => Err(anyhow::Error::new(ServiceError::shutting_down(
+                "batcher shut down before answering the request",
+            ))),
+        };
+        let reply = match result {
+            Ok(r) => spmv_reply_json(&r),
+            Err(e) => error_reply(&e),
+        };
+        let _ = out.send(attach_id(reply, Some(id)).to_string());
+        inflight.fetch_sub(1, Ordering::SeqCst);
+    });
+    match spawned {
+        Ok(h) => ctx.waiters.push(h),
+        Err(_) => {
+            // no waiter thread: answer the id inline rather than
+            // silently dropping the reply (the computed result, if any,
+            // lands in the dropped receiver and is discarded)
+            ctx.inflight.fetch_sub(1, Ordering::SeqCst);
+            let e = anyhow::Error::new(ServiceError::internal("failed to spawn reply waiter"));
+            let _ = ctx.out_tx.send(attach_id(error_reply(&e), Some(id_on_fail)).to_string());
+        }
+    }
+}
+
+/// Barrier: block until every pipelined reply has been handed to the
+/// writer's outbox (outbox FIFO then preserves reply-before-barrier
+/// ordering on the wire).
+fn join_waiters(waiters: &mut Vec<std::thread::JoinHandle<()>>) {
+    for h in waiters.drain(..) {
+        let _ = h.join();
+    }
+}
+
+/// Client side: decode a successful spmv reply (or surface its typed
+/// error).
+fn spmv_reply_from_json(resp: &Json) -> Result<SpmvReply> {
+    if resp.get("ok") != Some(&Json::Bool(true)) {
+        return Err(reply_error(resp));
+    }
+    let y: Vec<f64> = resp
+        .get("y")
+        .and_then(Json::as_arr)
+        .context("missing y")?
+        .iter()
+        .map(|v| v.as_f64().context("bad y entry"))
+        .collect::<Result<_>>()?;
+    let resolved: EngineKind = resp
+        .get("resolved")
+        .and_then(Json::as_str)
+        .context("missing resolved")?
+        .parse()?;
+    Ok(SpmvReply { y, resolved })
+}
+
+/// A protocol connection: owns the socket and demuxes replies by
+/// request `id`, so any number of [`SpmvTicket`]s can be in flight at
+/// once.
+///
+/// ```no_run
+/// # use hbp_spmv::coordinator::{Connection, EngineKind};
+/// # fn demo() -> anyhow::Result<()> {
+/// let mut conn = Connection::connect("127.0.0.1:7070")?;
+/// let t1 = conn.spmv("m1", &[1.0, 2.0]).engine(EngineKind::Auto).submit()?;
+/// let t2 = conn.spmv("m1", &[3.0, 4.0]).deadline_ms(250).submit()?;
+/// let r2 = conn.wait(&t2)?; // replies may arrive in any order
+/// let r1 = conn.wait(&t1)?; // ... an early reply is parked, not lost
+/// # let _ = (r1, r2); Ok(()) }
+/// ```
+///
+/// Replies that arrive while the caller waits on a *different* ticket
+/// are parked and handed out when their ticket is waited on — nothing
+/// is dropped, regardless of wire order.
+pub struct Connection {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
+    /// Generator for this connection's request ids (`"c0"`, `"c1"`, ...).
+    next_id: u64,
+    /// Ids submitted through this connection and not yet claimed.
+    outstanding: HashSet<String>,
+    /// Replies that arrived before their ticket was waited on.
+    parked: HashMap<String, Json>,
 }
 
-impl Client {
+impl Connection {
     /// Connect to a serving coordinator.
-    pub fn connect(addr: impl std::net::ToSocketAddrs) -> Result<Client> {
+    pub fn connect(addr: impl std::net::ToSocketAddrs) -> Result<Connection> {
         let stream = TcpStream::connect(addr)?;
-        Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
+        Ok(Connection {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+            next_id: 0,
+            outstanding: HashSet::new(),
+            parked: HashMap::new(),
+        })
     }
 
-    /// Send one request object and read one response line.
-    pub fn call(&mut self, req: &Json) -> Result<Json> {
-        self.writer.write_all(req.to_string().as_bytes())?;
-        self.writer.write_all(b"\n")?;
-        let mut line = String::new();
-        self.reader.read_line(&mut line)?;
-        Json::parse(line.trim())
-    }
-
-    /// SpMV against a hosted matrix (default engine; the response's
-    /// `resolved` field is available through [`Client::call`]).
-    pub fn spmv(&mut self, matrix: &str, x: &[f64]) -> Result<Vec<f64>> {
-        let req = obj(&[
-            ("op", Json::Str("spmv".into())),
-            ("matrix", Json::Str(matrix.into())),
-            ("x", crate::util::json::num_arr(x)),
-        ]);
-        let resp = self.call(&req)?;
+    /// The versioned handshake: send `{"op":"hello"}` and return the
+    /// server's `{proto, features, shards}` reply for feature-detection.
+    pub fn hello(&mut self) -> Result<Json> {
+        let resp = self.call(&obj(&[("op", Json::Str("hello".into()))]))?;
         if resp.get("ok") != Some(&Json::Bool(true)) {
-            // typed: the returned error downcasts to ServiceError when
-            // the reply carried a valid code
             return Err(reply_error(&resp));
         }
-        resp.get("y")
-            .and_then(Json::as_arr)
-            .context("missing y")?
-            .iter()
-            .map(|v| v.as_f64().context("bad y entry"))
-            .collect()
+        Ok(resp)
+    }
+
+    /// Send one request object and read its reply. A request carrying a
+    /// string `"id"` is matched by id (replies to other outstanding
+    /// tickets are parked); an un-id'd request takes the next in-order
+    /// reply, exactly like the pre-envelope protocol.
+    pub fn call(&mut self, req: &Json) -> Result<Json> {
+        self.send_line(&req.to_string())?;
+        let want = req.get("id").and_then(Json::as_str).map(str::to_string);
+        self.read_reply(want.as_deref())
+    }
+
+    /// Start building an SpMV request against a hosted matrix. Finish
+    /// with [`SpmvBuilder::send`] (blocking round-trip) or
+    /// [`SpmvBuilder::submit`] (pipelined; claim later via
+    /// [`Connection::wait`]).
+    pub fn spmv(&mut self, matrix: &str, x: &[f64]) -> SpmvBuilder<'_> {
+        SpmvBuilder {
+            conn: self,
+            matrix: matrix.to_string(),
+            x: x.to_vec(),
+            engine: None,
+            deadline_ms: None,
+        }
     }
 
     /// Apply a delta to a hosted matrix, returning the server's report.
@@ -701,6 +1080,188 @@ impl Client {
             full_rebuild: resp.get("full_rebuild") == Some(&Json::Bool(true)),
         })
     }
+
+    /// Pipeline a whole batch: submit every `xs[i]` before reading any
+    /// reply, then claim them in submission order. Replies are returned
+    /// aligned with `xs` no matter what order the wire delivered them.
+    pub fn pipeline(
+        &mut self,
+        matrix: &str,
+        engine: EngineKind,
+        xs: &[Vec<f64>],
+    ) -> Result<Vec<SpmvReply>> {
+        let mut tickets = Vec::with_capacity(xs.len());
+        for x in xs {
+            tickets.push(self.spmv(matrix, x).engine(engine).submit()?);
+        }
+        tickets.iter().map(|t| self.wait(t)).collect()
+    }
+
+    /// Block until the ticket's reply arrives (or surface its typed
+    /// error). Replies to other tickets read along the way are parked.
+    pub fn wait(&mut self, ticket: &SpmvTicket) -> Result<SpmvReply> {
+        let resp = self.read_reply(Some(&ticket.id))?;
+        spmv_reply_from_json(&resp)
+    }
+
+    /// How many replies arrived out of order and are parked awaiting
+    /// their ticket's [`Connection::wait`] (observability for tests).
+    pub fn parked(&self) -> usize {
+        self.parked.len()
+    }
+
+    fn send_line(&mut self, line: &str) -> Result<()> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        Ok(())
+    }
+
+    /// Send one id-tagged spmv without reading anything back.
+    fn submit_spmv(
+        &mut self,
+        matrix: &str,
+        x: &[f64],
+        engine: Option<EngineKind>,
+        deadline_ms: Option<u64>,
+    ) -> Result<SpmvTicket> {
+        let id = format!("c{}", self.next_id);
+        self.next_id += 1;
+        let mut fields = vec![
+            ("op", Json::Str("spmv".into())),
+            ("matrix", Json::Str(matrix.into())),
+            ("x", num_arr(x)),
+            ("id", Json::Str(id.clone())),
+        ];
+        if let Some(engine) = engine {
+            fields.push(("engine", Json::Str(engine.to_string())));
+        }
+        if let Some(ms) = deadline_ms {
+            fields.push(("deadline_ms", Json::Num(ms as f64)));
+        }
+        self.send_line(&obj(&fields).to_string())?;
+        self.outstanding.insert(id.clone());
+        Ok(SpmvTicket { id })
+    }
+
+    /// The demux core: read reply lines until the wanted one shows up,
+    /// parking replies that belong to other outstanding tickets.
+    /// `want: None` (un-id'd call) returns the next reply as-is.
+    fn read_reply(&mut self, want: Option<&str>) -> Result<Json> {
+        if let Some(id) = want {
+            if let Some(parked) = self.parked.remove(id) {
+                return Ok(parked);
+            }
+        }
+        loop {
+            let mut line = String::new();
+            let n = self.reader.read_line(&mut line)?;
+            anyhow::ensure!(n > 0, "server closed the connection");
+            let trimmed = line.trim();
+            if trimmed.is_empty() {
+                continue;
+            }
+            let reply = Json::parse(trimmed).context("parsing reply JSON")?;
+            let rid = reply.get("id").and_then(Json::as_str).map(str::to_string);
+            if let Some(rid) = &rid {
+                if self.outstanding.remove(rid.as_str()) && want != Some(rid.as_str()) {
+                    // someone else's reply arrived first: park it
+                    self.parked.insert(rid.clone(), reply);
+                    continue;
+                }
+            } else if want.is_some() {
+                bail!("untagged reply while waiting for id {want:?}: {reply}");
+            }
+            return Ok(reply);
+        }
+    }
+}
+
+/// Claim check for one in-flight pipelined SpMV; redeem with
+/// [`Connection::wait`].
+pub struct SpmvTicket {
+    id: String,
+}
+
+impl SpmvTicket {
+    /// The wire `id` the reply will carry.
+    pub fn id(&self) -> &str {
+        &self.id
+    }
+}
+
+/// Typed builder for one SpMV request (created by
+/// [`Connection::spmv`]): `conn.spmv("m1", &x).engine(auto).deadline_ms(250).send()`.
+pub struct SpmvBuilder<'a> {
+    conn: &'a mut Connection,
+    matrix: String,
+    x: Vec<f64>,
+    engine: Option<EngineKind>,
+    deadline_ms: Option<u64>,
+}
+
+impl SpmvBuilder<'_> {
+    /// Request a specific engine (`Auto` resolves to the tuned
+    /// decision). Unset, the server default (`hbp`) applies.
+    pub fn engine(mut self, engine: EngineKind) -> Self {
+        self.engine = Some(engine);
+        self
+    }
+
+    /// Bound how long the request may queue before being dropped with
+    /// `deadline_exceeded` instead of executed.
+    pub fn deadline_ms(mut self, ms: u64) -> Self {
+        self.deadline_ms = Some(ms);
+        self
+    }
+
+    /// Blocking round-trip: send, then wait for this reply.
+    pub fn send(self) -> Result<SpmvReply> {
+        let SpmvBuilder { conn, matrix, x, engine, deadline_ms } = self;
+        let ticket = conn.submit_spmv(&matrix, &x, engine, deadline_ms)?;
+        conn.wait(&ticket)
+    }
+
+    /// Pipelined send: issue the request and return immediately with
+    /// the [`SpmvTicket`] to [`Connection::wait`] on later.
+    pub fn submit(self) -> Result<SpmvTicket> {
+        let SpmvBuilder { conn, matrix, x, engine, deadline_ms } = self;
+        conn.submit_spmv(&matrix, &x, engine, deadline_ms)
+    }
+}
+
+/// The original one-shot blocking client, now a thin wrapper over
+/// [`Connection`] — kept so pre-envelope call sites (examples, old
+/// tests) compile unchanged.
+pub struct Client {
+    conn: Connection,
+}
+
+impl Client {
+    /// Connect to a serving coordinator.
+    pub fn connect(addr: impl std::net::ToSocketAddrs) -> Result<Client> {
+        Ok(Client { conn: Connection::connect(addr)? })
+    }
+
+    /// Send one request object and read one response line.
+    pub fn call(&mut self, req: &Json) -> Result<Json> {
+        self.conn.call(req)
+    }
+
+    /// SpMV against a hosted matrix (default engine; the response's
+    /// `resolved` field is available through [`Connection::spmv`]).
+    pub fn spmv(&mut self, matrix: &str, x: &[f64]) -> Result<Vec<f64>> {
+        self.conn.spmv(matrix, x).send().map(|r| r.y)
+    }
+
+    /// Apply a delta to a hosted matrix, returning the server's report.
+    pub fn update(&mut self, matrix: &str, delta: &MatrixDelta) -> Result<UpdateReport> {
+        self.conn.update(matrix, delta)
+    }
+
+    /// Upgrade to the full pipelining-capable connection API.
+    pub fn into_connection(self) -> Connection {
+        self.conn
+    }
 }
 
 #[cfg(test)]
@@ -715,9 +1276,13 @@ mod tests {
     }
 
     fn coordinator() -> Coordinator {
+        coordinator_shards(1)
+    }
+
+    fn coordinator_shards(n: usize) -> Coordinator {
         let mut router = Router::new(PartitionConfig::test_small(), 2);
         router.register("t", random::power_law_rows(40, 30, 2.0, 10, 3)).unwrap();
-        Coordinator::new(router, BatcherConfig::default())
+        Coordinator::with_shards(router, BatcherConfig::default(), n)
     }
 
     #[test]
@@ -730,7 +1295,7 @@ mod tests {
         let req = obj(&[
             ("op", Json::Str("spmv".into())),
             ("matrix", Json::Str("t".into())),
-            ("x", crate::util::json::num_arr(&x)),
+            ("x", num_arr(&x)),
         ]);
         let resp = c.handle_json(&req.to_string());
         assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
@@ -884,4 +1449,134 @@ mod tests {
         ));
         assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
     }
+
+    #[test]
+    fn hello_reports_protocol_and_features() {
+        let c = coordinator_shards(3);
+        let r = c.handle_json(r#"{"op":"hello"}"#);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+        assert_eq!(r.get("proto").and_then(Json::as_f64), Some(1.0));
+        let features = r.get("features").unwrap().as_arr().unwrap();
+        assert_eq!(
+            features[0].as_str(),
+            Some("pipelining"),
+            "pipelining must stay the first advertised feature"
+        );
+        assert!(features.iter().any(|f| f.as_str() == Some("deadline_ms")));
+        assert!(features.iter().any(|f| f.as_str() == Some("auto_engine")));
+        assert_eq!(r.get("shards").and_then(Json::as_f64), Some(3.0));
+    }
+
+    #[test]
+    fn request_ids_echo_verbatim() {
+        let c = coordinator();
+        let x_json = format!("[{}]", vec!["0.1"; 30].join(","));
+
+        // string id on a success
+        let r = c.handle_json(&format!(
+            r#"{{"op":"spmv","matrix":"t","x":{x_json},"id":"req-1"}}"#
+        ));
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+        assert_eq!(r.get("id").and_then(Json::as_str), Some("req-1"));
+
+        // the id is opaque: non-string values echo untouched
+        let r = c.handle_json(r#"{"op":"list","id":17}"#);
+        assert_eq!(r.get("id").and_then(Json::as_f64), Some(17.0));
+        let r = c.handle_json(r#"{"op":"list","id":null}"#);
+        assert_eq!(r.get("id"), Some(&Json::Null));
+
+        // error replies echo the id too — that's what makes pipelined
+        // failures attributable
+        let r = c.handle_json(&format!(
+            r#"{{"op":"spmv","matrix":"ghost","x":{x_json},"id":"e1"}}"#
+        ));
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(code_of(&r), "unknown_matrix");
+        assert_eq!(r.get("id").and_then(Json::as_str), Some("e1"));
+
+        // replies to un-id'd requests carry no id
+        let r = c.handle_json(r#"{"op":"list"}"#);
+        assert!(r.get("id").is_none());
+    }
+
+    #[test]
+    fn stats_reports_shard_breakdown_summing_to_totals() {
+        let c = coordinator_shards(4);
+        let x_json = format!("[{}]", vec!["0.1"; 30].join(","));
+        // an uneven spread: shard i serves i+1 requests
+        for shard in 0..4 {
+            for _ in 0..=shard {
+                let r = c.handle_json_on(
+                    shard,
+                    &format!(r#"{{"op":"spmv","matrix":"t","x":{x_json}}}"#),
+                );
+                assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+            }
+        }
+        let stats = c.handle_json(r#"{"op":"stats"}"#);
+        let stats = stats.get("stats").unwrap();
+        let shards = stats.get("shards").unwrap().as_arr().unwrap();
+        assert_eq!(shards.len(), 4);
+        for (i, s) in shards.iter().enumerate() {
+            assert_eq!(s.req_usize("shard").unwrap(), i);
+            assert_eq!(s.req_usize("requests").unwrap(), i + 1, "shard {i} request count");
+        }
+        // the breakdown sums to the global totals, counter by counter
+        for key in ["requests", "errors", "shed", "deadline_drops", "panics_recovered"] {
+            let sum: usize = shards.iter().map(|s| s.req_usize(key).unwrap()).sum();
+            assert_eq!(sum, stats.req_usize(key).unwrap(), "shards must sum to global {key}");
+        }
+        // shard indices wrap instead of panicking
+        let r = c.handle_json_on(
+            11,
+            &format!(r#"{{"op":"spmv","matrix":"t","x":{x_json}}}"#),
+        );
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+    }
+
+    #[test]
+    fn shard_parity_same_stream_same_results_and_totals() {
+        // the same request stream through 1 shard and through 4 shards
+        // must yield identical per-request replies and identical
+        // rolled-up totals — sharding is a throughput choice, not a
+        // semantics choice
+        let c1 = coordinator();
+        let c4 = coordinator_shards(4);
+        let x_json = |seed: usize| {
+            format!(
+                "[{}]",
+                (0..30).map(|i| format!("{}", (seed * 31 + i) as f64 / 97.0)).collect::<Vec<_>>().join(",")
+            )
+        };
+        let mut stream = Vec::new();
+        for i in 0..6 {
+            stream.push(format!(r#"{{"op":"spmv","matrix":"t","x":{},"id":"s{i}"}}"#, x_json(i)));
+        }
+        stream.push(
+            r#"{"op":"update","matrix":"t","ops":[{"kind":"scale_row","row":1,"factor":3}]}"#
+                .to_string(),
+        );
+        for i in 6..9 {
+            stream.push(format!(r#"{{"op":"spmv","matrix":"t","x":{}}}"#, x_json(i)));
+        }
+        stream.push(r#"{"op":"spmv","matrix":"ghost","x":[1]}"#.to_string());
+
+        for (k, line) in stream.iter().enumerate() {
+            let r1 = c1.handle_json(line);
+            let r4 = c4.handle_json(line);
+            assert_eq!(r1, r4, "request {k} diverged between 1 and 4 shards");
+        }
+        let s1 = c1.metrics.snapshot();
+        let s4 = c4.metrics.snapshot();
+        assert_eq!(s1.requests, s4.requests);
+        assert_eq!(s1.updates, s4.updates);
+        assert_eq!(s1.errors, s4.errors);
+        assert_eq!(s1.shed, s4.shed);
+        // and the 4-shard breakdown accounts for every request
+        let per_shard: u64 = c4.shard_snapshots().iter().map(|s| s.requests).sum();
+        assert_eq!(per_shard, s4.requests);
+    }
 }
+
+
+

@@ -80,7 +80,7 @@ SUBCOMMANDS
              [--cache path] [--no-cache]
   sim        --matrix <id|path> [--device orin|rtx4090]
   serve      --addr 127.0.0.1:7700 --matrices m1,m3 [--scale ci] [--cache path] [--no-cache]
-             [--batch-stats] [--max-queue N] [--deadline-ms MS] [--max-conns N]"
+             [--batch-stats] [--max-queue N] [--deadline-ms MS] [--max-conns N] [--shards N]"
     );
 }
 
@@ -573,7 +573,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if armed > 0 {
         eprintln!("warning: {armed} fault(s) armed via HBP_FAULTS — degradation rehearsal mode");
     }
-    let coordinator = std::sync::Arc::new(Coordinator::new(router, bcfg));
+    // N independent batcher shards over the shared router; connections
+    // are assigned round-robin at accept time (--shards 1 is the old
+    // single-batcher front)
+    let shards = args.usize_or("shards", 1).max(1);
+    let coordinator = std::sync::Arc::new(Coordinator::with_shards(router, bcfg, shards));
+    if shards > 1 {
+        println!("serving with {shards} shards (per-shard admission control)");
+    }
     if args.flag("batch-stats") {
         // periodic observability for the resolved-batching path: how
         // many groups flushed, how many auto arrivals merged with

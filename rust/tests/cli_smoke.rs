@@ -152,6 +152,73 @@ fn tune_subcommand_prints_and_second_run_hits_the_cache() {
 }
 
 #[test]
+fn serve_shards_starts_and_answers_hello() {
+    use hbp_spmv::util::json::Json;
+    use std::io::{BufRead, BufReader, Write};
+
+    // bind port 0 so parallel test runs never collide; the chosen port
+    // comes back on stderr as "hbp-spmv serving on <addr>"
+    let mut child = hbp()
+        .args([
+            "serve", "--shards", "4", "--addr", "127.0.0.1:0", "--no-cache", "--scale", "ci",
+            "--matrices", "m1",
+        ])
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::piped())
+        .spawn()
+        .expect("spawning hbp serve");
+
+    let stderr = child.stderr.take().expect("child stderr is piped");
+    let mut lines = BufReader::new(stderr).lines();
+    let addr = loop {
+        let line = match lines.next() {
+            Some(Ok(line)) => line,
+            other => {
+                let _ = child.kill();
+                panic!("server exited before announcing its address: {other:?}");
+            }
+        };
+        if let Some(addr) = line.strip_prefix("hbp-spmv serving on ") {
+            break addr.trim().to_string();
+        }
+    };
+
+    let check = (|| -> Result<(), String> {
+        let stream = std::net::TcpStream::connect(&addr)
+            .map_err(|e| format!("connecting to {addr}: {e}"))?;
+        let mut reader = BufReader::new(stream.try_clone().map_err(|e| e.to_string())?);
+        let mut writer = stream;
+        writer
+            .write_all(b"{\"op\":\"hello\"}\n")
+            .map_err(|e| format!("sending hello: {e}"))?;
+        let mut line = String::new();
+        reader.read_line(&mut line).map_err(|e| format!("reading hello reply: {e}"))?;
+        let reply = Json::parse(line.trim()).map_err(|e| format!("bad hello reply: {e:#}"))?;
+        let field = |k: &str| reply.get(k).and_then(Json::as_f64);
+        if field("proto") != Some(1.0) {
+            return Err(format!("hello must report proto 1: {line}"));
+        }
+        if field("shards") != Some(4.0) {
+            return Err(format!("hello must report the 4 shards serve started: {line}"));
+        }
+        let has_pipelining = reply
+            .get("features")
+            .and_then(Json::as_arr)
+            .is_some_and(|f| f.iter().any(|v| v.as_str() == Some("pipelining")));
+        if !has_pipelining {
+            return Err(format!("hello must advertise pipelining: {line}"));
+        }
+        Ok(())
+    })();
+
+    let _ = child.kill();
+    let _ = child.wait();
+    if let Err(msg) = check {
+        panic!("serve --shards 4 smoke test failed: {msg}");
+    }
+}
+
+#[test]
 fn help_succeeds_and_unknown_subcommand_fails() {
     let out = hbp().arg("help").output().expect("spawning hbp help");
     let stdout = assert_success(&out, "hbp help");

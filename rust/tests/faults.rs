@@ -7,9 +7,10 @@
 //! registers (and arms) a uniquely named matrix to stay isolated from
 //! the other tests in this binary.
 
-use hbp_spmv::coordinator::server::Client;
+use hbp_spmv::coordinator::server::{Client, Connection};
 use hbp_spmv::coordinator::{
-    serve_background_with, BatcherConfig, Coordinator, Router, ServerConfig, ServerHandle,
+    serve_background_with, BatcherConfig, Coordinator, EngineKind, ErrorCode, Router,
+    ServerConfig, ServerHandle, ServiceError,
 };
 use hbp_spmv::partition::PartitionConfig;
 use hbp_spmv::sim::faults::{self, Fault};
@@ -148,10 +149,16 @@ fn deadlines_drop_instead_of_serving_stale() {
     let (c, handle, cols) = start("ft_deadline", bcfg, ServerConfig::default());
     let x = vec![0.5; cols];
 
-    // an already-expired deadline is rejected at admission
+    // an already-expired deadline is rejected at admission — through
+    // the typed builder, whose error downcasts to the taxonomy
+    let mut conn = Connection::connect(handle.addr()).unwrap();
+    let err = conn.spmv("ft_deadline", &x).deadline_ms(0).send().unwrap_err();
+    assert_eq!(
+        err.downcast_ref::<ServiceError>().map(|s| s.code),
+        Some(ErrorCode::DeadlineExceeded),
+        "{err:#}"
+    );
     let mut client = Client::connect(handle.addr()).unwrap();
-    let r = client.call(&spmv_deadline_req("ft_deadline", &x, 0.0)).unwrap();
-    assert_eq!(code_of(&r), "deadline_exceeded", "{r}");
 
     // a deadline that expires while queued behind a slow flush is
     // dropped at flush time, after the slow request was served
@@ -250,6 +257,71 @@ fn connection_limit_sheds_with_one_overloaded_line() {
     // the occupant is unaffected
     assert!(first.spmv("ft_conns", &vec![0.5; cols]).is_ok());
     assert_eq!(c.metrics.snapshot().shed, 1);
+}
+
+#[test]
+fn one_shards_fault_does_not_stall_other_shards_pipelines() {
+    // two matrices on a two-shard front: connection A (accept #0 ->
+    // shard 0) serves ft_shard_a, connection B (accept #1 -> shard 1)
+    // serves ft_shard_b. Faults armed on ft_shard_a may only ever
+    // degrade shard 0 — shard 1's pipeline stays prompt and its
+    // counters stay clean.
+    let mut router = Router::new(PartitionConfig::test_small(), 2);
+    let ma = hbp_spmv::gen::random::power_law_rows(60, 50, 2.0, 15, 3);
+    let mb = hbp_spmv::gen::random::power_law_rows(60, 50, 2.0, 15, 4);
+    let cols = ma.cols;
+    router.register("ft_shard_a", ma).unwrap();
+    router.register("ft_shard_b", mb).unwrap();
+    let c = Arc::new(Coordinator::with_shards(router, BatcherConfig::default(), 2));
+    let handle = serve_background_with(c.clone(), ServerConfig::default()).unwrap();
+    let addr = handle.addr();
+
+    let mut conn_a = Connection::connect(addr).unwrap(); // shard 0
+    let mut conn_b = Connection::connect(addr).unwrap(); // shard 1
+    let x = vec![0.5; cols];
+
+    // phase 1: stall shard 0's flush for a full second, with the stalled
+    // request pipelined so conn A is not blocked on its reply either
+    faults::arm("ft_shard_a", Fault::SlowFlush { millis: 1000 });
+    let stalled = conn_a.spmv("ft_shard_a", &x).submit().unwrap();
+    std::thread::sleep(Duration::from_millis(50)); // let the slow flush start
+    let t = std::time::Instant::now();
+    let xs: Vec<Vec<f64>> = (0..8).map(|_| x.clone()).collect();
+    let replies = conn_b.pipeline("ft_shard_b", EngineKind::Hbp, &xs).unwrap();
+    let elapsed = t.elapsed();
+    assert_eq!(replies.len(), 8);
+    assert!(
+        elapsed < Duration::from_millis(800),
+        "shard 1's pipeline waited on shard 0's stalled flush ({elapsed:?})"
+    );
+    // the stalled shard still answers once the fault clears
+    let r = conn_a.wait(&stalled).unwrap();
+    assert_eq!(r.y.len(), 60);
+    faults::disarm("ft_shard_a");
+
+    // phase 2: a worker panic on shard 0 is typed `internal` there and
+    // invisible on shard 1
+    faults::arm("ft_shard_a", Fault::PanicInWorker { nth: 1 });
+    let r = conn_a.call(&spmv_req("ft_shard_a", &x)).unwrap();
+    assert_eq!(code_of(&r), "internal", "{r}");
+    faults::disarm("ft_shard_a");
+    let r = conn_b.spmv("ft_shard_b", &x).send().unwrap();
+    assert_eq!(r.y.len(), 60);
+
+    // the per-shard breakdown localizes the damage: the panic recovery
+    // is shard 0's alone, and shard 1 served every one of its requests
+    let stats = conn_b.call(&obj(&[("op", Json::Str("stats".into()))])).unwrap();
+    let stats = stats.get("stats").unwrap();
+    let shards = stats.get("shards").unwrap().as_arr().unwrap();
+    assert_eq!(shards.len(), 2);
+    assert_eq!(shards[0].req_usize("panics_recovered").unwrap(), 1);
+    assert_eq!(shards[1].req_usize("panics_recovered").unwrap(), 0);
+    assert_eq!(shards[1].req_usize("requests").unwrap(), 9);
+    assert_eq!(
+        stats.req_usize("panics_recovered").unwrap(),
+        1,
+        "the shard counter must roll up into the global total"
+    );
 }
 
 #[test]

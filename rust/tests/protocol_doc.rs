@@ -3,19 +3,30 @@
 //! implementation.
 //!
 //! Contract (stated at the top of PROTOCOL.md): inside ```jsonl fences,
-//! `->` lines are sent verbatim over TCP and the following `<-` line is
-//! checked structurally against the live response — exact key sets on
-//! objects (both directions: an undocumented server field fails, and so
-//! does a documented-but-absent one), exact booleans, numeric values
+//! `->` lines are sent verbatim over TCP and `<-` lines are checked
+//! structurally against the live responses — exact key sets on objects
+//! (both directions: an undocumented server field fails, and so does a
+//! documented-but-absent one), exact booleans, numeric values
 //! illustrative, and `"<placeholder>"` strings matching any string.
+//!
+//! A run of consecutive `->` lines followed by an equal run of `<-`
+//! lines is one *exchange*: all requests are sent before any reply is
+//! read, which is how the doc shows pipelining. Within an exchange the
+//! documented reply order is illustrative — replies are matched to
+//! their documented line by the concrete `"id"` they echo (replies
+//! without a concrete id match positionally), because the wire order of
+//! pipelined replies is genuinely unspecified.
+//!
 //! Examples run top to bottom on one connection against the 8×8 `demo`
 //! matrix this test registers, so later examples see earlier mutations.
 
-use hbp_spmv::coordinator::server::{serve_background, Client};
+use hbp_spmv::coordinator::server::serve_background;
 use hbp_spmv::coordinator::{BatcherConfig, Coordinator, Router};
 use hbp_spmv::formats::{Coo, Csr};
 use hbp_spmv::partition::PartitionConfig;
 use hbp_spmv::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
 use std::sync::Arc;
 
 /// The matrix PROTOCOL.md's examples are written against: 8×8,
@@ -32,20 +43,41 @@ fn demo_matrix() -> Csr {
     coo.to_csr()
 }
 
-/// `(doc line number of the request, request line, response line)` for
-/// every `->`/`<-` pair inside a ```jsonl fence.
-fn extract_examples(doc: &str) -> Vec<(usize, String, String)> {
-    let mut out = Vec::new();
+/// One documented exchange: `requests` are sent back-to-back before any
+/// of the `responses` is read. Single `->`/`<-` pairs are the common
+/// degenerate case; longer runs document pipelining.
+struct Exchange {
+    /// Doc line number of the exchange's first request.
+    line_no: usize,
+    requests: Vec<String>,
+    responses: Vec<String>,
+}
+
+impl Exchange {
+    fn assert_balanced(&self) {
+        assert_eq!(
+            self.requests.len(),
+            self.responses.len(),
+            "PROTOCOL.md line {}: exchange has {} requests but {} responses",
+            self.line_no,
+            self.requests.len(),
+            self.responses.len()
+        );
+    }
+}
+
+/// Split every ```jsonl fence into exchanges.
+fn extract_exchanges(doc: &str) -> Vec<Exchange> {
+    let mut out: Vec<Exchange> = Vec::new();
     let mut in_jsonl = false;
-    let mut pending: Option<(usize, String)> = None;
+    let mut cur: Option<Exchange> = None;
     for (i, line) in doc.lines().enumerate() {
         let trimmed = line.trim();
         if trimmed.starts_with("```") {
-            assert!(
-                pending.is_none(),
-                "PROTOCOL.md line {}: request without a response before fence close",
-                i + 1
-            );
+            if let Some(e) = cur.take() {
+                e.assert_balanced();
+                out.push(e);
+            }
             in_jsonl = trimmed == "```jsonl";
             continue;
         }
@@ -53,21 +85,43 @@ fn extract_examples(doc: &str) -> Vec<(usize, String, String)> {
             continue;
         }
         if let Some(req) = trimmed.strip_prefix("-> ") {
-            assert!(
-                pending.is_none(),
-                "PROTOCOL.md line {}: two requests in a row without a response",
-                i + 1
-            );
-            pending = Some((i + 1, req.to_string()));
+            match cur.as_mut() {
+                // still collecting the request run
+                Some(e) if e.responses.is_empty() => e.requests.push(req.to_string()),
+                // a response run just ended: close that exchange
+                Some(_) => {
+                    let e = cur.take().expect("checked Some above");
+                    e.assert_balanced();
+                    out.push(e);
+                    cur = Some(Exchange {
+                        line_no: i + 1,
+                        requests: vec![req.to_string()],
+                        responses: Vec::new(),
+                    });
+                }
+                None => {
+                    cur = Some(Exchange {
+                        line_no: i + 1,
+                        requests: vec![req.to_string()],
+                        responses: Vec::new(),
+                    });
+                }
+            }
         } else if let Some(resp) = trimmed.strip_prefix("<- ") {
-            let (line_no, req) = pending.take().unwrap_or_else(|| {
+            let e = cur.as_mut().unwrap_or_else(|| {
                 panic!("PROTOCOL.md line {}: response without a request", i + 1)
             });
-            out.push((line_no, req, resp.to_string()));
+            e.responses.push(resp.to_string());
+            assert!(
+                e.responses.len() <= e.requests.len(),
+                "PROTOCOL.md line {}: more responses than requests in the exchange",
+                i + 1
+            );
         } else if !trimmed.is_empty() {
             panic!("PROTOCOL.md line {}: jsonl lines must start with -> or <-", i + 1);
         }
     }
+    assert!(cur.is_none(), "PROTOCOL.md: unterminated jsonl fence");
     out
 }
 
@@ -126,28 +180,36 @@ fn protocol_doc_examples_round_trip_through_a_live_server() {
     let doc_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../docs/PROTOCOL.md");
     let doc = std::fs::read_to_string(doc_path)
         .unwrap_or_else(|e| panic!("reading {doc_path}: {e}"));
-    let examples = extract_examples(&doc);
+    let exchanges = extract_exchanges(&doc);
+    let n_pairs: usize = exchanges.iter().map(|e| e.requests.len()).sum();
     assert!(
-        examples.len() >= 8,
-        "PROTOCOL.md documents only {} examples — every op needs one",
-        examples.len()
+        n_pairs >= 8,
+        "PROTOCOL.md documents only {n_pairs} examples — every op needs one"
     );
-    // every op must be exercised, plus the error shape
-    let ops_documented: Vec<String> = examples
+    // every op must be exercised, plus the error shape and pipelining
+    let ops_documented: Vec<String> = exchanges
         .iter()
-        .filter_map(|(_, req, _)| {
+        .flat_map(|e| &e.requests)
+        .filter_map(|req| {
             let parsed = Json::parse(req).ok()?;
             Some(parsed.get("op")?.as_str()?.to_string())
         })
         .collect();
-    for op in ["spmv", "list", "tune", "update", "stats"] {
+    for op in ["hello", "spmv", "list", "tune", "update", "stats"] {
         assert!(
             ops_documented.iter().any(|o| o == op),
             "PROTOCOL.md has no executed example for op {op:?}"
         );
     }
     assert!(
-        examples.iter().any(|(_, _, resp)| resp.contains("\"ok\":false")),
+        exchanges.iter().any(|e| e.requests.len() > 1),
+        "PROTOCOL.md must document a pipelined (multi-request) exchange"
+    );
+    assert!(
+        exchanges
+            .iter()
+            .flat_map(|e| &e.responses)
+            .any(|resp| resp.contains("\"ok\":false")),
         "PROTOCOL.md must document the error shape"
     );
 
@@ -155,24 +217,72 @@ fn protocol_doc_examples_round_trip_through_a_live_server() {
     router.register("demo", demo_matrix()).unwrap();
     let coordinator = Arc::new(Coordinator::new(router, BatcherConfig::default()));
     let addr = serve_background(coordinator).unwrap();
-    let mut client = Client::connect(addr).unwrap();
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
 
-    for (line_no, req, want) in examples {
-        let req_json = Json::parse(&req)
-            .unwrap_or_else(|e| panic!("PROTOCOL.md:{line_no}: request is not valid JSON: {e:#}"));
-        let want_json = Json::parse(&want)
-            .unwrap_or_else(|e| panic!("PROTOCOL.md:{line_no}: response is not valid JSON: {e:#}"));
-        let got = client
-            .call(&req_json)
-            .unwrap_or_else(|e| panic!("PROTOCOL.md:{line_no}: server call failed: {e:#}"));
-        let mut errors = Vec::new();
-        matches(&want_json, &got, "response", &mut errors);
-        assert!(
-            errors.is_empty(),
-            "PROTOCOL.md:{line_no}: documented example diverges from the live server\n  \
-             request:  {req}\n  response: {got}\n  - {}",
-            errors.join("\n  - ")
-        );
+    for ex in exchanges {
+        let line_no = ex.line_no;
+        // requests go over the wire VERBATIM — the doc line is the test
+        // vector — after a validity check for better error messages
+        for req in &ex.requests {
+            Json::parse(req).unwrap_or_else(|e| {
+                panic!("PROTOCOL.md:{line_no}: request is not valid JSON: {e:#}")
+            });
+            writer.write_all(req.as_bytes()).unwrap();
+            writer.write_all(b"\n").unwrap();
+        }
+        let mut actual = Vec::new();
+        for _ in 0..ex.responses.len() {
+            let mut line = String::new();
+            let n = reader.read_line(&mut line).unwrap();
+            assert!(n > 0, "PROTOCOL.md:{line_no}: server closed mid-exchange");
+            actual.push(
+                Json::parse(line.trim()).unwrap_or_else(|e| {
+                    panic!("PROTOCOL.md:{line_no}: unparseable reply {line:?}: {e:#}")
+                }),
+            );
+        }
+        // match documented replies to live ones: by concrete id when the
+        // doc gives one (pipelined replies reorder freely), else by
+        // position among the not-yet-matched replies
+        let mut used = vec![false; actual.len()];
+        for want in &ex.responses {
+            let want_json = Json::parse(want).unwrap_or_else(|e| {
+                panic!("PROTOCOL.md:{line_no}: response is not valid JSON: {e:#}")
+            });
+            let want_id = want_json
+                .get("id")
+                .and_then(Json::as_str)
+                .filter(|s| !is_placeholder(s));
+            let slot = match want_id {
+                Some(id) => actual
+                    .iter()
+                    .enumerate()
+                    .position(|(j, a)| {
+                        !used[j] && a.get("id").and_then(Json::as_str) == Some(id)
+                    })
+                    .unwrap_or_else(|| {
+                        panic!(
+                            "PROTOCOL.md:{line_no}: no live reply echoed id {id:?}: {actual:?}"
+                        )
+                    }),
+                None => used
+                    .iter()
+                    .position(|u| !u)
+                    .expect("responses cannot outnumber replies"),
+            };
+            used[slot] = true;
+            let got = &actual[slot];
+            let mut errors = Vec::new();
+            matches(&want_json, got, "response", &mut errors);
+            assert!(
+                errors.is_empty(),
+                "PROTOCOL.md:{line_no}: documented example diverges from the live server\n  \
+                 documented: {want}\n  response:   {got}\n  - {}",
+                errors.join("\n  - ")
+            );
+        }
     }
 }
 
