@@ -11,13 +11,14 @@
 #   make check-docs   — verify relative links in README.md + docs/*.md resolve
 #   make check-no-unwrap — fail on .unwrap() in the coordinator's non-test code
 #   make check-protocol — execute every docs/PROTOCOL.md example against a live server
+#   make check-prom   — validate the live `metrics` op's Prometheus text exposition
 #   make artifacts    — AOT-lower the L1/L2 graphs to artifacts/ (HLO text)
 #   make clean        — drop build products
 
 CARGO  ?= cargo
 PYTHON ?= python3
 
-.PHONY: all build test test-python bench-smoke bench-build bench-preprocess bench-autotune bench-spmm bench-compare check-docs check-no-unwrap check-protocol artifacts artifacts-quick clean
+.PHONY: all build test test-python bench-smoke bench-build bench-preprocess bench-autotune bench-spmm bench-compare check-docs check-no-unwrap check-protocol check-prom artifacts artifacts-quick clean
 
 all: build
 
@@ -97,6 +98,14 @@ check-protocol:
 # toolchain-free twin of the tree's clippy::unwrap_used lint).
 check-no-unwrap:
 	$(PYTHON) tools/check_no_unwrap.py
+
+# Observability gate: start the built server, push one request through
+# it, scrape the `metrics` op, and validate the Prometheus exposition
+# grammar (tools/check_prom.py, stdlib-only: HELP/TYPE declarations,
+# name/label syntax, cumulative buckets ending in le="+Inf" == _count).
+# Needs `make build` first — the check runs the real binary.
+check-prom:
+	$(PYTHON) tools/check_prom.py --serve target/release/hbp
 
 # Full AOT artifact set (all L buckets + batch executables).
 artifacts:

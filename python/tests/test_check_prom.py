@@ -1,0 +1,156 @@
+"""The Prometheus exposition gate (tools/check_prom.py): pure-stdlib
+module, tested deterministically — no jax/hypothesis involvement.
+
+The live-scrape path (``--serve``) needs the built ``hbp`` binary and
+is exercised by ``make check-prom`` in CI; these tests pin down the
+validator itself with hand-built fixtures, one per grammar rule.
+"""
+
+import importlib.util
+import os
+
+_TOOL = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__)))),
+    "tools",
+    "check_prom.py",
+)
+_spec = importlib.util.spec_from_file_location("check_prom", _TOOL)
+check_prom = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_prom)
+
+
+def _histogram(name, labels="", buckets=((0.001, 3), (0.1, 5)), total=5, sum_=0.07):
+    """A complete, coherent histogram family in exposition text."""
+    sel = "{" + labels + ",le=\"%s\"}" if labels else "{le=\"%s\"}"
+    plain = "{" + labels + "}" if labels else ""
+    lines = [
+        f"# HELP {name} test histogram",
+        f"# TYPE {name} histogram",
+    ]
+    for bound, count in buckets:
+        lines.append(f"{name}_bucket{sel % bound} {count}")
+    lines.append(f"{name}_bucket{sel % '+Inf'} {total}")
+    lines.append(f"{name}_sum{plain} {sum_}")
+    lines.append(f"{name}_count{plain} {total}")
+    return lines
+
+
+VALID = "\n".join(
+    [
+        "# HELP hbp_requests_total answered requests",
+        "# TYPE hbp_requests_total counter",
+        "hbp_requests_total 5",
+        "# HELP hbp_queue_depth queued requests",
+        "# TYPE hbp_queue_depth gauge",
+        "hbp_queue_depth 0",
+        "# HELP hbp_shard_requests_total per-shard answered requests",
+        "# TYPE hbp_shard_requests_total counter",
+        'hbp_shard_requests_total{shard="0"} 3',
+        'hbp_shard_requests_total{shard="1"} 2',
+        *_histogram("hbp_request_latency_seconds"),
+        *_histogram("hbp_shard_execute_seconds", labels='shard="0"'),
+    ]
+) + "\n"
+
+
+def test_valid_exposition_passes():
+    assert check_prom.validate(VALID) == []
+
+
+def test_main_validates_a_file(tmp_path, capsys):
+    p = tmp_path / "metrics.prom"
+    p.write_text(VALID)
+    assert check_prom.main([str(p)]) == 0
+    assert "OK" in capsys.readouterr().out
+
+
+def test_sample_without_type_declaration_fails():
+    errors = check_prom.validate("hbp_mystery_total 5\n")
+    assert any("no preceding TYPE" in e for e in errors)
+
+
+def test_non_cumulative_buckets_fail():
+    text = VALID.replace(
+        'hbp_request_latency_seconds_bucket{le="0.1"} 5',
+        'hbp_request_latency_seconds_bucket{le="0.1"} 2',
+    )
+    errors = check_prom.validate(text)
+    assert any("not cumulative" in e for e in errors)
+
+
+def test_missing_inf_bucket_fails():
+    text = "\n".join(
+        [
+            "# TYPE h histogram",
+            'h_bucket{le="1"} 2',
+            "h_sum 0.5",
+            "h_count 2",
+        ]
+    )
+    errors = check_prom.validate(text)
+    assert any('le="+Inf"' in e for e in errors)
+
+
+def test_inf_bucket_disagreeing_with_count_fails():
+    text = VALID.replace("hbp_request_latency_seconds_count 5",
+                         "hbp_request_latency_seconds_count 9")
+    errors = check_prom.validate(text)
+    assert any("+Inf bucket" in e and "_count" in e for e in errors)
+
+
+def test_missing_sum_fails():
+    text = VALID.replace("hbp_request_latency_seconds_sum 0.07\n", "")
+    errors = check_prom.validate(text)
+    assert any("no _sum" in e for e in errors)
+
+
+def test_duplicate_series_fails():
+    text = VALID + "hbp_requests_total 6\n"
+    errors = check_prom.validate(text)
+    assert any("duplicate series" in e for e in errors)
+
+
+def test_bad_label_syntax_fails():
+    text = "\n".join(
+        [
+            "# TYPE h counter",
+            "h{shard=0} 1",  # unquoted label value
+        ]
+    )
+    errors = check_prom.validate(text)
+    assert any("bad label syntax" in e for e in errors)
+
+
+def test_bad_value_fails():
+    errors = check_prom.validate("# TYPE h counter\nh one\n")
+    assert any("bad sample value" in e for e in errors)
+
+
+def test_inf_and_nan_values_parse():
+    text = "\n".join(
+        [
+            "# TYPE g gauge",
+            "g NaN",
+            "# TYPE f gauge",
+            "f +Inf",
+        ]
+    )
+    assert check_prom.validate(text) == []
+
+
+def test_histograms_grouped_per_label_set():
+    # shard 0 coherent, shard 1 has +Inf != count: only shard 1 flagged
+    lines = [
+        "# TYPE h histogram",
+        'h_bucket{shard="0",le="1"} 2',
+        'h_bucket{shard="0",le="+Inf"} 2',
+        'h_sum{shard="0"} 0.1',
+        'h_count{shard="0"} 2',
+        'h_bucket{shard="1",le="1"} 1',
+        'h_bucket{shard="1",le="+Inf"} 1',
+        'h_sum{shard="1"} 0.2',
+        'h_count{shard="1"} 7',
+    ]
+    errors = check_prom.validate("\n".join(lines))
+    assert len(errors) == 1
+    assert "shard" in errors[0] and "1" in errors[0]

@@ -43,6 +43,17 @@
 //! panics land in [`ServiceMetrics`] (`shed`, `deadline_drops`,
 //! `panics_recovered`).
 //!
+//! Every request is **traced**: the dispatcher cuts one monotonic
+//! timeline per request — admission → execution start (queue wait),
+//! the engine call (execute), reply assembly/hand-off (reply) — and
+//! publishes a [`Span`] carrying the timings plus the grouping
+//! decisions (resolved engine, group size, merged-auto provenance,
+//! fused SpMM width) into the shard's [`Telemetry`] ring *before*
+//! sending the reply. Successful spans also feed the per-stage
+//! histograms in [`ServiceMetrics`], and the end-to-end latency sample
+//! is the sum of the three stages by construction
+//! (`docs/ARCHITECTURE.md` § Observability).
+//!
 //! Teardown is typed too: once [`Batcher::begin_shutdown`] runs (the
 //! `Drop` impl calls it before severing the channel), every further
 //! send through any handle is refused with a `shutting_down`
@@ -51,6 +62,7 @@
 
 use super::error::ServiceError;
 use super::router::{EngineKind, Router};
+use super::telemetry::{Span, Telemetry};
 use crate::coordinator::metrics::ServiceMetrics;
 use crate::preprocess::{MatrixDelta, UpdateReport};
 use crate::sim::faults;
@@ -81,6 +93,13 @@ pub struct BatcherConfig {
     pub default_deadline: Option<Duration>,
     /// Back-off hint (milliseconds) carried in `overloaded` replies.
     pub retry_after_ms: u64,
+    /// Capacity of the shard's span ring (`{"op":"trace"}` depth);
+    /// the `--trace-capacity` serve flag.
+    pub trace_capacity: usize,
+    /// Requests whose end-to-end latency crosses this threshold log
+    /// their span as one structured JSON line to stderr (`None`
+    /// disables the slow log); the `--slow-ms` serve flag.
+    pub slow_threshold: Option<Duration>,
 }
 
 impl Default for BatcherConfig {
@@ -91,6 +110,8 @@ impl Default for BatcherConfig {
             max_queue: 1024,
             default_deadline: None,
             retry_after_ms: 50,
+            trace_capacity: 1024,
+            slow_threshold: None,
         }
     }
 }
@@ -133,6 +154,12 @@ pub struct Request {
     /// Absolute expiry: work not *started* by this point is dropped
     /// with a `deadline_exceeded` reply (`None`: never expires).
     pub deadline: Option<Instant>,
+    /// Admission timestamp — the origin of the request's trace span
+    /// (its `queue_wait` stage measures from here).
+    pub admitted: Instant,
+    /// Protocol request `id` carried for trace correlation; the span
+    /// echoes it so pipelined clients can match spans to replies.
+    pub trace_id: Option<String>,
     /// What to do with it.
     pub payload: Payload,
 }
@@ -219,11 +246,28 @@ impl BatcherHandle {
         x: Vec<f64>,
         deadline_ms: Option<u64>,
     ) -> Result<mpsc::Receiver<Result<SpmvReply>>> {
+        self.submit_spmv_traced(matrix, engine, x, deadline_ms, None)
+    }
+
+    /// [`BatcherHandle::submit_spmv`] carrying a protocol request `id`
+    /// for trace correlation: the request's span echoes `trace_id`, so
+    /// a pipelined client can match `{"op":"trace"}` output to the
+    /// replies it received.
+    pub fn submit_spmv_traced(
+        &self,
+        matrix: &str,
+        engine: EngineKind,
+        x: Vec<f64>,
+        deadline_ms: Option<u64>,
+        trace_id: Option<String>,
+    ) -> Result<mpsc::Receiver<Result<SpmvReply>>> {
         let deadline = self.admission_deadline(deadline_ms)?;
         let (reply, rx) = mpsc::channel();
         self.try_send(Request {
             matrix: matrix.to_string(),
             deadline,
+            admitted: Instant::now(),
+            trace_id,
             payload: Payload::Spmv { engine, x, reply },
         })?;
         Ok(rx)
@@ -238,6 +282,8 @@ impl BatcherHandle {
         self.try_send(Request {
             matrix: matrix.to_string(),
             deadline: None,
+            admitted: Instant::now(),
+            trace_id: None,
             payload: Payload::Update { delta, reply },
         })?;
         rx.recv().map_err(|_| self.dropped_error())?
@@ -282,7 +328,12 @@ impl BatcherHandle {
             )));
         }
         match self.tx.try_send(request) {
-            Ok(()) => Ok(()),
+            Ok(()) => {
+                // occupancy gauge: +1 at admission, -1 when the
+                // dispatcher drains it (lock-free, rolls up to the root)
+                self.metrics.gauge_queue_depth(1);
+                Ok(())
+            }
             Err(mpsc::TrySendError::Full(_)) => {
                 self.metrics.record_shed();
                 Err(anyhow::Error::new(ServiceError::overloaded(
@@ -307,8 +358,22 @@ pub struct Batcher {
 }
 
 impl Batcher {
-    /// Start the dispatcher thread.
+    /// Start the dispatcher thread with a stand-alone telemetry bundle
+    /// (shard 0, ring and slow-log settings from `cfg`).
     pub fn start(router: Arc<Router>, metrics: Arc<ServiceMetrics>, cfg: BatcherConfig) -> Batcher {
+        let telemetry = Arc::new(Telemetry::new(0, cfg.trace_capacity, cfg.slow_threshold));
+        Batcher::start_with_telemetry(router, metrics, cfg, telemetry)
+    }
+
+    /// [`Batcher::start`] with a caller-provided telemetry bundle — the
+    /// coordinator hands each shard one that shares a global span
+    /// sequence counter, so per-shard rings merge into one order.
+    pub fn start_with_telemetry(
+        router: Arc<Router>,
+        metrics: Arc<ServiceMetrics>,
+        cfg: BatcherConfig,
+        telemetry: Arc<Telemetry>,
+    ) -> Batcher {
         let max_queue = cfg.max_queue.max(1);
         let (tx, rx) = mpsc::sync_channel::<Request>(max_queue);
         let handle = BatcherHandle {
@@ -319,7 +384,7 @@ impl Batcher {
             retry_after_ms: cfg.retry_after_ms,
             shutting_down: Arc::new(AtomicBool::new(false)),
         };
-        let thread = std::thread::spawn(move || dispatcher(router, metrics, cfg, rx));
+        let thread = std::thread::spawn(move || dispatcher(router, metrics, telemetry, cfg, rx));
         Batcher { handle, thread: Some(thread) }
     }
 
@@ -365,6 +430,10 @@ struct PendingSpmv {
     resolved: EngineKind,
     /// Carried from [`Request::deadline`]; re-checked at flush.
     deadline: Option<Instant>,
+    /// Carried from [`Request::admitted`]; origin of the span timeline.
+    admitted: Instant,
+    /// Carried from [`Request::trace_id`]; echoed by the span.
+    trace_id: Option<String>,
     x: Vec<f64>,
     reply: mpsc::Sender<Result<SpmvReply>>,
 }
@@ -372,6 +441,7 @@ struct PendingSpmv {
 fn dispatcher(
     router: Arc<Router>,
     metrics: Arc<ServiceMetrics>,
+    telemetry: Arc<Telemetry>,
     cfg: BatcherConfig,
     rx: mpsc::Receiver<Request>,
 ) {
@@ -381,6 +451,7 @@ fn dispatcher(
             Ok(r) => r,
             Err(_) => return, // all senders gone
         };
+        metrics.gauge_queue_depth(-1);
         let mut batch = vec![first];
         let deadline = Instant::now() + cfg.max_wait;
         while batch.len() < cfg.max_batch {
@@ -389,7 +460,10 @@ fn dispatcher(
                 break;
             }
             match rx.recv_timeout(deadline - now) {
-                Ok(r) => batch.push(r),
+                Ok(r) => {
+                    metrics.gauge_queue_depth(-1);
+                    batch.push(r);
+                }
                 Err(mpsc::RecvTimeoutError::Timeout) => break,
                 Err(mpsc::RecvTimeoutError::Disconnected) => break,
             }
@@ -413,12 +487,14 @@ fn dispatcher(
                         requested: engine,
                         resolved,
                         deadline: r.deadline,
+                        admitted: r.admitted,
+                        trace_id: r.trace_id,
                         x,
                         reply,
                     });
                 }
                 Payload::Update { delta, reply } => {
-                    flush_spmvs(&router, &metrics, std::mem::take(&mut pending));
+                    flush_spmvs(&router, &metrics, &telemetry, std::mem::take(&mut pending));
                     let t = crate::util::Timer::start();
                     // a panicking delta application must not kill the
                     // dispatcher: the router's locks recover from
@@ -444,7 +520,63 @@ fn dispatcher(
                 }
             }
         }
-        flush_spmvs(&router, &metrics, pending);
+        flush_spmvs(&router, &metrics, &telemetry, pending);
+    }
+}
+
+/// Per-group span context: everything a request's [`Span`] needs that
+/// is decided at the group level rather than per request.
+struct SpanCtx<'a> {
+    telemetry: &'a Telemetry,
+    metrics: &'a ServiceMetrics,
+    matrix: &'a str,
+    engine: EngineKind,
+    group_size: usize,
+    merged_auto: bool,
+}
+
+impl SpanCtx<'_> {
+    /// Publish one request's span — **before** the reply send, so a
+    /// client that has read its reply will find the span in the ring —
+    /// and return the span's end-to-end total. The three stage
+    /// durations are cut from one monotonic timeline
+    /// (admitted → exec_start → exec_end → now), so they sum to the
+    /// total exactly; successful requests also feed the per-stage
+    /// histograms, keeping the stats decomposition consistent with the
+    /// latency histogram [`ServiceMetrics::record_request`] fills.
+    fn emit(
+        &self,
+        admitted: Instant,
+        exec_start: Instant,
+        exec_end: Instant,
+        trace_id: Option<String>,
+        spmm_width: usize,
+        ok: bool,
+    ) -> f64 {
+        let now = Instant::now();
+        let queue_wait = exec_start.saturating_duration_since(admitted).as_secs_f64();
+        let execute = exec_end.saturating_duration_since(exec_start).as_secs_f64();
+        let reply = now.saturating_duration_since(exec_end).as_secs_f64();
+        let total = queue_wait + execute + reply;
+        if ok {
+            self.metrics.record_stages(queue_wait, execute, reply);
+        }
+        self.telemetry.publish(Span {
+            seq: self.telemetry.next_seq(),
+            shard: self.telemetry.shard(),
+            id: trace_id,
+            matrix: self.matrix.to_string(),
+            engine: self.engine.to_string(),
+            group_size: self.group_size,
+            merged_auto: self.merged_auto,
+            spmm_width,
+            queue_wait_secs: queue_wait,
+            execute_secs: execute,
+            reply_secs: reply,
+            total_secs: total,
+            ok,
+        });
+        total
     }
 }
 
@@ -458,8 +590,14 @@ fn dispatcher(
 /// deadline expired while queued are dropped before execution, and the
 /// engine call itself runs under `catch_unwind` so a panic answers the
 /// group with typed `internal` errors instead of killing the
-/// dispatcher.
-fn flush_spmvs(router: &Router, metrics: &ServiceMetrics, mut batch: Vec<PendingSpmv>) {
+/// dispatcher. Every request — answered, errored, or dropped — emits
+/// one trace [`Span`] into `telemetry` *before* its reply is sent.
+fn flush_spmvs(
+    router: &Router,
+    metrics: &ServiceMetrics,
+    telemetry: &Telemetry,
+    mut batch: Vec<PendingSpmv>,
+) {
     if batch.is_empty() {
         return;
     }
@@ -500,6 +638,18 @@ fn flush_spmvs(router: &Router, metrics: &ServiceMetrics, mut batch: Vec<Pending
         // deadline check, so tests can expire a deadline mid-queue
         // deterministically
         faults::slow_flush(&matrix);
+        // group-level span context: every member shares the resolved
+        // engine (it is the group key), the arrival-set size, and the
+        // merged-auto provenance flag
+        let auto_arrived = reqs.iter().filter(|r| r.requested == EngineKind::Auto).count();
+        let ctx = SpanCtx {
+            telemetry,
+            metrics,
+            matrix: &matrix,
+            engine: reqs[0].resolved,
+            group_size: reqs.len(),
+            merged_auto: auto_arrived > 0 && auto_arrived < reqs.len(),
+        };
         // flush-time deadline check: time spent queued counts against
         // the request's budget — stale work is dropped, not executed
         let now = Instant::now();
@@ -511,6 +661,9 @@ fn flush_spmvs(router: &Router, metrics: &ServiceMetrics, mut batch: Vec<Pending
             reqs.into_iter().partition(is_live);
         for req in expired {
             metrics.record_deadline_drop();
+            // dropped work traces too: zero execute, ok=false
+            let dropped_at = Instant::now();
+            ctx.emit(req.admitted, dropped_at, dropped_at, req.trace_id.clone(), 0, false);
             let _ = req.reply.send(Err(anyhow::Error::new(
                 ServiceError::deadline_exceeded("deadline expired while queued"),
             )));
@@ -535,26 +688,33 @@ fn flush_spmvs(router: &Router, metrics: &ServiceMetrics, mut batch: Vec<Pending
             None => (Vec::new(), reqs), // unknown matrix: all error below
         };
         if good.len() > 1 {
-            let t = crate::util::Timer::start();
             // the inputs move into the batch call (no per-request
             // clone on the hot path), so a batch failure answers
-            // every caller directly instead of falling back
-            let (replies, xs): (Vec<_>, Vec<_>) =
-                good.into_iter().map(|r| (r.reply, r.x)).unzip();
+            // every caller directly instead of falling back; the trace
+            // meta (sender, admission time, id) rides alongside
+            let (metas, xs): (Vec<_>, Vec<_>) =
+                good.into_iter().map(|r| ((r.reply, r.admitted, r.trace_id), r.x)).unzip();
+            let width = metas.len();
             // panic isolation: a panicking engine answers every caller
             // with a typed `internal` error instead of unwinding the
             // dispatcher (which would orphan every queued request)
+            let exec_start = Instant::now();
             let result = catch_unwind(AssertUnwindSafe(|| {
                 faults::spmv_probe(&matrix);
                 router.spmm(&matrix, engine, xs)
             }));
+            let exec_end = Instant::now();
             match result {
                 Ok(Ok(ys)) => {
-                    metrics.record_spmm(replies.len());
-                    let secs = t.elapsed_secs() / replies.len() as f64;
+                    metrics.record_spmm(width);
                     let nnz = router.get(&matrix).map(|m| m.nnz).unwrap_or(0);
-                    for (reply, y) in replies.into_iter().zip(ys) {
-                        metrics.record_request(secs, nnz);
+                    for ((reply, admitted, trace_id), y) in metas.into_iter().zip(ys) {
+                        // every member of a fused group shares the one
+                        // engine pass, so its span (and latency sample)
+                        // carries the full pass time, not an amortized
+                        // share — the batching trade-off is visible
+                        let total = ctx.emit(admitted, exec_start, exec_end, trace_id, width, true);
+                        metrics.record_request(total, nnz);
                         let _ = reply.send(Ok(SpmvReply { y, resolved: engine }));
                     }
                 }
@@ -563,8 +723,9 @@ fn flush_spmvs(router: &Router, metrics: &ServiceMetrics, mut batch: Vec<Pending
                 // service's fault, not the request's
                 Ok(Err(e)) => {
                     let msg = format!("{e:#}");
-                    for reply in replies {
+                    for (reply, admitted, trace_id) in metas {
                         metrics.record_error();
+                        ctx.emit(admitted, exec_start, exec_end, trace_id, width, false);
                         let _ = reply.send(Err(anyhow::Error::new(ServiceError::internal(
                             format!("batched spmv: {msg}"),
                         ))));
@@ -573,8 +734,9 @@ fn flush_spmvs(router: &Router, metrics: &ServiceMetrics, mut batch: Vec<Pending
                 Err(p) => {
                     metrics.record_panic_recovered();
                     let msg = super::error::panic_message(p);
-                    for reply in replies {
+                    for (reply, admitted, trace_id) in metas {
                         metrics.record_error();
+                        ctx.emit(admitted, exec_start, exec_end, trace_id, width, false);
                         let _ = reply.send(Err(anyhow::Error::new(ServiceError::internal(
                             format!("engine panicked (recovered): {msg}"),
                         ))));
@@ -583,11 +745,12 @@ fn flush_spmvs(router: &Router, metrics: &ServiceMetrics, mut batch: Vec<Pending
             }
         } else {
             for req in good {
-                let t = crate::util::Timer::start();
+                let exec_start = Instant::now();
                 let result = catch_unwind(AssertUnwindSafe(|| {
                     faults::spmv_probe(&req.matrix);
                     router.spmv(&req.matrix, engine, &req.x)
                 }));
+                let exec_end = Instant::now();
                 let result = match result {
                     Ok(res) => res,
                     Err(p) => {
@@ -598,10 +761,13 @@ fn flush_spmvs(router: &Router, metrics: &ServiceMetrics, mut batch: Vec<Pending
                         ))))
                     }
                 };
+                let ok = result.is_ok();
+                let total =
+                    ctx.emit(req.admitted, exec_start, exec_end, req.trace_id.clone(), 1, ok);
                 match &result {
                     Ok(_) => {
                         let nnz = router.get(&req.matrix).map(|m| m.nnz).unwrap_or(0);
-                        metrics.record_request(t.elapsed_secs(), nnz);
+                        metrics.record_request(total, nnz);
                     }
                     Err(_) => metrics.record_error(),
                 }
@@ -612,8 +778,11 @@ fn flush_spmvs(router: &Router, metrics: &ServiceMetrics, mut batch: Vec<Pending
             // Router::spmv re-validates and produces the canonical
             // dimension (or unknown-matrix) error for this request —
             // by construction it cannot succeed here
+            let exec_start = Instant::now();
             let result = router.spmv(&req.matrix, engine, &req.x);
+            let exec_end = Instant::now();
             metrics.record_error();
+            ctx.emit(req.admitted, exec_start, exec_end, req.trace_id.clone(), 1, false);
             let _ = req.reply.send(result.map(|y| SpmvReply { y, resolved: engine }));
         }
     }
@@ -1043,5 +1212,93 @@ mod tests {
         assert_eq!(snap.requests, 8);
         assert_eq!(snap.updates, 4);
         assert_eq!(snap.errors, 0);
+    }
+
+    #[test]
+    fn every_request_publishes_a_span_before_its_reply() {
+        let (router, metrics) = setup();
+        let cols = router.get("m").unwrap().cols;
+        let tele = Arc::new(Telemetry::new(0, 64, None));
+        let batcher = Batcher::start_with_telemetry(
+            router.clone(),
+            metrics.clone(),
+            merge_cfg(),
+            tele.clone(),
+        );
+        let h = batcher.handle();
+        // two requests drained into one batch: auto + explicit resolve
+        // to the same engine and fuse into one group
+        let rx1 = h
+            .submit_spmv_traced(
+                "m",
+                EngineKind::Auto,
+                random::vector(cols, 1),
+                None,
+                Some("a".into()),
+            )
+            .unwrap();
+        let rx2 =
+            send_spmv(&h, "m", router.resolve_blocking("m").unwrap().0, random::vector(cols, 2));
+        rx1.recv().unwrap().unwrap();
+        rx2.recv().unwrap().unwrap();
+        // replies were read, so the spans are already in the ring
+        let spans = tele.recent(16);
+        assert_eq!(spans.len(), 2);
+        let tagged = spans.iter().find(|s| s.id.as_deref() == Some("a")).unwrap();
+        assert!(tagged.ok);
+        assert_eq!(tagged.group_size, 2);
+        assert_eq!(tagged.spmm_width, 2, "two good requests take the fused path");
+        assert!(tagged.merged_auto, "auto rode with an explicit request");
+        assert_ne!(tagged.engine, "auto", "spans carry the resolved kind");
+        for s in &spans {
+            // the span invariant: stages sum to the total exactly
+            let sum = s.queue_wait_secs + s.execute_secs + s.reply_secs;
+            assert!((sum - s.total_secs).abs() < 1e-12);
+            assert!(s.queue_wait_secs >= 0.0 && s.execute_secs > 0.0);
+        }
+        // the stage histograms saw the same two requests, and the
+        // latency samples are the span totals
+        let snap = metrics.snapshot();
+        assert_eq!(snap.requests, 2);
+        assert!(snap.p50_queue_wait_secs.is_finite());
+        assert!(snap.p50_execute_secs.is_finite());
+        assert!(snap.p50_reply_secs.is_finite());
+    }
+
+    #[test]
+    fn dropped_and_errored_requests_trace_not_ok() {
+        let name = "trace_err";
+        let (router, metrics) = setup_named(name);
+        let tele = Arc::new(Telemetry::new(0, 64, None));
+        let batcher = Batcher::start_with_telemetry(
+            router.clone(),
+            metrics.clone(),
+            BatcherConfig::default(),
+            tele.clone(),
+        );
+        let h = batcher.handle();
+        // mis-sized input: answered with a dimension error, traced ok=false
+        let err = h.spmv(name, EngineKind::Hbp, vec![1.0; 3]).unwrap_err();
+        assert!(!err.to_string().is_empty());
+        let spans = tele.recent(16);
+        assert_eq!(spans.len(), 1);
+        assert!(!spans[0].ok);
+        assert_eq!(spans[0].spmm_width, 1);
+        // errored work stays out of the stage histograms
+        assert!(metrics.snapshot().p50_queue_wait_secs.is_nan());
+    }
+
+    #[test]
+    fn queue_depth_gauge_returns_to_zero() {
+        let (router, metrics) = setup();
+        let cols = router.get("m").unwrap().cols;
+        let batcher = Batcher::start(router, metrics.clone(), BatcherConfig::default());
+        let h = batcher.handle();
+        for i in 0..4 {
+            h.spmv("m", EngineKind::Hbp, random::vector(cols, i)).unwrap();
+        }
+        // every admission (+1) was drained by the dispatcher (-1)
+        assert_eq!(metrics.snapshot().queue_depth, 0);
+        drop(h);
     }
 }

@@ -13,6 +13,7 @@
 //! (the `shards` breakdown in the same reply is each shard's own view).
 
 use crate::util::stats::{Histogram, Welford};
+use std::sync::atomic::{AtomicI64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::Instant;
 
@@ -21,8 +22,21 @@ struct Inner {
     errors: u64,
     latency: Histogram,
     latency_stats: Welford,
+    // per-stage decomposition of the end-to-end latency: admission →
+    // execution start (queue_wait), the engine call (execute), and
+    // reply assembly + hand-off to the connection writer (reply). For
+    // every traced request the three stage samples sum to the latency
+    // sample — they are cut from the same monotonic timeline.
+    queue_wait: Histogram,
+    execute: Histogram,
+    reply: Histogram,
     nnz_processed: f64,
     started: Instant,
+    // preprocessing phase times (BuildProfile) from served registrations
+    builds: u64,
+    build_plan_secs: f64,
+    build_reorder_secs: f64,
+    build_fill_secs: f64,
     // matrix-update traffic (the incremental-rebuild path)
     updates: u64,
     full_rebuilds: u64,
@@ -51,6 +65,13 @@ struct Inner {
 /// Thread-safe service metrics, optionally rolling up into a parent.
 pub struct ServiceMetrics {
     inner: Mutex<Inner>,
+    /// Saturation gauges live outside the mutex: they are touched on
+    /// every admission and every pipelined in-flight change, and a
+    /// relaxed atomic keeps that off the lock entirely. Signed so a
+    /// momentary inc/dec race can dip below zero without wrapping; the
+    /// snapshot clamps at zero.
+    queue_depth: AtomicI64,
+    inflight_pipeline: AtomicI64,
     /// When set (per-shard metrics), every recording is applied to the
     /// parent too — one level only, which is all the coordinator builds.
     parent: Option<Arc<ServiceMetrics>>,
@@ -80,14 +101,23 @@ impl ServiceMetrics {
     fn build(parent: Option<Arc<ServiceMetrics>>) -> Self {
         ServiceMetrics {
             parent,
+            queue_depth: AtomicI64::new(0),
+            inflight_pipeline: AtomicI64::new(0),
             inner: Mutex::new(Inner {
                 requests: 0,
                 errors: 0,
                 // 1µs .. ~1s exponential buckets
                 latency: Histogram::exponential(1e-6, 21),
                 latency_stats: Welford::new(),
+                queue_wait: Histogram::exponential(1e-6, 21),
+                execute: Histogram::exponential(1e-6, 21),
+                reply: Histogram::exponential(1e-6, 21),
                 nnz_processed: 0.0,
                 started: Instant::now(),
+                builds: 0,
+                build_plan_secs: 0.0,
+                build_reorder_secs: 0.0,
+                build_fill_secs: 0.0,
                 updates: 0,
                 full_rebuilds: 0,
                 update_blocks_touched: 0,
@@ -138,6 +168,65 @@ impl ServiceMetrics {
             m.latency_stats.push(latency_secs);
             m.nnz_processed += nnz as f64;
         });
+    }
+
+    /// Record the per-stage decomposition of one traced request:
+    /// admission→execution-start wait, engine-call time, and reply
+    /// assembly/hand-off. Recorded alongside [`record_request`], whose
+    /// latency sample is the sum of these three by construction.
+    ///
+    /// [`record_request`]: ServiceMetrics::record_request
+    pub fn record_stages(&self, queue_wait_secs: f64, execute_secs: f64, reply_secs: f64) {
+        self.record(|m| {
+            m.queue_wait.record(queue_wait_secs);
+            m.execute.record(execute_secs);
+            m.reply.record(reply_secs);
+        });
+    }
+
+    /// Record one preprocessing build profile (plan/reorder/fill phase
+    /// wall-times) from a served registration.
+    pub fn record_build(&self, profile: &crate::preprocess::BuildProfile) {
+        let p = *profile;
+        self.record(move |m| {
+            m.builds += 1;
+            m.build_plan_secs += p.plan_secs;
+            m.build_reorder_secs += p.reorder_secs;
+            m.build_fill_secs += p.fill_secs;
+        });
+    }
+
+    /// Adjust the queue-occupancy gauge (batcher admissions minus
+    /// dispatcher drains). Lock-free; forwards to the parent like every
+    /// recorder so the global gauge is the shard sum.
+    pub fn gauge_queue_depth(&self, delta: i64) {
+        self.queue_depth.fetch_add(delta, Ordering::Relaxed);
+        if let Some(p) = &self.parent {
+            p.queue_depth.fetch_add(delta, Ordering::Relaxed);
+        }
+    }
+
+    /// Adjust the pipelined in-flight gauge (id-tagged requests with a
+    /// live waiter). Lock-free; forwards to the parent.
+    pub fn gauge_inflight_pipeline(&self, delta: i64) {
+        self.inflight_pipeline.fetch_add(delta, Ordering::Relaxed);
+        if let Some(p) = &self.parent {
+            p.inflight_pipeline.fetch_add(delta, Ordering::Relaxed);
+        }
+    }
+
+    /// Clones of the latency and per-stage histograms, for renderers
+    /// that need raw buckets (the Prometheus exposition) rather than
+    /// the snapshot's point quantiles. Order: end-to-end latency,
+    /// queue_wait, execute, reply.
+    pub fn histograms(&self) -> [(&'static str, Histogram); 4] {
+        let m = self.lock();
+        [
+            ("request_latency_seconds", m.latency.clone()),
+            ("queue_wait_seconds", m.queue_wait.clone()),
+            ("execute_seconds", m.execute.clone()),
+            ("reply_seconds", m.reply.clone()),
+        ]
     }
 
     /// Record one failed request (SpMV or update).
@@ -230,14 +319,30 @@ impl ServiceMetrics {
     pub fn snapshot(&self) -> MetricsSnapshot {
         let m = self.lock();
         let elapsed = m.started.elapsed().as_secs_f64();
+        let builds = m.builds.max(1) as f64;
         MetricsSnapshot {
             requests: m.requests,
             errors: m.errors,
             mean_latency_secs: m.latency_stats.mean(),
             p50_latency_secs: m.latency.quantile(0.5),
             p99_latency_secs: m.latency.quantile(0.99),
+            p50_queue_wait_secs: m.queue_wait.quantile(0.5),
+            p99_queue_wait_secs: m.queue_wait.quantile(0.99),
+            p50_execute_secs: m.execute.quantile(0.5),
+            p99_execute_secs: m.execute.quantile(0.99),
+            p50_reply_secs: m.reply.quantile(0.5),
+            p99_reply_secs: m.reply.quantile(0.99),
             requests_per_sec: m.requests as f64 / elapsed.max(1e-9),
             gflops: 2.0 * m.nnz_processed / elapsed.max(1e-9) / 1e9,
+            uptime_secs: elapsed,
+            queue_depth: self.queue_depth.load(Ordering::Relaxed).max(0) as u64,
+            inflight_pipeline: self.inflight_pipeline.load(Ordering::Relaxed).max(0) as u64,
+            builds: m.builds,
+            // means guard the zero-build case to 0.0 (matching the
+            // other mean_* fields), keeping the JSON type stable
+            mean_build_plan_secs: m.build_plan_secs / builds,
+            mean_build_reorder_secs: m.build_reorder_secs / builds,
+            mean_build_fill_secs: m.build_fill_secs / builds,
             updates: m.updates,
             full_rebuilds: m.full_rebuilds,
             update_blocks_touched: m.update_blocks_touched,
@@ -269,14 +374,48 @@ pub struct MetricsSnapshot {
     pub errors: u64,
     /// Mean per-request latency in seconds.
     pub mean_latency_secs: f64,
-    /// Median per-request latency (histogram estimate).
+    /// Median per-request latency (histogram estimate). `NaN` when no
+    /// request has been recorded yet — serialized as JSON `null`.
     pub p50_latency_secs: f64,
-    /// 99th-percentile per-request latency (histogram estimate).
+    /// 99th-percentile per-request latency (histogram estimate). `NaN`
+    /// when empty, `+inf` when the quantile falls in the open top
+    /// bucket — both serialized as JSON `null`.
     pub p99_latency_secs: f64,
+    /// Median admission→execution-start wait (histogram estimate;
+    /// non-finite when no traced request exists, JSON `null`).
+    pub p50_queue_wait_secs: f64,
+    /// 99th-percentile queue wait (histogram estimate; nullable).
+    pub p99_queue_wait_secs: f64,
+    /// Median engine-call time (histogram estimate; nullable).
+    pub p50_execute_secs: f64,
+    /// 99th-percentile engine-call time (histogram estimate; nullable).
+    pub p99_execute_secs: f64,
+    /// Median reply assembly/hand-off time (histogram estimate;
+    /// nullable).
+    pub p50_reply_secs: f64,
+    /// 99th-percentile reply assembly/hand-off time (histogram
+    /// estimate; nullable).
+    pub p99_reply_secs: f64,
     /// Successful requests per wall-clock second since startup.
     pub requests_per_sec: f64,
     /// `2 * nnz` per second across all answered requests, in GFLOPS.
     pub gflops: f64,
+    /// Seconds since these metrics were created.
+    pub uptime_secs: f64,
+    /// Requests currently sitting in the batcher queue(s) — admissions
+    /// minus dispatcher drains, sampled at snapshot time.
+    pub queue_depth: u64,
+    /// Pipelined (id-tagged) requests currently in flight — waiter
+    /// threads alive across all connections, sampled at snapshot time.
+    pub inflight_pipeline: u64,
+    /// Preprocessing builds profiled at registration time.
+    pub builds: u64,
+    /// Mean planning-pass seconds per profiled build (0 when none).
+    pub mean_build_plan_secs: f64,
+    /// Mean in-fill reorder seconds per profiled build (0 when none).
+    pub mean_build_reorder_secs: f64,
+    /// Mean fill-pass seconds per profiled build (0 when none).
+    pub mean_build_fill_secs: f64,
     /// Matrix deltas applied.
     pub updates: u64,
     /// Updates that fell back to a full HBP rebuild (pattern change).
@@ -326,17 +465,33 @@ pub struct MetricsSnapshot {
 }
 
 impl MetricsSnapshot {
-    /// JSON view served by the protocol's `stats` op.
+    /// JSON view served by the protocol's `stats` op. Histogram
+    /// quantiles are `null` until a sample exists (and for a p99 that
+    /// falls in the open top bucket) — never a bare `NaN`/`inf` token,
+    /// which would make the whole reply unparseable.
     pub fn to_json(&self) -> crate::util::json::Json {
-        use crate::util::json::{obj, Json};
+        use crate::util::json::{num_or_null, obj, Json};
         obj(&[
             ("requests", Json::Num(self.requests as f64)),
             ("errors", Json::Num(self.errors as f64)),
             ("mean_latency_secs", Json::Num(self.mean_latency_secs)),
-            ("p50_latency_secs", Json::Num(self.p50_latency_secs)),
-            ("p99_latency_secs", Json::Num(self.p99_latency_secs)),
+            ("p50_latency_secs", num_or_null(self.p50_latency_secs)),
+            ("p99_latency_secs", num_or_null(self.p99_latency_secs)),
+            ("p50_queue_wait_secs", num_or_null(self.p50_queue_wait_secs)),
+            ("p99_queue_wait_secs", num_or_null(self.p99_queue_wait_secs)),
+            ("p50_execute_secs", num_or_null(self.p50_execute_secs)),
+            ("p99_execute_secs", num_or_null(self.p99_execute_secs)),
+            ("p50_reply_secs", num_or_null(self.p50_reply_secs)),
+            ("p99_reply_secs", num_or_null(self.p99_reply_secs)),
             ("requests_per_sec", Json::Num(self.requests_per_sec)),
             ("gflops", Json::Num(self.gflops)),
+            ("uptime_secs", Json::Num(self.uptime_secs)),
+            ("queue_depth", Json::Num(self.queue_depth as f64)),
+            ("inflight_pipeline", Json::Num(self.inflight_pipeline as f64)),
+            ("builds", Json::Num(self.builds as f64)),
+            ("mean_build_plan_secs", Json::Num(self.mean_build_plan_secs)),
+            ("mean_build_reorder_secs", Json::Num(self.mean_build_reorder_secs)),
+            ("mean_build_fill_secs", Json::Num(self.mean_build_fill_secs)),
             ("updates", Json::Num(self.updates as f64)),
             ("full_rebuilds", Json::Num(self.full_rebuilds as f64)),
             ("update_blocks_touched", Json::Num(self.update_blocks_touched as f64)),
@@ -359,11 +514,13 @@ impl MetricsSnapshot {
     }
 
     /// Compact per-shard view for the `stats` reply's `shards` array.
-    /// Lists only the counters recorded exclusively through shard
-    /// metrics (never directly on the root), so summing any of these
-    /// fields across the breakdown reproduces the global total.
+    /// Counter fields list only what is recorded exclusively through
+    /// shard metrics (never directly on the root), so summing any of
+    /// them across the breakdown reproduces the global total; the
+    /// saturation gauges and per-stage quantiles decompose the global
+    /// picture per shard (quantiles are nullable like the global ones).
     pub fn shard_json(&self, shard: usize) -> crate::util::json::Json {
-        use crate::util::json::{obj, Json};
+        use crate::util::json::{num_or_null, obj, Json};
         obj(&[
             ("shard", Json::Num(shard as f64)),
             ("requests", Json::Num(self.requests as f64)),
@@ -372,6 +529,14 @@ impl MetricsSnapshot {
             ("deadline_drops", Json::Num(self.deadline_drops as f64)),
             ("panics_recovered", Json::Num(self.panics_recovered as f64)),
             ("batch_groups", Json::Num(self.batch_groups as f64)),
+            ("queue_depth", Json::Num(self.queue_depth as f64)),
+            ("inflight_pipeline", Json::Num(self.inflight_pipeline as f64)),
+            ("p50_queue_wait_secs", num_or_null(self.p50_queue_wait_secs)),
+            ("p99_queue_wait_secs", num_or_null(self.p99_queue_wait_secs)),
+            ("p50_execute_secs", num_or_null(self.p50_execute_secs)),
+            ("p99_execute_secs", num_or_null(self.p99_execute_secs)),
+            ("p50_reply_secs", num_or_null(self.p50_reply_secs)),
+            ("p99_reply_secs", num_or_null(self.p99_reply_secs)),
         ])
     }
 }
@@ -559,6 +724,97 @@ mod tests {
         let j = s.to_json();
         assert_eq!(j.get("spmm_fused_vectors").and_then(|v| v.as_usize()), Some(6));
         assert!(j.get("mean_spmm_width").is_some());
+    }
+
+    #[test]
+    fn zero_request_snapshot_serializes_to_valid_json() {
+        // regression: empty-histogram quantiles are NaN and used to be
+        // written verbatim, making a fresh server's stats reply
+        // unparseable. They must serialize as null and round-trip.
+        let s = ServiceMetrics::new().snapshot();
+        assert!(s.p50_latency_secs.is_nan());
+        assert!(s.p99_queue_wait_secs.is_nan());
+        let j = s.to_json();
+        let text = j.to_string();
+        let back = crate::util::json::Json::parse(&text)
+            .expect("zero-request stats must be valid JSON");
+        use crate::util::json::Json;
+        for key in [
+            "p50_latency_secs",
+            "p99_latency_secs",
+            "p50_queue_wait_secs",
+            "p99_queue_wait_secs",
+            "p50_execute_secs",
+            "p99_execute_secs",
+            "p50_reply_secs",
+            "p99_reply_secs",
+        ] {
+            assert_eq!(back.get(key), Some(&Json::Null), "{key} must be null when empty");
+        }
+        assert_eq!(back.get("requests"), Some(&Json::Num(0.0)));
+        // the shard view round-trips too
+        let shard_text = s.shard_json(0).to_string();
+        assert!(crate::util::json::Json::parse(&shard_text).is_ok());
+    }
+
+    #[test]
+    fn records_stage_decomposition() {
+        let m = ServiceMetrics::new();
+        m.record_stages(1e-4, 2e-4, 3e-5);
+        m.record_stages(2e-4, 4e-4, 5e-5);
+        let s = m.snapshot();
+        assert!(s.p50_queue_wait_secs.is_finite());
+        assert!(s.p99_execute_secs >= s.p50_execute_secs);
+        assert!(s.p50_reply_secs.is_finite());
+        // raw histograms expose the same totals for the prom renderer
+        let hists = m.histograms();
+        assert_eq!(hists[1].0, "queue_wait_seconds");
+        assert_eq!(hists[1].1.total(), 2);
+        assert!((hists[2].1.sum() - 6e-4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gauges_track_depth_and_forward_to_parent() {
+        let root = std::sync::Arc::new(ServiceMetrics::new());
+        let shard = ServiceMetrics::shard_of(root.clone());
+        shard.gauge_queue_depth(1);
+        shard.gauge_queue_depth(1);
+        shard.gauge_queue_depth(-1);
+        shard.gauge_inflight_pipeline(1);
+        assert_eq!(shard.snapshot().queue_depth, 1);
+        assert_eq!(root.snapshot().queue_depth, 1, "gauges roll up");
+        assert_eq!(root.snapshot().inflight_pipeline, 1);
+        // a transient negative dip clamps to zero instead of wrapping
+        shard.gauge_queue_depth(-5);
+        assert_eq!(shard.snapshot().queue_depth, 0);
+        let j = root.snapshot().to_json();
+        assert!(j.get("queue_depth").is_some());
+        assert!(j.get("inflight_pipeline").is_some());
+    }
+
+    #[test]
+    fn records_build_profiles() {
+        use crate::preprocess::BuildProfile;
+        let m = ServiceMetrics::new();
+        assert_eq!(m.snapshot().builds, 0);
+        assert_eq!(m.snapshot().mean_build_plan_secs, 0.0, "zero builds mean 0.0, not NaN");
+        m.record_build(&BuildProfile {
+            plan_secs: 0.1,
+            reorder_secs: 0.02,
+            fill_secs: 0.3,
+            total_secs: 0.42,
+        });
+        m.record_build(&BuildProfile {
+            plan_secs: 0.3,
+            reorder_secs: 0.04,
+            fill_secs: 0.5,
+            total_secs: 0.9,
+        });
+        let s = m.snapshot();
+        assert_eq!(s.builds, 2);
+        assert!((s.mean_build_plan_secs - 0.2).abs() < 1e-12);
+        assert!((s.mean_build_reorder_secs - 0.03).abs() < 1e-12);
+        assert!((s.mean_build_fill_secs - 0.4).abs() < 1e-12);
     }
 
     #[test]

@@ -55,15 +55,17 @@
 
 pub mod error;
 pub mod metrics;
+pub mod telemetry;
 pub mod router;
 pub mod batcher;
 pub mod server;
 
 pub use batcher::{Batcher, BatcherConfig, BatcherHandle, SpmvReply};
 pub use error::{ErrorCode, ServiceError};
-pub use metrics::ServiceMetrics;
+pub use metrics::{MetricsSnapshot, ServiceMetrics};
 pub use router::{EngineKind, Router};
 pub use server::{
     serve, serve_background_with, serve_with, Client, Connection, Coordinator, ServerConfig,
     ServerHandle, SpmvBuilder, SpmvTicket, PROTO_FEATURES, PROTO_VERSION,
 };
+pub use telemetry::{prom_text, Span, Telemetry, TraceRing};

@@ -224,6 +224,14 @@ impl PreparedMatrix {
         }
     }
 
+    /// The resident HBP engine's preprocessing phase profile
+    /// (plan/reorder/fill wall-times), `None` when no HBP engine has
+    /// been built — only HBP construction is profiled; the CSR and
+    /// plain-2D baselines have no plan/fill pipeline to decompose.
+    pub fn build_profile(&self) -> Option<crate::preprocess::BuildProfile> {
+        self.hbp.get().and_then(|(_, e)| e.build_profile())
+    }
+
     /// Engines currently resident.
     pub fn built_kinds(&self) -> Vec<EngineKind> {
         [EngineKind::Hbp, EngineKind::Csr, EngineKind::Plain2d]

@@ -75,6 +75,7 @@ use super::batcher::{Batcher, BatcherConfig, BatcherHandle, SpmvReply};
 use super::error::{error_reply, panic_message, reply_error, ServiceError};
 use super::metrics::{MetricsSnapshot, ServiceMetrics};
 use super::router::{EngineKind, Router};
+use super::telemetry::{prom_text, Span, Telemetry};
 use crate::preprocess::{DeltaOp, MatrixDelta, UpdateReport};
 use crate::util::json::{num_arr, obj, Json};
 use anyhow::{bail, Context, Result};
@@ -93,8 +94,8 @@ pub const PROTO_VERSION: u64 = 1;
 /// Feature tags the `hello` op advertises, for client feature-detection.
 /// `"pipelining"` stays first — the executed protocol-doc examples
 /// check the array's first element.
-pub const PROTO_FEATURES: [&str; 5] =
-    ["pipelining", "deadline_ms", "spmm_fuse", "auto_engine", "incremental_update"];
+pub const PROTO_FEATURES: [&str; 6] =
+    ["pipelining", "deadline_ms", "spmm_fuse", "auto_engine", "incremental_update", "telemetry"];
 
 /// The in-process coordinator: shared router + N sharded batchers +
 /// rolled-up metrics.
@@ -108,6 +109,9 @@ pub struct Coordinator {
     /// Per-shard counters (each a [`ServiceMetrics::shard_of`] child of
     /// `metrics`), indexed by shard id.
     shard_metrics: Vec<Arc<ServiceMetrics>>,
+    /// Per-shard trace rings (shared span sequence counter), indexed by
+    /// shard id; drained and merge-sorted by the `trace` op.
+    telemetry: Vec<Arc<Telemetry>>,
     // field order matters: `handles` must drop BEFORE `batchers`
     // (fields drop in declaration order) or Batcher::drop joins a
     // dispatcher that still sees a live sender and never exits.
@@ -131,22 +135,46 @@ impl Coordinator {
         let router = Arc::new(router);
         let metrics = Arc::new(ServiceMetrics::new());
         // registration happens before the router is shared, so every
-        // tune outcome the registry holds is recorded here exactly once
-        // — on the root: tuning is front-level work, not shard work
+        // tune outcome (and profiled HBP build) the registry holds is
+        // recorded here exactly once — on the root: registration is
+        // front-level work, not shard work
         for name in router.names() {
-            metrics.record_tune(&router.get(name).expect("registered matrix").tune);
+            let m = router.get(name).expect("registered matrix");
+            metrics.record_tune(&m.tune);
+            if let Some(profile) = m.build_profile() {
+                metrics.record_build(&profile);
+            }
         }
         let mut shard_metrics = Vec::new();
+        let mut telemetry = Vec::new();
         let mut batchers = Vec::new();
         let mut handles = Vec::new();
-        for _ in 0..shards.max(1) {
+        // one span sequence counter shared by every shard's telemetry,
+        // so the trace op can merge the per-shard rings into one order
+        let seq = Arc::new(std::sync::atomic::AtomicU64::new(0));
+        for shard in 0..shards.max(1) {
             let m = Arc::new(ServiceMetrics::shard_of(metrics.clone()));
-            let b = Batcher::start(router.clone(), m.clone(), cfg);
+            let t = Arc::new(Telemetry::with_seq(
+                shard,
+                cfg.trace_capacity,
+                cfg.slow_threshold,
+                seq.clone(),
+            ));
+            let b = Batcher::start_with_telemetry(router.clone(), m.clone(), cfg, t.clone());
             handles.push(b.handle());
             shard_metrics.push(m);
+            telemetry.push(t);
             batchers.push(b);
         }
-        Coordinator { router, metrics, shard_metrics, handles, batchers, rr: AtomicUsize::new(0) }
+        Coordinator {
+            router,
+            metrics,
+            shard_metrics,
+            telemetry,
+            handles,
+            batchers,
+            rr: AtomicUsize::new(0),
+        }
     }
 
     /// How many shards this coordinator runs.
@@ -270,8 +298,24 @@ impl Coordinator {
             ])),
             "spmv" => {
                 let p = parse_spmv(req)?;
-                let reply =
-                    self.handles[shard].spmv_deadline(&p.matrix, p.engine, p.x, p.deadline_ms)?;
+                // the envelope id (when present) rides into the batcher
+                // so the request's trace span echoes it
+                let trace_id = req.get("id").map(|id| match id {
+                    Json::Str(s) => s.clone(),
+                    other => other.to_string(),
+                });
+                let rx = self.handles[shard].submit_spmv_traced(
+                    &p.matrix,
+                    p.engine,
+                    p.x,
+                    p.deadline_ms,
+                    trace_id,
+                )?;
+                let reply = rx.recv().map_err(|_| {
+                    anyhow::Error::new(ServiceError::shutting_down(
+                        "batcher shut down before answering the request",
+                    ))
+                })??;
                 Ok(spmv_reply_json(&reply))
             }
             "update" => {
@@ -315,6 +359,28 @@ impl Coordinator {
                 let matrix = req.req_str("matrix")?;
                 let m = self.router.get(matrix)?;
                 Ok(tune_json(&m.tune))
+            }
+            "trace" => {
+                let limit = match req.get("limit") {
+                    None => 32,
+                    Some(v) => v.as_usize().context("\"limit\" must be a number")?,
+                };
+                // merge the per-shard rings by the shared sequence
+                // counter, then keep the global newest `limit`
+                let mut spans: Vec<Span> =
+                    self.telemetry.iter().flat_map(|t| t.recent(limit)).collect();
+                spans.sort_by_key(|s| s.seq);
+                let skip = spans.len().saturating_sub(limit);
+                let dropped: u64 = self.telemetry.iter().map(|t| t.dropped()).sum();
+                Ok(obj(&[
+                    ("ok", Json::Bool(true)),
+                    ("dropped", Json::Num(dropped as f64)),
+                    ("spans", Json::Arr(spans[skip..].iter().map(Span::to_json).collect())),
+                ]))
+            }
+            "metrics" => {
+                let prom = prom_text(&self.metrics, &self.shard_metrics);
+                Ok(obj(&[("ok", Json::Bool(true)), ("prom", Json::Str(prom))]))
             }
             other => anyhow::bail!("unknown op {other:?}"),
         }
@@ -511,6 +577,13 @@ fn tune_json(t: &crate::tune::TuneOutcome) -> Json {
             },
         ),
         ("tune_secs", Json::Num(t.tune_secs)),
+        (
+            "phases",
+            obj(&[
+                ("features_secs", Json::Num(t.phases.features_secs)),
+                ("trials_secs", Json::Num(t.phases.trials_secs)),
+            ]),
+        ),
     ])
 }
 
@@ -909,11 +982,18 @@ fn handle_tagged(ctx: &mut ConnCtx<'_>, req: &Json, id: Json) {
             return;
         }
     };
-    let rx = match ctx.c.handles[ctx.shard].submit_spmv(
+    // the envelope id rides into the batcher so the request's span
+    // echoes it (string ids verbatim, other JSON values serialized)
+    let trace_id = Some(match &id {
+        Json::Str(s) => s.clone(),
+        other => other.to_string(),
+    });
+    let rx = match ctx.c.handles[ctx.shard].submit_spmv_traced(
         &params.matrix,
         params.engine,
         params.x,
         params.deadline_ms,
+        trace_id,
     ) {
         Ok(rx) => rx,
         Err(e) => {
@@ -924,6 +1004,8 @@ fn handle_tagged(ctx: &mut ConnCtx<'_>, req: &Json, id: Json) {
         }
     };
     ctx.inflight.fetch_add(1, Ordering::SeqCst);
+    let shard_metrics = ctx.c.shard_metrics[ctx.shard].clone();
+    shard_metrics.gauge_inflight_pipeline(1);
     let out = ctx.out_tx.clone();
     let inflight = ctx.inflight.clone();
     let id_on_fail = id.clone();
@@ -942,6 +1024,7 @@ fn handle_tagged(ctx: &mut ConnCtx<'_>, req: &Json, id: Json) {
         };
         let _ = out.send(attach_id(reply, Some(id)).to_string());
         inflight.fetch_sub(1, Ordering::SeqCst);
+        shard_metrics.gauge_inflight_pipeline(-1);
     });
     match spawned {
         Ok(h) => ctx.waiters.push(h),
@@ -950,6 +1033,7 @@ fn handle_tagged(ctx: &mut ConnCtx<'_>, req: &Json, id: Json) {
             // silently dropping the reply (the computed result, if any,
             // lands in the dropped receiver and is discarded)
             ctx.inflight.fetch_sub(1, Ordering::SeqCst);
+            ctx.c.shard_metrics[ctx.shard].gauge_inflight_pipeline(-1);
             let e = anyhow::Error::new(ServiceError::internal("failed to spawn reply waiter"));
             let _ = ctx.out_tx.send(attach_id(error_reply(&e), Some(id_on_fail)).to_string());
         }
@@ -1575,6 +1659,83 @@ mod tests {
         // and the 4-shard breakdown accounts for every request
         let per_shard: u64 = c4.shard_snapshots().iter().map(|s| s.requests).sum();
         assert_eq!(per_shard, s4.requests);
+    }
+
+    #[test]
+    fn trace_op_returns_spans_with_echoed_ids() {
+        let c = coordinator_shards(2);
+        let x_json = format!("[{}]", vec!["0.1"; 30].join(","));
+        // a fresh coordinator has no spans
+        let r = c.handle_json(r#"{"op":"trace"}"#);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+        assert_eq!(r.get("spans").unwrap().as_arr().unwrap().len(), 0);
+        assert_eq!(r.req_usize("dropped").unwrap(), 0);
+
+        // requests on both shards, one id-tagged
+        for shard in 0..2 {
+            let r = c.handle_json_on(
+                shard,
+                &format!(r#"{{"op":"spmv","matrix":"t","x":{x_json},"id":"r{shard}"}}"#),
+            );
+            assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+        }
+        let r = c.handle_json(r#"{"op":"trace","limit":8}"#);
+        let spans = r.get("spans").unwrap().as_arr().unwrap();
+        assert_eq!(spans.len(), 2, "one span per answered request");
+        // merged across shards in global seq order
+        let seqs: Vec<usize> = spans.iter().map(|s| s.req_usize("seq").unwrap()).collect();
+        assert!(seqs.windows(2).all(|w| w[0] < w[1]));
+        let shards_seen: HashSet<usize> =
+            spans.iter().map(|s| s.req_usize("shard").unwrap()).collect();
+        assert_eq!(shards_seen.len(), 2, "both shards' rings are drained");
+        for s in spans {
+            assert_eq!(s.get("ok"), Some(&Json::Bool(true)));
+            assert!(s.get("id").unwrap().as_str().unwrap().starts_with('r'));
+            assert_eq!(s.req_str("matrix").unwrap(), "t");
+            assert_ne!(s.req_str("engine").unwrap(), "auto");
+            // the span invariant holds on the wire
+            let qw = s.get("queue_wait_secs").unwrap().as_f64().unwrap();
+            let ex = s.get("execute_secs").unwrap().as_f64().unwrap();
+            let rp = s.get("reply_secs").unwrap().as_f64().unwrap();
+            let total = s.get("total_secs").unwrap().as_f64().unwrap();
+            assert!((qw + ex + rp - total).abs() <= 1e-9 * total.max(1.0));
+        }
+        // limit truncates to the globally newest spans
+        let r = c.handle_json(r#"{"op":"trace","limit":1}"#);
+        let spans = r.get("spans").unwrap().as_arr().unwrap();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].req_usize("seq").unwrap(), *seqs.last().unwrap());
+        // a bad limit is a typed error
+        let r = c.handle_json(r#"{"op":"trace","limit":"many"}"#);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn metrics_op_returns_prometheus_text() {
+        let c = coordinator();
+        let x_json = format!("[{}]", vec!["0.1"; 30].join(","));
+        let r = c.handle_json(&format!(r#"{{"op":"spmv","matrix":"t","x":{x_json}}}"#));
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+        let r = c.handle_json(r#"{"op":"metrics"}"#);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+        let text = r.req_str("prom").unwrap();
+        assert!(text.contains("# TYPE hbp_requests_total counter"));
+        assert!(text.contains("\nhbp_requests_total 1\n"));
+        assert!(text.contains("hbp_shard_requests_total{shard=\"0\"} 1\n"));
+        assert!(text.contains("hbp_request_latency_seconds_bucket{le=\"+Inf\"} 1\n"));
+        assert!(text.contains("hbp_tunes_total 1\n"), "registration tune is visible");
+    }
+
+    #[test]
+    fn inline_spmv_without_id_traces_with_null_id() {
+        let c = coordinator();
+        let x_json = format!("[{}]", vec!["0.1"; 30].join(","));
+        let r = c.handle_json(&format!(r#"{{"op":"spmv","matrix":"t","x":{x_json}}}"#));
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+        let r = c.handle_json(r#"{"op":"trace"}"#);
+        let spans = r.get("spans").unwrap().as_arr().unwrap();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].get("id"), Some(&Json::Null));
     }
 }
 

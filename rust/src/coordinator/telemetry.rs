@@ -1,0 +1,645 @@
+//! Request tracing, slow-request logging, and Prometheus exposition.
+//!
+//! Every request the batcher answers produces one [`Span`]: the
+//! per-stage timing decomposition (queue wait → engine execution →
+//! reply hand-off) plus the grouping decisions that shaped it (resolved
+//! engine, group size, whether `auto` traffic merged in, fused SpMM
+//! width). Spans land in a bounded per-shard [`TraceRing`] *before* the
+//! reply is handed to the connection writer, so a client that has read
+//! its reply is guaranteed to find its span in a subsequent
+//! `{"op":"trace"}` drain — which is also what makes the executed
+//! protocol-doc examples deterministic.
+//!
+//! The ring is lock-light by design: the single dispatcher thread that
+//! owns a shard is the only pusher, and it only ever `try_lock`s — a
+//! collision with a concurrent drain drops the span (counted in
+//! `dropped`) instead of stalling the request path. Draining takes the
+//! lock for a bounded clone of the newest entries.
+//!
+//! [`prom_text`] renders the same metrics served by the `stats` op as
+//! Prometheus text exposition (counters, gauges, and cumulative
+//! histogram `_bucket`/`_sum`/`_count` series, shard-labeled), for the
+//! `{"op":"metrics"}` protocol op and `hbp stats --format prom`.
+
+use super::ServiceMetrics;
+use crate::util::json::{obj, Json};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// One completed request's trace: stage timings plus the batching
+/// decisions that shaped it. The three stage durations sum to
+/// `total_secs` exactly — they are cut from one monotonic timeline.
+#[derive(Clone, Debug)]
+pub struct Span {
+    /// Monotone global sequence number (shared across shards), assigned
+    /// at publish time — merge-sort key for the `trace` op.
+    pub seq: u64,
+    /// Shard whose dispatcher executed the request.
+    pub shard: usize,
+    /// The protocol request `id` (pipelined requests), echoed for
+    /// correlation; `None` for un-tagged requests.
+    pub id: Option<String>,
+    /// Target matrix name.
+    pub matrix: String,
+    /// The *resolved* engine kind that executed the request (never
+    /// `auto` for hosted matrices).
+    pub engine: String,
+    /// Size of the flushed group this request rode in.
+    pub group_size: usize,
+    /// Whether the group mixed `auto` and explicit arrivals — a merge
+    /// that only resolved grouping makes possible.
+    pub merged_auto: bool,
+    /// Vectors answered by the engine pass that served this request
+    /// (`> 1` only on the fused SpMM path).
+    pub spmm_width: usize,
+    /// Admission → execution-start wait, seconds.
+    pub queue_wait_secs: f64,
+    /// Engine-call time, seconds (the whole group's pass — every
+    /// member of a fused group shares it).
+    pub execute_secs: f64,
+    /// Reply assembly + hand-off to the connection writer, seconds.
+    pub reply_secs: f64,
+    /// End-to-end admission → reply-handoff latency, seconds; equals
+    /// the sum of the three stages by construction.
+    pub total_secs: f64,
+    /// Whether the request succeeded (errors, deadline drops, and
+    /// recovered panics trace with `ok: false`).
+    pub ok: bool,
+}
+
+impl Span {
+    /// JSON view used by the `trace` op and the slow-request log.
+    pub fn to_json(&self) -> Json {
+        obj(&[
+            ("seq", Json::Num(self.seq as f64)),
+            ("shard", Json::Num(self.shard as f64)),
+            (
+                "id",
+                match &self.id {
+                    Some(s) => Json::Str(s.clone()),
+                    None => Json::Null,
+                },
+            ),
+            ("matrix", Json::Str(self.matrix.clone())),
+            ("engine", Json::Str(self.engine.clone())),
+            ("group_size", Json::Num(self.group_size as f64)),
+            ("merged_auto", Json::Bool(self.merged_auto)),
+            ("spmm_width", Json::Num(self.spmm_width as f64)),
+            ("queue_wait_secs", Json::Num(self.queue_wait_secs)),
+            ("execute_secs", Json::Num(self.execute_secs)),
+            ("reply_secs", Json::Num(self.reply_secs)),
+            ("total_secs", Json::Num(self.total_secs)),
+            ("ok", Json::Bool(self.ok)),
+        ])
+    }
+}
+
+/// Bounded ring of the most recent [`Span`]s, tuned for a single
+/// pusher (the shard's dispatcher thread) that must never block: the
+/// push side only `try_lock`s and drops the span on contention, so a
+/// slow or stuck drainer costs trace completeness, never request
+/// latency.
+pub struct TraceRing {
+    buf: Mutex<VecDeque<Span>>,
+    capacity: usize,
+    dropped: AtomicU64,
+}
+
+impl TraceRing {
+    /// Ring holding up to `capacity` spans (at least 1); older spans
+    /// are evicted as new ones arrive.
+    pub fn new(capacity: usize) -> Self {
+        let capacity = capacity.max(1);
+        TraceRing {
+            buf: Mutex::new(VecDeque::with_capacity(capacity)),
+            capacity,
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Record a span, evicting the oldest at capacity. Never blocks:
+    /// if a drain holds the lock the span is counted in [`dropped`]
+    /// and discarded.
+    ///
+    /// [`dropped`]: TraceRing::dropped
+    pub fn push(&self, span: Span) {
+        match self.buf.try_lock() {
+            Ok(mut buf) => {
+                if buf.len() == self.capacity {
+                    buf.pop_front();
+                }
+                buf.push_back(span);
+            }
+            Err(std::sync::TryLockError::WouldBlock) => {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(std::sync::TryLockError::Poisoned(e)) => {
+                // a drainer panicked mid-clone; the ring contents are
+                // still structurally valid spans, so keep recording
+                let mut buf = e.into_inner();
+                if buf.len() == self.capacity {
+                    buf.pop_front();
+                }
+                buf.push_back(span);
+            }
+        }
+    }
+
+    /// The newest `limit` spans, oldest → newest. Takes the lock (the
+    /// pusher side won't wait on it — see [`push`]).
+    ///
+    /// [`push`]: TraceRing::push
+    pub fn recent(&self, limit: usize) -> Vec<Span> {
+        let buf = self.buf.lock().unwrap_or_else(|e| e.into_inner());
+        let skip = buf.len().saturating_sub(limit);
+        buf.iter().skip(skip).cloned().collect()
+    }
+
+    /// Spans currently held.
+    pub fn len(&self) -> usize {
+        self.buf.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+
+    /// Whether the ring holds no spans.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Spans discarded because a drain held the lock at push time.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+/// Per-shard telemetry bundle handed to the batcher: the trace ring,
+/// the shared span sequence counter, and the slow-request threshold.
+pub struct Telemetry {
+    shard: usize,
+    ring: TraceRing,
+    slow_secs: Option<f64>,
+    seq: Arc<AtomicU64>,
+}
+
+impl Telemetry {
+    /// Stand-alone telemetry (own sequence counter) — what a bare
+    /// `Batcher::start` builds for itself.
+    pub fn new(shard: usize, capacity: usize, slow_threshold: Option<Duration>) -> Self {
+        Telemetry::with_seq(shard, capacity, slow_threshold, Arc::new(AtomicU64::new(0)))
+    }
+
+    /// Telemetry sharing `seq` with sibling shards, so spans merge into
+    /// one global order across the coordinator's rings.
+    pub fn with_seq(
+        shard: usize,
+        capacity: usize,
+        slow_threshold: Option<Duration>,
+        seq: Arc<AtomicU64>,
+    ) -> Self {
+        Telemetry {
+            shard,
+            ring: TraceRing::new(capacity),
+            slow_secs: slow_threshold.map(|d| d.as_secs_f64()),
+            seq,
+        }
+    }
+
+    /// The shard this bundle traces.
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// Next global span sequence number.
+    pub fn next_seq(&self) -> u64 {
+        self.seq.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Publish a completed span: emit the slow-request log line when
+    /// the span crossed the threshold, then record it in the ring.
+    /// Callers invoke this *before* handing the reply to the writer,
+    /// so a client that has read its reply will find its span.
+    pub fn publish(&self, span: Span) {
+        if let Some(slow) = self.slow_secs {
+            if span.total_secs >= slow {
+                let mut j = span.to_json();
+                if let Json::Obj(m) = &mut j {
+                    m.insert("event".to_string(), Json::Str("slow_request".to_string()));
+                }
+                eprintln!("{j}");
+            }
+        }
+        self.ring.push(span);
+    }
+
+    /// The newest `limit` spans from this shard's ring.
+    pub fn recent(&self, limit: usize) -> Vec<Span> {
+        self.ring.recent(limit)
+    }
+
+    /// Spans this shard discarded under push/drain contention.
+    pub fn dropped(&self) -> u64 {
+        self.ring.dropped()
+    }
+}
+
+/// One structured stats line (JSON object with `"event":"stats"`) from
+/// a metrics snapshot — the periodic reporter and `--batch-stats` both
+/// print exactly this, so log scrapers see a single shape.
+pub fn report_line(metrics: &ServiceMetrics) -> String {
+    let mut j = metrics.snapshot().to_json();
+    if let Json::Obj(m) = &mut j {
+        m.insert("event".to_string(), Json::Str("stats".to_string()));
+    }
+    j.to_string()
+}
+
+/// Spawn a detached reporter thread that prints [`report_line`] to
+/// stderr every `every` until the process exits (the `--batch-stats`
+/// serve flag). Ticks where the request count has not moved are
+/// skipped, so an idle server stays quiet.
+pub fn spawn_reporter(metrics: Arc<ServiceMetrics>, every: Duration) {
+    let builder = std::thread::Builder::new().name("hbp-stats-reporter".to_string());
+    let spawned = builder.spawn(move || {
+        let mut last_requests = 0u64;
+        loop {
+            std::thread::sleep(every);
+            let requests = metrics.snapshot().requests;
+            if requests != last_requests {
+                last_requests = requests;
+                eprintln!("{}", report_line(&metrics));
+            }
+        }
+    });
+    if let Err(e) = spawned {
+        eprintln!("hbp-spmv: stats reporter not started: {e}");
+    }
+}
+
+/// Format an `f64` the way Prometheus exposition expects: `+Inf` for
+/// the open top bucket, plain decimal otherwise.
+fn prom_num(x: f64) -> String {
+    if x.is_infinite() {
+        if x > 0.0 { "+Inf".to_string() } else { "-Inf".to_string() }
+    } else if x.is_nan() {
+        "NaN".to_string()
+    } else {
+        format!("{x}")
+    }
+}
+
+/// Escape a label value per the exposition format (`\\`, `\"`, `\n`).
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Append one `# HELP` + `# TYPE` header pair.
+fn prom_header(out: &mut String, name: &str, kind: &str, help: &str) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+}
+
+/// Append one histogram family: cumulative `_bucket{le=...}` series
+/// ending at `le="+Inf"`, then `_sum` and `_count`.
+///
+/// Bucket semantics note: [`crate::util::stats::Histogram`] buckets are
+/// upper-exclusive (`x < bound`) while Prometheus `le` is inclusive —
+/// for continuous latencies the boundary mass is negligible and the
+/// exposition treats the bound as the bucket's `le`.
+fn prom_histogram(out: &mut String, name: &str, labels: &str, h: &crate::util::stats::Histogram) {
+    for (bound, cum) in h.cumulative() {
+        let le = prom_num(bound);
+        if labels.is_empty() {
+            out.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {cum}\n"));
+        } else {
+            out.push_str(&format!("{name}_bucket{{{labels},le=\"{le}\"}} {cum}\n"));
+        }
+    }
+    let lb = if labels.is_empty() { String::new() } else { format!("{{{labels}}}") };
+    out.push_str(&format!("{name}_sum{lb} {}\n", prom_num(h.sum())));
+    out.push_str(&format!("{name}_count{lb} {}\n", h.total()));
+}
+
+/// Render the service metrics as Prometheus text exposition
+/// (version 0.0.4): global counters/gauges and histograms from the
+/// root metrics, plus per-shard series labeled `shard="<i>"` under
+/// `hbp_shard_*` names so global families and their per-shard
+/// decomposition never collide in one family.
+pub fn prom_text(root: &ServiceMetrics, shards: &[Arc<ServiceMetrics>]) -> String {
+    let s = root.snapshot();
+    let mut out = String::new();
+
+    // global counters
+    let counters: [(&str, u64, &str); 15] = [
+        ("hbp_requests_total", s.requests, "SpMV requests answered successfully."),
+        ("hbp_errors_total", s.errors, "Failed requests (SpMV or update)."),
+        ("hbp_shed_total", s.shed, "Requests shed by admission control."),
+        ("hbp_deadline_drops_total", s.deadline_drops, "Requests dropped past their deadline."),
+        (
+            "hbp_panics_recovered_total",
+            s.panics_recovered,
+            "Panics caught and converted into per-request errors.",
+        ),
+        ("hbp_accept_errors_total", s.accept_errors, "Transient accept-loop errors survived."),
+        ("hbp_updates_total", s.updates, "Matrix deltas applied."),
+        ("hbp_full_rebuilds_total", s.full_rebuilds, "Updates that forced a full HBP rebuild."),
+        ("hbp_tunes_total", s.tunes, "Tuner invocations."),
+        ("hbp_tune_cache_hits_total", s.tune_cache_hits, "Tunes short-circuited by the cache."),
+        ("hbp_tune_trials_total", s.tune_trials, "Candidates measured by competitive trials."),
+        ("hbp_batch_groups_total", s.batch_groups, "SpMV batch groups flushed."),
+        (
+            "hbp_batch_merged_auto_total",
+            s.batch_merged_auto,
+            "Auto arrivals merged into explicit groups by resolved grouping.",
+        ),
+        (
+            "hbp_spmm_fused_vectors_total",
+            s.spmm_fused_vectors,
+            "Vectors answered by fused multi-vector SpMM passes.",
+        ),
+        ("hbp_builds_total", s.builds, "Preprocessing builds profiled at registration."),
+    ];
+    for (name, v, help) in counters {
+        prom_header(&mut out, name, "counter", help);
+        out.push_str(&format!("{name} {v}\n"));
+    }
+
+    // global gauges (point-in-time or derived values)
+    let gauges: [(&str, f64, &str); 7] = [
+        ("hbp_uptime_seconds", s.uptime_secs, "Seconds since the metrics were created."),
+        ("hbp_queue_depth", s.queue_depth as f64, "Requests sitting in the batcher queues."),
+        (
+            "hbp_inflight_pipeline",
+            s.inflight_pipeline as f64,
+            "Pipelined id-tagged requests currently in flight.",
+        ),
+        ("hbp_requests_per_sec", s.requests_per_sec, "Successful requests per second of uptime."),
+        ("hbp_gflops", s.gflops, "2*nnz per second across answered requests, in GFLOPS."),
+        (
+            "hbp_mean_group_size",
+            s.mean_group_size,
+            "Mean requests per flushed batch group.",
+        ),
+        (
+            "hbp_mean_build_total_seconds",
+            s.mean_build_plan_secs + s.mean_build_fill_secs,
+            "Mean plan+fill seconds per profiled preprocessing build.",
+        ),
+    ];
+    for (name, v, help) in gauges {
+        prom_header(&mut out, name, "gauge", help);
+        out.push_str(&format!("{name} {}\n", prom_num(v)));
+    }
+
+    // global histograms (end-to-end latency + the stage decomposition)
+    for (name, h) in root.histograms() {
+        let family = format!("hbp_{name}");
+        prom_header(&mut out, &family, "histogram", "Cumulative request-stage histogram.");
+        prom_histogram(&mut out, &family, "", &h);
+    }
+
+    // per-shard decomposition under hbp_shard_* names
+    let per: Vec<_> = shards.iter().map(|m| (m.snapshot(), m.histograms())).collect();
+    let shard_counters: [(&str, fn(&super::MetricsSnapshot) -> u64, &str); 6] = [
+        ("hbp_shard_requests_total", |p| p.requests, "Per-shard answered requests."),
+        ("hbp_shard_errors_total", |p| p.errors, "Per-shard failed requests."),
+        ("hbp_shard_shed_total", |p| p.shed, "Per-shard shed requests."),
+        ("hbp_shard_deadline_drops_total", |p| p.deadline_drops, "Per-shard deadline drops."),
+        (
+            "hbp_shard_panics_recovered_total",
+            |p| p.panics_recovered,
+            "Per-shard recovered panics.",
+        ),
+        ("hbp_shard_batch_groups_total", |p| p.batch_groups, "Per-shard flushed groups."),
+    ];
+    for (name, pick, help) in shard_counters {
+        prom_header(&mut out, name, "counter", help);
+        for (i, (snap, _)) in per.iter().enumerate() {
+            let shard = escape_label(&i.to_string());
+            out.push_str(&format!("{name}{{shard=\"{shard}\"}} {}\n", pick(snap)));
+        }
+    }
+    let shard_gauges: [(&str, fn(&super::MetricsSnapshot) -> f64, &str); 2] = [
+        ("hbp_shard_queue_depth", |p| p.queue_depth as f64, "Per-shard batcher queue depth."),
+        (
+            "hbp_shard_inflight_pipeline",
+            |p| p.inflight_pipeline as f64,
+            "Per-shard pipelined requests in flight.",
+        ),
+    ];
+    for (name, pick, help) in shard_gauges {
+        prom_header(&mut out, name, "gauge", help);
+        for (i, (snap, _)) in per.iter().enumerate() {
+            out.push_str(&format!("{name}{{shard=\"{i}\"}} {}\n", prom_num(pick(snap))));
+        }
+    }
+    // per-shard stage histograms — every family emitted once with one
+    // series set per shard, shard-labeled
+    for (hist_idx, short) in
+        ["request_latency_seconds", "queue_wait_seconds", "execute_seconds", "reply_seconds"]
+            .iter()
+            .enumerate()
+    {
+        let family = format!("hbp_shard_{short}");
+        prom_header(&mut out, &family, "histogram", "Per-shard request-stage histogram.");
+        for (i, (_, hists)) in per.iter().enumerate() {
+            let labels = format!("shard=\"{i}\"");
+            prom_histogram(&mut out, &family, &labels, &hists[hist_idx].1);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+
+    fn span(seq: u64) -> Span {
+        Span {
+            seq,
+            shard: 0,
+            id: Some(format!("req-{seq}")),
+            matrix: "m".to_string(),
+            engine: "hbp".to_string(),
+            group_size: 1,
+            merged_auto: false,
+            spmm_width: 1,
+            queue_wait_secs: 1e-5,
+            execute_secs: 2e-5,
+            reply_secs: 3e-6,
+            total_secs: 3.3e-5,
+            ok: true,
+        }
+    }
+
+    #[test]
+    fn ring_wraps_and_keeps_the_newest() {
+        let ring = TraceRing::new(4);
+        assert!(ring.is_empty());
+        for i in 0..10 {
+            ring.push(span(i));
+        }
+        assert_eq!(ring.len(), 4);
+        let got = ring.recent(100);
+        let seqs: Vec<u64> = got.iter().map(|s| s.seq).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9], "oldest evicted, order preserved");
+        // a tighter limit returns the newest suffix
+        let seqs: Vec<u64> = ring.recent(2).iter().map(|s| s.seq).collect();
+        assert_eq!(seqs, vec![8, 9]);
+        assert_eq!(ring.dropped(), 0, "uncontended pushes never drop");
+    }
+
+    #[test]
+    fn ring_survives_concurrent_push_and_drain() {
+        let ring = Arc::new(TraceRing::new(64));
+        let pusher = {
+            let ring = ring.clone();
+            std::thread::spawn(move || {
+                for i in 0..5000 {
+                    ring.push(span(i));
+                }
+            })
+        };
+        let mut drained_any = false;
+        for _ in 0..200 {
+            let got = ring.recent(64);
+            drained_any |= !got.is_empty();
+            // drained spans are always internally ordered by seq
+            for w in got.windows(2) {
+                assert!(w[0].seq < w[1].seq);
+            }
+        }
+        pusher.join().unwrap();
+        assert!(drained_any);
+        // every push either landed or was counted as dropped
+        let final_len = ring.len() as u64;
+        assert!(final_len <= 64);
+        assert!(ring.dropped() + final_len <= 5000);
+        // with the pusher joined, this push is uncontended by
+        // construction and must land as the newest span
+        ring.push(span(5000));
+        assert_eq!(ring.recent(1)[0].seq, 5000);
+    }
+
+    #[test]
+    fn telemetry_sequences_and_publishes() {
+        let tele = Telemetry::new(3, 8, None);
+        assert_eq!(tele.shard(), 3);
+        let a = tele.next_seq();
+        let b = tele.next_seq();
+        assert!(b > a, "sequence numbers are strictly increasing");
+        tele.publish(span(a));
+        tele.publish(span(b));
+        let got = tele.recent(10);
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[1].seq, b);
+        assert_eq!(tele.dropped(), 0);
+    }
+
+    #[test]
+    fn shared_seq_interleaves_across_shards() {
+        let seq = Arc::new(AtomicU64::new(0));
+        let t0 = Telemetry::with_seq(0, 8, None, seq.clone());
+        let t1 = Telemetry::with_seq(1, 8, None, seq);
+        let mut seen = Vec::new();
+        for _ in 0..3 {
+            seen.push(t0.next_seq());
+            seen.push(t1.next_seq());
+        }
+        let mut sorted = seen.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), seen.len(), "shared counter never repeats across shards");
+    }
+
+    #[test]
+    fn span_json_has_the_wire_shape() {
+        let mut s = span(7);
+        s.id = None;
+        let j = s.to_json();
+        assert_eq!(j.get("seq").and_then(|v| v.as_usize()), Some(7));
+        assert_eq!(j.get("id"), Some(&Json::Null));
+        assert_eq!(j.get("engine").and_then(|v| v.as_str()), Some("hbp"));
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)));
+        // stages sum to the total (the invariant the stats histograms
+        // inherit)
+        let qw = j.get("queue_wait_secs").unwrap().as_f64().unwrap();
+        let ex = j.get("execute_secs").unwrap().as_f64().unwrap();
+        let rp = j.get("reply_secs").unwrap().as_f64().unwrap();
+        let total = j.get("total_secs").unwrap().as_f64().unwrap();
+        assert!((qw + ex + rp - total).abs() < 1e-12);
+        // round-trips through the parser
+        assert!(Json::parse(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn report_line_is_one_parseable_stats_event() {
+        let m = ServiceMetrics::new();
+        m.record_request(1e-5, 100);
+        let line = report_line(&m);
+        assert!(!line.contains('\n'));
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("event").and_then(|v| v.as_str()), Some("stats"));
+        assert_eq!(j.get("requests").and_then(|v| v.as_usize()), Some(1));
+    }
+
+    #[test]
+    fn prom_text_exposes_counters_and_cumulative_histograms() {
+        let root = Arc::new(ServiceMetrics::new());
+        let shard = Arc::new(ServiceMetrics::shard_of(root.clone()));
+        shard.record_request(1e-4, 1000);
+        shard.record_stages(2e-5, 7e-5, 1e-5);
+        shard.record_error();
+        shard.gauge_queue_depth(2);
+        let text = prom_text(&root, &[shard]);
+        assert!(text.contains("# TYPE hbp_requests_total counter"));
+        assert!(text.contains("\nhbp_requests_total 1\n"));
+        assert!(text.contains("\nhbp_errors_total 1\n"));
+        assert!(text.contains("hbp_shard_requests_total{shard=\"0\"} 1\n"));
+        assert!(text.contains("hbp_shard_queue_depth{shard=\"0\"} 2\n"));
+        // histogram series: buckets end at +Inf with the total count
+        assert!(text.contains("hbp_request_latency_seconds_bucket{le=\"+Inf\"} 1\n"));
+        assert!(text.contains("hbp_request_latency_seconds_count 1\n"));
+        assert!(text.contains("hbp_queue_wait_seconds_count 1\n"));
+        assert!(text.contains("hbp_shard_execute_seconds_bucket{shard=\"0\",le=\"+Inf\"} 1\n"));
+        // _sum carries the recorded mass
+        assert!(text.contains("hbp_execute_seconds_sum 0.00007"));
+        // every non-comment line is `name{labels} value`
+        for line in text.lines() {
+            if line.starts_with('#') {
+                continue;
+            }
+            let (name, value) = line.rsplit_once(' ').unwrap();
+            assert!(!name.is_empty());
+            assert!(
+                value == "+Inf" || value.parse::<f64>().is_ok(),
+                "unparseable sample value in {line:?}"
+            );
+        }
+        // buckets are monotone non-decreasing per series set
+        let bucket_counts: Vec<u64> = text
+            .lines()
+            .filter(|l| l.starts_with("hbp_request_latency_seconds_bucket"))
+            .map(|l| l.rsplit_once(' ').unwrap().1.parse().unwrap())
+            .collect();
+        assert!(bucket_counts.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(bucket_counts.last(), Some(&1));
+    }
+
+    #[test]
+    fn prom_label_escaping() {
+        assert_eq!(escape_label("plain"), "plain");
+        assert_eq!(escape_label("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(prom_num(f64::INFINITY), "+Inf");
+        assert_eq!(prom_num(0.25), "0.25");
+    }
+}

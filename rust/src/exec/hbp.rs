@@ -16,7 +16,9 @@ use super::engine::{check_spmm_dims, PhaseTimes, SpmvEngine, SPMM_TILE};
 use super::scheduler::{absorb_stats, mixed_schedule, MixedSchedule, WorkerStats};
 use crate::formats::Csr;
 use crate::partition::{block_map, BlockMap, PartitionConfig};
-use crate::preprocess::{build_hbp_updatable, Hbp, HbpBlock, MatrixDelta, Reorder, UpdateReport};
+use crate::preprocess::{
+    build_hbp_updatable_profiled, BuildProfile, Hbp, HbpBlock, MatrixDelta, Reorder, UpdateReport,
+};
 use crate::util::pool::WorkerPool;
 use crate::util::sync::SharedMut;
 use crate::util::Timer;
@@ -52,6 +54,9 @@ pub struct HbpEngine {
     /// Sparsity-aware combine (the paper's Discussion/future-work
     /// optimization): `None` disables it (dense streaming combine).
     combine_index: Option<CombineIndex>,
+    /// Phase breakdown of the construction that produced `hbp`, when the
+    /// build ran through a profiled entry point ([`HbpEngine::new_updatable`]).
+    build_profile: Option<BuildProfile>,
     /// Present only for engines built through
     /// [`HbpEngine::new_updatable`]; [`HbpEngine::update`] requires it.
     update_src: Option<UpdateSource>,
@@ -76,8 +81,15 @@ impl HbpEngine {
             partials: std::sync::Mutex::new(Vec::new()),
             pool: WorkerPool::new(threads),
             combine_index,
+            build_profile: None,
             update_src: None,
         }
+    }
+
+    /// Phase wall-times of the build that produced this engine's HBP;
+    /// `None` for engines handed a pre-built [`Hbp`].
+    pub fn build_profile(&self) -> Option<BuildProfile> {
+        self.build_profile
     }
 
     /// Build an engine that **retains its source** (CSR + plan map +
@@ -92,8 +104,9 @@ impl HbpEngine {
         threads: usize,
         competitive_frac: f64,
     ) -> Self {
-        let (hbp, map) = build_hbp_updatable(&m, cfg, reorder.as_ref(), threads);
+        let (hbp, map, profile) = build_hbp_updatable_profiled(&m, cfg, reorder.as_ref(), threads);
         let mut eng = HbpEngine::new(hbp, threads, competitive_frac);
+        eng.build_profile = Some(profile);
         eng.update_src = Some(UpdateSource { m, map, reorder });
         eng
     }

@@ -9,10 +9,14 @@
 //! - `tune`       — autotune: features, ranked candidates, trial winner
 //! - `sim`        — run the GPU cost model (Orin / RTX 4090)
 //! - `serve`      — start the TCP serving coordinator (`--batch-stats`
-//!   periodically prints the resolved-batching counters; `--max-queue`,
-//!   `--deadline-ms`, and `--max-conns` bound admission; the
-//!   `HBP_FAULTS` env var arms fault-injection probes for degradation
-//!   rehearsal)
+//!   periodically prints a structured stats line via the telemetry
+//!   reporter; `--max-queue`, `--deadline-ms`, and `--max-conns` bound
+//!   admission; `--trace-capacity` sizes the per-shard trace ring and
+//!   `--slow-ms` arms the slow-request log; the `HBP_FAULTS` env var
+//!   arms fault-injection probes for degradation rehearsal)
+//! - `stats`      — query a running server: `--format json` prints the
+//!   `stats` reply, `--format prom` prints the Prometheus text
+//!   exposition from the `metrics` op
 //!
 //! Matrices are named either by suite id (`m1`..`m14`, Table I) or by a
 //! path to a `.mtx` / `.bin` file. The tuning cache defaults to
@@ -20,7 +24,7 @@
 //! overrides it and `--no-cache` disables persistence.
 
 use anyhow::{bail, Context, Result};
-use hbp_spmv::coordinator::{BatcherConfig, Coordinator, Router};
+use hbp_spmv::coordinator::{BatcherConfig, Client, Coordinator, Router};
 use hbp_spmv::exec::{CsrParallel, HbpEngine, SpmvEngine, Spmv2dEngine};
 use hbp_spmv::formats::Csr;
 use hbp_spmv::gen::{matrix_by_id, suite, Scale};
@@ -32,13 +36,15 @@ use hbp_spmv::sim::{simulate_csr, simulate_hbp, simulate_spmv2d, DeviceConfig};
 use hbp_spmv::tune::Tuner;
 use hbp_spmv::util::bench::Table;
 use hbp_spmv::util::cli::Args;
+use hbp_spmv::util::json::{obj, Json};
 use hbp_spmv::util::timer::{fmt_duration, time};
 use hbp_spmv::util::Stats;
 
 fn main() {
     let argv: Vec<String> = std::env::args().collect();
     let cmd = argv.get(1).map(String::as_str).unwrap_or("help");
-    let args = Args::from_env(2, &["verify", "all", "parallel", "no-cache", "batch-stats"]);
+    let args =
+        Args::from_env(2, &["verify", "all", "parallel", "no-cache", "batch-stats", "profile"]);
     let result = match cmd {
         "gen" => cmd_gen(&args),
         "info" => cmd_info(&args),
@@ -48,6 +54,7 @@ fn main() {
         "tune" => cmd_tune(&args),
         "sim" => cmd_sim(&args),
         "serve" => cmd_serve(&args),
+        "stats" => cmd_stats(&args),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -71,7 +78,7 @@ USAGE: hbp <subcommand> [options]
 
 SUBCOMMANDS
   gen        --matrix m4 --scale ci|small|full [--out file.mtx|file.bin] [--all]
-  info       --matrix <id|path> [--scale ci] [--threads N]
+  info       --matrix <id|path> [--scale ci] [--threads N] [--profile]
   preprocess --matrix <id|path> [--scale ci] [--threads N]
   update     --matrix <id|path> [--scale ci] [--frac 0.01] [--iters 3] [--threads N]
   spmv       --matrix <id|path> [--engine auto|hbp|csr|2d|nnz-split] [--iters 10]
@@ -80,7 +87,9 @@ SUBCOMMANDS
              [--cache path] [--no-cache]
   sim        --matrix <id|path> [--device orin|rtx4090]
   serve      --addr 127.0.0.1:7700 --matrices m1,m3 [--scale ci] [--cache path] [--no-cache]
-             [--batch-stats] [--max-queue N] [--deadline-ms MS] [--max-conns N] [--shards N]"
+             [--batch-stats] [--max-queue N] [--deadline-ms MS] [--max-conns N] [--shards N]
+             [--trace-capacity N] [--slow-ms MS]
+  stats      --addr 127.0.0.1:7700 [--format json|prom]"
     );
 }
 
@@ -202,6 +211,30 @@ fn cmd_info(args: &Args) -> Result<()> {
         fmt_duration(par_secs),
         serial_secs / par_secs.max(1e-12)
     );
+    if args.flag("profile") {
+        // phase decomposition of the parallel build: where the
+        // preprocessing wall-time actually goes (plan vs hash-reorder
+        // vs block fill; the residue is thread fork/join overhead)
+        let (_, p) =
+            hbp_spmv::preprocess::build_hbp_profiled(&m, cfg, &HashReorder::default(), nthreads);
+        let pct = |x: f64| 100.0 * x / p.total_secs.max(1e-12);
+        println!(
+            "profile    plan    {:>10}  ({:.1}%)",
+            fmt_duration(p.plan_secs),
+            pct(p.plan_secs)
+        );
+        println!(
+            "           reorder {:>10}  ({:.1}%)",
+            fmt_duration(p.reorder_secs),
+            pct(p.reorder_secs)
+        );
+        println!(
+            "           fill    {:>10}  ({:.1}%)",
+            fmt_duration(p.fill_secs),
+            pct(p.fill_secs)
+        );
+        println!("           total   {:>10}", fmt_duration(p.total_secs));
+    }
     Ok(())
 }
 
@@ -483,7 +516,12 @@ fn cmd_tune(args: &Args) -> Result<()> {
         if outcome.cache_hit { "from tuning cache, no trial run" } else { "competitive trial" },
         fmt_duration(d.trial_secs)
     );
-    println!("tune cost   {}", fmt_duration(outcome.tune_secs));
+    println!(
+        "tune cost   {}  (features {}, trials {})",
+        fmt_duration(outcome.tune_secs),
+        fmt_duration(outcome.phases.features_secs),
+        fmt_duration(outcome.phases.trials_secs)
+    );
     Ok(())
 }
 
@@ -539,6 +577,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
             )),
             None => bdef.default_deadline,
         },
+        // telemetry knobs: per-shard trace-ring capacity and the
+        // slow-request threshold (unset = slow log disabled)
+        trace_capacity: args.usize_or("trace-capacity", bdef.trace_capacity),
+        slow_threshold: match args.get("slow-ms") {
+            Some(ms) => Some(std::time::Duration::from_millis(
+                ms.parse().context("--slow-ms expects milliseconds")?,
+            )),
+            None => bdef.slow_threshold,
+        },
         ..bdef
     };
     let sdef = hbp_spmv::coordinator::ServerConfig::default();
@@ -582,25 +629,43 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!("serving with {shards} shards (per-shard admission control)");
     }
     if args.flag("batch-stats") {
-        // periodic observability for the resolved-batching path: how
-        // many groups flushed, how many auto arrivals merged with
-        // explicit traffic, and the mean group size. Prints only when
-        // the group count moved, so an idle server stays quiet.
-        let metrics = coordinator.metrics.clone();
-        std::thread::spawn(move || {
-            let mut last_groups = 0u64;
-            loop {
-                std::thread::sleep(std::time::Duration::from_secs(10));
-                let s = metrics.snapshot();
-                if s.batch_groups != last_groups {
-                    last_groups = s.batch_groups;
-                    eprintln!(
-                        "batch stats: batch_groups={} batch_merged_auto={} mean_group_size={:.2}",
-                        s.batch_groups, s.batch_merged_auto, s.mean_group_size
-                    );
-                }
-            }
-        });
+        // periodic observability: the telemetry reporter emits one
+        // structured JSON stats line to stderr every 10s, and only when
+        // the request count moved, so an idle server stays quiet
+        hbp_spmv::coordinator::telemetry::spawn_reporter(
+            coordinator.metrics.clone(),
+            std::time::Duration::from_secs(10),
+        );
     }
     hbp_spmv::coordinator::serve(coordinator, &addr, scfg)
+}
+
+/// `hbp stats`: one-shot scrape of a running server. `--format json`
+/// prints the `stats` reply verbatim (machine-readable snapshot with
+/// the per-shard breakdown); `--format prom` prints the Prometheus
+/// text exposition carried by the `metrics` op, ready to pipe into a
+/// node-exporter textfile or `tools/check_prom.py`.
+fn cmd_stats(args: &Args) -> Result<()> {
+    let addr = args.get("addr").context("--addr <host:port> is required")?;
+    let mut client = Client::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+    match args.str_or("format", "json") {
+        "json" => {
+            let reply = client.call(&obj(&[("op", Json::Str("stats".into()))]))?;
+            println!("{reply}");
+        }
+        "prom" => {
+            let reply = client.call(&obj(&[("op", Json::Str("metrics".into()))]))?;
+            if reply.get("ok").map(|v| matches!(v, Json::Bool(true))) != Some(true) {
+                bail!("metrics op failed: {reply}");
+            }
+            let text = reply
+                .get("prom")
+                .and_then(Json::as_str)
+                .context("metrics reply carries no \"prom\" text")?;
+            // the exposition text ends with a newline already
+            print!("{text}");
+        }
+        other => bail!("unknown --format {other:?} (expected json or prom)"),
+    }
+    Ok(())
 }

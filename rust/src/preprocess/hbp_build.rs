@@ -229,6 +229,24 @@ pub(crate) fn alloc_from_plan(m: &Csr, plan: &HbpPlan) -> Hbp {
     }
 }
 
+/// Wall-time breakdown of one HBP construction — the served-path
+/// counterpart of the paper's Fig. 7 preprocessing measurements.
+///
+/// `reorder_secs` is the time inside [`Reorder::order_into`] summed over
+/// blocks; on the parallel fill it sums across workers, so it is
+/// CPU-seconds and can exceed the `fill_secs` wall time.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BuildProfile {
+    /// Phase-1 counting + prefix-sum wall time ([`plan_hbp`]).
+    pub plan_secs: f64,
+    /// CPU-seconds inside the reorder strategy (subset of the fill).
+    pub reorder_secs: f64,
+    /// Phase-2 fill wall time (includes the reorder calls).
+    pub fill_secs: f64,
+    /// End-to-end build wall time.
+    pub total_secs: f64,
+}
+
 /// Reusable per-worker scratch for `fill_block`: densified row ranges,
 /// the reorder permutation, per-row chain positions and the live-row
 /// list. Reused across blocks so steady-state fill allocates nothing.
@@ -239,6 +257,23 @@ pub struct FillScratch {
     order: Vec<u32>,
     prev_pos: Vec<usize>,
     live: Vec<u32>,
+    // When set, fill_block times each order_into call into
+    // reorder_secs. Off by default so the hot build path pays no
+    // clock reads.
+    profile: bool,
+    reorder_secs: f64,
+}
+
+impl FillScratch {
+    /// Scratch that accumulates reorder wall time (see [`BuildProfile`]).
+    pub(crate) fn profiled() -> Self {
+        FillScratch { profile: true, ..FillScratch::default() }
+    }
+
+    /// Accumulated seconds inside [`Reorder::order_into`].
+    pub(crate) fn reorder_secs(&self) -> f64 {
+        self.reorder_secs
+    }
 }
 
 /// Phase 2, one block: write the block's elements into its exact slices
@@ -267,7 +302,7 @@ pub(crate) fn fill_block(
     let warp = grid.cfg.warp;
     let nrows = b.nrows;
     let (col_start, _) = grid.col_range(b.bj as usize);
-    let FillScratch { row_nnz, row_start, order, prev_pos, live } = scratch;
+    let FillScratch { row_nnz, row_start, order, prev_pos, live, profile, reorder_secs } = scratch;
 
     // densify the block's sparse row segments (scratch, O(nrows))
     row_nnz.clear();
@@ -280,7 +315,13 @@ pub(crate) fn fill_block(
     }
 
     // output_hash: slot -> original local row
-    reorder.order_into(order, row_nnz, warp);
+    if *profile {
+        let t = crate::util::Timer::start();
+        reorder.order_into(order, row_nnz, warp);
+        *reorder_secs += t.elapsed_secs();
+    } else {
+        reorder.order_into(order, row_nnz, warp);
+    }
     debug_assert_eq!(order.len(), nrows);
     output_hash.copy_from_slice(order);
 
@@ -337,8 +378,18 @@ pub(crate) fn fill_block(
 /// Serial fill over a plan (also the parallel builder's 1-thread and
 /// empty-matrix path — one construction code path).
 pub(crate) fn fill_hbp_serial(m: &Csr, plan: &HbpPlan, reorder: &dyn Reorder) -> Hbp {
+    fill_hbp_serial_with(m, plan, reorder, &mut FillScratch::default())
+}
+
+/// Serial fill into a caller-supplied scratch — the profiled path reads
+/// the scratch's accumulated reorder time back out afterwards.
+pub(crate) fn fill_hbp_serial_with(
+    m: &Csr,
+    plan: &HbpPlan,
+    reorder: &dyn Reorder,
+    scratch: &mut FillScratch,
+) -> Hbp {
     let mut hbp = alloc_from_plan(m, plan);
-    let mut scratch = FillScratch::default();
     for (b, e) in plan.blocks.iter().zip(&plan.map.blocks) {
         fill_block(
             m,
@@ -346,7 +397,7 @@ pub(crate) fn fill_hbp_serial(m: &Csr, plan: &HbpPlan, reorder: &dyn Reorder) ->
             b,
             &plan.map.segs[e.seg_start..e.seg_end],
             reorder,
-            &mut scratch,
+            scratch,
             &mut hbp.col[b.nnz_start..b.nnz_start + b.nnz],
             &mut hbp.data[b.nnz_start..b.nnz_start + b.nnz],
             &mut hbp.add_sign[b.nnz_start..b.nnz_start + b.nnz],

@@ -26,7 +26,13 @@ pub mod parallel;
 pub mod group_ell;
 pub mod update;
 
-pub use hbp_build::{build_hbp, build_hbp_with, plan_hbp, Hbp, HbpBlock, HbpPlan};
-pub use parallel::{build_hbp_parallel, build_hbp_pooled, fill_hbp_parallel};
+pub use hbp_build::{build_hbp, build_hbp_with, plan_hbp, BuildProfile, Hbp, HbpBlock, HbpPlan};
+pub use parallel::{
+    build_hbp_parallel, build_hbp_pooled, build_hbp_profiled, fill_hbp_parallel,
+    fill_hbp_parallel_profiled,
+};
 pub use reorder::{DpReorder, HashReorder, IdentityReorder, Reorder, SortReorder};
-pub use update::{apply_to_csr, build_hbp_updatable, CsrChange, DeltaOp, MatrixDelta, UpdateReport};
+pub use update::{
+    apply_to_csr, build_hbp_updatable, build_hbp_updatable_profiled, CsrChange, DeltaOp,
+    MatrixDelta, UpdateReport,
+};

@@ -16,12 +16,14 @@
 //! nnz-balanced contiguous chunks, instead of spawning threads per call.
 
 use super::hbp_build::{alloc_from_plan, fill_block, fill_hbp_serial, plan_hbp, FillScratch};
-use super::hbp_build::{Hbp, HbpBlock, HbpPlan};
+use super::hbp_build::{fill_hbp_serial_with, BuildProfile, Hbp, HbpBlock, HbpPlan};
 use super::reorder::Reorder;
 use crate::formats::Csr;
 use crate::partition::PartitionConfig;
 use crate::util::pool::{shared_pool, WorkerPool};
 use crate::util::sync::SharedMut;
+use crate::util::Timer;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Hard cap on shared-pool size: generous headroom over the machine's
 /// parallelism, but a stop against absurd `--threads` values spawning
@@ -60,7 +62,45 @@ pub fn fill_hbp_parallel(
     if threads <= 1 || plan.blocks.len() <= 1 {
         return fill_hbp_serial(m, plan, reorder);
     }
-    fill_hbp_on(m, plan, reorder, &shared_pool(threads))
+    fill_hbp_on(m, plan, reorder, &shared_pool(threads), None)
+}
+
+/// [`fill_hbp_parallel`] that also reports seconds spent inside the
+/// reorder strategy (CPU-seconds: summed across workers). The returned
+/// HBP is bit-identical to the unprofiled build — profiling only adds
+/// clock reads around `order_into`.
+pub fn fill_hbp_parallel_profiled(
+    m: &Csr,
+    plan: &HbpPlan,
+    reorder: &(dyn Reorder + Sync),
+    threads: usize,
+) -> (Hbp, f64) {
+    let threads = threads.min(pool_thread_cap());
+    if threads <= 1 || plan.blocks.len() <= 1 {
+        let mut scratch = FillScratch::profiled();
+        let hbp = fill_hbp_serial_with(m, plan, reorder, &mut scratch);
+        return (hbp, scratch.reorder_secs());
+    }
+    let acc = AtomicU64::new(0);
+    let hbp = fill_hbp_on(m, plan, reorder, &shared_pool(threads), Some(&acc));
+    (hbp, acc.load(Ordering::Relaxed) as f64 / 1e9)
+}
+
+/// Parallel build reporting the full phase breakdown — the entry point
+/// behind `hbp info --profile` and the coordinator's register-time
+/// [`BuildProfile`] metrics.
+pub fn build_hbp_profiled(
+    m: &Csr,
+    cfg: PartitionConfig,
+    reorder: &(dyn Reorder + Sync),
+    threads: usize,
+) -> (Hbp, BuildProfile) {
+    let total = Timer::start();
+    let (plan, plan_secs) = crate::util::timer::time(|| plan_hbp(m, cfg));
+    let fill_t = Timer::start();
+    let (hbp, reorder_secs) = fill_hbp_parallel_profiled(m, &plan, reorder, threads);
+    let fill_secs = fill_t.elapsed_secs();
+    (hbp, BuildProfile { plan_secs, reorder_secs, fill_secs, total_secs: total.elapsed_secs() })
 }
 
 /// Parallel HBP build on a caller-owned pool (for engines and services
@@ -75,7 +115,7 @@ pub fn build_hbp_pooled(
     if plan.blocks.is_empty() {
         return fill_hbp_serial(m, &plan, reorder);
     }
-    fill_hbp_on(m, &plan, reorder, pool)
+    fill_hbp_on(m, &plan, reorder, pool, None)
 }
 
 /// Contiguous nnz-balanced chunking of the block list: at most `workers`
@@ -100,8 +140,17 @@ pub(crate) fn nnz_chunks(blocks: &[HbpBlock], workers: usize) -> Vec<(usize, usi
 }
 
 /// Phase-2 parallel fill: one generation on the pool, each worker filling
-/// its chunk's blocks directly into the final arrays.
-fn fill_hbp_on(m: &Csr, plan: &HbpPlan, reorder: &(dyn Reorder + Sync), pool: &WorkerPool) -> Hbp {
+/// its chunk's blocks directly into the final arrays. When `reorder_acc`
+/// is supplied, each worker's time inside the reorder strategy is added
+/// to it in integer nanoseconds (f64 atomics don't exist; ns fixed-point
+/// loses nothing at profile granularity).
+fn fill_hbp_on(
+    m: &Csr,
+    plan: &HbpPlan,
+    reorder: &(dyn Reorder + Sync),
+    pool: &WorkerPool,
+    reorder_acc: Option<&AtomicU64>,
+) -> Hbp {
     let mut hbp = alloc_from_plan(m, plan);
     let chunks = nnz_chunks(&plan.blocks, pool.workers.min(plan.blocks.len()).max(1));
     {
@@ -114,7 +163,11 @@ fn fill_hbp_on(m: &Csr, plan: &HbpPlan, reorder: &(dyn Reorder + Sync), pool: &W
         let chunks = &chunks;
         pool.run_generation(|w, _| {
             let Some(&(lo, hi)) = chunks.get(w) else { return };
-            let mut scratch = FillScratch::default();
+            let mut scratch = if reorder_acc.is_some() {
+                FillScratch::profiled()
+            } else {
+                FillScratch::default()
+            };
             for (b, e) in plan.blocks[lo..hi].iter().zip(&plan.map.blocks[lo..hi]) {
                 // SAFETY: the plan's prefix sums make per-block ranges
                 // disjoint, chunks partition the block list, and each
@@ -132,6 +185,9 @@ fn fill_hbp_on(m: &Csr, plan: &HbpPlan, reorder: &(dyn Reorder + Sync), pool: &W
                 };
                 let segs = &plan.map.segs[e.seg_start..e.seg_end];
                 fill_block(m, &plan.grid, b, segs, reorder, &mut scratch, c, d, a, z, o, p);
+            }
+            if let Some(acc) = reorder_acc {
+                acc.fetch_add((scratch.reorder_secs() * 1e9) as u64, Ordering::Relaxed);
             }
         });
     }
@@ -196,6 +252,29 @@ mod tests {
             assert_eq!(serial.col, par.col);
             assert_eq!(serial.data, par.data);
             assert_eq!(serial.begin_ptr, par.begin_ptr);
+        }
+    }
+
+    #[test]
+    fn profiled_build_is_bit_identical_and_phases_are_sane() {
+        let m = random::power_law_rows(300, 300, 2.0, 60, 17);
+        let cfg = PartitionConfig::test_small();
+        let r = HashReorder::default();
+        let plain = build_hbp_with(&m, cfg, &r);
+        for threads in [1usize, 4] {
+            let (hbp, p) = build_hbp_profiled(&m, cfg, &r, threads);
+            hbp.validate().unwrap();
+            assert_eq!(plain.col, hbp.col, "threads={threads}");
+            assert_eq!(plain.data, hbp.data);
+            assert_eq!(plain.output_hash, hbp.output_hash);
+            assert!(p.plan_secs >= 0.0 && p.reorder_secs >= 0.0);
+            assert!(p.fill_secs >= 0.0 && p.total_secs > 0.0);
+            // phase wall times nest inside the total (reorder is
+            // CPU-seconds, so it is only bounded on the serial path)
+            assert!(p.plan_secs + p.fill_secs <= p.total_secs + 1e-6);
+            if threads == 1 {
+                assert!(p.reorder_secs <= p.fill_secs + 1e-6);
+            }
         }
     }
 

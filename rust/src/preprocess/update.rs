@@ -44,8 +44,10 @@
 //! mutated matrix — asserted across strategies × thread counts by the
 //! property suite.
 
-use super::hbp_build::{fill_block, plan_hbp, FillScratch, Hbp, HbpBlock};
-use super::parallel::{build_hbp_parallel, fill_hbp_parallel, nnz_chunks, pool_thread_cap};
+use super::hbp_build::{fill_block, plan_hbp, BuildProfile, FillScratch, Hbp, HbpBlock};
+use super::parallel::{
+    build_hbp_parallel, fill_hbp_parallel, fill_hbp_parallel_profiled, nnz_chunks, pool_thread_cap,
+};
 use super::reorder::Reorder;
 use crate::formats::Csr;
 use crate::partition::BlockMap;
@@ -409,6 +411,24 @@ pub fn build_hbp_updatable(
     let plan = plan_hbp(m, cfg);
     let hbp = fill_hbp_parallel(m, &plan, reorder, threads);
     (hbp, plan.map)
+}
+
+/// [`build_hbp_updatable`] plus the construction's [`BuildProfile`] —
+/// what the serving coordinator records and reports at register time.
+pub fn build_hbp_updatable_profiled(
+    m: &Csr,
+    cfg: crate::partition::PartitionConfig,
+    reorder: &(dyn Reorder + Sync),
+    threads: usize,
+) -> (Hbp, BlockMap, BuildProfile) {
+    let total = crate::util::Timer::start();
+    let (plan, plan_secs) = crate::util::timer::time(|| plan_hbp(m, cfg));
+    let fill_t = crate::util::Timer::start();
+    let (hbp, reorder_secs) = fill_hbp_parallel_profiled(m, &plan, reorder, threads);
+    let fill_secs = fill_t.elapsed_secs();
+    let profile =
+        BuildProfile { plan_secs, reorder_secs, fill_secs, total_secs: total.elapsed_secs() };
+    (hbp, plan.map, profile)
 }
 
 #[cfg(test)]

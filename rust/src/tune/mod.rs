@@ -57,6 +57,18 @@ pub struct Decision {
     pub trial_secs: f64,
 }
 
+/// Wall-time decomposition of one [`Tuner::tune`] call. Selection
+/// overhead must be accountable against its amortized gains (the
+/// format-survey critique), so the tune cost is reported per phase,
+/// not as one opaque number.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TunePhases {
+    /// Feature extraction (the O(nnz) structural pass).
+    pub features_secs: f64,
+    /// Competitive trials (builds + timed runs); `0` on a cache hit.
+    pub trials_secs: f64,
+}
+
 /// Everything one [`Tuner::tune`] call learned.
 #[derive(Clone, Debug)]
 pub struct TuneOutcome {
@@ -73,6 +85,8 @@ pub struct TuneOutcome {
     pub report: Option<TuneReport>,
     /// Wall time of the whole tune call (hash + features + trials).
     pub tune_secs: f64,
+    /// Per-phase decomposition of `tune_secs`.
+    pub phases: TunePhases,
 }
 
 /// The autotuner: owns the trial budget and the (optionally persistent)
@@ -151,7 +165,8 @@ impl Tuner {
     pub fn tune(&self, m: &Csr) -> TuneOutcome {
         let t = Timer::start();
         let key = self.cache_key(m);
-        let features = MatrixFeatures::extract(m, self.base_cfg);
+        let (features, features_secs) =
+            crate::util::timer::time(|| MatrixFeatures::extract(m, self.base_cfg));
         if let Some(decision) = self.cache.lock().unwrap_or_else(|e| e.into_inner()).get(key) {
             return TuneOutcome {
                 key,
@@ -160,10 +175,12 @@ impl Tuner {
                 decision,
                 report: None,
                 tune_secs: t.elapsed_secs(),
+                phases: TunePhases { features_secs, trials_secs: 0.0 },
             };
         }
         let ranked = model::rank(&features, self.base_cfg);
-        let report = trial::run_trials(m, &ranked, &self.trial, self.threads);
+        let (report, trials_secs) =
+            crate::util::timer::time(|| trial::run_trials(m, &ranked, &self.trial, self.threads));
         let w = report.winner();
         let decision = Decision { kind: w.kind, cfg: w.cfg, trial_secs: w.median_secs };
         {
@@ -182,6 +199,7 @@ impl Tuner {
             decision,
             report: Some(report),
             tune_secs: t.elapsed_secs(),
+            phases: TunePhases { features_secs, trials_secs },
         }
     }
 }
@@ -213,9 +231,13 @@ mod tests {
         assert!(cold.report.is_some(), "cold tune must run trials");
         assert_ne!(cold.decision.kind, EngineKind::Auto);
 
+        assert!(cold.phases.trials_secs > 0.0, "cold tune must spend trial time");
+        assert!(cold.phases.features_secs + cold.phases.trials_secs <= cold.tune_secs + 1e-6);
+
         let warm = tuner.tune(&m.clone());
         assert!(warm.cache_hit);
         assert!(warm.report.is_none(), "cache hit must skip trials");
+        assert_eq!(warm.phases.trials_secs, 0.0, "cache hit must report zero trial time");
         assert_eq!(warm.key, cold.key);
         assert_eq!(warm.decision, cold.decision);
         assert_eq!(tuner.cached_decisions(), 1);

@@ -81,7 +81,13 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                // JSON has no NaN/Infinity literal — writing them
+                // verbatim produces unparseable output (a fresh server's
+                // stats reply used to do exactly that via empty-histogram
+                // quantiles). Non-finite serializes as null.
+                if !n.is_finite() {
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{n}");
@@ -147,6 +153,16 @@ pub fn obj(pairs: &[(&str, Json)]) -> Json {
 /// Build a numeric array from f64s.
 pub fn num_arr(xs: &[f64]) -> Json {
     Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
+}
+
+/// A number when finite, `null` otherwise — for values like histogram
+/// quantiles that are legitimately undefined on an empty histogram
+/// (`NaN`) or unbounded in the open top bucket (`+inf`). Using this at
+/// construction keeps the JSON *value* honest (`Json::Null`, not a
+/// `Num` that merely serializes as null), so parse round-trips and
+/// doc-example matching see the same shape clients do.
+pub fn num_or_null(x: f64) -> Json {
+    if x.is_finite() { Json::Num(x) } else { Json::Null }
 }
 
 struct Parser<'a> {
@@ -361,6 +377,22 @@ mod tests {
         assert!(Json::parse("nul").is_err());
         assert!(Json::parse("{} extra").is_err());
         assert!(Json::parse(r#"{"a" 1}"#).is_err());
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            assert_eq!(Json::Num(bad).to_string(), "null");
+        }
+        // and the round trip parses back as Null, not an error
+        let v = obj(&[("p99", Json::Num(f64::NAN)), ("n", Json::Num(0.0))]);
+        let back = Json::parse(&v.to_string()).unwrap();
+        assert_eq!(back.get("p99"), Some(&Json::Null));
+        assert_eq!(back.get("n"), Some(&Json::Num(0.0)));
+        // the constructor-side helper produces Null directly
+        assert_eq!(num_or_null(f64::NAN), Json::Null);
+        assert_eq!(num_or_null(f64::INFINITY), Json::Null);
+        assert_eq!(num_or_null(1.5), Json::Num(1.5));
     }
 
     #[test]

@@ -125,6 +125,7 @@ pub struct Histogram {
     bounds: Vec<f64>,
     counts: Vec<u64>,
     total: u64,
+    sum: f64,
 }
 
 impl Histogram {
@@ -132,17 +133,48 @@ impl Histogram {
     pub fn exponential(lo: f64, n: usize) -> Self {
         let bounds: Vec<f64> = (0..n).map(|i| lo * 2f64.powi(i as i32)).collect();
         let counts = vec![0; n + 1];
-        Histogram { bounds, counts, total: 0 }
+        Histogram { bounds, counts, total: 0, sum: 0.0 }
     }
 
     pub fn record(&mut self, x: f64) {
         let idx = self.bounds.iter().position(|&b| x < b).unwrap_or(self.bounds.len());
         self.counts[idx] += 1;
         self.total += 1;
+        self.sum += x;
     }
 
     pub fn total(&self) -> u64 {
         self.total
+    }
+
+    /// Sum of all recorded observations (Prometheus `_sum`).
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Bucket upper bounds, exclusive of the open top bucket.
+    pub fn bounds(&self) -> &[f64] {
+        &self.bounds
+    }
+
+    /// Per-bucket counts; one longer than `bounds()` — the last entry is
+    /// the open top bucket.
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// `(upper_bound, cumulative_count)` pairs in Prometheus exposition
+    /// shape: counts are cumulative (each bucket includes everything
+    /// below it) and the final entry is `(+inf, total)`.
+    pub fn cumulative(&self) -> Vec<(f64, u64)> {
+        let mut acc = 0u64;
+        let mut out = Vec::with_capacity(self.bounds.len() + 1);
+        for (i, &b) in self.bounds.iter().enumerate() {
+            acc += self.counts[i];
+            out.push((b, acc));
+        }
+        out.push((f64::INFINITY, self.total));
+        out
     }
 
     /// Approximate quantile from bucket boundaries (upper bound of the
@@ -225,5 +257,34 @@ mod tests {
         assert_eq!(h.total(), 1000);
         let p50 = h.quantile(0.5);
         assert!(p50 >= 32.0 && p50 <= 128.0, "p50={p50}");
+    }
+
+    #[test]
+    fn histogram_empty_quantile_is_nan() {
+        let h = Histogram::exponential(1e-6, 21);
+        assert!(h.quantile(0.5).is_nan());
+        assert!(h.quantile(0.99).is_nan());
+        assert_eq!(h.sum(), 0.0);
+    }
+
+    #[test]
+    fn histogram_cumulative_is_monotone_and_ends_at_total() {
+        let mut h = Histogram::exponential(1.0, 4); // bounds 1,2,4,8
+        for x in [0.5, 1.5, 3.0, 3.5, 100.0] {
+            h.record(x);
+        }
+        let cum = h.cumulative();
+        assert_eq!(cum.len(), h.bounds().len() + 1);
+        let mut prev = 0;
+        for &(b, c) in &cum {
+            assert!(c >= prev, "cumulative counts must be monotone at le={b}");
+            prev = c;
+        }
+        let (last_b, last_c) = cum[cum.len() - 1];
+        assert!(last_b.is_infinite());
+        assert_eq!(last_c, h.total());
+        assert!((h.sum() - 108.5).abs() < 1e-12);
+        // spot-check: two observations at or below 2.0 (0.5 and 1.5)
+        assert_eq!(cum[1], (2.0, 2));
     }
 }

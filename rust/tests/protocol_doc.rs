@@ -195,7 +195,7 @@ fn protocol_doc_examples_round_trip_through_a_live_server() {
             Some(parsed.get("op")?.as_str()?.to_string())
         })
         .collect();
-    for op in ["hello", "spmv", "list", "tune", "update", "stats"] {
+    for op in ["hello", "spmv", "list", "tune", "update", "stats", "trace", "metrics"] {
         assert!(
             ops_documented.iter().any(|o| o == op),
             "PROTOCOL.md has no executed example for op {op:?}"

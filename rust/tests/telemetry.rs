@@ -1,0 +1,258 @@
+//! Telemetry end to end over real TCP: span stage accounting, the
+//! `trace` op across shards, Prometheus exposition consistency, the
+//! zero-request `stats` reply, and the `--slow-ms` JSONL log through
+//! the spawned binary.
+
+use hbp_spmv::coordinator::server::{serve_background, serve_background_with, Client, Connection};
+use hbp_spmv::coordinator::{BatcherConfig, Coordinator, Router, ServerConfig};
+use hbp_spmv::partition::PartitionConfig;
+use hbp_spmv::util::json::{obj, Json};
+use std::sync::Arc;
+
+fn start_sharded(
+    shards: usize,
+) -> (Arc<Coordinator>, hbp_spmv::coordinator::ServerHandle, std::net::SocketAddr, usize) {
+    let mut router = Router::new(PartitionConfig::test_small(), 2);
+    let m = hbp_spmv::gen::random::power_law_rows(80, 60, 2.0, 20, 5);
+    let cols = m.cols;
+    router.register("test", m).unwrap();
+    let c = Arc::new(Coordinator::with_shards(router, BatcherConfig::default(), shards));
+    let handle = serve_background_with(c.clone(), ServerConfig::default()).unwrap();
+    let addr = handle.addr();
+    (c, handle, addr, cols)
+}
+
+#[test]
+fn zero_request_stats_reply_is_valid_json_with_null_quantiles() {
+    let mut router = Router::new(PartitionConfig::test_small(), 2);
+    router.register("test", hbp_spmv::gen::random::power_law_rows(40, 30, 2.0, 10, 5)).unwrap();
+    let c = Arc::new(Coordinator::new(router, BatcherConfig::default()));
+    let addr = serve_background(c).unwrap();
+
+    // raw socket: prove the exact bytes on the wire parse as JSON even
+    // when every histogram is empty (quantiles must be null, never NaN)
+    use std::io::{BufRead, BufReader, Write};
+    let stream = std::net::TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    writer.write_all(b"{\"op\":\"stats\"}\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let reply = Json::parse(line.trim())
+        .unwrap_or_else(|e| panic!("zero-request stats reply is not valid JSON: {e:#}\n{line}"));
+    assert_eq!(reply.get("ok"), Some(&Json::Bool(true)));
+    let stats = reply.get("stats").unwrap();
+    assert_eq!(stats.req_usize("requests").unwrap(), 0);
+    for q in ["p50_latency_secs", "p99_latency_secs", "p50_queue_wait_secs", "p99_reply_secs"] {
+        assert_eq!(stats.get(q), Some(&Json::Null), "{q} must be null with no samples");
+    }
+    assert_eq!(stats.req_usize("queue_depth").unwrap(), 0);
+    assert_eq!(stats.req_usize("inflight_pipeline").unwrap(), 0);
+}
+
+#[test]
+fn spans_account_for_end_to_end_latency_over_tcp() {
+    let (_c, _handle, addr, cols) = start_sharded(1);
+    let mut conn = Connection::connect(addr).unwrap();
+    let n = 20;
+    let xs: Vec<Vec<f64>> =
+        (0..n).map(|i| hbp_spmv::gen::random::vector(cols, 300 + i as u64)).collect();
+    let tickets: Vec<_> = xs.iter().map(|x| conn.spmv("test", x).submit().unwrap()).collect();
+    for t in &tickets {
+        conn.wait(t).unwrap();
+    }
+
+    let r = conn
+        .call(&obj(&[("op", Json::Str("trace".into())), ("limit", Json::Num(1024.0))]))
+        .unwrap();
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+    let spans = r.get("spans").unwrap().as_arr().unwrap();
+    assert_eq!(spans.len(), n, "every answered request must have published a span");
+    for s in spans {
+        assert_eq!(s.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(s.req_str("matrix").unwrap(), "test");
+        let stage = |k: &str| s.get(k).and_then(Json::as_f64).unwrap();
+        let (qw, ex, rp, total) = (
+            stage("queue_wait_secs"),
+            stage("execute_secs"),
+            stage("reply_secs"),
+            stage("total_secs"),
+        );
+        assert!(qw >= 0.0 && ex >= 0.0 && rp >= 0.0);
+        assert!(ex > 0.0, "an executed request spends time in the engine");
+        // the span invariant the stage histograms are built on: the
+        // three stages partition the end-to-end latency exactly
+        assert!(
+            (qw + ex + rp - total).abs() <= 1e-9 * total.max(1e-12),
+            "stages {qw}+{ex}+{rp} do not sum to total {total}"
+        );
+        // an id'd pipelined request echoes its envelope id in the span
+        assert!(s.get("id").map(|v| matches!(v, Json::Str(_))) == Some(true), "{s}");
+    }
+    // spans come back in global submission order
+    let seqs: Vec<f64> =
+        spans.iter().map(|s| s.get("seq").and_then(Json::as_f64).unwrap()).collect();
+    assert!(seqs.windows(2).all(|w| w[0] < w[1]), "seqs not strictly increasing: {seqs:?}");
+
+    // the same stages, aggregated: stats now decomposes the latency
+    let stats = conn.call(&obj(&[("op", Json::Str("stats".into()))])).unwrap();
+    let stats = stats.get("stats").unwrap();
+    for q in ["p50_queue_wait_secs", "p50_execute_secs", "p50_reply_secs", "p50_latency_secs"] {
+        let v = stats.get(q).and_then(Json::as_f64);
+        assert!(v.is_some_and(|v| v.is_finite() && v >= 0.0), "{q} must be a finite number");
+    }
+}
+
+#[test]
+fn trace_op_merges_spans_across_shards_over_tcp() {
+    let (_c, _handle, addr, cols) = start_sharded(2);
+    // sequential connects round-robin onto shards 0 and 1
+    let mut conns: Vec<Connection> = (0..2).map(|_| Connection::connect(addr).unwrap()).collect();
+    for (i, conn) in conns.iter_mut().enumerate() {
+        for k in 0..3 {
+            let x = hbp_spmv::gen::random::vector(cols, (i * 100 + k) as u64);
+            conn.spmv("test", &x).send().unwrap();
+        }
+    }
+    let r = conns[0].call(&obj(&[("op", Json::Str("trace".into()))])).unwrap();
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+    let spans = r.get("spans").unwrap().as_arr().unwrap();
+    assert_eq!(spans.len(), 6);
+    let shards: std::collections::BTreeSet<u64> = spans
+        .iter()
+        .map(|s| s.get("shard").and_then(Json::as_f64).unwrap() as u64)
+        .collect();
+    assert_eq!(shards.into_iter().collect::<Vec<_>>(), vec![0, 1], "both shards must trace");
+}
+
+#[test]
+fn metrics_op_prom_text_is_internally_consistent() {
+    let (_c, _handle, addr, cols) = start_sharded(1);
+    let mut client = Client::connect(addr).unwrap();
+    for i in 0..5 {
+        let x = hbp_spmv::gen::random::vector(cols, 500 + i);
+        client.spmv("test", &x).unwrap();
+    }
+    let r = client.call(&obj(&[("op", Json::Str("metrics".into()))])).unwrap();
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+    let text = r.req_str("prom").unwrap().to_string();
+
+    assert!(text.contains("hbp_requests_total 5"), "missing request counter:\n{text}");
+    assert!(text.contains("# TYPE hbp_request_latency_seconds histogram"), "{text}");
+    assert!(text.contains("hbp_shard_requests_total{shard=\"0\"} 5"), "{text}");
+
+    // every histogram family: buckets are cumulative (nondecreasing),
+    // the +Inf bucket equals _count, and _sum/_count are present
+    let value_of = |line: &str| -> f64 {
+        line.rsplit(' ').next().unwrap().parse().unwrap_or_else(|e| panic!("{line}: {e}"))
+    };
+    let lines: Vec<&str> = text.lines().collect();
+    let mut families_checked = 0;
+    for (i, l) in lines.iter().enumerate() {
+        let Some(rest) = l.strip_prefix("# TYPE ") else { continue };
+        let Some(name) = rest.strip_suffix(" histogram") else { continue };
+        families_checked += 1;
+        let mut prev = f64::NEG_INFINITY;
+        let mut inf_bucket = None;
+        let mut count = None;
+        let mut has_sum = false;
+        for l in &lines[i + 1..] {
+            if l.starts_with("# ") {
+                break; // next family
+            }
+            if l.starts_with(&format!("{name}_bucket")) {
+                let v = value_of(l);
+                assert!(v >= prev, "{name}: buckets not cumulative at {l}");
+                prev = v;
+                if l.contains("le=\"+Inf\"") {
+                    inf_bucket = Some(v);
+                }
+            } else if l.starts_with(&format!("{name}_sum")) {
+                has_sum = true;
+            } else if l.starts_with(&format!("{name}_count")) {
+                count = Some(value_of(l));
+            }
+        }
+        assert!(has_sum, "{name}: no _sum series");
+        assert_eq!(inf_bucket, count, "{name}: +Inf bucket must equal _count");
+    }
+    assert!(families_checked >= 8, "expected global + shard histograms, saw {families_checked}");
+}
+
+#[test]
+fn slow_ms_flag_emits_structured_jsonl_on_stderr() {
+    use std::io::{BufRead, BufReader, Write};
+    // --slow-ms 0 makes every request "slow"; the log line is the span
+    // JSON plus an event tag, one object per line on stderr
+    let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_hbp"))
+        .args([
+            "serve", "--addr", "127.0.0.1:0", "--no-cache", "--scale", "ci", "--matrices", "m1",
+            "--slow-ms", "0", "--trace-capacity", "64",
+        ])
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::piped())
+        .spawn()
+        .expect("spawning hbp serve");
+    let stderr = child.stderr.take().expect("child stderr is piped");
+    let mut lines = BufReader::new(stderr).lines();
+    let addr = loop {
+        match lines.next() {
+            Some(Ok(line)) => {
+                if let Some(addr) = line.strip_prefix("hbp-spmv serving on ") {
+                    break addr.trim().to_string();
+                }
+            }
+            other => {
+                let _ = child.kill();
+                panic!("server exited before announcing its address: {other:?}");
+            }
+        }
+    };
+
+    let check = (|| -> Result<(), String> {
+        let stream =
+            std::net::TcpStream::connect(&addr).map_err(|e| format!("connect {addr}: {e}"))?;
+        let mut reader = BufReader::new(stream.try_clone().map_err(|e| e.to_string())?);
+        let mut writer = stream;
+        // m1 at ci scale: ask `list` for the column count, then spmv
+        writer.write_all(b"{\"op\":\"list\"}\n").map_err(|e| e.to_string())?;
+        let mut line = String::new();
+        reader.read_line(&mut line).map_err(|e| e.to_string())?;
+        let list = Json::parse(line.trim()).map_err(|e| format!("bad list reply: {e:#}"))?;
+        let cols = list.get("matrices").and_then(Json::as_arr).and_then(|m| m.first())
+            .and_then(|m| m.get("cols"))
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("list reply has no cols: {line}"))? as usize;
+        let x: Vec<String> = (0..cols).map(|_| "1".to_string()).collect();
+        let req = format!("{{\"op\":\"spmv\",\"matrix\":\"m1\",\"x\":[{}]}}\n", x.join(","));
+        writer.write_all(req.as_bytes()).map_err(|e| e.to_string())?;
+        let mut line = String::new();
+        reader.read_line(&mut line).map_err(|e| e.to_string())?;
+        let reply = Json::parse(line.trim()).map_err(|e| format!("bad spmv reply: {e:#}"))?;
+        if reply.get("ok") != Some(&Json::Bool(true)) {
+            return Err(format!("spmv failed: {line}"));
+        }
+        // the slow log rides on the server's stderr
+        for line in lines.by_ref() {
+            let line = line.map_err(|e| e.to_string())?;
+            if !line.contains("\"event\":\"slow_request\"") {
+                continue;
+            }
+            let log = Json::parse(line.trim())
+                .map_err(|e| format!("slow-log line is not JSON: {e:#}\n{line}"))?;
+            for key in ["matrix", "engine", "queue_wait_secs", "execute_secs", "total_secs"] {
+                if log.get(key).is_none() {
+                    return Err(format!("slow-log line missing {key:?}: {line}"));
+                }
+            }
+            return Ok(());
+        }
+        Err("server stderr closed without a slow_request line".to_string())
+    })();
+
+    let _ = child.kill();
+    let _ = child.wait();
+    if let Err(msg) = check {
+        panic!("--slow-ms smoke test failed: {msg}");
+    }
+}

@@ -1,0 +1,278 @@
+#!/usr/bin/env python3
+"""Validate Prometheus text exposition produced by the `metrics` op.
+
+The serving coordinator renders its whole metrics surface — counters,
+gauges, and cumulative stage histograms, global and per shard — as
+Prometheus text exposition (``coordinator::telemetry::prom_text``,
+served by the ``metrics`` protocol op and ``hbp stats --format prom``).
+A scraper is a machine, so the format is a contract; this stdlib-only
+checker enforces the parts of it a drifting emitter is most likely to
+break:
+
+- every line is a ``# HELP``/``# TYPE`` comment or a sample
+  ``name[{labels}] value`` with legal metric/label names and quoting;
+- every sampled family is declared by exactly one ``# TYPE`` (and at
+  most one ``# HELP``) *before* its first sample, with a legal type;
+- no duplicate series (same name and label set);
+- histograms are complete and coherent per label set: ``_bucket``
+  series are cumulative (non-decreasing in ``le`` order), terminate in
+  ``le="+Inf"``, the ``+Inf`` bucket equals ``_count``, and ``_sum`` /
+  ``_count`` are present;
+- values parse as floats (``+Inf``/``-Inf``/``NaN`` included).
+
+Stdlib only — this must run on a bare CI python.
+
+Usage:
+  python3 tools/check_prom.py FILE         # validate a saved exposition
+  ... | python3 tools/check_prom.py        # validate stdin
+  python3 tools/check_prom.py --serve BIN  # start BIN serve, send one
+                                           # spmv, scrape the metrics
+                                           # op, validate the live text
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import socket
+import subprocess
+import sys
+
+METRIC_NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+LABEL_NAME_RE = re.compile(r"^[a-zA-Z_][a-zA-Z0-9_]*$")
+# one label: name="value" with \\, \" and \n as the only escapes
+LABEL_RE = re.compile(r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\[\\"n])*)"')
+TYPES = {"counter", "gauge", "histogram", "summary", "untyped"}
+HISTOGRAM_SUFFIXES = ("_bucket", "_sum", "_count")
+
+
+def parse_value(raw):
+    """A sample value: float syntax plus Prometheus' infinity spellings."""
+    if raw in ("+Inf", "Inf"):
+        return float("inf")
+    if raw == "-Inf":
+        return float("-inf")
+    if raw == "NaN":
+        return float("nan")
+    return float(raw)  # raises ValueError on garbage
+
+
+def family_of(name, types):
+    """Resolve a sample name to its declared family: histogram series
+    carry a suffix, every other family is sampled under its own name."""
+    if name in types:
+        return name
+    for suffix in HISTOGRAM_SUFFIXES:
+        base = name[: -len(suffix)] if name.endswith(suffix) else None
+        if base and types.get(base) == "histogram":
+            return base
+    return None
+
+
+def parse_labels(raw, lineno, errors):
+    """``key="value",...`` → sorted tuple of pairs (the series key)."""
+    out = []
+    pos = 0
+    while pos < len(raw):
+        m = LABEL_RE.match(raw, pos)
+        if not m:
+            errors.append(f"line {lineno}: bad label syntax at {raw[pos:]!r}")
+            return tuple(out)
+        if not LABEL_NAME_RE.match(m.group(1)):
+            errors.append(f"line {lineno}: bad label name {m.group(1)!r}")
+        out.append((m.group(1), m.group(2)))
+        pos = m.end()
+        if pos < len(raw):
+            if raw[pos] != ",":
+                errors.append(f"line {lineno}: expected ',' between labels: {raw!r}")
+                return tuple(out)
+            pos += 1
+    return tuple(sorted(out))
+
+
+def validate(text):
+    """Return a list of violation strings (empty = valid exposition)."""
+    errors = []
+    helps = {}   # family -> lineno of its HELP
+    types = {}   # family -> declared type
+    series = {}  # (name, labels) -> (lineno, value)
+    order = []   # sample order, for bucket monotonicity
+
+    for lineno, line in enumerate(text.splitlines(), start=1):
+        if not line:
+            continue
+        if line.startswith("#"):
+            parts = line.split(" ", 3)
+            if len(parts) < 3 or parts[0] != "#" or parts[1] not in ("HELP", "TYPE"):
+                errors.append(f"line {lineno}: malformed comment {line!r}")
+                continue
+            kind, name = parts[1], parts[2]
+            if not METRIC_NAME_RE.match(name):
+                errors.append(f"line {lineno}: bad metric name {name!r}")
+                continue
+            if kind == "HELP":
+                if name in helps:
+                    errors.append(f"line {lineno}: duplicate HELP for {name}")
+                helps[name] = lineno
+            else:
+                declared = parts[3] if len(parts) > 3 else ""
+                if declared not in TYPES:
+                    errors.append(f"line {lineno}: unknown type {declared!r} for {name}")
+                if name in types:
+                    errors.append(f"line {lineno}: duplicate TYPE for {name}")
+                types[name] = declared
+            continue
+
+        # a sample: name[{labels}] value
+        m = re.match(r"^([a-zA-Z_:][a-zA-Z0-9_:]*)(\{(.*)\})? (\S+)$", line)
+        if not m:
+            errors.append(f"line {lineno}: unparseable sample {line!r}")
+            continue
+        name, labels_raw, value_raw = m.group(1), m.group(3), m.group(4)
+        labels = parse_labels(labels_raw, lineno, errors) if labels_raw else ()
+        try:
+            value = parse_value(value_raw)
+        except ValueError:
+            errors.append(f"line {lineno}: bad sample value {value_raw!r}")
+            continue
+        fam = family_of(name, types)
+        if fam is None:
+            errors.append(f"line {lineno}: sample {name} has no preceding TYPE")
+            continue
+        key = (name, labels)
+        if key in series:
+            errors.append(
+                f"line {lineno}: duplicate series {name}{dict(labels)} "
+                f"(first at line {series[key][0]})"
+            )
+            continue
+        series[key] = (lineno, value)
+        order.append((name, labels, value))
+
+    errors.extend(check_histograms(types, series, order))
+    return errors
+
+
+def check_histograms(types, series, order):
+    """Per histogram family and label set: cumulative buckets ending in
+    an ``+Inf`` that equals ``_count``, with ``_sum`` present."""
+    errors = []
+    for fam, declared in types.items():
+        if declared != "histogram":
+            continue
+        # group buckets by their non-`le` labels, preserving text order
+        groups = {}
+        for name, labels, value in order:
+            if name != fam + "_bucket":
+                continue
+            le = dict(labels).get("le")
+            if le is None:
+                errors.append(f"{fam}: bucket series without an le label")
+                continue
+            rest = tuple(kv for kv in labels if kv[0] != "le")
+            groups.setdefault(rest, []).append((le, value))
+        if not groups:
+            errors.append(f"{fam}: declared histogram but no _bucket series")
+        for rest, buckets in groups.items():
+            where = f"{fam}{dict(rest)}"
+            try:
+                bounds = [parse_value(le) for le, _ in buckets]
+            except ValueError:
+                errors.append(f"{where}: unparseable le bound")
+                continue
+            if bounds != sorted(bounds):
+                errors.append(f"{where}: buckets not in increasing le order")
+            counts = [v for _, v in buckets]
+            if any(prev > nxt for prev, nxt in zip(counts, counts[1:])):
+                errors.append(f"{where}: bucket counts decrease (not cumulative)")
+            if buckets[-1][0] != "+Inf":
+                errors.append(f"{where}: bucket run must end with le=\"+Inf\"")
+                continue
+            count = series.get((fam + "_count", rest))
+            if count is None:
+                errors.append(f"{where}: no _count series")
+            elif count[1] != buckets[-1][1]:
+                errors.append(
+                    f"{where}: +Inf bucket {buckets[-1][1]} != _count {count[1]}"
+                )
+            if (fam + "_sum", rest) not in series:
+                errors.append(f"{where}: no _sum series")
+    return errors
+
+
+def scrape_live(binary):
+    """Start ``binary serve`` on an ephemeral port, push one request
+    through it, and return the `metrics` op's exposition text."""
+    proc = subprocess.Popen(
+        [binary, "serve", "--addr", "127.0.0.1:0", "--no-cache",
+         "--scale", "ci", "--matrices", "m1"],
+        stdout=subprocess.DEVNULL,
+        stderr=subprocess.PIPE,
+        text=True,
+    )
+    try:
+        addr = None
+        for line in proc.stderr:
+            if line.startswith("hbp-spmv serving on "):
+                addr = line.split()[-1]
+                break
+        if addr is None:
+            raise RuntimeError("server exited before announcing its address")
+        host, port = addr.rsplit(":", 1)
+        with socket.create_connection((host, int(port)), timeout=30) as sock:
+            f = sock.makefile("rw", encoding="utf-8", newline="\n")
+            # one real request so the histograms carry samples
+            f.write('{"op":"list"}\n')
+            f.flush()
+            cols = json.loads(f.readline())["matrices"][0]["cols"]
+            f.write(json.dumps({"op": "spmv", "matrix": "m1", "x": [1.0] * cols}))
+            f.write("\n")
+            f.flush()
+            if not json.loads(f.readline()).get("ok"):
+                raise RuntimeError("spmv against the live server failed")
+            f.write('{"op":"metrics"}\n')
+            f.flush()
+            reply = json.loads(f.readline())
+        if not reply.get("ok"):
+            raise RuntimeError(f"metrics op failed: {reply}")
+        return reply["prom"]
+    finally:
+        proc.kill()
+        proc.wait()
+
+
+def main(argv=None):
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument("file", nargs="?", help="exposition text (default: stdin)")
+    parser.add_argument(
+        "--serve",
+        metavar="BIN",
+        help="start BIN serve, scrape the metrics op, validate the live text",
+    )
+    args = parser.parse_args(argv)
+
+    if args.serve:
+        text = scrape_live(args.serve)
+        what = f"live metrics op of {args.serve}"
+    elif args.file:
+        with open(args.file, encoding="utf-8") as f:
+            text = f.read()
+        what = args.file
+    else:
+        text = sys.stdin.read()
+        what = "stdin"
+
+    errors = validate(text)
+    if errors:
+        for e in errors:
+            print(f"check_prom: {e}", file=sys.stderr)
+        print(f"check_prom: {len(errors)} violation(s) in {what}", file=sys.stderr)
+        return 1
+    n_series = sum(1 for l in text.splitlines() if l and not l.startswith("#"))
+    print(f"check_prom: OK ({what}: {n_series} series)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
