@@ -176,6 +176,8 @@ def _autotune_entry(mid, **fields):
         "trial_hbp_secs": None,
         "trial_csr_secs": None,
         "trial_2d_secs": None,
+        "trial_flat_secs": None,
+        "trial_line_secs": None,
         "tune_secs": None,
     }
     e.update(fields)
@@ -196,6 +198,29 @@ def test_timing_fields_are_discovered_dynamically():
         ),
     )
     assert sorted(ratios) == [0.5, 2.0]
+
+
+def test_csr_native_trial_fields_pass_through_the_gate(tmp_path, monkeypatch):
+    # the CSR-native engine timings added to the autotune schema are
+    # picked up by the dynamic *_secs discovery: they compare when
+    # present on both sides, and a large regression in one of them
+    # fails the gate with that field named as the worst offender
+    rows, ratios = bench_compare.compare(
+        _doc(
+            [_autotune_entry("m1", trial_flat_secs=1.0, trial_line_secs=2.0)],
+            bench="autotune",
+        ),
+        _doc(
+            [_autotune_entry("m1", trial_flat_secs=1.0, trial_line_secs=1.0)],
+            bench="autotune",
+        ),
+    )
+    assert sorted(ratios) == [0.5, 1.0]
+    baseline = _doc([_autotune_entry("m1", trial_flat_secs=1.0)], bench="autotune")
+    current = _doc([_autotune_entry("m1", trial_flat_secs=9.0)], bench="autotune")
+    assert _run(tmp_path, baseline, current, monkeypatch=monkeypatch) == 1
+    (_, _, _, worst_field, _) = bench_compare.compare(baseline, current)[0][0]
+    assert worst_field == "trial_flat_secs"
 
 
 def test_all_null_autotune_seed_passes(tmp_path, monkeypatch):

@@ -94,6 +94,8 @@ fn main() {
                 ("trial_hbp_secs", num_or_null(best(EngineKind::Hbp))),
                 ("trial_csr_secs", num_or_null(best(EngineKind::Csr))),
                 ("trial_2d_secs", num_or_null(best(EngineKind::Plain2d))),
+                ("trial_flat_secs", num_or_null(best(EngineKind::Flat))),
+                ("trial_line_secs", num_or_null(best(EngineKind::LineEnhance))),
                 ("tune_secs", Json::Num(outcome.tune_secs)),
             ]));
         }

@@ -31,7 +31,7 @@
 //! repair only the engines that were actually built; the retained
 //! source CSR keeps lazily-built engines consistent afterwards.
 
-use crate::exec::{CsrParallel, HbpEngine, SpmvEngine, Spmv2dEngine};
+use crate::exec::{CsrParallel, FlatEngine, HbpEngine, LineEnhanceEngine, SpmvEngine, Spmv2dEngine};
 use crate::formats::Csr;
 use crate::partition::PartitionConfig;
 use crate::preprocess::{apply_to_csr, HashReorder, MatrixDelta, UpdateReport};
@@ -50,6 +50,12 @@ pub enum EngineKind {
     Csr,
     /// The plain 2D-partitioned baseline (no hash reorder).
     Plain2d,
+    /// CSR-native pure nnz-splitting (load/accumulate/reduce phases,
+    /// zero conversion cost).
+    Flat,
+    /// CSR-native mixed row/nnz splitting (short-row bands + whole-row
+    /// long tails, zero conversion cost).
+    LineEnhance,
     /// Defer to the per-matrix tuned decision.
     Auto,
 }
@@ -62,8 +68,12 @@ impl std::str::FromStr for EngineKind {
             "hbp" => Ok(EngineKind::Hbp),
             "csr" => Ok(EngineKind::Csr),
             "2d" => Ok(EngineKind::Plain2d),
+            "flat" => Ok(EngineKind::Flat),
+            "line-enhance" => Ok(EngineKind::LineEnhance),
             "auto" => Ok(EngineKind::Auto),
-            other => bail!("unknown engine {other:?} (expected one of: hbp, csr, 2d, auto)"),
+            other => bail!(
+                "unknown engine {other:?} (expected one of: hbp, csr, 2d, flat, line-enhance, auto)"
+            ),
         }
     }
 }
@@ -76,6 +86,8 @@ impl std::fmt::Display for EngineKind {
             EngineKind::Hbp => "hbp",
             EngineKind::Csr => "csr",
             EngineKind::Plain2d => "2d",
+            EngineKind::Flat => "flat",
+            EngineKind::LineEnhance => "line-enhance",
             EngineKind::Auto => "auto",
         })
     }
@@ -116,6 +128,8 @@ pub struct PreparedMatrix {
     hbp: OnceLock<(PartitionConfig, HbpEngine)>,
     csr: OnceLock<CsrParallel>,
     plain2d: OnceLock<(PartitionConfig, Spmv2dEngine)>,
+    flat: OnceLock<FlatEngine>,
+    line_enhance: OnceLock<LineEnhanceEngine>,
 }
 
 impl PreparedMatrix {
@@ -166,7 +180,8 @@ impl PreparedMatrix {
                     self.plain2d = OnceLock::new();
                 }
             }
-            EngineKind::Csr => {} // CSR ignores the partition grid
+            // the CSR-native kinds ignore the partition grid
+            EngineKind::Csr | EngineKind::Flat | EngineKind::LineEnhance => {}
             EngineKind::Auto => unreachable!("decisions are concrete"),
         }
     }
@@ -208,6 +223,12 @@ impl PreparedMatrix {
                 });
                 engine
             }
+            EngineKind::Flat => {
+                self.flat.get_or_init(|| FlatEngine::new(self.m.clone(), self.threads))
+            }
+            EngineKind::LineEnhance => self
+                .line_enhance
+                .get_or_init(|| LineEnhanceEngine::new(self.m.clone(), self.threads)),
             EngineKind::Auto => unreachable!("resolve() never returns Auto"),
         }
     }
@@ -220,6 +241,8 @@ impl PreparedMatrix {
             EngineKind::Hbp => self.hbp.get().is_some(),
             EngineKind::Csr => self.csr.get().is_some(),
             EngineKind::Plain2d => self.plain2d.get().is_some(),
+            EngineKind::Flat => self.flat.get().is_some(),
+            EngineKind::LineEnhance => self.line_enhance.get().is_some(),
             EngineKind::Auto => unreachable!("resolve() never returns Auto"),
         }
     }
@@ -234,10 +257,16 @@ impl PreparedMatrix {
 
     /// Engines currently resident.
     pub fn built_kinds(&self) -> Vec<EngineKind> {
-        [EngineKind::Hbp, EngineKind::Csr, EngineKind::Plain2d]
-            .into_iter()
-            .filter(|&k| self.is_built(k))
-            .collect()
+        [
+            EngineKind::Hbp,
+            EngineKind::Csr,
+            EngineKind::Plain2d,
+            EngineKind::Flat,
+            EngineKind::LineEnhance,
+        ]
+        .into_iter()
+        .filter(|&k| self.is_built(k))
+        .collect()
     }
 
     /// Apply a delta. The retained source validates and applies first —
@@ -263,6 +292,12 @@ impl PreparedMatrix {
         };
         if let Some(csr) = self.csr.get_mut() {
             csr.update(delta).expect("csr engine diverged from source");
+        }
+        if let Some(flat) = self.flat.get_mut() {
+            flat.update(delta).expect("flat engine diverged from source");
+        }
+        if let Some(line) = self.line_enhance.get_mut() {
+            line.update(delta).expect("line-enhance engine diverged from source");
         }
         if let Some((_, plain2d)) = self.plain2d.get_mut() {
             report = plain2d.update(delta).expect("2d engine diverged from source");
@@ -330,6 +365,8 @@ impl Router {
             hbp: OnceLock::new(),
             csr: OnceLock::new(),
             plain2d: OnceLock::new(),
+            flat: OnceLock::new(),
+            line_enhance: OnceLock::new(),
         };
         let (_, preprocess_secs) = crate::util::timer::time(|| {
             prepared.engine(EngineKind::Auto);
@@ -479,7 +516,14 @@ mod tests {
         let x = random::vector(80, 1);
         let mut expect = vec![0.0; 100];
         m.spmv(&x, &mut expect);
-        for kind in [EngineKind::Hbp, EngineKind::Csr, EngineKind::Plain2d, EngineKind::Auto] {
+        for kind in [
+            EngineKind::Hbp,
+            EngineKind::Csr,
+            EngineKind::Plain2d,
+            EngineKind::Flat,
+            EngineKind::LineEnhance,
+            EngineKind::Auto,
+        ] {
             let y = r.spmv("t", kind, &x).unwrap();
             assert!(allclose(&y, &expect, 1e-10, 1e-12), "{kind:?}");
         }
@@ -534,13 +578,20 @@ mod tests {
 
     #[test]
     fn engine_kind_round_trips_through_display_and_fromstr() {
-        for kind in [EngineKind::Hbp, EngineKind::Csr, EngineKind::Plain2d, EngineKind::Auto] {
+        for kind in [
+            EngineKind::Hbp,
+            EngineKind::Csr,
+            EngineKind::Plain2d,
+            EngineKind::Flat,
+            EngineKind::LineEnhance,
+            EngineKind::Auto,
+        ] {
             let s = kind.to_string();
             assert_eq!(s.parse::<EngineKind>().unwrap(), kind, "{s}");
         }
         let err = "warp".parse::<EngineKind>().unwrap_err();
         let msg = format!("{err:#}");
-        for name in ["hbp", "csr", "2d", "auto"] {
+        for name in ["hbp", "csr", "2d", "flat", "line-enhance", "auto"] {
             assert!(msg.contains(name), "error must list {name}: {msg}");
         }
     }
@@ -653,7 +704,13 @@ mod tests {
         let x = random::vector(70, 5);
         let mut expect = vec![0.0; 90];
         mutated.spmv(&x, &mut expect);
-        for kind in [EngineKind::Hbp, EngineKind::Csr, EngineKind::Plain2d] {
+        for kind in [
+            EngineKind::Hbp,
+            EngineKind::Csr,
+            EngineKind::Plain2d,
+            EngineKind::Flat,
+            EngineKind::LineEnhance,
+        ] {
             let y = r.spmv("t", kind, &x).unwrap();
             assert!(allclose(&y, &expect, 1e-10, 1e-12), "{kind:?} after update");
         }

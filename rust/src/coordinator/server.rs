@@ -94,8 +94,15 @@ pub const PROTO_VERSION: u64 = 1;
 /// Feature tags the `hello` op advertises, for client feature-detection.
 /// `"pipelining"` stays first — the executed protocol-doc examples
 /// check the array's first element.
-pub const PROTO_FEATURES: [&str; 6] =
-    ["pipelining", "deadline_ms", "spmm_fuse", "auto_engine", "incremental_update", "telemetry"];
+pub const PROTO_FEATURES: [&str; 7] = [
+    "pipelining",
+    "deadline_ms",
+    "spmm_fuse",
+    "auto_engine",
+    "incremental_update",
+    "telemetry",
+    "csr_native_engines",
+];
 
 /// The in-process coordinator: shared router + N sharded batchers +
 /// rolled-up metrics.
@@ -1466,7 +1473,10 @@ mod tests {
         assert_eq!(resp.get("cache_hit"), Some(&Json::Bool(false)));
         let decision = resp.get("decision").expect("decision object");
         let engine = decision.req_str("engine").unwrap();
-        assert!(["hbp", "csr", "2d"].contains(&engine), "decision is concrete: {engine}");
+        assert!(
+            ["hbp", "csr", "2d", "flat", "line-enhance"].contains(&engine),
+            "decision is concrete: {engine}"
+        );
         assert!(resp.get("features").unwrap().get("row_cv").is_some());
         assert!(
             resp.get("trials").unwrap().get("winner").is_some(),
@@ -1548,6 +1558,7 @@ mod tests {
         );
         assert!(features.iter().any(|f| f.as_str() == Some("deadline_ms")));
         assert!(features.iter().any(|f| f.as_str() == Some("auto_engine")));
+        assert!(features.iter().any(|f| f.as_str() == Some("csr_native_engines")));
         assert_eq!(r.get("shards").and_then(Json::as_f64), Some(3.0));
     }
 

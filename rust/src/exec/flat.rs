@@ -1,0 +1,361 @@
+//! Flat SpMV — pure nonzero-splitting with designed load / accumulate /
+//! reduce phases (spmv-acc's `flat` algorithm on the CPU substrate).
+//!
+//! Where [`super::nnz_split`] folds everything into one fused chunk
+//! walk with boundary partial sums, `flat` keeps the GPU algorithm's
+//! three distinct phases:
+//!
+//! 1. **load** — worker `w` streams its contiguous nonzero chunk
+//!    `[w*nnz/W, (w+1)*nnz/W)` exactly once, staging every product
+//!    `data[j] * x[col[j]]` into a shared products buffer (the CPU
+//!    analog of the kernel's LDS staging: one coalesced pass over
+//!    `data`/`col`, no row logic on the load path).
+//! 2. **accumulate** — the same worker sums the staged products of each
+//!    row lying entirely inside its chunk and writes the row directly
+//!    (disjoint across workers by construction).
+//! 3. **reduce** — rows cut by a chunk boundary are summed serially
+//!    from the staged products, left to right (≤ `threads - 1` rows, at
+//!    most one per interior split).
+//!
+//! Because every row — owned or cut — is reduced left-to-right with a
+//! single accumulator over the same staged products, the output is
+//! **bitwise identical to the serial CSR oracle**, the repo-wide
+//! parallel = serial invariant (asserted exactly by the conformance and
+//! property suites). The chunk geometry (`splits`, `first_row`, the
+//! cut-row list) is a pure function of the row pointer, which no
+//! [`crate::preprocess::MatrixDelta`] kind can move, so incremental
+//! updates repair values in place for every delta kind — the
+//! zero-conversion-cost property that makes the CSR-native engines
+//! attractive exactly where reordering's preprocessing cost is not
+//! worth paying.
+
+use super::engine::{check_spmm_dims, PhaseTimes, SpmvEngine, SPMM_TILE};
+use super::nnz_split::{first_rows, nnz_splits};
+use crate::formats::Csr;
+use crate::util::pool::WorkerPool;
+use crate::util::sync::SharedMut;
+use crate::util::Timer;
+use std::sync::Mutex;
+
+/// Flat SpMV engine: equal-nnz chunks, staged products, serial cut-row
+/// reduce.
+pub struct FlatEngine {
+    pub m: Csr,
+    pub threads: usize,
+    /// Per-worker nonzero chunk starts (`threads + 1` entries).
+    splits: Vec<usize>,
+    /// First row of each chunk (precomputed binary search).
+    first_row: Vec<usize>,
+    /// Rows cut by an interior chunk boundary, ascending and distinct —
+    /// the reduce phase's whole work list.
+    cut_rows: Vec<usize>,
+    pool: WorkerPool,
+    /// Staged per-nonzero products (load-phase output, reused across
+    /// calls; accumulate and reduce both read it).
+    products: Mutex<Vec<f64>>,
+}
+
+impl FlatEngine {
+    pub fn new(m: Csr, threads: usize) -> Self {
+        let threads = threads.max(1);
+        let splits = nnz_splits(m.nnz(), threads);
+        let first_row = first_rows(&m, &splits);
+        // a row is cut iff an interior split lands strictly inside its
+        // extent; a split on a row boundary cuts nothing
+        let mut cut_rows: Vec<usize> = splits[1..threads]
+            .iter()
+            .filter_map(|&k| match m.ptr.binary_search(&k) {
+                Ok(_) => None,
+                Err(r) => Some(r - 1),
+            })
+            .collect();
+        cut_rows.dedup();
+        let nnz = m.nnz();
+        FlatEngine {
+            m,
+            threads,
+            splits,
+            first_row,
+            cut_rows,
+            pool: WorkerPool::new(threads),
+            products: Mutex::new(vec![0.0; nnz]),
+        }
+    }
+
+    /// How many rows the reduce phase owns (cut by a chunk boundary) —
+    /// observability for tests and ablations.
+    pub fn cut_row_count(&self) -> usize {
+        self.cut_rows.len()
+    }
+}
+
+impl SpmvEngine for FlatEngine {
+    fn name(&self) -> &str {
+        "flat"
+    }
+    fn rows(&self) -> usize {
+        self.m.rows
+    }
+    fn cols(&self) -> usize {
+        self.m.cols
+    }
+    fn nnz(&self) -> usize {
+        self.m.nnz()
+    }
+
+    fn spmv_phases(&self, x: &[f64], y: &mut [f64]) -> PhaseTimes {
+        assert_eq!(x.len(), self.m.cols);
+        assert_eq!(y.len(), self.m.rows);
+        let t = Timer::start();
+        y.fill(0.0);
+        let mut products = self.products.lock().unwrap();
+        {
+            let shared_y = SharedMut::new(y);
+            let shared_p = SharedMut::new(&mut products[..]);
+            let m = &self.m;
+            self.pool.run_generation(|w, _| {
+                let (lo, hi) = (self.splits[w], self.splits[w + 1]);
+                if lo >= hi {
+                    return;
+                }
+                // load: stage this chunk's products in one pass
+                // SAFETY: chunk ranges are disjoint across workers.
+                let p = unsafe { shared_p.slice_mut(lo, hi - lo) };
+                for (s, j) in p.iter_mut().zip(lo..hi) {
+                    *s = m.data[j] * x[m.col[j] as usize];
+                }
+                // accumulate: rows entirely inside the chunk
+                let mut r = self.first_row[w];
+                let mut k = lo;
+                while k < hi {
+                    // advance past empty rows
+                    while m.ptr[r + 1] <= k {
+                        r += 1;
+                    }
+                    let row_end = m.ptr[r + 1].min(hi);
+                    if m.ptr[r] >= lo && m.ptr[r + 1] <= hi {
+                        let mut sum = 0.0;
+                        for &v in &p[(k - lo)..(row_end - lo)] {
+                            sum += v;
+                        }
+                        // SAFETY: only this worker owns rows entirely
+                        // inside its chunk.
+                        unsafe { shared_y.write(r, sum) };
+                    }
+                    k = row_end;
+                    r += 1;
+                }
+            });
+        }
+        let spmv_secs = t.elapsed_secs();
+        // reduce: each cut row sums its staged products serially, left
+        // to right with one accumulator — the serial oracle's exact
+        // association, so parallel output is bitwise serial
+        let t = Timer::start();
+        for &r in &self.cut_rows {
+            let mut sum = 0.0;
+            for &v in &products[self.m.ptr[r]..self.m.ptr[r + 1]] {
+                sum += v;
+            }
+            y[r] = sum;
+        }
+        PhaseTimes { spmv: spmv_secs, combine: t.elapsed_secs() }
+    }
+
+    /// Fused SpMM: per tile of at most [`SPMM_TILE`] vectors the
+    /// load/accumulate pair runs fused (staging a products tile would
+    /// cost `nnz × tile` scratch for no reuse), keeping the per-vector
+    /// accumulation order identical to `spmv`; the reduce phase then
+    /// recomputes each cut row serially per vector — so fused output
+    /// stays bitwise equal to the looped path.
+    fn spmm(&self, xs: &[Vec<f64>], ys: &mut [Vec<f64>]) {
+        check_spmm_dims("flat", self.m.rows, self.m.cols, xs, ys);
+        if xs.len() < 2 {
+            for (x, y) in xs.iter().zip(ys.iter_mut()) {
+                self.spmv(x, y);
+            }
+            return;
+        }
+        for y in ys.iter_mut() {
+            y.fill(0.0);
+        }
+        let mut t_lo = 0;
+        while t_lo < xs.len() {
+            let t_hi = (t_lo + SPMM_TILE).min(xs.len());
+            let tile = t_hi - t_lo;
+            let x_tile = &xs[t_lo..t_hi];
+            {
+                let y_ptrs: Vec<SharedMut<'_, f64>> = ys[t_lo..t_hi]
+                    .iter_mut()
+                    .map(|y| SharedMut::new(&mut y[..]))
+                    .collect();
+                let m = &self.m;
+                self.pool.run_generation(|w, _| {
+                    let (lo, hi) = (self.splits[w], self.splits[w + 1]);
+                    if lo >= hi {
+                        return;
+                    }
+                    let mut r = self.first_row[w];
+                    let mut k = lo;
+                    while k < hi {
+                        while m.ptr[r + 1] <= k {
+                            r += 1;
+                        }
+                        let row_end = m.ptr[r + 1].min(hi);
+                        if m.ptr[r] >= lo && m.ptr[r + 1] <= hi {
+                            let mut sums = [0.0f64; SPMM_TILE];
+                            for j in k..row_end {
+                                let a = m.data[j];
+                                let c = m.col[j] as usize;
+                                for (s, x) in sums[..tile].iter_mut().zip(x_tile) {
+                                    *s += a * x[c];
+                                }
+                            }
+                            // SAFETY: only this worker owns rows
+                            // entirely inside its chunk; the y_ptrs
+                            // point at distinct output vectors.
+                            for (v, yp) in y_ptrs.iter().enumerate() {
+                                unsafe { yp.write(r, sums[v]) };
+                            }
+                        }
+                        k = row_end;
+                        r += 1;
+                    }
+                });
+            }
+            // reduce: cut rows serially, once per tile
+            for &r in &self.cut_rows {
+                for (v, x) in x_tile.iter().enumerate() {
+                    let mut sum = 0.0;
+                    for j in self.m.ptr[r]..self.m.ptr[r + 1] {
+                        sum += self.m.data[j] * x[self.m.col[j] as usize];
+                    }
+                    ys[t_lo + v][r] = sum;
+                }
+            }
+            t_lo = t_hi;
+        }
+    }
+
+    /// In-place delta repair: the chunk geometry is a row-pointer
+    /// function and deltas rewrite `col`/`data` within fixed extents,
+    /// so applying the delta to the resident CSR is the whole repair —
+    /// value-only and pattern-changing deltas alike, never a rebuild.
+    fn update(
+        &mut self,
+        delta: &crate::preprocess::MatrixDelta,
+    ) -> anyhow::Result<crate::preprocess::UpdateReport> {
+        let change = crate::preprocess::apply_to_csr(&mut self.m, delta)?;
+        Ok(crate::preprocess::UpdateReport {
+            rows_touched: change.touched_rows.len(),
+            blocks_touched: 0,
+            blocks_total: 0,
+            full_rebuild: false,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::random;
+
+    /// Bitwise (not approximate) agreement with the serial CSR oracle.
+    fn check_bitwise(m: &Csr, threads: usize, seed: u64) {
+        let x = random::vector(m.cols, seed);
+        let mut expect = vec![0.0; m.rows];
+        m.spmv(&x, &mut expect);
+        let eng = FlatEngine::new(m.clone(), threads);
+        let mut y = vec![0.0; m.rows];
+        eng.spmv(&x, &mut y);
+        assert_eq!(y, expect, "flat must be bitwise serial (threads={threads})");
+    }
+
+    #[test]
+    fn bitwise_matches_serial_csr_on_random() {
+        for seed in 0..4 {
+            let m = random::power_law_rows(300, 250, 2.0, 60, seed);
+            for threads in [1, 4, 13] {
+                check_bitwise(&m, threads, seed);
+            }
+        }
+    }
+
+    #[test]
+    fn monster_row_is_cut_and_reduced_exactly() {
+        let mut lens = vec![1usize; 64];
+        lens[20] = 5000;
+        let m = random::with_row_lengths(&lens, 600, 3);
+        let eng = FlatEngine::new(m.clone(), 8);
+        assert!(eng.cut_row_count() >= 1, "the monster row must be cut");
+        check_bitwise(&m, 8, 7);
+    }
+
+    #[test]
+    fn empty_rows_at_chunk_boundaries() {
+        let lens = vec![0, 0, 10, 0, 0, 7, 0, 3, 0, 0, 0, 25, 0, 1, 0, 0];
+        let m = random::with_row_lengths(&lens, 40, 9);
+        for threads in [1, 3, 5, 16] {
+            check_bitwise(&m, threads, 11);
+        }
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let m = Csr::empty(10, 10);
+        let eng = FlatEngine::new(m, 4);
+        let mut y = vec![9.0; 10];
+        eng.spmv(&vec![1.0; 10], &mut y);
+        assert_eq!(y, vec![0.0; 10]);
+        assert_eq!(eng.cut_row_count(), 0);
+    }
+
+    #[test]
+    fn phase_times_split_reduce_from_parallel_work() {
+        let m = random::power_law_rows(200, 150, 2.0, 40, 5);
+        let eng = FlatEngine::new(m.clone(), 4);
+        let x = random::vector(150, 1);
+        let mut y = vec![0.0; 200];
+        let phases = eng.spmv_phases(&x, &mut y);
+        assert!(phases.spmv > 0.0);
+        assert!(phases.combine >= 0.0);
+    }
+
+    #[test]
+    fn fused_spmm_is_bitwise_the_looped_path() {
+        let mut lens = vec![2usize; 80];
+        lens[30] = 2000;
+        let m = random::with_row_lengths(&lens, 300, 5);
+        for threads in [1, 4, 9] {
+            let eng = FlatEngine::new(m.clone(), threads);
+            let k = SPMM_TILE + 2;
+            let xs: Vec<Vec<f64>> = (0..k).map(|i| random::vector(300, i as u64)).collect();
+            let mut ys: Vec<Vec<f64>> = vec![vec![0.0; 80]; k];
+            eng.spmm(&xs, &mut ys);
+            for (x, y) in xs.iter().zip(&ys) {
+                let mut looped = vec![0.0; 80];
+                eng.spmv(x, &mut looped);
+                assert_eq!(*y, looped, "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn update_repairs_values_and_pattern_in_place() {
+        use crate::preprocess::MatrixDelta;
+        let m = random::power_law_rows(90, 70, 2.0, 18, 21);
+        let mut eng = FlatEngine::new(m.clone(), 6);
+        let row = (0..90).find(|&r| m.row_nnz(r) >= 2).unwrap();
+        let delta = MatrixDelta::new().scale_row(row, 3.5);
+        let report = eng.update(&delta).unwrap();
+        assert!(!report.full_rebuild);
+        let mut mutated = m.clone();
+        crate::preprocess::apply_to_csr(&mut mutated, &delta).unwrap();
+        let x = random::vector(70, 4);
+        let mut y = vec![0.0; 90];
+        eng.spmv(&x, &mut y);
+        let mut expect = vec![0.0; 90];
+        mutated.spmv(&x, &mut expect);
+        assert_eq!(y, expect, "post-update flat must stay bitwise serial");
+    }
+}

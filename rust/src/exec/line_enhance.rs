@@ -1,0 +1,321 @@
+//! Line-enhance SpMV — row-splitting for short-row bands, dedicated
+//! ownership for long-row tails (spmv-acc's `line-enhance` algorithm on
+//! the CPU substrate).
+//!
+//! The GPU original assigns one *line* (row) per lane inside short-row
+//! regions and escalates to a whole wavefront per row once rows grow
+//! past a threshold. Under the substrate rule (one worker thread = one
+//! warp, SIMT lanes collapse into the worker's scalar loop) both modes
+//! collapse to the same shape — *a single worker computes a whole row
+//! serially* — and what survives is the **assignment policy**:
+//!
+//! - **short rows** (length ≤ threshold, derived from the row-length
+//!   mean and spread at build time) are packed into contiguous,
+//!   nnz-balanced bands, one band per worker — the row-splitting half;
+//! - **long rows** (the tail) are each assigned whole to the currently
+//!   least-loaded worker, heaviest first — the nnz-splitting half,
+//!   without ever splitting a row's interior.
+//!
+//! Every row is therefore summed left-to-right by one owner with one
+//! accumulator, so output is **bitwise identical to the serial CSR
+//! oracle** — the repo-wide parallel = serial invariant. The assignment
+//! is a pure function of row lengths (row-pointer differences), which
+//! no [`crate::preprocess::MatrixDelta`] kind can change, so deltas
+//! repair the resident CSR in place with zero replanning.
+
+use super::engine::{check_spmm_dims, PhaseTimes, SpmvEngine, SPMM_TILE};
+use crate::formats::Csr;
+use crate::util::pool::WorkerPool;
+use crate::util::sync::SharedMut;
+use crate::util::Timer;
+
+/// Line-enhance SpMV engine: banded short rows, balanced long-row
+/// tail, whole-row ownership throughout.
+pub struct LineEnhanceEngine {
+    pub m: Csr,
+    pub threads: usize,
+    /// Short/long boundary in nonzeros per row, fixed at build time.
+    threshold: usize,
+    /// Rows each worker owns: its contiguous short band followed by its
+    /// share of the long tail.
+    rows_of: Vec<Vec<usize>>,
+    /// How many rows went down the long-row path (observability).
+    long_rows: usize,
+    pool: WorkerPool,
+}
+
+impl LineEnhanceEngine {
+    pub fn new(m: Csr, threads: usize) -> Self {
+        let threads = threads.max(1);
+        let lens: Vec<usize> = (0..m.rows).map(|r| m.ptr[r + 1] - m.ptr[r]).collect();
+        let nnz = m.nnz();
+        let mean = if m.rows > 0 { nnz as f64 / m.rows as f64 } else { 0.0 };
+        let var = if m.rows > 0 {
+            lens.iter().map(|&l| (l as f64 - mean).powi(2)).sum::<f64>() / m.rows as f64
+        } else {
+            0.0
+        };
+        // two sigmas above the mean, floored so near-uniform matrices
+        // don't classify ordinary rows as tails
+        let threshold = (mean + 2.0 * var.sqrt()).ceil().max(16.0) as usize;
+
+        // short rows: contiguous bands balanced by nnz, preserving row
+        // order inside each band
+        let short_nnz: usize = lens.iter().filter(|&&l| l > 0 && l <= threshold).sum();
+        let mut rows_of: Vec<Vec<usize>> = vec![Vec::new(); threads];
+        let mut load = vec![0usize; threads];
+        let mut band = 0usize;
+        let mut acc = 0usize;
+        for (r, &len) in lens.iter().enumerate() {
+            if len == 0 || len > threshold {
+                continue;
+            }
+            while band + 1 < threads && acc >= (band + 1) * short_nnz / threads {
+                band += 1;
+            }
+            rows_of[band].push(r);
+            load[band] += len;
+            acc += len;
+        }
+
+        // long rows: heaviest first onto the least-loaded worker
+        let mut long: Vec<usize> = (0..m.rows).filter(|&r| lens[r] > threshold).collect();
+        long.sort_by_key(|&r| std::cmp::Reverse(lens[r]));
+        let long_rows = long.len();
+        for r in long {
+            let w = (0..threads).min_by_key(|&w| load[w]).unwrap_or(0);
+            rows_of[w].push(r);
+            load[w] += lens[r];
+        }
+
+        LineEnhanceEngine {
+            m,
+            threads,
+            threshold,
+            rows_of,
+            long_rows,
+            pool: WorkerPool::new(threads),
+        }
+    }
+
+    /// The short/long row-length boundary chosen at build time.
+    pub fn threshold(&self) -> usize {
+        self.threshold
+    }
+
+    /// How many rows were routed down the long-row (tail) path.
+    pub fn long_row_count(&self) -> usize {
+        self.long_rows
+    }
+}
+
+impl SpmvEngine for LineEnhanceEngine {
+    fn name(&self) -> &str {
+        "line-enhance"
+    }
+    fn rows(&self) -> usize {
+        self.m.rows
+    }
+    fn cols(&self) -> usize {
+        self.m.cols
+    }
+    fn nnz(&self) -> usize {
+        self.m.nnz()
+    }
+
+    fn spmv_phases(&self, x: &[f64], y: &mut [f64]) -> PhaseTimes {
+        assert_eq!(x.len(), self.m.cols);
+        assert_eq!(y.len(), self.m.rows);
+        let t = Timer::start();
+        y.fill(0.0);
+        {
+            let shared_y = SharedMut::new(y);
+            let m = &self.m;
+            self.pool.run_generation(|w, _| {
+                for &r in &self.rows_of[w] {
+                    let mut sum = 0.0;
+                    for j in m.ptr[r]..m.ptr[r + 1] {
+                        sum += m.data[j] * x[m.col[j] as usize];
+                    }
+                    // SAFETY: each row has exactly one owner.
+                    unsafe { shared_y.write(r, sum) };
+                }
+            });
+        }
+        // whole-row ownership needs no combine pass
+        PhaseTimes { spmv: t.elapsed_secs(), combine: 0.0 }
+    }
+
+    /// Fused SpMM: same whole-row ownership, one pass over each row's
+    /// nonzeros per tile of at most [`SPMM_TILE`] vectors; the
+    /// per-vector accumulation order matches `spmv` exactly, so fused
+    /// output is bitwise the looped path.
+    fn spmm(&self, xs: &[Vec<f64>], ys: &mut [Vec<f64>]) {
+        check_spmm_dims("line-enhance", self.m.rows, self.m.cols, xs, ys);
+        if xs.len() < 2 {
+            for (x, y) in xs.iter().zip(ys.iter_mut()) {
+                self.spmv(x, y);
+            }
+            return;
+        }
+        for y in ys.iter_mut() {
+            y.fill(0.0);
+        }
+        let mut t_lo = 0;
+        while t_lo < xs.len() {
+            let t_hi = (t_lo + SPMM_TILE).min(xs.len());
+            let tile = t_hi - t_lo;
+            let x_tile = &xs[t_lo..t_hi];
+            let y_ptrs: Vec<SharedMut<'_, f64>> = ys[t_lo..t_hi]
+                .iter_mut()
+                .map(|y| SharedMut::new(&mut y[..]))
+                .collect();
+            let m = &self.m;
+            self.pool.run_generation(|w, _| {
+                for &r in &self.rows_of[w] {
+                    let mut sums = [0.0f64; SPMM_TILE];
+                    for j in m.ptr[r]..m.ptr[r + 1] {
+                        let a = m.data[j];
+                        let c = m.col[j] as usize;
+                        for (s, x) in sums[..tile].iter_mut().zip(x_tile) {
+                            *s += a * x[c];
+                        }
+                    }
+                    // SAFETY: one owner per row; distinct output
+                    // vectors behind each pointer.
+                    for (v, yp) in y_ptrs.iter().enumerate() {
+                        unsafe { yp.write(r, sums[v]) };
+                    }
+                }
+            });
+            t_lo = t_hi;
+        }
+    }
+
+    /// In-place delta repair: the row assignment is a row-length
+    /// function and deltas rewrite `col`/`data` within fixed extents,
+    /// so applying the delta to the resident CSR is the whole repair.
+    fn update(
+        &mut self,
+        delta: &crate::preprocess::MatrixDelta,
+    ) -> anyhow::Result<crate::preprocess::UpdateReport> {
+        let change = crate::preprocess::apply_to_csr(&mut self.m, delta)?;
+        Ok(crate::preprocess::UpdateReport {
+            rows_touched: change.touched_rows.len(),
+            blocks_touched: 0,
+            blocks_total: 0,
+            full_rebuild: false,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::random;
+
+    fn check_bitwise(m: &Csr, threads: usize, seed: u64) {
+        let x = random::vector(m.cols, seed);
+        let mut expect = vec![0.0; m.rows];
+        m.spmv(&x, &mut expect);
+        let eng = LineEnhanceEngine::new(m.clone(), threads);
+        let mut y = vec![0.0; m.rows];
+        eng.spmv(&x, &mut y);
+        assert_eq!(y, expect, "line-enhance must be bitwise serial (threads={threads})");
+    }
+
+    #[test]
+    fn bitwise_matches_serial_csr_on_random() {
+        for seed in 0..4 {
+            let m = random::power_law_rows(300, 250, 2.0, 60, seed);
+            for threads in [1, 4, 13] {
+                check_bitwise(&m, threads, seed);
+            }
+        }
+    }
+
+    #[test]
+    fn every_row_is_owned_exactly_once() {
+        let m = random::power_law_rows(500, 300, 1.8, 120, 6);
+        let eng = LineEnhanceEngine::new(m.clone(), 7);
+        let mut seen = vec![0usize; m.rows];
+        for rows in &eng.rows_of {
+            for &r in rows {
+                seen[r] += 1;
+            }
+        }
+        for r in 0..m.rows {
+            let expect = usize::from(m.row_nnz(r) > 0);
+            assert_eq!(seen[r], expect, "row {r} ownership");
+        }
+    }
+
+    #[test]
+    fn skewed_matrix_routes_a_tail_down_the_long_path() {
+        let mut lens = vec![2usize; 200];
+        lens[17] = 4000;
+        lens[90] = 3000;
+        let m = random::with_row_lengths(&lens, 800, 8);
+        let eng = LineEnhanceEngine::new(m.clone(), 6);
+        assert_eq!(eng.long_row_count(), 2);
+        assert!(eng.threshold() >= 16);
+        check_bitwise(&m, 6, 2);
+    }
+
+    #[test]
+    fn uniform_matrix_has_no_long_tail() {
+        let m = random::with_row_lengths(&[8; 300], 200, 4);
+        let eng = LineEnhanceEngine::new(m.clone(), 5);
+        assert_eq!(eng.long_row_count(), 0);
+        check_bitwise(&m, 5, 5);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let m = Csr::empty(10, 10);
+        let eng = LineEnhanceEngine::new(m, 4);
+        let mut y = vec![9.0; 10];
+        eng.spmv(&vec![1.0; 10], &mut y);
+        assert_eq!(y, vec![0.0; 10]);
+        assert_eq!(eng.long_row_count(), 0);
+    }
+
+    #[test]
+    fn fused_spmm_is_bitwise_the_looped_path() {
+        let mut lens = vec![3usize; 90];
+        lens[44] = 1500;
+        let m = random::with_row_lengths(&lens, 250, 12);
+        for threads in [1, 4, 9] {
+            let eng = LineEnhanceEngine::new(m.clone(), threads);
+            let k = SPMM_TILE + 2;
+            let xs: Vec<Vec<f64>> = (0..k).map(|i| random::vector(250, i as u64)).collect();
+            let mut ys: Vec<Vec<f64>> = vec![vec![0.0; 90]; k];
+            eng.spmm(&xs, &mut ys);
+            for (x, y) in xs.iter().zip(&ys) {
+                let mut looped = vec![0.0; 90];
+                eng.spmv(x, &mut looped);
+                assert_eq!(*y, looped, "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn update_repairs_values_in_place() {
+        use crate::preprocess::MatrixDelta;
+        let m = random::power_law_rows(90, 70, 2.0, 18, 31);
+        let mut eng = LineEnhanceEngine::new(m.clone(), 6);
+        let row = (0..90).find(|&r| m.row_nnz(r) >= 2).unwrap();
+        let delta = MatrixDelta::new().scale_row(row, -1.25);
+        let report = eng.update(&delta).unwrap();
+        assert!(!report.full_rebuild);
+        assert_eq!(report.rows_touched, 1);
+        let mut mutated = m.clone();
+        crate::preprocess::apply_to_csr(&mut mutated, &delta).unwrap();
+        let x = random::vector(70, 4);
+        let mut y = vec![0.0; 90];
+        eng.spmv(&x, &mut y);
+        let mut expect = vec![0.0; 90];
+        mutated.spmv(&x, &mut expect);
+        assert_eq!(y, expect, "post-update line-enhance must stay bitwise serial");
+    }
+}

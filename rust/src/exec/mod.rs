@@ -15,6 +15,10 @@
 //!   fixed/competitive schedule of §III-C.
 //! - [`combine`] — the second phase shared by the 2D engines.
 //! - [`scheduler`] — the fixed/competitive split + ticket lock.
+//! - [`flat`] — pure nnz-splitting with load/accumulate/reduce phases
+//!   (spmv-acc's CSR-native `flat`, zero conversion cost).
+//! - [`line_enhance`] — row-split short bands + whole-row long tails
+//!   (spmv-acc's CSR-native `line-enhance`, zero conversion cost).
 
 pub mod engine;
 pub mod csr;
@@ -23,10 +27,14 @@ pub mod hbp;
 pub mod combine;
 pub mod scheduler;
 pub mod nnz_split;
+pub mod flat;
+pub mod line_enhance;
 
 pub use engine::{check_spmm_dims, PhaseTimes, SpmvEngine, SPMM_TILE};
 pub use csr::{CsrParallel, CsrSerial};
+pub use flat::FlatEngine;
 pub use hbp::HbpEngine;
+pub use line_enhance::LineEnhanceEngine;
 pub use nnz_split::NnzSplitEngine;
 pub use scheduler::{absorb_stats, mixed_schedule, run_mixed, MixedSchedule, WorkerStats};
 pub use spmv2d::Spmv2dEngine;

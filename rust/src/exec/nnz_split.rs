@@ -20,6 +20,34 @@ use crate::util::sync::SharedMut;
 use crate::util::Timer;
 use std::sync::Mutex;
 
+/// Even nonzero split points for `threads` workers: `threads + 1`
+/// monotone chunk starts with `splits[w] = w * nnz / threads`. Shared
+/// by every nnz-splitting engine (this one and [`super::flat`]).
+pub(crate) fn nnz_splits(nnz: usize, threads: usize) -> Vec<usize> {
+    (0..=threads).map(|w| w * nnz / threads).collect()
+}
+
+/// First row whose nonzero extent contains each split point — the
+/// precomputed binary search every chunk walk starts from. A pure
+/// function of the row pointer, so it survives every
+/// [`crate::preprocess::MatrixDelta`] kind (deltas rewrite `col`/`data`
+/// in place; `ptr` never moves).
+pub(crate) fn first_rows(m: &Csr, splits: &[usize]) -> Vec<usize> {
+    splits
+        .iter()
+        .map(|&k| match m.ptr.binary_search(&k) {
+            Ok(mut r) => {
+                // land on the first row starting at k (ties: empty rows)
+                while r > 0 && m.ptr[r - 1] == k {
+                    r -= 1;
+                }
+                r.min(m.rows)
+            }
+            Err(r) => r - 1, // k falls inside row r-1
+        })
+        .collect()
+}
+
 /// Per-worker boundary contribution: `(row, partial_sum)`.
 type Boundary = (usize, f64);
 
@@ -44,22 +72,8 @@ pub struct NnzSplitEngine {
 impl NnzSplitEngine {
     pub fn new(m: Csr, threads: usize) -> Self {
         let threads = threads.max(1);
-        let nnz = m.nnz();
-        let splits: Vec<usize> = (0..=threads).map(|w| w * nnz / threads).collect();
-        // first row whose range contains splits[w]
-        let first_row = splits
-            .iter()
-            .map(|&k| match m.ptr.binary_search(&k) {
-                Ok(mut r) => {
-                    // land on the first row starting at k (ties: empty rows)
-                    while r > 0 && m.ptr[r - 1] == k {
-                        r -= 1;
-                    }
-                    r.min(m.rows)
-                }
-                Err(r) => r - 1, // k falls inside row r-1
-            })
-            .collect();
+        let splits = nnz_splits(m.nnz(), threads);
+        let first_row = first_rows(&m, &splits);
         NnzSplitEngine {
             m,
             threads,
@@ -227,6 +241,25 @@ impl SpmvEngine for NnzSplitEngine {
             t_lo = t_hi;
         }
     }
+
+    /// In-place delta repair. The split geometry (`splits`,
+    /// `first_row`) is a pure function of the nonzero count and the row
+    /// pointer, and no [`crate::preprocess::MatrixDelta`] kind moves
+    /// either (`replace_row` rewrites `col`/`data` within the row's
+    /// fixed extent) — so applying the delta to the resident CSR is the
+    /// whole repair, for value-only *and* pattern-changing deltas alike.
+    fn update(
+        &mut self,
+        delta: &crate::preprocess::MatrixDelta,
+    ) -> anyhow::Result<crate::preprocess::UpdateReport> {
+        let change = crate::preprocess::apply_to_csr(&mut self.m, delta)?;
+        Ok(crate::preprocess::UpdateReport {
+            rows_touched: change.touched_rows.len(),
+            blocks_touched: 0,
+            blocks_total: 0,
+            full_rebuild: false,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -312,5 +345,49 @@ mod tests {
             let (_, m) = crate::gen::matrix_by_id(id, crate::gen::Scale::Ci).unwrap();
             check(&m, 8, 1);
         }
+    }
+
+    #[test]
+    fn update_applies_values_in_place() {
+        use crate::preprocess::MatrixDelta;
+        let m = random::power_law_rows(70, 50, 2.0, 15, 13);
+        let mut eng = NnzSplitEngine::new(m.clone(), 5);
+        let row = (0..70).find(|&r| m.row_nnz(r) >= 1).unwrap();
+        let delta = MatrixDelta::new().scale_row(row, -2.0);
+        let report = eng.update(&delta).unwrap();
+        assert_eq!(report.rows_touched, 1);
+        assert!(!report.full_rebuild, "nnz-split repairs in place");
+        let mut mutated = m.clone();
+        crate::preprocess::apply_to_csr(&mut mutated, &delta).unwrap();
+        let x = random::vector(50, 2);
+        let mut y = vec![0.0; 70];
+        eng.spmv(&x, &mut y);
+        let mut expect = vec![0.0; 70];
+        mutated.spmv(&x, &mut expect);
+        assert!(allclose(&y, &expect, 1e-12, 1e-12), "post-update spmv diverged");
+    }
+
+    #[test]
+    fn update_survives_a_pattern_changing_delta() {
+        use crate::preprocess::MatrixDelta;
+        // replace_row with different columns changes the pattern but
+        // not the row pointer, so the split geometry stays valid
+        let m = random::power_law_rows(40, 60, 2.0, 12, 3);
+        let row = (0..40).find(|&r| m.row_nnz(r) >= 2).unwrap();
+        let old_cols = m.row(row).0.to_vec();
+        let n = old_cols.len();
+        let new_cols: Vec<u32> = (0..60u32).filter(|c| !old_cols.contains(c)).take(n).collect();
+        let vals: Vec<f64> = (0..n).map(|i| 0.5 * i as f64 - 1.0).collect();
+        let delta = MatrixDelta::new().replace_row(row, new_cols, vals);
+        let mut eng = NnzSplitEngine::new(m.clone(), 7);
+        eng.update(&delta).unwrap();
+        let mut mutated = m.clone();
+        crate::preprocess::apply_to_csr(&mut mutated, &delta).unwrap();
+        let x = random::vector(60, 5);
+        let mut y = vec![0.0; 40];
+        eng.spmv(&x, &mut y);
+        let mut expect = vec![0.0; 40];
+        mutated.spmv(&x, &mut expect);
+        assert!(allclose(&y, &expect, 1e-12, 1e-12), "pattern-delta spmv diverged");
     }
 }

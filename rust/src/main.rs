@@ -81,7 +81,7 @@ SUBCOMMANDS
   info       --matrix <id|path> [--scale ci] [--threads N] [--profile]
   preprocess --matrix <id|path> [--scale ci] [--threads N]
   update     --matrix <id|path> [--scale ci] [--frac 0.01] [--iters 3] [--threads N]
-  spmv       --matrix <id|path> [--engine auto|hbp|csr|2d|nnz-split] [--iters 10]
+  spmv       --matrix <id|path> [--engine auto|hbp|csr|2d|nnz-split|flat|line-enhance] [--iters 10]
              [--batch k] [--verify]
   tune       --matrix <id|path> [--scale ci] [--threads N] [--top-k 3] [--iters 5]
              [--cache path] [--no-cache]
@@ -352,6 +352,8 @@ fn cmd_spmv(args: &Args) -> Result<()> {
         "csr" => Box::new(CsrParallel::new(m.clone(), nthreads)),
         "2d" => Box::new(Spmv2dEngine::new(m.clone(), cfg, nthreads)),
         "nnz-split" => Box::new(hbp_spmv::exec::NnzSplitEngine::new(m.clone(), nthreads)),
+        "flat" => Box::new(hbp_spmv::exec::FlatEngine::new(m.clone(), nthreads)),
+        "line-enhance" => Box::new(hbp_spmv::exec::LineEnhanceEngine::new(m.clone(), nthreads)),
         "auto" => {
             let tuner = make_tuner(args, cfg, nthreads);
             let outcome = tuner.tune(&m);

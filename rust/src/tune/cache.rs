@@ -64,6 +64,8 @@ fn kind_code(kind: EngineKind) -> u64 {
         EngineKind::Hbp => 0,
         EngineKind::Csr => 1,
         EngineKind::Plain2d => 2,
+        EngineKind::Flat => 3,
+        EngineKind::LineEnhance => 4,
         EngineKind::Auto => unreachable!("Auto decisions are never cached"),
     }
 }
@@ -73,6 +75,8 @@ fn kind_from_code(code: u64) -> Result<EngineKind> {
         0 => Ok(EngineKind::Hbp),
         1 => Ok(EngineKind::Csr),
         2 => Ok(EngineKind::Plain2d),
+        3 => Ok(EngineKind::Flat),
+        4 => Ok(EngineKind::LineEnhance),
         other => bail!("tuning cache: unknown engine code {other}"),
     }
 }
@@ -233,11 +237,29 @@ mod tests {
                 trial_secs: 9.5e-6,
             },
         );
+        cache.put(
+            11,
+            Decision {
+                kind: EngineKind::Flat,
+                cfg: PartitionConfig::test_small(),
+                trial_secs: 3.0e-6,
+            },
+        );
+        cache.put(
+            12,
+            Decision {
+                kind: EngineKind::LineEnhance,
+                cfg: PartitionConfig::test_small(),
+                trial_secs: 4.0e-6,
+            },
+        );
         cache.save(&path).unwrap();
         let back = TuneCache::load(&path).unwrap();
-        assert_eq!(back.len(), 2);
+        assert_eq!(back.len(), 4);
         assert_eq!(back.get(42), Some(decision()));
         assert_eq!(back.get(7).unwrap().kind, EngineKind::Csr);
+        assert_eq!(back.get(11).unwrap().kind, EngineKind::Flat);
+        assert_eq!(back.get(12).unwrap().kind, EngineKind::LineEnhance);
         assert_eq!(back.get(99), None, "unknown key is a miss");
     }
 

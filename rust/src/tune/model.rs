@@ -49,6 +49,10 @@ pub const UNIFORM_CV: f64 = 0.25;
 /// Row-length CV above which hash grouping clearly pays.
 pub const SKEWED_CV: f64 = 0.5;
 
+/// Mean row length at or below which the flat engine's contiguous nnz
+/// chunks cost almost no cut-row fix-up (cut rows are short).
+pub const SHORT_ROW_MEAN: f64 = 16.0;
+
 /// Tiny matrices: stream them as CSR.
 pub fn rule_tiny_matrix(f: &MatrixFeatures, c: &Candidate) -> Option<(f64, &'static str)> {
     (f.nnz < TINY_NNZ && c.kind == EngineKind::Csr)
@@ -110,6 +114,28 @@ pub fn rule_grid_occupancy(f: &MatrixFeatures, c: &Candidate) -> Option<(f64, &'
     (blocks >= 8).then_some((0.5, "grid yields enough blocks to load-balance"))
 }
 
+/// Uniform short rows: flat's equal-nnz chunks are perfectly balanced
+/// by construction, with zero format-conversion cost — exactly where
+/// reordering's preprocessing never pays for itself.
+pub fn rule_uniform_short_rows(f: &MatrixFeatures, c: &Candidate) -> Option<(f64, &'static str)> {
+    (c.kind == EngineKind::Flat
+        && f.row_cv < UNIFORM_CV
+        && f.row_mean > 0.0
+        && f.row_mean <= SHORT_ROW_MEAN)
+        .then_some((1.5, "uniform short rows: flat nnz chunks balance with zero conversion cost"))
+}
+
+/// Mixed skew — a short-row body plus a long-row tail: line-enhance
+/// row-splits the body and gives each tail row a dedicated owner,
+/// again with zero conversion cost.
+pub fn rule_mixed_skew(f: &MatrixFeatures, c: &Candidate) -> Option<(f64, &'static str)> {
+    (c.kind == EngineKind::LineEnhance
+        && f.row_cv >= SKEWED_CV
+        && f.row_mean > 0.0
+        && f.row_max as f64 > 4.0 * f.row_mean)
+        .then_some((1.25, "mixed row skew: row-split short bands, nnz-split the long tail"))
+}
+
 /// Mostly-dense blocks: plain 2D row-major streaming suffices.
 pub fn rule_dense_blocks(f: &MatrixFeatures, c: &Candidate) -> Option<(f64, &'static str)> {
     let dense_frac: f64 = f.block_fill_hist[4] + f.block_fill_hist[5];
@@ -118,7 +144,7 @@ pub fn rule_dense_blocks(f: &MatrixFeatures, c: &Candidate) -> Option<(f64, &'st
 }
 
 /// The model's fixed rule list, applied in order.
-pub const RULES: [Rule; 8] = [
+pub const RULES: [Rule; 10] = [
     rule_tiny_matrix,
     rule_uniform_rows,
     rule_skewed_rows,
@@ -126,6 +152,8 @@ pub const RULES: [Rule; 8] = [
     rule_wide_vector,
     rule_near_diagonal,
     rule_grid_occupancy,
+    rule_uniform_short_rows,
+    rule_mixed_skew,
     rule_dense_blocks,
 ];
 
@@ -142,14 +170,17 @@ pub fn score(f: &MatrixFeatures, c: &Candidate) -> (f64, Vec<&'static str>) {
     (total, reasons)
 }
 
-/// Candidate set: the three engines at the base config, plus HBP grid
-/// variants (halved/doubled rows and columns per block, where valid) —
-/// the knob the paper itself ablates (`ablation_block_size`).
+/// Candidate set: the five engines at the base config (the CSR-native
+/// flat/line-enhance kinds ignore the grid), plus HBP grid variants
+/// (halved/doubled rows and columns per block, where valid) — the knob
+/// the paper itself ablates (`ablation_block_size`).
 pub fn candidates(base: PartitionConfig) -> Vec<Candidate> {
     let mut out = vec![
         Candidate { kind: EngineKind::Hbp, cfg: base },
         Candidate { kind: EngineKind::Csr, cfg: base },
         Candidate { kind: EngineKind::Plain2d, cfg: base },
+        Candidate { kind: EngineKind::Flat, cfg: base },
+        Candidate { kind: EngineKind::LineEnhance, cfg: base },
     ];
     for rows_per_block in [base.rows_per_block / 2, base.rows_per_block * 2] {
         let cfg = PartitionConfig { rows_per_block, ..base };
@@ -285,16 +316,110 @@ mod tests {
     }
 
     #[test]
+    fn uniform_short_rows_rule_prefers_flat() {
+        let mut f = base_features();
+        f.row_cv = 0.1;
+        f.row_mean = 6.0;
+        let (s, _) = rule_uniform_short_rows(&f, &cand(EngineKind::Flat)).unwrap();
+        assert_eq!(s, 1.5);
+        assert!(rule_uniform_short_rows(&f, &cand(EngineKind::Csr)).is_none());
+        // long uniform rows: chunk cut rows get expensive, no fire
+        f.row_mean = 40.0;
+        assert!(rule_uniform_short_rows(&f, &cand(EngineKind::Flat)).is_none());
+        // skewed rows: flat's equal chunks no longer mirror the rows
+        f.row_mean = 6.0;
+        f.row_cv = 0.8;
+        assert!(rule_uniform_short_rows(&f, &cand(EngineKind::Flat)).is_none());
+        // an all-empty matrix must not fire on 0.0 <= SHORT_ROW_MEAN
+        f.row_cv = 0.0;
+        f.row_mean = 0.0;
+        assert!(rule_uniform_short_rows(&f, &cand(EngineKind::Flat)).is_none());
+    }
+
+    #[test]
+    fn mixed_skew_rule_prefers_line_enhance() {
+        let mut f = base_features();
+        f.row_cv = 0.7;
+        f.row_max = 100; // > 4x the mean of 10
+        let (s, _) = rule_mixed_skew(&f, &cand(EngineKind::LineEnhance)).unwrap();
+        assert_eq!(s, 1.25);
+        assert!(rule_mixed_skew(&f, &cand(EngineKind::Hbp)).is_none());
+        // skew without a real tail: nothing for the long-row path
+        f.row_max = 30;
+        assert!(rule_mixed_skew(&f, &cand(EngineKind::LineEnhance)).is_none());
+        // a tail without skew: the body is uniform, bands suffice anyway
+        f.row_max = 100;
+        f.row_cv = 0.2;
+        assert!(rule_mixed_skew(&f, &cand(EngineKind::LineEnhance)).is_none());
+    }
+
+    #[test]
+    fn uniform_short_matrix_crowns_flat() {
+        let mut f = base_features();
+        f.row_cv = 0.1;
+        f.row_mean = 6.0;
+        let ranked = rank(&f, PartitionConfig::default());
+        assert_eq!(ranked[0].candidate.kind, EngineKind::Flat);
+        assert!(!ranked[0].reasons.is_empty(), "winning score must carry reasons");
+    }
+
+    #[test]
+    fn mixed_skew_matrix_crowns_line_enhance() {
+        let mut f = base_features();
+        f.rows = 2000;
+        f.cols = 1000;
+        f.nnz = 40_000;
+        f.row_mean = 20.0;
+        f.row_max = 100;
+        f.row_cv = 0.7;
+        let ranked = rank(&f, PartitionConfig::default());
+        assert_eq!(ranked[0].candidate.kind, EngineKind::LineEnhance);
+        assert!(!ranked[0].reasons.is_empty(), "winning score must carry reasons");
+    }
+
+    #[test]
+    fn uniform_matrix_competitive_winner_is_csr_native() {
+        use crate::tune::trial::run_trials;
+        use crate::tune::TrialConfig;
+        // perfectly uniform short rows, nnz < TINY_NNZ: the model ranks
+        // Csr (tiny + uniform = 3.0) then Flat (1.5); with top_k = 2 the
+        // trial winner is a CSR-native engine by construction, and Flat
+        // earned its trial slot over the blocked engines
+        let m = random::with_row_lengths(&[8; 400], 200, 17);
+        let f = MatrixFeatures::extract(&m, PartitionConfig::default());
+        let ranked = rank(&f, PartitionConfig::default());
+        assert_eq!(ranked[0].candidate.kind, EngineKind::Csr);
+        assert_eq!(ranked[1].candidate.kind, EngineKind::Flat);
+        let tc = TrialConfig { top_k: 2, ..TrialConfig::default() };
+        let report = run_trials(&m, &ranked, &tc, 2);
+        assert!(
+            matches!(report.winner().kind, EngineKind::Csr | EngineKind::Flat),
+            "winner {:?} is not CSR-native",
+            report.winner().kind
+        );
+        assert!(
+            report.trials.iter().any(|t| t.kind == EngineKind::Flat),
+            "flat must have been trialed"
+        );
+    }
+
+    #[test]
     fn candidate_set_is_valid_and_never_auto() {
         for base in [PartitionConfig::default(), PartitionConfig::test_small()] {
             let cands = candidates(base);
-            assert!(cands.len() >= 3);
+            assert!(cands.len() >= 5);
             for c in &cands {
                 assert_ne!(c.kind, EngineKind::Auto);
                 c.cfg.validate().unwrap();
             }
-            // the three engines at base config are always present
-            for kind in [EngineKind::Hbp, EngineKind::Csr, EngineKind::Plain2d] {
+            // the five engines at base config are always present
+            for kind in [
+                EngineKind::Hbp,
+                EngineKind::Csr,
+                EngineKind::Plain2d,
+                EngineKind::Flat,
+                EngineKind::LineEnhance,
+            ] {
                 assert!(cands.iter().any(|c| c.kind == kind && c.cfg == base));
             }
         }

@@ -14,7 +14,7 @@
 
 use super::model::ScoredCandidate;
 use crate::coordinator::EngineKind;
-use crate::exec::{CsrParallel, HbpEngine, SpmvEngine, Spmv2dEngine};
+use crate::exec::{CsrParallel, FlatEngine, HbpEngine, LineEnhanceEngine, SpmvEngine, Spmv2dEngine};
 use crate::formats::Csr;
 use crate::gen::random;
 use crate::partition::PartitionConfig;
@@ -108,6 +108,8 @@ pub fn build_candidate(
         }
         EngineKind::Csr => Box::new(CsrParallel::new(m.clone(), threads)),
         EngineKind::Plain2d => Box::new(Spmv2dEngine::new(m.clone(), cfg, threads)),
+        EngineKind::Flat => Box::new(FlatEngine::new(m.clone(), threads)),
+        EngineKind::LineEnhance => Box::new(LineEnhanceEngine::new(m.clone(), threads)),
         EngineKind::Auto => panic!("EngineKind::Auto must be resolved before engine construction"),
     }
 }

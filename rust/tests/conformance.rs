@@ -1,0 +1,253 @@
+//! Cross-engine conformance harness.
+//!
+//! One shared battery — edge shapes, CSR-oracle parity, fused-SpMM
+//! parity, value-delta update parity, post-update correctness —
+//! instantiated per [`EngineKind`] by a macro, so every engine answers
+//! the same questions and a missing instantiation is visible at a
+//! glance. The compile-time guard is [`build_engine`]: its match over
+//! `EngineKind` has **no wildcard arm**, so adding a kind without
+//! teaching this harness how to build it fails to compile the test
+//! list (and `conformance_suite!` below is where the new mod goes).
+
+use hbp_spmv::coordinator::EngineKind;
+use hbp_spmv::exec::{
+    CsrParallel, FlatEngine, HbpEngine, LineEnhanceEngine, NnzSplitEngine, SpmvEngine,
+    Spmv2dEngine,
+};
+use hbp_spmv::formats::dense::allclose;
+use hbp_spmv::formats::Csr;
+use hbp_spmv::gen::random;
+use hbp_spmv::partition::PartitionConfig;
+use hbp_spmv::preprocess::{apply_to_csr, HashReorder, MatrixDelta};
+
+/// Build a conformance-ready (updatable) engine of every kind. The
+/// match is deliberately exhaustive WITHOUT a wildcard: a new
+/// `EngineKind` variant breaks this function — and therefore the whole
+/// conformance suite — until it gets both a build arm and a
+/// `conformance_suite!` entry.
+fn build_engine(kind: EngineKind, m: &Csr, threads: usize) -> Box<dyn SpmvEngine> {
+    let cfg = PartitionConfig::test_small();
+    match kind {
+        EngineKind::Hbp => Box::new(HbpEngine::new_updatable(
+            m.clone(),
+            cfg,
+            Box::new(HashReorder::default()),
+            threads,
+            0.25,
+        )),
+        EngineKind::Csr => Box::new(CsrParallel::new(m.clone(), threads)),
+        EngineKind::Plain2d => Box::new(Spmv2dEngine::new(m.clone(), cfg, threads)),
+        EngineKind::Flat => Box::new(FlatEngine::new(m.clone(), threads)),
+        EngineKind::LineEnhance => Box::new(LineEnhanceEngine::new(m.clone(), threads)),
+        EngineKind::Auto => unreachable!("Auto resolves to a concrete kind before execution"),
+    }
+}
+
+/// The shared battery, parameterized by an engine builder.
+mod battery {
+    use super::*;
+
+    pub type Build = dyn Fn(&Csr, usize) -> Box<dyn SpmvEngine>;
+
+    /// Oracle parity on one matrix across thread counts; `y` starts
+    /// dirty to catch engines that accumulate instead of overwrite.
+    fn assert_oracle_parity(build: &Build, m: &Csr, seed: u64, ctx: &str) {
+        let x = random::vector(m.cols, seed);
+        let mut expect = vec![0.0; m.rows];
+        m.spmv(&x, &mut expect);
+        for threads in [1usize, 2, 8] {
+            let eng = build(m, threads);
+            assert_eq!(eng.rows(), m.rows, "{ctx}: rows");
+            assert_eq!(eng.cols(), m.cols, "{ctx}: cols");
+            assert_eq!(eng.nnz(), m.nnz(), "{ctx}: nnz");
+            let mut y = vec![9.0; m.rows];
+            eng.spmv(&x, &mut y);
+            assert!(
+                allclose(&y, &expect, 1e-12, 1e-12),
+                "{ctx} threads={threads}: diverged from CSR oracle"
+            );
+        }
+    }
+
+    pub fn empty_matrix(build: &Build) {
+        assert_oracle_parity(build, &Csr::empty(10, 6), 1, "empty 10x6");
+    }
+
+    pub fn one_by_one(build: &Build) {
+        assert_oracle_parity(build, &random::with_row_lengths(&[1], 1, 2), 3, "1x1");
+    }
+
+    pub fn single_dense_row(build: &Build) {
+        // the only nonempty row is completely dense
+        let mut lens = vec![0usize; 7];
+        lens[3] = 64;
+        assert_oracle_parity(build, &random::with_row_lengths(&lens, 64, 5), 7, "single dense row");
+    }
+
+    pub fn all_zero_rows(build: &Build) {
+        // zero rows interleaved with short rows, incl. leading/trailing
+        let lens = vec![0, 3, 0, 0, 5, 0, 1, 0, 0, 0, 8, 0];
+        assert_oracle_parity(build, &random::with_row_lengths(&lens, 30, 9), 11, "all-zero rows");
+    }
+
+    pub fn rectangular_shapes(build: &Build) {
+        let tall = random::power_law_rows(60, 9, 2.0, 5, 13);
+        assert_oracle_parity(build, &tall, 17, "tall 60x9");
+        let wide = random::power_law_rows(9, 60, 2.0, 30, 19);
+        assert_oracle_parity(build, &wide, 23, "wide 9x60");
+    }
+
+    pub fn oracle_parity(build: &Build) {
+        let m = random::power_law_rows(120, 100, 2.0, 25, 29);
+        assert_oracle_parity(build, &m, 31, "power-law 120x100");
+    }
+
+    pub fn fused_spmm_parity(build: &Build) {
+        let m = random::power_law_rows(90, 80, 2.0, 20, 37);
+        for threads in [1usize, 2, 8] {
+            let eng = build(&m, threads);
+            for k in [1usize, 2, 8, 33] {
+                let xs: Vec<Vec<f64>> =
+                    (0..k).map(|i| random::vector(m.cols, 200 + i as u64)).collect();
+                let mut fused: Vec<Vec<f64>> = vec![vec![0.0; m.rows]; k];
+                eng.spmm(&xs, &mut fused);
+                for (i, (x, y)) in xs.iter().zip(&fused).enumerate() {
+                    let mut looped = vec![0.0; m.rows];
+                    eng.spmv(x, &mut looped);
+                    assert!(
+                        allclose(y, &looped, 1e-12, 1e-12),
+                        "threads={threads} k={k} vec={i}: fused != looped"
+                    );
+                }
+            }
+        }
+    }
+
+    pub fn update_value_delta_parity(build: &Build) {
+        let m = random::power_law_rows(70, 60, 2.0, 15, 41);
+        let row = (0..m.rows).find(|&r| m.row_nnz(r) >= 2).expect("generator made a dense row");
+        let delta = MatrixDelta::new().scale_row(row, -2.5);
+        let mut mutated = m.clone();
+        apply_to_csr(&mut mutated, &delta).unwrap();
+        let x = random::vector(m.cols, 43);
+        let mut expect = vec![0.0; m.rows];
+        mutated.spmv(&x, &mut expect);
+        for threads in [1usize, 2, 8] {
+            let mut eng = build(&m, threads);
+            let report = eng.update(&delta).expect("value-only delta must update in place");
+            assert!(report.rows_touched >= 1, "threads={threads}: delta touched a row");
+            assert!(
+                report.blocks_touched <= report.blocks_total,
+                "threads={threads}: inconsistent block counts"
+            );
+            let mut y = vec![9.0; m.rows];
+            eng.spmv(&x, &mut y);
+            assert!(
+                allclose(&y, &expect, 1e-12, 1e-12),
+                "threads={threads}: post-update spmv != mutated oracle"
+            );
+        }
+    }
+
+    pub fn post_update_spmv(build: &Build) {
+        // a chain of deltas, then both spmv and fused spmm must serve
+        // the final matrix
+        let m = random::power_law_rows(80, 70, 2.0, 18, 47);
+        let rows: Vec<usize> = (0..m.rows).filter(|&r| m.row_nnz(r) >= 1).take(3).collect();
+        assert!(rows.len() == 3, "generator made enough nonempty rows");
+        let deltas = [
+            MatrixDelta::new().scale_row(rows[0], 3.0),
+            MatrixDelta::new().set(rows[1], m.row(rows[1]).0[0] as usize, -7.5),
+            MatrixDelta::new().zero_row(rows[2]),
+        ];
+        let mut mutated = m.clone();
+        for d in &deltas {
+            apply_to_csr(&mut mutated, d).unwrap();
+        }
+        let x = random::vector(m.cols, 53);
+        let mut expect = vec![0.0; m.rows];
+        mutated.spmv(&x, &mut expect);
+        for threads in [1usize, 2, 8] {
+            let mut eng = build(&m, threads);
+            for d in &deltas {
+                eng.update(d).expect("value-only delta must update in place");
+            }
+            let mut y = vec![0.0; m.rows];
+            eng.spmv(&x, &mut y);
+            assert!(
+                allclose(&y, &expect, 1e-12, 1e-12),
+                "threads={threads}: spmv after delta chain diverged"
+            );
+            let xs = vec![x.clone(), random::vector(m.cols, 59)];
+            let mut ys = vec![vec![0.0; m.rows]; 2];
+            eng.spmm(&xs, &mut ys);
+            assert!(
+                allclose(&ys[0], &expect, 1e-12, 1e-12),
+                "threads={threads}: spmm after delta chain diverged"
+            );
+        }
+    }
+}
+
+/// Instantiate the full battery for one engine builder per module, so
+/// failures report as `flat::oracle_parity`, `hbp::post_update_spmv`, …
+macro_rules! conformance_suite {
+    ($($modname:ident => $build:expr;)+) => {
+        $(mod $modname {
+            use super::*;
+
+            fn build(m: &Csr, threads: usize) -> Box<dyn SpmvEngine> {
+                let b: fn(&Csr, usize) -> Box<dyn SpmvEngine> = $build;
+                b(m, threads)
+            }
+
+            #[test]
+            fn empty_matrix() { battery::empty_matrix(&build); }
+            #[test]
+            fn one_by_one() { battery::one_by_one(&build); }
+            #[test]
+            fn single_dense_row() { battery::single_dense_row(&build); }
+            #[test]
+            fn all_zero_rows() { battery::all_zero_rows(&build); }
+            #[test]
+            fn rectangular_shapes() { battery::rectangular_shapes(&build); }
+            #[test]
+            fn oracle_parity() { battery::oracle_parity(&build); }
+            #[test]
+            fn fused_spmm_parity() { battery::fused_spmm_parity(&build); }
+            #[test]
+            fn update_value_delta_parity() { battery::update_value_delta_parity(&build); }
+            #[test]
+            fn post_update_spmv() { battery::post_update_spmv(&build); }
+        })+
+    };
+}
+
+conformance_suite! {
+    hbp => |m, t| build_engine(EngineKind::Hbp, m, t);
+    csr => |m, t| build_engine(EngineKind::Csr, m, t);
+    plain2d => |m, t| build_engine(EngineKind::Plain2d, m, t);
+    flat => |m, t| build_engine(EngineKind::Flat, m, t);
+    line_enhance => |m, t| build_engine(EngineKind::LineEnhance, m, t);
+    // nnz-split implements SpmvEngine without being a routed kind; it
+    // answers the same battery through a direct builder
+    nnz_split => |m, t| Box::new(NnzSplitEngine::new(m.clone(), t));
+}
+
+/// Every routable kind is buildable through the conformance builder —
+/// the runtime half of the exhaustiveness guard ([`build_engine`]'s
+/// wildcard-free match is the compile-time half).
+#[test]
+fn every_engine_kind_is_covered() {
+    let m = random::power_law_rows(40, 30, 2.0, 10, 61);
+    for kind in [
+        EngineKind::Hbp,
+        EngineKind::Csr,
+        EngineKind::Plain2d,
+        EngineKind::Flat,
+        EngineKind::LineEnhance,
+    ] {
+        let eng = build_engine(kind, &m, 2);
+        assert_eq!(eng.nnz(), m.nnz(), "{kind:?}");
+    }
+}

@@ -394,7 +394,10 @@ fn fused_spmm_equals_looped_spmv_across_engines_widths_and_threads() {
     // and any thread count, `spmm` must agree with k independent `spmv`
     // calls within 1e-12 — both on the freshly built engine and after a
     // value-level delta has mutated the operand.
-    use hbp_spmv::exec::{CsrParallel, HbpEngine, NnzSplitEngine, SpmvEngine, Spmv2dEngine};
+    use hbp_spmv::exec::{
+        CsrParallel, FlatEngine, HbpEngine, LineEnhanceEngine, NnzSplitEngine, SpmvEngine,
+        Spmv2dEngine,
+    };
     use hbp_spmv::formats::Csr;
 
     let cfg = PartitionConfig::test_small();
@@ -416,11 +419,13 @@ fn fused_spmm_equals_looped_spmv_across_engines_widths_and_threads() {
             "csr" => Box::new(CsrParallel::new(m.clone(), threads)),
             "2d" => Box::new(Spmv2dEngine::new(m.clone(), cfg, threads)),
             "nnz-split" => Box::new(NnzSplitEngine::new(m.clone(), threads)),
+            "flat" => Box::new(FlatEngine::new(m.clone(), threads)),
+            "line-enhance" => Box::new(LineEnhanceEngine::new(m.clone(), threads)),
             other => unreachable!("{other}"),
         }
     };
 
-    for which in ["hbp", "csr", "2d", "nnz-split"] {
+    for which in ["hbp", "csr", "2d", "nnz-split", "flat", "line-enhance"] {
         for threads in [1usize, 2, 8] {
             let mut eng = build(&m0, which, threads);
             for (tag, m) in [("fresh", &m0), ("post-delta", &m1)] {
@@ -448,6 +453,99 @@ fn fused_spmm_equals_looped_spmv_across_engines_widths_and_threads() {
             }
         }
     }
+}
+
+#[test]
+fn prop_csr_native_engines_are_bitwise_serial_across_engines_threads_and_deltas() {
+    // Differential sweep: randomized CSR × all five engines × threads
+    // {1,2,8} × {fresh, post-delta}. Every engine must agree with the
+    // serial CSR oracle to 1e-12; the CSR-native kinds (csr, flat,
+    // line-enhance) must agree BITWISE — each row is reduced left to
+    // right by a single owner, so parallel = serial exactly.
+    use hbp_spmv::exec::{
+        CsrParallel, FlatEngine, HbpEngine, LineEnhanceEngine, SpmvEngine, Spmv2dEngine,
+    };
+    use hbp_spmv::formats::Csr;
+
+    let cfg = PartitionConfig::test_small();
+    let build = |m: &Csr, which: &str, threads: usize| -> Box<dyn SpmvEngine> {
+        match which {
+            "hbp" => Box::new(HbpEngine::new_updatable(
+                m.clone(),
+                cfg,
+                Box::new(HashReorder::default()),
+                threads,
+                0.25,
+            )),
+            "csr" => Box::new(CsrParallel::new(m.clone(), threads)),
+            "2d" => Box::new(Spmv2dEngine::new(m.clone(), cfg, threads)),
+            "flat" => Box::new(FlatEngine::new(m.clone(), threads)),
+            "line-enhance" => Box::new(LineEnhanceEngine::new(m.clone(), threads)),
+            other => unreachable!("{other}"),
+        }
+    };
+
+    check("csr-native-bitwise", 25, |g| {
+        let rows = g.usize_in(1, 6 * g.size + 2);
+        let cols = g.usize_in(1, 6 * g.size + 2);
+        let m0 = random::power_law_rows(rows, cols, 2.0, (cols / 2).max(1), g.rng.next_u64());
+        let row = g.usize_in(0, rows);
+        let delta = MatrixDelta::new().scale_row(row, -1.5);
+        let mut m1 = m0.clone();
+        hbp_spmv::preprocess::apply_to_csr(&mut m1, &delta).map_err(|e| format!("{e:#}"))?;
+        let x = random::vector(cols, g.rng.next_u64());
+
+        for which in ["hbp", "csr", "2d", "flat", "line-enhance"] {
+            for threads in [1usize, 2, 8] {
+                let mut eng = build(&m0, which, threads);
+                for (tag, m) in [("fresh", &m0), ("post-delta", &m1)] {
+                    if tag == "post-delta" {
+                        eng.update(&delta).map_err(|e| format!("{which}: {e:#}"))?;
+                    }
+                    let mut expect = vec![0.0; rows];
+                    m.spmv(&x, &mut expect);
+                    let mut y = vec![0.0; rows];
+                    eng.spmv(&x, &mut y);
+                    let ctx = format!("{which}/{tag}/threads={threads} ({rows}x{cols})");
+                    if matches!(which, "csr" | "flat" | "line-enhance") {
+                        prop_assert!(y == expect, "{ctx}: not bitwise serial");
+                    } else {
+                        prop_assert!(allclose(&y, &expect, 1e-12, 1e-12), "{ctx}: diverged");
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_engine_kind_display_fromstr_round_trips() {
+    use hbp_spmv::coordinator::EngineKind;
+
+    const KINDS: [EngineKind; 6] = [
+        EngineKind::Hbp,
+        EngineKind::Csr,
+        EngineKind::Plain2d,
+        EngineKind::Flat,
+        EngineKind::LineEnhance,
+        EngineKind::Auto,
+    ];
+    check("engine-kind-roundtrip", 60, |g| {
+        let kind = KINDS[g.usize_in(0, KINDS.len())];
+        let s = kind.to_string();
+        let back: EngineKind = s.parse().map_err(|e| format!("{e:#}"))?;
+        prop_assert!(back == kind, "{s:?} parsed to {back:?}");
+        // a perturbed name must fail, and the error must advertise the
+        // full vocabulary including the CSR-native kinds
+        let bogus = format!("{s}-x");
+        let err = bogus.parse::<EngineKind>().map(|k| format!("{k:?}")).unwrap_err();
+        let msg = format!("{err:#}");
+        for name in ["hbp", "csr", "2d", "flat", "line-enhance", "auto"] {
+            prop_assert!(msg.contains(name), "error must list {name}: {msg}");
+        }
+        Ok(())
+    });
 }
 
 #[test]

@@ -278,7 +278,7 @@ fn spmv_responses_report_the_resolved_engine() {
     let x = hbp_spmv::gen::random::vector(cols, 77);
 
     // explicit kinds resolve to themselves
-    for engine in ["hbp", "csr", "2d"] {
+    for engine in ["hbp", "csr", "2d", "flat", "line-enhance"] {
         let r = client
             .call(&obj(&[
                 ("op", Json::Str("spmv".into())),
@@ -317,7 +317,7 @@ fn engine_selection_via_protocol() {
     let mut client = Client::connect(addr).unwrap();
     let x = hbp_spmv::gen::random::vector(cols, 4);
     let mut results = vec![];
-    for engine in ["hbp", "csr", "2d"] {
+    for engine in ["hbp", "csr", "2d", "flat", "line-enhance"] {
         let r = client
             .call(&obj(&[
                 ("op", Json::Str("spmv".into())),
@@ -359,7 +359,10 @@ fn tune_endpoint_and_auto_engine_over_tcp() {
         .unwrap();
     assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
     let engine = r.get("decision").unwrap().req_str("engine").unwrap().to_string();
-    assert!(["hbp", "csr", "2d"].contains(&engine.as_str()), "{engine}");
+    assert!(
+        ["hbp", "csr", "2d", "flat", "line-enhance"].contains(&engine.as_str()),
+        "{engine}"
+    );
     assert!(r.get("features").unwrap().get("nnz").is_some());
 
     // "auto" requests serve through the decision and agree with forcing it
@@ -415,7 +418,7 @@ fn update_over_tcp_mutates_the_hosted_matrix() {
     }
 
     // every engine serves the updated values
-    for engine in ["hbp", "csr", "2d"] {
+    for engine in ["hbp", "csr", "2d", "flat", "line-enhance"] {
         let r = client
             .call(&obj(&[
                 ("op", Json::Str("spmv".into())),
